@@ -1,0 +1,142 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full pipeline on a real
+//! small workload — all three layers composing:
+//!
+//!   L2/L1 artifacts (`make artifacts`) → PJRT projection in the rust
+//!   runtime → coordinator serving batched kNN queries with the optimal
+//!   quantile estimator → recall + latency/throughput report.
+//!
+//! Workload: a Zipf/heavy-tailed synthetic corpus (stand-in for the
+//! paper's term-doc matrices, §1.1), k-nearest-neighbour search by l_α
+//! distance, evaluated against exact brute force.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example corpus_knn
+//! ```
+
+use stablesketch::coordinator::{Coordinator, PairQuery, QueryKind};
+use stablesketch::runtime::Runtime;
+use stablesketch::sketch::{exact_distance_matrix, SketchEngine};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::time::Instant;
+
+const TOPK: usize = 10;
+
+fn main() -> anyhow::Result<()> {
+    let alpha = 1.0;
+    let k = 128; // projections
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 400,
+        dim: 4096,
+        zipf_s: 1.1,
+        density: 0.05,
+        seed: 11,
+    });
+    println!(
+        "== corpus_knn: n={} D={} alpha={alpha} k={k} top-{TOPK} ==",
+        corpus.n, corpus.dim
+    );
+
+    // ---- L2/L1: PJRT projection (falls back to native if artifacts absent)
+    let engine = SketchEngine::new(alpha, corpus.dim, k, 33);
+    let artifacts = std::path::Path::new("artifacts");
+    let t0 = Instant::now();
+    let (store, path) = match Runtime::new(artifacts) {
+        Ok(rt) => match engine.sketch_all_pjrt(&rt, corpus.as_slice(), corpus.n) {
+            Ok(s) => (s, "pjrt (AOT Pallas artifact)"),
+            Err(e) => {
+                eprintln!("pjrt path unavailable ({e}); using native");
+                (engine.sketch_all(corpus.as_slice(), corpus.n), "native")
+            }
+        },
+        Err(e) => {
+            eprintln!("runtime unavailable ({e}); using native");
+            (engine.sketch_all(corpus.as_slice(), corpus.n), "native")
+        }
+    };
+    let sketch_dt = t0.elapsed();
+    println!(
+        "projection [{path}]: {:.2}s ({:.0} rows/s), store {:.2} MiB",
+        sketch_dt.as_secs_f64(),
+        corpus.n as f64 / sketch_dt.as_secs_f64(),
+        store.memory_bytes() as f64 / (1 << 20) as f64
+    );
+
+    // ---- exact ground truth (the O(n²D) scan the pipeline replaces)
+    let t0 = Instant::now();
+    let exact = exact_distance_matrix(corpus.as_slice(), corpus.n, corpus.dim, alpha);
+    let exact_dt = t0.elapsed();
+    println!("exact scan: {:.2}s (baseline being replaced)", exact_dt.as_secs_f64());
+
+    // ---- L3: coordinator serving
+    let cfg = PipelineConfig {
+        alpha,
+        k,
+        dim: corpus.dim,
+        shards: 2,
+        max_batch: 64,
+        batch_deadline_us: 100,
+        queue_depth: 8192,
+        ..Default::default()
+    };
+    let n = corpus.n;
+    let coord = Coordinator::start(cfg, store)?;
+
+    // kNN for every row: n-1 pair queries per row, batched.
+    let t0 = Instant::now();
+    let mut recall_sum = 0.0f64;
+    for i in 0..n {
+        let queries: Vec<PairQuery> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| PairQuery {
+                i: i as u32,
+                j: j as u32,
+                kind: QueryKind::Oq,
+            })
+            .collect();
+        let ests = coord.query_batch(&queries)?;
+        // top-K by estimate vs top-K by exact
+        let mut est_pairs: Vec<(usize, f64)> = queries
+            .iter()
+            .zip(&ests)
+            .map(|(q, &d)| (q.j as usize, d))
+            .collect();
+        est_pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let est_top: std::collections::HashSet<usize> =
+            est_pairs.iter().take(TOPK).map(|&(j, _)| j).collect();
+        let mut exact_pairs: Vec<(usize, f64)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| (j, exact[i * n + j]))
+            .collect();
+        exact_pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let hits = exact_pairs
+            .iter()
+            .take(TOPK)
+            .filter(|&&(j, _)| est_top.contains(&j))
+            .count();
+        recall_sum += hits as f64 / TOPK as f64;
+    }
+    let serve_dt = t0.elapsed();
+    let total_queries = n * (n - 1);
+    let recall = recall_sum / n as f64;
+    println!(
+        "served {} distance queries in {:.2}s = {:.0} qps",
+        total_queries,
+        serve_dt.as_secs_f64(),
+        total_queries as f64 / serve_dt.as_secs_f64()
+    );
+    println!("recall@{TOPK} vs exact l_{alpha}: {:.3}", recall);
+    println!("{}", coord.metrics().report());
+
+    // headline comparison: pipeline vs exact scan for this workload
+    let pipeline_total = sketch_dt + serve_dt;
+    println!(
+        "pipeline total {:.2}s vs exact scan {:.2}s (and the sketch store is {}x smaller)",
+        pipeline_total.as_secs_f64(),
+        exact_dt.as_secs_f64(),
+        corpus.dim / k
+    );
+    coord.shutdown();
+    assert!(recall > 0.5, "recall collapsed: {recall}");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Streaming / turnstile ingestion (paper §1.3): the "data matrix" is
+//! never stored — updates arrive as (row, coordinate, ±delta) events and
+//! the sketches are maintained in one pass, with distances served on the
+//! fly between checkpoints.
+//!
+//! ```bash
+//! cargo run --release --example streaming_ingest
+//! ```
+
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::sketch::{SketchEngine, StreamEvent, StreamingSketcher};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use std::time::Instant;
+
+fn main() {
+    let alpha = 1.0;
+    let (n, dim, k) = (50usize, 16_384usize, 128usize);
+    println!("== streaming_ingest: n={n} D={dim} k={k} alpha={alpha} ==");
+
+    // The "true" data the stream will eventually have delivered.
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim,
+        zipf_s: 1.2,
+        density: 0.02,
+        seed: 5,
+    });
+
+    // Decompose the corpus into a shuffled turnstile stream, with 10% of
+    // mass inserted then deleted again (turnstile semantics).
+    let mut events: Vec<StreamEvent> = Vec::new();
+    for i in 0..n {
+        for (d, &v) in corpus.row(i).iter().enumerate() {
+            if v != 0.0 {
+                events.push(StreamEvent {
+                    row: i,
+                    coord: d,
+                    delta: v,
+                });
+                if (i + d) % 10 == 0 {
+                    // churn: an insert that is later retracted
+                    events.push(StreamEvent {
+                        row: i,
+                        coord: d,
+                        delta: 3.0,
+                    });
+                    events.push(StreamEvent {
+                        row: i,
+                        coord: d,
+                        delta: -3.0,
+                    });
+                }
+            }
+        }
+    }
+    let mut rng = Xoshiro256pp::new(99);
+    // Fisher–Yates shuffle — stream order must not matter.
+    for t in (1..events.len()).rev() {
+        let s = rng.below((t + 1) as u64) as usize;
+        events.swap(t, s);
+    }
+    println!("stream: {} turnstile events (incl. churn)", events.len());
+
+    let mut sketcher = StreamingSketcher::new(alpha, dim, k, 2024, n);
+    // Engine construction materializes R and the bias table — keep it
+    // outside the ingest timing window.
+    let engine = SketchEngine::new(alpha, dim, k, 2024); // same seed ⇒ same R
+    let t0 = Instant::now();
+    let checkpoints = [events.len() / 4, events.len() / 2, events.len()];
+    let mut done = 0usize;
+    let mut buf = vec![0.0f64; k];
+    for (ci, &upto) in checkpoints.iter().enumerate() {
+        for ev in &events[done..upto] {
+            sketcher.apply(*ev);
+        }
+        done = upto;
+        // Serve a probe distance mid-stream.
+        let store = sketcher.store();
+        store.diff_into(0, 1, &mut buf);
+        let est = engine.estimator().estimate(&mut buf);
+        println!(
+            "checkpoint {}: {:>9} events applied, d̂(0,1) = {est:.4}",
+            ci + 1,
+            done
+        );
+    }
+    let dt = t0.elapsed();
+    println!(
+        "ingest rate: {:.0} events/s ({:.1} ns/event)",
+        events.len() as f64 / dt.as_secs_f64(),
+        dt.as_nanos() as f64 / events.len() as f64
+    );
+
+    // Final sketches must equal the batch projection of the final matrix.
+    use stablesketch::estimators::ScaleEstimator;
+    let batch = engine.sketch_all(corpus.as_slice(), n);
+    let streamed = sketcher.into_store();
+    let mut max_rel = 0.0f64;
+    for i in 0..n {
+        for j in 0..k {
+            let b = batch.row(i)[j] as f64;
+            let s = streamed.row(i)[j] as f64;
+            if b.abs() > 1e-3 {
+                max_rel = max_rel.max(((b - s) / b).abs());
+            }
+        }
+    }
+    println!("stream-vs-batch max relative sketch deviation: {max_rel:.2e}");
+    // exact-distance check on the final state
+    let exact = corpus.exact_distance(0, 1, alpha);
+    streamed.diff_into(0, 1, &mut buf);
+    let est = engine.estimator().estimate(&mut buf);
+    println!(
+        "final d̂(0,1) = {est:.4} vs exact {exact:.4} ({:+.1}%)",
+        (est / exact - 1.0) * 100.0
+    );
+    assert!(max_rel < 1e-2, "stream diverged from batch: {max_rel}");
+}

@@ -1,0 +1,1 @@
+# L2: JAX graphs + AOT emitter (build-time only).

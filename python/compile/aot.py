@@ -1,0 +1,186 @@
+"""AOT emitter: lower the Layer-2 graphs once to HLO **text** and write
+`artifacts/manifest.json` for the rust runtime.
+
+HLO text — not `lowered.compile().serialize()` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with return_tuple=True, so the rust
+side unwraps with `to_tuple1()`.
+
+Python runs ONLY here (`make artifacts`); it is never on the request
+path.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--small]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Emitted shape variants. (name, builder, example-arg factory, meta)
+#: Kept deliberately small-D so `make artifacts` stays < ~1 min on the
+#: single-core CI box; the rust engine falls back to the native path for
+#: shapes with no artifact.
+PROJECT_VARIANTS = [
+    # (n_block, D, k, tiles)
+    (128, 2048, 64, (64, 64, 512)),
+    (128, 4096, 64, (64, 64, 512)),
+    (256, 4096, 128, (128, 128, 512)),
+]
+
+ESTIMATE_BATCHES = [(512, 64), (512, 128)]
+
+#: α variants for the estimator graphs: the paper's simulation grid ends.
+ALPHAS = [0.5, 1.0, 1.5, 2.0]
+
+#: q* values for the oq graph variants, mirrored from the rust solver
+#: (estimators/tables_data.rs QSTAR_GRID); regenerate with
+#: `stablesketch info --alpha <a>` after `make tables`.
+QSTAR = {0.5: 0.31123, 1.0: 0.50000, 1.5: 0.68296, 2.0: 0.86168}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entry(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def emit(out_dir: str, small: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    project_variants = PROJECT_VARIANTS[:1] if small else PROJECT_VARIANTS
+    est_batches = ESTIMATE_BATCHES[:1] if small else ESTIMATE_BATCHES
+    alphas = ALPHAS[:2] if small else ALPHAS
+
+    # --- projection (Pallas matmul) ---
+    for n, d, k, tiles in project_variants:
+        name = f"project_n{n}_d{d}_k{k}"
+
+        def fn(x, r, _tiles=tiles):
+            from .kernels.projection import project
+
+            return (project(x, r, tiles=_tiles),)
+
+        text = to_hlo_text(lower_entry(fn, (_spec((n, d)), _spec((d, k)))))
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "op": "project",
+                "file": path,
+                "inputs": [[n, d], [d, k]],
+                "output": [n, k],
+                "meta": {"tiles": list(tiles)},
+            }
+        )
+
+    # --- absdiff ---
+    for b, k in est_batches:
+        name = f"absdiff_b{b}_k{k}"
+        text = to_hlo_text(
+            lower_entry(model.pairwise_absdiff, (_spec((b, k)), _spec((b, k))))
+        )
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "op": "absdiff",
+                "file": path,
+                "inputs": [[b, k], [b, k]],
+                "output": [b, k],
+                "meta": {},
+            }
+        )
+
+    # --- gm estimate batch (α is a runtime scalar input) ---
+    for b, k in est_batches:
+        name = f"gmest_b{b}_k{k}"
+        text = to_hlo_text(
+            lower_entry(
+                model.gm_estimate_batch,
+                (_spec((b, k)), _spec((b, k)), _spec(()), _spec(())),
+            )
+        )
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "op": "gm_estimate",
+                "file": path,
+                "inputs": [[b, k], [b, k], [], []],
+                "output": [b],
+                "meta": {},
+            }
+        )
+
+    # --- oq estimate batch (order-statistic index is static ⇒ one
+    #     artifact per (α → q*, k) pair) ---
+    for b, k in est_batches:
+        for alpha in alphas:
+            q = QSTAR[alpha]
+            name = f"oqest_b{b}_k{k}_a{alpha:g}"
+            fn = model.make_oq_estimate_batch(q, k)
+            text = to_hlo_text(
+                lower_entry(
+                    fn, (_spec((b, k)), _spec((b, k)), _spec(()), _spec(()))
+                )
+            )
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "op": "oq_estimate",
+                    "file": path,
+                    "inputs": [[b, k], [b, k], [], []],
+                    "output": [b],
+                    "meta": {"alpha": alpha, "q": q},
+                }
+            )
+
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--small", action="store_true", help="emit a minimal variant set (tests)"
+    )
+    args = ap.parse_args()
+    manifest = emit(args.out_dir, small=args.small)
+    n = len(manifest["entries"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Layer-1 Pallas kernel: batched |v1 − v2| over sketch-row pairs.
+
+Trivially elementwise (VPU work, not MXU); tiled (bb × k) so a query
+batch streams through VMEM row-block by row-block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["absdiff"]
+
+
+def _absdiff_kernel(v1_ref, v2_ref, o_ref):
+    o_ref[...] = jnp.abs(v1_ref[...] - v2_ref[...])
+
+
+def absdiff(v1, v2, *, block_rows=256, interpret=True):
+    """(b, k) × (b, k) → (b, k) of absolute differences."""
+    assert v1.shape == v2.shape, f"{v1.shape} vs {v2.shape}"
+    b, k = v1.shape
+    bb = min(block_rows, b)
+    assert b % bb == 0, f"batch {b} not divisible by block {bb}"
+    return pl.pallas_call(
+        _absdiff_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(v1, v2)

@@ -1,0 +1,37 @@
+"""Layer-1 Pallas kernel: per-row mean of log|z| — the geometric-mean
+estimator's bulk moment (Π|x_j|^{α/k} = exp(α·mean log|x_j|)).
+
+This is the reduction-shaped estimator work that *does* belong on the
+accelerator (unlike the selection hot path, which stays in rust — the
+paper's point). Tiled (bb × k) row blocks, reduction along k inside the
+block on the VPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mean_logabs", "EPS"]
+
+#: Clamp for log(0): sketch differences of identical rows are exactly 0.
+EPS = 1e-30
+
+
+def _mean_logabs_kernel(z_ref, o_ref):
+    z = jnp.maximum(jnp.abs(z_ref[...]), EPS)
+    o_ref[...] = jnp.mean(jnp.log(z), axis=1)
+
+
+def mean_logabs(z, *, block_rows=256, interpret=True):
+    """(b, k) → (b,) row means of log|z|."""
+    b, k = z.shape
+    bb = min(block_rows, b)
+    assert b % bb == 0, f"batch {b} not divisible by block {bb}"
+    return pl.pallas_call(
+        _mean_logabs_kernel,
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(z)

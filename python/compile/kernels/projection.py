@@ -1,0 +1,76 @@
+"""Layer-1 Pallas kernel: the sketch projection matmul B = X · R.
+
+This is the pipeline's O(nDk) hot spot (paper §1.3). The paper's 2008
+evaluation is CPU-bound estimator cost; the *projection* is the part that
+maps to an accelerator, so it gets the TPU-shaped treatment:
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+* Grid (n/bn, k/bk, D/bd): the innermost grid axis walks the contraction
+  dimension so each (bn × bk) output tile stays resident while HBM
+  streams (bn × bd) X-tiles and (bd × bk) R-tiles through VMEM — the
+  BlockSpec index maps below *are* the HBM↔VMEM schedule.
+* Default tiles bn=bk=128 (MXU-native), bd=512: VMEM working set
+  bn·bd + bd·bk + bn·bk floats ≈ 576 KiB ≪ 16 MiB, leaving room for
+  double buffering.
+* f32 accumulation into the revisited output tile
+  (`preferred_element_type=jnp.float32`), zeroed at the first D-step.
+
+Must be lowered with interpret=True for CPU PJRT execution (a real-TPU
+lowering emits a Mosaic custom call the CPU plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["project", "DEFAULT_TILES"]
+
+#: (bn, bk, bd) — MXU-native output tile, 512-deep contraction strips.
+DEFAULT_TILES = (128, 128, 512)
+
+
+def _matmul_kernel(x_ref, r_ref, o_ref, *, d_steps: int):
+    """One (i, j, dd) grid step: accumulate X-tile @ R-tile into the
+    (i, j) output tile. The output BlockSpec ignores the dd axis, so the
+    tile is revisited across the contraction — zero it on the first step.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def project(x, r, *, tiles=None, interpret=True):
+    """Sketch a block: (n, D) f32 × (D, k) f32 → (n, k) f32.
+
+    Shapes must divide the tile sizes; `aot.py` only emits variants that
+    do, and the rust engine pads the final partial block.
+    """
+    n, d = x.shape
+    d2, k = r.shape
+    assert d == d2, f"contraction mismatch: {d} vs {d2}"
+    bn, bk, bd = tiles or DEFAULT_TILES
+    bn, bk, bd = min(bn, n), min(bk, k), min(bd, d)
+    assert n % bn == 0 and k % bk == 0 and d % bd == 0, (
+        f"({n},{d},{k}) not divisible by tiles ({bn},{bd},{bk})"
+    )
+    d_steps = d // bd
+    kernel = functools.partial(_matmul_kernel, d_steps=d_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, k // bk, d_steps),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, dd: (i, dd)),
+            pl.BlockSpec((bd, bk), lambda i, j, dd: (dd, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j, dd: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(x, r)

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Layer-1 kernel in this package has an exact reference here; pytest
+(`python/tests/`) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and data. These oracles are also the
+graphs XLA would run *without* the Pallas scheduling — the baseline for
+the L1 structure comparison in DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "project_ref",
+    "absdiff_ref",
+    "mean_logabs_ref",
+    "gm_estimate_ref",
+    "quantile_estimate_ref",
+    "quantile_index",
+]
+
+
+def project_ref(x, r):
+    """Sketch block: B = X · R.  x: (n, D) f32, r: (D, k) f32."""
+    return jnp.dot(x, r, preferred_element_type=jnp.float32)
+
+
+def absdiff_ref(v1, v2):
+    """Elementwise |v1 − v2| — the projected pairwise differences."""
+    return jnp.abs(v1 - v2)
+
+
+def mean_logabs_ref(z, eps=1e-30):
+    """Per-row mean of log|z| (clamped away from 0): (b, k) → (b,)."""
+    return jnp.mean(jnp.log(jnp.maximum(jnp.abs(z), eps)), axis=1)
+
+
+def gm_estimate_ref(v1, v2, alpha, inv_denom):
+    """Geometric-mean distance estimate for each row pair:
+
+    d̂_gm[i] = exp( α · mean_j log|v1[i,j] − v2[i,j]| ) · inv_denom
+
+    (Π |x_j|^{α/k} = exp(α·mean log|x_j|).)  `inv_denom` is the
+    precomputed [E|x|^{α/k}]^{−k} coefficient, computed on the rust side
+    from (α, k) so the graph stays coefficient-free.
+    """
+    mean_log = mean_logabs_ref(v1 - v2)
+    return jnp.exp(alpha * mean_log) * inv_denom
+
+
+def quantile_index(q: float, k: int) -> int:
+    """The ⌈q·k⌉-th smallest, 0-based, clamped — must match
+    rust/src/estimators/quickselect.rs::quantile_index exactly."""
+    import math
+
+    return min(max(math.ceil(q * k) - 1, 0), k - 1)
+
+
+def quantile_estimate_ref(v1, v2, alpha, q, inv_w_alpha):
+    """Quantile distance estimate per row (XLA sort based):
+
+    d̂_q[i] = ( q-order-statistic{ |diff[i,:]| } )^α · inv_w_alpha
+    """
+    k = v1.shape[1]
+    idx = quantile_index(q, k)
+    z = jnp.sort(jnp.abs(v1 - v2), axis=1)
+    sel = z[:, idx]
+    return sel**alpha * inv_w_alpha

@@ -1,0 +1,73 @@
+"""Layer-2 JAX graphs: the sketch-pipeline computations, composed from
+the Layer-1 Pallas kernels, that `aot.py` lowers to HLO text for the rust
+runtime.
+
+Four graph families (one AOT artifact per shape/α variant):
+
+* ``sketch_block``        — B = X · R            (Pallas matmul kernel)
+* ``pairwise_absdiff``    — |V1 − V2|            (Pallas elementwise)
+* ``gm_estimate_batch``   — geometric-mean d̂ per row (Pallas reduction)
+* ``oq_estimate_batch``   — optimal-quantile d̂ per row via XLA sort
+                            (pure L2: the PJRT-offload ablation for the
+                            selection path; the production selection stays
+                            in rust where it is O(k) instead of O(k log k))
+
+Coefficients that depend on (α, k) — 1/denominator for gm, 1/W^α and the
+bias factor for oq — are *inputs*, not baked constants, so one artifact
+serves every distance scale and the rust side keeps full control of the
+precomputation (paper §3.3: coefficients precomputed once).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.absdiff import absdiff
+from .kernels.logabs import mean_logabs
+from .kernels.projection import project
+from .kernels.ref import quantile_index
+
+__all__ = [
+    "sketch_block",
+    "pairwise_absdiff",
+    "gm_estimate_batch",
+    "make_oq_estimate_batch",
+]
+
+
+def sketch_block(x, r):
+    """Project one corpus block through the stable random matrix."""
+    return (project(x, r),)
+
+
+def pairwise_absdiff(v1, v2):
+    """Absolute sketch differences for a batch of row pairs."""
+    return (absdiff(v1, v2),)
+
+
+def gm_estimate_batch(v1, v2, alpha, inv_denom):
+    """Geometric-mean estimates for a batch of row pairs.
+
+    alpha, inv_denom: scalar f32 inputs (see module docstring).
+    d̂[i] = exp(α · mean_j log|v1[i,j] − v2[i,j]|) · inv_denom
+    """
+    diffs = absdiff(v1, v2)
+    mean_log = mean_logabs(diffs)
+    return (jnp.exp(alpha * mean_log) * inv_denom,)
+
+
+def make_oq_estimate_batch(q: float, k: int):
+    """Build the sort-based optimal-quantile batch estimator for a fixed
+    (q, k): the order-statistic index must be a static constant in the
+    lowered graph.
+
+    d̂[i] = (idx-th smallest of |diff[i,:]|)^α · scale
+    where scale = 1/(W^α · B_{α,k}) is supplied by the caller.
+    """
+    idx = quantile_index(q, k)
+
+    def oq_estimate_batch(v1, v2, alpha, scale):
+        diffs = absdiff(v1, v2)
+        z = jnp.sort(diffs, axis=1)
+        sel = z[:, idx]
+        return (sel**alpha * scale,)
+
+    return oq_estimate_batch

@@ -1,0 +1,124 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and data; allclose against ref.py is THE core
+correctness signal for the compile path (the rust runtime then only sees
+already-verified HLO).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.absdiff import absdiff
+from compile.kernels.logabs import mean_logabs
+from compile.kernels.projection import project
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+# Single-core CI box: keep example counts small but meaningful.
+SETTINGS = settings(max_examples=12, deadline=None)
+
+
+def rand(shape, seed, scale=1.0, heavy=False):
+    rng = np.random.default_rng(seed)
+    if heavy:
+        # Heavy-tailed entries (Cauchy) — exercises log/abs paths the way
+        # real stable sketches do.
+        x = rng.standard_cauchy(size=shape)
+    else:
+        x = rng.normal(size=shape)
+    return jnp.asarray((x * scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------
+# projection kernel
+# ---------------------------------------------------------------------
+
+@SETTINGS
+@given(
+    n=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([64, 256, 512]),
+    k=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_projection_matches_ref(n, d, k, seed):
+    x = rand((n, d), seed)
+    r = rand((d, k), seed + 1)
+    got = project(x, r, tiles=(min(32, n), min(32, k), min(128, d)))
+    want = ref.project_ref(x, r)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_projection_default_tiles_shape():
+    x = rand((128, 2048), 0)
+    r = rand((2048, 128), 1)
+    got = project(x, r)
+    np.testing.assert_allclose(got, ref.project_ref(x, r), rtol=2e-5, atol=2e-5)
+
+
+def test_projection_rejects_indivisible():
+    x = rand((100, 300), 2)
+    r = rand((300, 50), 3)
+    with pytest.raises(AssertionError):
+        project(x, r, tiles=(64, 64, 128))
+
+
+def test_projection_accumulates_over_contraction():
+    # Deliberately many D-steps to prove the revisited-tile accumulation.
+    x = rand((16, 1024), 4)
+    r = rand((1024, 16), 5)
+    got = project(x, r, tiles=(16, 16, 64))  # 16 accumulation steps
+    np.testing.assert_allclose(got, ref.project_ref(x, r), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------
+# absdiff kernel
+# ---------------------------------------------------------------------
+
+@SETTINGS
+@given(
+    b=st.sampled_from([4, 64, 256]),
+    k=st.sampled_from([8, 64, 100]),
+    seed=st.integers(0, 2**31 - 1),
+    heavy=st.booleans(),
+)
+def test_absdiff_matches_ref(b, k, seed, heavy):
+    v1 = rand((b, k), seed, heavy=heavy)
+    v2 = rand((b, k), seed + 9, heavy=heavy)
+    got = absdiff(v1, v2, block_rows=min(64, b))
+    np.testing.assert_allclose(got, ref.absdiff_ref(v1, v2), rtol=0, atol=0)
+
+
+def test_absdiff_zero_on_identical():
+    v = rand((32, 16), 7)
+    assert float(jnp.max(absdiff(v, v, block_rows=32))) == 0.0
+
+
+# ---------------------------------------------------------------------
+# mean-logabs kernel
+# ---------------------------------------------------------------------
+
+@SETTINGS
+@given(
+    b=st.sampled_from([4, 64]),
+    k=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-6, 1.0, 1e6]),
+)
+def test_mean_logabs_matches_ref(b, k, seed, scale):
+    z = rand((b, k), seed, scale=scale, heavy=True)
+    got = mean_logabs(z, block_rows=min(64, b))
+    want = ref.mean_logabs_ref(z)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mean_logabs_handles_exact_zeros():
+    z = jnp.zeros((8, 8), jnp.float32)
+    got = mean_logabs(z, block_rows=8)
+    # clamped at EPS, not -inf/nan
+    assert np.all(np.isfinite(np.asarray(got)))

@@ -1,0 +1,31 @@
+#![allow(dead_code)]
+
+//! Shared helpers for the figure benches.
+
+use stablesketch::util::json::Json;
+
+/// Replicates, overridable via `REPS=` env (CI runs smaller).
+pub fn reps(default: usize) -> usize {
+    std::env::var("REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Standard α grid used across figures.
+pub fn alpha_grid(step: f64) -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut a = step;
+    while a <= 2.0 + 1e-9 {
+        v.push((a * 100.0).round() / 100.0);
+        a += step;
+    }
+    v
+}
+
+pub fn dump(file: &str, rows: &[Json]) {
+    match stablesketch::bench_util::write_rows(file, rows) {
+        Ok(path) => eprintln!("[rows written to {}]", path.display()),
+        Err(e) => eprintln!("[warn: could not write bench rows: {e}]"),
+    }
+}

@@ -1,0 +1,126 @@
+//! System bench (E2E row in EXPERIMENTS.md): end-to-end pipeline
+//! throughput/latency across shard counts, batch sizes, and estimator
+//! kinds, on a synthetic heavy-tailed corpus.
+//!
+//! This is the serving claim behind the paper's "reducing training time
+//! from one week to one day": per-distance cost is dominated by the
+//! estimator, so the oq estimator's cheap hot path shows up directly in
+//! queries/second.
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::coordinator::{Coordinator, PairQuery, QueryKind};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use stablesketch::util::json::Json;
+use std::time::Instant;
+
+fn run_workload(
+    coord: &Coordinator,
+    n: usize,
+    queries: usize,
+    kind: QueryKind,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < queries {
+        let burst = (queries - done).min(512);
+        let batch: Vec<PairQuery> = (0..burst)
+            .map(|_| PairQuery {
+                i: rng.below(n as u64) as u32,
+                j: rng.below(n as u64) as u32,
+                kind,
+            })
+            .collect();
+        coord.query_batch(&batch).expect("batch");
+        done += burst;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let qps = queries as f64 / dt;
+    let p99 = coord.metrics().query_latency.quantile_ns(0.99) as f64 / 1e3;
+    (qps, p99)
+}
+
+fn main() {
+    let queries = common::reps(60_000);
+    let (n, dim, k, alpha) = (500usize, 2048usize, 100usize, 1.0f64);
+    println!("== E2E pipeline: n={n} D={dim} k={k} alpha={alpha}, {queries} queries/cell ==");
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim,
+        density: 0.05,
+        ..Default::default()
+    });
+    let engine = SketchEngine::new(alpha, dim, k, 1);
+
+    let mut table = Table::new(&["shards", "batch", "estimator", "qps", "p99 us"]);
+    let mut rows = Vec::new();
+    for &shards in &[1usize, 2, 4] {
+        for &max_batch in &[8usize, 64, 256] {
+            for kind in [QueryKind::Oq, QueryKind::Gm] {
+                let cfg = PipelineConfig {
+                    alpha,
+                    k,
+                    dim,
+                    shards,
+                    max_batch,
+                    batch_deadline_us: 100,
+                    queue_depth: 16_384,
+                    ..Default::default()
+                };
+                let store = engine.sketch_all(corpus.as_slice(), n);
+                let coord = Coordinator::start(cfg, store).expect("start");
+                let (qps, p99) = run_workload(&coord, n, queries, kind, 7);
+                let kind_s = match kind {
+                    QueryKind::Oq => "oq",
+                    QueryKind::Gm => "gm",
+                    _ => "?",
+                };
+                table.row(vec![
+                    format!("{shards}"),
+                    format!("{max_batch}"),
+                    kind_s.to_string(),
+                    format!("{qps:.0}"),
+                    format!("{p99:.0}"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("shards", Json::num(shards as f64)),
+                    ("max_batch", Json::num(max_batch as f64)),
+                    ("estimator", Json::str(kind_s)),
+                    ("qps", Json::num(qps)),
+                    ("p99_us", Json::num(p99)),
+                ]));
+                coord.shutdown();
+            }
+        }
+    }
+    table.print();
+    common::dump("e2e_pipeline.json", &rows);
+
+    // Shape: oq must out-serve gm at the same configuration (the whole
+    // point), at the largest batch size where estimator cost dominates.
+    let qps_of = |kind: &str, shards: f64, batch: f64| {
+        rows.iter()
+            .find(|r| {
+                r.get("estimator").unwrap().as_str() == Some(kind)
+                    && r.get("shards").unwrap().as_f64() == Some(shards)
+                    && r.get("max_batch").unwrap().as_f64() == Some(batch)
+            })
+            .unwrap()
+            .get("qps")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let (oq, gm) = (qps_of("oq", 1.0, 256.0), qps_of("gm", 1.0, 256.0));
+    assert!(
+        oq > gm,
+        "oq should out-serve gm at k={k}: {oq:.0} vs {gm:.0} qps"
+    );
+    println!("\nshape check passed: oq {oq:.0} qps vs gm {gm:.0} qps (1 shard, batch 256)");
+}

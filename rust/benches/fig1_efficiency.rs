@@ -1,0 +1,73 @@
+//! Fig 1 — Cramér–Rao efficiencies of the gm / hm / fp / oq (and
+//! median) estimators as functions of α.
+//!
+//! Paper shape to reproduce: oq ≈ gm for α < 1; oq clearly above gm for
+//! α > 1; oq above fp on 1 < α ≤ 1.8; fp wins near α = 2; hm only
+//! competitive at small α.
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::estimators::{cramer_rao_bound_factor, efficiency_curve, EstimatorKind};
+use stablesketch::util::json::Json;
+
+fn main() {
+    let alphas = common::alpha_grid(0.1);
+    let kinds = [
+        EstimatorKind::GeometricMean,
+        EstimatorKind::HarmonicMean,
+        EstimatorKind::FractionalPower,
+        EstimatorKind::OptimalQuantile,
+        EstimatorKind::Median,
+    ];
+    println!("== Fig 1: Cramér–Rao efficiencies (1.0 = statistically optimal) ==");
+    let mut table = Table::new(&["alpha", "CR-var", "gm", "hm", "fp", "oq", "median"]);
+    let mut rows = Vec::new();
+    let curves: Vec<Vec<(f64, f64)>> = kinds
+        .iter()
+        .map(|&k| efficiency_curve(k, &alphas))
+        .collect();
+    for (ai, &alpha) in alphas.iter().enumerate() {
+        let cr = cramer_rao_bound_factor(alpha);
+        let cells: Vec<String> = curves
+            .iter()
+            .map(|c| {
+                let e = c[ai].1;
+                if e.is_nan() {
+                    "--".to_string()
+                } else {
+                    format!("{e:.3}")
+                }
+            })
+            .collect();
+        let mut row = vec![format!("{alpha:.1}"), format!("{cr:.3}")];
+        row.extend(cells.clone());
+        table.row(row);
+        rows.push(Json::obj(vec![
+            ("alpha", Json::num(alpha)),
+            ("cr_bound_factor", Json::num(cr)),
+            ("gm", Json::num(curves[0][ai].1)),
+            ("hm", Json::num(curves[1][ai].1)),
+            ("fp", Json::num(curves[2][ai].1)),
+            ("oq", Json::num(curves[3][ai].1)),
+            ("median", Json::num(curves[4][ai].1)),
+        ]));
+    }
+    table.print();
+    println!(
+        "note: the Fisher information (CR-var column) is numerically unreliable for\n\
+         α ≲ 0.15 — the stable density is a near-delta peak there (f(0) = Γ(1+1/α)/π\n\
+         grows super-exponentially) and the score integration loses the peak.\n\
+         Estimator-vs-estimator comparisons are unaffected (they share the CR factor);\n\
+         the exact V_hm(0.1) = 1.022 anchor implies CR-var(0.1) ≈ 1.0 (hm → optimal\n\
+         as α → 0+, paper §2.1)."
+    );
+    common::dump("fig1_efficiency.json", &rows);
+
+    // Paper-shape assertions (who wins where):
+    let eff = |k: EstimatorKind, a: f64| efficiency_curve(k, &[a])[0].1;
+    assert!(eff(EstimatorKind::OptimalQuantile, 1.5) > eff(EstimatorKind::GeometricMean, 1.5));
+    assert!(eff(EstimatorKind::OptimalQuantile, 1.5) > eff(EstimatorKind::FractionalPower, 1.5));
+    assert!(eff(EstimatorKind::FractionalPower, 2.0) > eff(EstimatorKind::OptimalQuantile, 2.0));
+    println!("\nshape checks passed: oq>gm and oq>fp at α=1.5; fp>oq at α=2");
+}

@@ -1,0 +1,48 @@
+//! Fig 2 — (a) the optimal quantile q*(α); (b) the constant
+//! W^α(q*) = (q*-quantile of |S(α,1)|)^α.
+//!
+//! Paper anchors: q*(0+) = 0.203, q*(1) = 0.5, q*(2) = 0.862.
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::estimators::tables;
+use stablesketch::util::json::Json;
+
+fn main() {
+    println!("== Fig 2: q*(α) and W^α(q*) ==");
+    let alphas = common::alpha_grid(0.05);
+    let mut table = Table::new(&["alpha", "q*", "W^alpha(q*)"]);
+    let mut rows = Vec::new();
+    let mut prev_q = 0.0f64;
+    for &alpha in &alphas {
+        let q = tables::q_star(alpha);
+        let w = tables::w_alpha_star(alpha);
+        table.row(vec![
+            format!("{alpha:.2}"),
+            format!("{q:.4}"),
+            format!("{w:.4}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("alpha", Json::num(alpha)),
+            ("q_star", Json::num(q)),
+            ("w_alpha", Json::num(w)),
+        ]));
+        assert!(
+            q >= prev_q - 0.02,
+            "q*(α) must be (weakly) increasing; broke at {alpha}: {q} < {prev_q}"
+        );
+        prev_q = q;
+    }
+    table.print();
+    common::dump("fig2_qstar.json", &rows);
+
+    // Anchor checks against the paper's quoted values.
+    let q0 = tables::q_star(0.05);
+    let q1 = tables::q_star(1.0);
+    let q2 = tables::q_star(2.0);
+    assert!((q0 - 0.203).abs() < 0.02, "q*(0+)≈0.203, got {q0}");
+    assert!((q1 - 0.5).abs() < 0.005, "q*(1)=0.5, got {q1}");
+    assert!((q2 - 0.862).abs() < 0.005, "q*(2)=0.862, got {q2}");
+    println!("\nanchor checks passed: q*(0+)≈{q0:.3}, q*(1)≈{q1:.3}, q*(2)≈{q2:.3}");
+}

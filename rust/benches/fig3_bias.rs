@@ -1,0 +1,53 @@
+//! Fig 3 — the bias correction factor B_{α,k} = E(d̂_(α),oq; d = 1).
+//!
+//! Paper shape: B > 1 (almost everywhere), large at small k (e.g.
+//! B_{0.1,10} ≈ 1.24), decaying toward 1 as k grows, with stair-step
+//! wiggle from the order-statistic index. The checked-in table
+//! (tables_data.rs) is printed and then *independently revalidated* by a
+//! fresh Monte-Carlo run with a different seed.
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::estimators::tables;
+use stablesketch::util::json::Json;
+
+fn main() {
+    let reps = common::reps(100_000);
+    let alphas = [0.1, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0];
+    let ks = [10usize, 15, 20, 30, 50, 100, 200, 500];
+    println!("== Fig 3: bias correction B_(α,k) (table | fresh MC, reps={reps}) ==");
+    let mut table = Table::new(&[
+        "alpha", "k=10", "k=15", "k=20", "k=30", "k=50", "k=100", "k=200", "k=500",
+    ]);
+    let mut rows = Vec::new();
+    for &alpha in &alphas {
+        let mut cells = vec![format!("{alpha:.2}")];
+        for &k in &ks {
+            let b_table = tables::bias_correction(alpha, k);
+            let b_fresh = tables::simulate_bias(alpha, k, reps, 0xFEED ^ k as u64);
+            cells.push(format!("{b_table:.3}|{b_fresh:.3}"));
+            rows.push(Json::obj(vec![
+                ("alpha", Json::num(alpha)),
+                ("k", Json::num(k as f64)),
+                ("b_table", Json::num(b_table)),
+                ("b_fresh_mc", Json::num(b_fresh)),
+            ]));
+            // Cross-validation: two independent MC estimates must agree.
+            assert!(
+                (b_table - b_fresh).abs() < 0.05 * b_table,
+                "alpha={alpha} k={k}: table {b_table} vs fresh {b_fresh}"
+            );
+        }
+        table.row(cells);
+    }
+    table.print();
+    common::dump("fig3_bias.json", &rows);
+
+    // Paper shape: B large at small k, ≈1 at k=500.
+    let b_small = tables::bias_correction(0.1, 10);
+    let b_large = tables::bias_correction(0.1, 500);
+    assert!(b_small > 1.15, "B(0.1,10) = {b_small}");
+    assert!((b_large - 1.0).abs() < 0.02, "B(0.1,500) = {b_large}");
+    println!("\nshape checks passed: B(0.1,10)={b_small:.3} (paper ≈1.24), B(0.1,500)={b_large:.3}");
+}

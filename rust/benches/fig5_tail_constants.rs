@@ -1,0 +1,70 @@
+//! Fig 5 — tail bound constants G_{R,q}(ε) and G_{L,q}(ε) (Lemma 3),
+//! for the optimal quantile estimator (upper panels) and the sample
+//! median baseline (lower panels), at α ∈ {0.5, 1, 1.5, 2}.
+//!
+//! Paper shape: constants increase with ε on the right tail, G_L < G_R,
+//! oq constants below the median's, and G_R(0.5) ≈ 5–9 (driving the
+//! k ≈ 120–215 sample-size headline).
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::estimators::{tables, tail_bounds};
+use stablesketch::util::json::Json;
+
+fn main() {
+    let alphas = [0.5f64, 1.0, 1.5, 2.0];
+    let epsilons: Vec<f64> = (1..=19).map(|i| i as f64 * 0.05).collect();
+    println!("== Fig 5: tail-bound constants (lower = stronger bound) ==");
+    let mut rows = Vec::new();
+    for &alpha in &alphas {
+        let q_star = tables::q_star(alpha);
+        println!("\n-- alpha = {alpha} (q* = {q_star:.3}) --");
+        let mut table = Table::new(&["eps", "G_R(q*)", "G_L(q*)", "G_R(0.5)", "G_L(0.5)"]);
+        for &eps in &epsilons {
+            let oq = tail_bounds::tail_constants(alpha, q_star, eps);
+            let med = tail_bounds::tail_constants(alpha, 0.5, eps);
+            table.row(vec![
+                format!("{eps:.2}"),
+                format!("{:.2}", oq.g_right),
+                format!("{:.2}", oq.g_left),
+                format!("{:.2}", med.g_right),
+                format!("{:.2}", med.g_left),
+            ]);
+            rows.push(Json::obj(vec![
+                ("alpha", Json::num(alpha)),
+                ("eps", Json::num(eps)),
+                ("g_right_oq", Json::num(oq.g_right)),
+                ("g_left_oq", Json::num(oq.g_left)),
+                ("g_right_median", Json::num(med.g_right)),
+                ("g_left_median", Json::num(med.g_left)),
+            ]));
+        }
+        table.print();
+        // sample-size planner corollary (paper §3.4)
+        let k_half = tail_bounds::sample_size_fraction(alpha, q_star, 0.5, 10.0, 0.05);
+        let k_one = tail_bounds::sample_size_fraction(alpha, q_star, 1.0, 10.0, 0.05);
+        println!("   ⇒ k(eps=0.5) = {k_half}, k(eps=1.0) = {k_one}  (paper: 120–215 / 40–65)");
+    }
+    common::dump("fig5_tail_constants.json", &rows);
+
+    // Shape checks.
+    for &alpha in &alphas {
+        let q_star = tables::q_star(alpha);
+        let tc = tail_bounds::tail_constants(alpha, q_star, 0.5);
+        assert!(tc.g_left < tc.g_right, "G_L < G_R violated at alpha={alpha}");
+        assert!(
+            tc.g_right > 3.0 && tc.g_right < 12.0,
+            "G_R(0.5)≈5–9; got {} at alpha={alpha}",
+            tc.g_right
+        );
+        if (alpha - 1.0).abs() > 0.25 {
+            let med = tail_bounds::tail_constants(alpha, 0.5, 0.5);
+            assert!(
+                tc.g_right <= med.g_right + 1e-9,
+                "oq must beat median at alpha={alpha}"
+            );
+        }
+    }
+    println!("\nshape checks passed");
+}

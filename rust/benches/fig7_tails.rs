@@ -1,0 +1,109 @@
+//! Fig 7 — empirical right tail probabilities
+//! Pr( d̂ ≥ (1+ε)·d ) for gm / fp / oq,c at α ∈ {0.5, 1, 1.5, 2},
+//! k ∈ {20, 50}, with the Lemma-3 bound overlaid for oq.
+//!
+//! Paper shape: for α > 1 the fp estimator's right tail is dramatically
+//! heavier (its moments barely exceed order 2 near α = 2); oq
+//! consistently dominates gm and fp for α > 1. The theoretical bound
+//! must lie above the empirical oq curve.
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::estimators::*;
+use stablesketch::simul::mc::{right_tail_curve, McConfig};
+use stablesketch::util::json::Json;
+
+fn main() {
+    let reps = common::reps(200_000);
+    let alphas = [0.5f64, 1.0, 1.5, 1.9, 2.0];
+    let ks = [20usize, 50];
+    let epsilons: Vec<f64> = vec![0.25, 0.5, 0.75, 1.0, 1.5, 2.0];
+    println!("== Fig 7: right tail Pr(d̂ ≥ (1+ε)d)  (reps={reps}) ==");
+    let mut rows = Vec::new();
+    for &alpha in &alphas {
+        for &k in &ks {
+            println!("\n-- alpha = {alpha}, k = {k} --");
+            let cfg = McConfig {
+                reps,
+                seed: 0x7A11 ^ ((alpha * 100.0) as u64) << 10 ^ k as u64,
+                d_true: 1.0,
+            };
+            let gm = right_tail_curve(&GeometricMean::new(alpha, k), &cfg, &epsilons);
+            let fp = right_tail_curve(&FractionalPower::new(alpha, k), &cfg, &epsilons);
+            let oq = right_tail_curve(&OptimalQuantile::new(alpha, k), &cfg, &epsilons);
+            let q_star = tables::q_star(alpha);
+            let mut table = Table::new(&["eps", "gm", "fp", "oq,c", "oq bound"]);
+            for (i, &eps) in epsilons.iter().enumerate() {
+                let tc = tail_bounds::tail_constants(alpha, q_star, eps);
+                let bound = (-(k as f64) * eps * eps / tc.g_right).exp();
+                table.row(vec![
+                    format!("{eps:.2}"),
+                    format!("{:.5}", gm[i].prob),
+                    format!("{:.5}", fp[i].prob),
+                    format!("{:.5}", oq[i].prob),
+                    format!("{bound:.5}"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("alpha", Json::num(alpha)),
+                    ("k", Json::num(k as f64)),
+                    ("eps", Json::num(eps)),
+                    ("p_gm", Json::num(gm[i].prob)),
+                    ("p_fp", Json::num(fp[i].prob)),
+                    ("p_oq", Json::num(oq[i].prob)),
+                    ("oq_bound", Json::num(bound)),
+                ]));
+            }
+            table.print();
+        }
+    }
+    common::dump("fig7_tails.json", &rows);
+
+    let cell = |a: f64, k: usize, eps: f64, key: &str| {
+        rows.iter()
+            .find(|r| {
+                r.get("alpha").unwrap().as_f64() == Some(a)
+                    && r.get("k").unwrap().as_f64() == Some(k as f64)
+                    && r.get("eps").unwrap().as_f64() == Some(eps)
+            })
+            .unwrap()
+            .get(key)
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    // Shape: for α > 1 (but below 2 — at exactly α = 2 the samples are
+    // Gaussian, no heavy tail exists, and fp degenerates to an
+    // arithmetic-mean-like estimator with *light* tails; the paper's
+    // fp-tail pathology concerns α approaching 2 from below),
+    // fp's right tail is heavier than oq's.
+    // fp's tail decays polynomially (it visibly *flattens* in the
+    // tables above) while oq's decays exponentially — so the dominance
+    // is asserted in the deep tail (ε = 2), where fp is 2–20× worse.
+    for &a in &[1.5, 1.9] {
+        for &k in &ks {
+            assert!(
+                cell(a, k, 2.0, "p_oq") < cell(a, k, 2.0, "p_fp") + 2.0 / reps as f64,
+                "oq !< fp deep tail at alpha={a} k={k}"
+            );
+            assert!(
+                cell(a, k, 0.5, "p_oq") < cell(a, k, 0.5, "p_gm") * 1.2,
+                "oq tail way above gm at alpha={a} k={k}"
+            );
+        }
+    }
+    // The Lemma-3 bound holds empirically (with slack for MC noise).
+    for &a in &alphas {
+        for &k in &ks {
+            for &eps in &epsilons {
+                let emp = cell(a, k, eps, "p_oq");
+                let bound = cell(a, k, eps, "oq_bound");
+                assert!(
+                    emp <= bound * 1.25 + 5.0 / reps as f64,
+                    "bound violated: alpha={a} k={k} eps={eps}: {emp} > {bound}"
+                );
+            }
+        }
+    }
+    println!("\nshape checks passed: fp heavy right tail for α>1; Lemma 3 bound ≥ empirical");
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmarks of the hot-path primitives (the §Perf ledger):
+//! selection vs fractional powers at the operation level, the naive vs
+//! optimized selector ablation, sampling, and projection throughput.
+
+mod common;
+
+use stablesketch::bench_util::{bench, black_box, BenchConfig, Table};
+use stablesketch::estimators::quickselect::{select_kth, select_kth_naive};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::stable::StableSampler;
+use stablesketch::util::json::Json;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_batches: 2,
+        samples: 11,
+        iters_per_batch: 0,
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut table = Table::new(&["op", "ns/op", "note"]);
+    let push = |name: &str, ns: f64, note: &str, rows: &mut Vec<Json>, table: &mut Table| {
+        table.row(vec![name.into(), format!("{ns:.1}"), note.into()]);
+        rows.push(Json::obj(vec![
+            ("op", Json::str(name)),
+            ("ns", Json::num(ns)),
+        ]));
+    };
+
+    let mut rng = Xoshiro256pp::new(1);
+
+    // --- scalar primitives -----------------------------------------
+    let xs: Vec<f64> = (0..1024).map(|_| rng.normal().abs() + 0.01).collect();
+    let mut i = 0usize;
+    let m = bench("powf", &cfg, || {
+        i = (i + 1) & 1023;
+        black_box(xs[i].powf(0.0123))
+    });
+    push("powf(x, α/k)", m.ns_per_op_median, "the gm/fp per-sample op", &mut rows, &mut table);
+
+    let m = bench("abs+cmp", &cfg, || {
+        i = (i + 1) & 1023;
+        black_box(xs[i].abs() < 1.0)
+    });
+    push("abs+cmp", m.ns_per_op_median, "the oq per-sample op", &mut rows, &mut table);
+
+    // --- selection at several k ------------------------------------
+    for &k in &[50usize, 200, 1000] {
+        let pool: Vec<Vec<f64>> = (0..32)
+            .map(|_| (0..k).map(|_| rng.normal()).collect())
+            .collect();
+        let mut buf = vec![0.0; k];
+        let mut c = 0usize;
+        let m_opt = bench("select", &cfg, || {
+            c = (c + 1) & 31;
+            buf.copy_from_slice(&pool[c]);
+            black_box(select_kth(&mut buf, k / 2))
+        });
+        push(
+            &format!("select_kth k={k}"),
+            m_opt.ns_per_op_median,
+            "production selector",
+            &mut rows,
+            &mut table,
+        );
+        let m_naive = bench("select_naive", &cfg, || {
+            c = (c + 1) & 31;
+            black_box(select_kth_naive(&pool[c], k / 2))
+        });
+        push(
+            &format!("select_naive k={k}"),
+            m_naive.ns_per_op_median,
+            "paper's allocating recursion",
+            &mut rows,
+            &mut table,
+        );
+        // pow loop for the same k (what gm does per estimate)
+        let m_pow = bench("powloop", &cfg, || {
+            let mut p = 1.0f64;
+            for &x in &pool[c] {
+                p *= x.abs().powf(0.01);
+            }
+            black_box(p)
+        });
+        push(
+            &format!("k-pow loop k={k}"),
+            m_pow.ns_per_op_median,
+            "gm hot path",
+            &mut rows,
+            &mut table,
+        );
+    }
+
+    // --- sampling ---------------------------------------------------
+    for &alpha in &[0.5f64, 1.0, 2.0] {
+        let s = StableSampler::new(alpha);
+        let m = bench("cms", &cfg, || black_box(s.sample(&mut rng)));
+        push(
+            &format!("CMS sample α={alpha}"),
+            m.ns_per_op_median,
+            "sketch-matrix entry",
+            &mut rows,
+            &mut table,
+        );
+    }
+
+    // --- projection -------------------------------------------------
+    let (dim, k) = (2048usize, 64usize);
+    let engine = SketchEngine::new(1.0, dim, k, 3);
+    let mut u = vec![0.0f32; dim];
+    for d in (0..dim).step_by(17) {
+        u[d] = (d % 13) as f32 * 0.1 - 0.5;
+    }
+    let mut out = vec![0.0f32; k];
+    let m = bench("project_row", &cfg, || {
+        engine.project_row(&u, &mut out);
+        black_box(out[0])
+    });
+    let nnz = u.iter().filter(|&&x| x != 0.0).count();
+    push(
+        &format!("project_row D={dim} nnz={nnz} k={k}"),
+        m.ns_per_op_median,
+        &format!("{:.2} ns/(nnz·k)", m.ns_per_op_median / (nnz * k) as f64),
+        &mut rows,
+        &mut table,
+    );
+
+    table.print();
+    common::dump("micro_hotpath.json", &rows);
+}

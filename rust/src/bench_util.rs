@@ -1,0 +1,191 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Methodology: warmup, then `samples` timed batches of `iters_per_batch`
+//! calls; report min / median / mean ns-per-op. Median-of-batches is
+//! robust to scheduler noise on the single-core CI box. Results can be
+//! dumped as JSON rows under `bench_out/` so EXPERIMENTS.md numbers are
+//! regenerable.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub ns_per_op_median: f64,
+    pub ns_per_op_mean: f64,
+    pub ns_per_op_min: f64,
+    pub ops: u64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("ns_median", Json::num(self.ns_per_op_median)),
+            ("ns_mean", Json::num(self.ns_per_op_mean)),
+            ("ns_min", Json::num(self.ns_per_op_min)),
+            ("ops", Json::num(self.ops as f64)),
+        ])
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_batches: usize,
+    pub samples: usize,
+    pub iters_per_batch: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_batches: 3,
+            samples: 15,
+            iters_per_batch: 0, // 0 = auto-calibrate to ~2ms batches
+        }
+    }
+}
+
+/// A black box that defeats const-folding without a memory fence cost.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time `f` (which should perform ONE operation and return something
+/// consumable) under `cfg`.
+pub fn bench<F, T>(name: &str, cfg: &BenchConfig, mut f: F) -> Measurement
+where
+    F: FnMut() -> T,
+{
+    // Calibrate batch size so one batch is ~2 ms.
+    let iters = if cfg.iters_per_batch > 0 {
+        cfg.iters_per_batch
+    } else {
+        let t0 = Instant::now();
+        let mut n = 0u64;
+        while t0.elapsed().as_micros() < 500 {
+            black_box(f());
+            n += 1;
+        }
+        ((n * 4).max(8)) as usize
+    };
+
+    for _ in 0..cfg.warmup_batches {
+        for _ in 0..iters {
+            black_box(f());
+        }
+    }
+    let mut per_op: Vec<f64> = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        per_op.push(dt / iters as f64);
+    }
+    per_op.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = per_op[per_op.len() / 2];
+    let mean = per_op.iter().sum::<f64>() / per_op.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        ns_per_op_median: median,
+        ns_per_op_mean: mean,
+        ns_per_op_min: per_op[0],
+        ops: (iters * cfg.samples) as u64,
+    }
+}
+
+/// Append bench rows to `bench_out/<file>.json` (one JSON array).
+pub fn write_rows(file: &str, rows: &[Json]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(file);
+    std::fs::write(&path, Json::Arr(rows.to_vec()).to_string())?;
+    Ok(path)
+}
+
+/// Pretty fixed-width table printer for bench stdout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let cfg = BenchConfig {
+            warmup_batches: 1,
+            samples: 5,
+            iters_per_batch: 1000,
+        };
+        let m = bench("mul", &cfg, || black_box(3.7f64) * black_box(2.9));
+        assert!(m.ns_per_op_median > 0.0 && m.ns_per_op_median < 1e5);
+        assert!(m.ns_per_op_min <= m.ns_per_op_median);
+    }
+
+    #[test]
+    fn slower_op_measures_slower() {
+        let cfg = BenchConfig {
+            warmup_batches: 1,
+            samples: 7,
+            iters_per_batch: 2000,
+        };
+        let fast = bench("add", &cfg, || black_box(1.0f64) + black_box(2.0));
+        let slow = bench("pow", &cfg, || {
+            let mut acc = 0.0;
+            for i in 0..20 {
+                acc += black_box(1.3f64 + i as f64).powf(black_box(0.37));
+            }
+            acc
+        });
+        assert!(
+            slow.ns_per_op_median > 3.0 * fast.ns_per_op_median,
+            "pow {} vs add {}",
+            slow.ns_per_op_median,
+            fast.ns_per_op_median
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Library-side implementations of the heavier CLI subcommands
+//! (`sketch`, `query`, `serve`, `experiment`). Kept in the library so the
+//! integration tests can drive them directly.
+
+use crate::coordinator::{Coordinator, PairQuery, QueryKind};
+use crate::estimators::{tables, EstimatorKind};
+use crate::numerics::{Rng, Xoshiro256pp};
+use crate::sketch::SketchEngine;
+use crate::simul::{Corpus, CorpusConfig};
+use crate::util::cli::Args;
+use crate::util::config::PipelineConfig;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+fn corpus_from_args(args: &Args) -> Result<(Corpus, PipelineConfig)> {
+    let cfg = PipelineConfig::default().apply_args(args)?;
+    let n = args.usize_or("n", 500)?;
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: cfg.dim,
+        zipf_s: args.f64_or("zipf", 1.1)?,
+        density: args.f64_or("density", 0.05)?,
+        seed: cfg.seed,
+    });
+    Ok((corpus, cfg))
+}
+
+/// `sketch`: generate a synthetic corpus, sketch it, report compression
+/// + accuracy against exact distances on a sample of pairs.
+pub fn cmd_sketch(args: &Args) -> Result<()> {
+    let (corpus, cfg) = corpus_from_args(args)?;
+    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let t0 = Instant::now();
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let dt = t0.elapsed();
+    println!(
+        "sketched n={} D={} -> k={} in {:.2}s ({:.1} rows/s)",
+        corpus.n,
+        cfg.dim,
+        cfg.k,
+        dt.as_secs_f64(),
+        corpus.n as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "memory: corpus {:.1} MiB -> sketches {:.1} MiB ({}x compression)",
+        (corpus.n * cfg.dim * 4) as f64 / (1 << 20) as f64,
+        store.memory_bytes() as f64 / (1 << 20) as f64,
+        cfg.dim / cfg.k
+    );
+    // accuracy sample
+    let mut rng = Xoshiro256pp::new(cfg.seed ^ 1);
+    let mut buf = vec![0.0; cfg.k];
+    let mut errs: Vec<f64> = Vec::new();
+    for _ in 0..50.min(corpus.n * (corpus.n - 1) / 2) {
+        let i = rng.below(corpus.n as u64) as usize;
+        let j = rng.below(corpus.n as u64) as usize;
+        if i == j {
+            continue;
+        }
+        let exact = corpus.exact_distance(i, j, cfg.alpha);
+        if exact <= 0.0 {
+            continue;
+        }
+        let est = engine.estimate(&store, i, j, &mut buf);
+        errs.push((est / exact - 1.0).abs());
+    }
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "relative error over {} sampled pairs: median {:.3}, p90 {:.3}",
+        errs.len(),
+        errs[errs.len() / 2],
+        errs[(errs.len() * 9 / 10).min(errs.len() - 1)]
+    );
+    Ok(())
+}
+
+/// `query`: one pair distance through every estimator.
+pub fn cmd_query(args: &Args) -> Result<()> {
+    let (corpus, cfg) = corpus_from_args(args)?;
+    let i = args.usize_or("i", 0)?;
+    let j = args.usize_or("j", 1)?;
+    if i >= corpus.n || j >= corpus.n {
+        bail!("rows out of range (n={})", corpus.n);
+    }
+    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let exact = corpus.exact_distance(i, j, cfg.alpha);
+    println!("exact d_(α)({i},{j}) = {exact:.6}");
+    use crate::estimators::*;
+    let mut buf = vec![0.0; cfg.k];
+    let ests: Vec<(&str, f64)> = vec![
+        ("oq ", engine.estimate(&store, i, j, &mut buf)),
+        (
+            "gm ",
+            engine.estimate_with(&GeometricMean::new(cfg.alpha, cfg.k), &store, i, j, &mut buf),
+        ),
+        (
+            "fp ",
+            engine.estimate_with(
+                &FractionalPower::new(cfg.alpha, cfg.k),
+                &store,
+                i,
+                j,
+                &mut buf,
+            ),
+        ),
+        (
+            "med",
+            engine.estimate_with(
+                &QuantileEstimator::median(cfg.alpha, cfg.k),
+                &store,
+                i,
+                j,
+                &mut buf,
+            ),
+        ),
+    ];
+    for (name, est) in ests {
+        println!(
+            "{name} = {est:.6}  (rel err {:+.3})",
+            if exact > 0.0 { est / exact - 1.0 } else { f64::NAN }
+        );
+    }
+    Ok(())
+}
+
+/// `serve`: run the coordinator on a synthetic query workload and print
+/// throughput + latency metrics.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let (corpus, cfg) = corpus_from_args(args)?;
+    let queries = args.usize_or("queries", 20_000)?;
+    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Coordinator::start(cfg.clone(), store)?;
+    let mut rng = Xoshiro256pp::new(cfg.seed ^ 2);
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < queries {
+        let burst = (queries - done).min(256);
+        let batch: Vec<PairQuery> = (0..burst)
+            .map(|_| PairQuery {
+                i: rng.below(corpus.n as u64) as u32,
+                j: rng.below(corpus.n as u64) as u32,
+                kind: QueryKind::Oq,
+            })
+            .collect();
+        let _ = coord.query_batch(&batch)?;
+        done += burst;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {queries} queries in {:.2}s = {:.0} qps (shards={})",
+        dt.as_secs_f64(),
+        queries as f64 / dt.as_secs_f64(),
+        cfg.shards
+    );
+    println!("{}", coord.metrics().report());
+    coord.shutdown();
+    Ok(())
+}
+
+/// `experiment`: quick textual versions of the paper figures (the full
+/// harness lives in `cargo bench --bench figN_*`).
+pub fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("fig1");
+    match which {
+        "fig1" => {
+            println!("alpha  gm      fp      oq      median   (Cramér–Rao efficiency)");
+            for i in 1..=10 {
+                let alpha = i as f64 * 0.2;
+                let row: Vec<String> = [
+                    EstimatorKind::GeometricMean,
+                    EstimatorKind::FractionalPower,
+                    EstimatorKind::OptimalQuantile,
+                    EstimatorKind::Median,
+                ]
+                .iter()
+                .map(|k| {
+                    let e = crate::estimators::efficiency_curve(*k, &[alpha])[0].1;
+                    if e.is_nan() {
+                        "  --  ".into()
+                    } else {
+                        format!("{:.3}", e)
+                    }
+                })
+                .collect();
+                println!("{alpha:.1}    {}", row.join("   "));
+            }
+        }
+        "fig2" => {
+            println!("alpha   q*      W^alpha(q*)");
+            for i in 1..=20 {
+                let alpha = i as f64 * 0.1;
+                println!(
+                    "{alpha:.1}   {:.4}   {:.4}",
+                    tables::q_star(alpha),
+                    tables::w_alpha_star(alpha)
+                );
+            }
+        }
+        other => bail!("unknown experiment '{other}' (use fig1|fig2, or cargo bench)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Bounded MPSC queue with explicit rejection — the pipeline's
+//! backpressure primitive.
+//!
+//! `std::sync::mpsc::sync_channel` blocks on full; a serving pipeline
+//! must instead *reject* so the caller can shed load or retry with
+//! jitter. This wraps a Mutex<VecDeque> + Condvar with a hard capacity
+//! and a depth counter the router reads for power-of-two-choices
+//! placement.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Debug)]
+pub enum QueueError<T> {
+    /// Queue at capacity — caller must back off.
+    Full(T),
+    /// Queue closed (shutdown).
+    Closed,
+}
+
+/// Bounded MPSC queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<VecDeque<T>>,
+    cap: usize,
+    depth: AtomicUsize,
+    closed: AtomicBool,
+    signal: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Mutex::new(VecDeque::with_capacity(cap)),
+            cap,
+            depth: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            signal: Condvar::new(),
+        }
+    }
+
+    /// Current depth (approximate; used for load-aware routing).
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Non-blocking push; rejects when full or closed.
+    pub fn push(&self, item: T) -> Result<(), QueueError<T>> {
+        if self.is_closed() {
+            return Err(QueueError::Closed);
+        }
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(QueueError::Full(item));
+        }
+        q.push_back(item);
+        self.depth.store(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.signal.notify_one();
+        Ok(())
+    }
+
+    /// Pop one item, waiting up to `timeout`; None on timeout or when
+    /// closed-and-empty.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.depth.store(q.len(), Ordering::Relaxed);
+                return Some(item);
+            }
+            if self.is_closed() {
+                return None;
+            }
+            let (guard, res) = self.signal.wait_timeout(q, timeout).unwrap();
+            q = guard;
+            if res.timed_out() {
+                let item = q.pop_front();
+                if item.is_some() {
+                    self.depth.store(q.len(), Ordering::Relaxed);
+                }
+                return item;
+            }
+        }
+    }
+
+    /// Drain up to `max` immediately-available items into `out`
+    /// (batch formation fast path; no waiting).
+    pub fn drain_into(&self, out: &mut Vec<T>, max: usize) {
+        let mut q = self.inner.lock().unwrap();
+        while out.len() < max {
+            match q.pop_front() {
+                Some(item) => out.push(item),
+                None => break,
+            }
+        }
+        self.depth.store(q.len(), Ordering::Relaxed);
+    }
+
+    /// Close: subsequent pushes fail; poppers drain whatever remains.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.signal.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        match q.push(3) {
+            Err(QueueError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert!(matches!(q.push(2), Err(QueueError::Closed)));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let q = Arc::new(BoundedQueue::new(64));
+        let qc = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = 0u64;
+            while let Some(v) = qc.pop_timeout(Duration::from_millis(200)) {
+                got += v;
+            }
+            got
+        });
+        let mut sent = 0u64;
+        for i in 1..=1000u64 {
+            loop {
+                match q.push(i) {
+                    Ok(()) => {
+                        sent += i;
+                        break;
+                    }
+                    Err(QueueError::Full(_)) => std::thread::yield_now(),
+                    Err(QueueError::Closed) => panic!("closed early"),
+                }
+            }
+        }
+        q.close();
+        assert_eq!(consumer.join().unwrap(), sent);
+    }
+
+    #[test]
+    fn drain_into_takes_at_most_max() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let mut out = Vec::new();
+        q.drain_into(&mut out, 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(q.depth(), 6);
+    }
+}

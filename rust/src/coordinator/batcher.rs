@@ -1,0 +1,149 @@
+//! Dynamic batching: a worker forms a batch by taking the first job
+//! (waiting up to the poll timeout), then greedily draining whatever is
+//! already queued up to `max_batch`, then — if still under-filled and
+//! young — waiting out the remaining deadline for stragglers.
+//!
+//! Size-or-deadline batching amortizes per-batch costs (buffer reuse,
+//! snapshot acquisition, cache warmth over the sketch rows) without
+//! adding unbounded latency at low load; the deadline bounds the
+//! worst-case queueing delay a lone query sees.
+
+use super::backpressure::BoundedQueue;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            deadline: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Stateless batch former over a queue.
+pub struct Batcher {
+    policy: BatchPolicy,
+    poll: Duration,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            poll: Duration::from_millis(20),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Form the next batch. Returns an empty vec only when the queue is
+    /// closed and drained (worker exit signal).
+    pub fn next_batch<T>(&self, queue: &Arc<BoundedQueue<T>>, out: &mut Vec<T>) {
+        out.clear();
+        // Block for the first element.
+        loop {
+            match queue.pop_timeout(self.poll) {
+                Some(first) => {
+                    out.push(first);
+                    break;
+                }
+                None => {
+                    if queue.is_closed() {
+                        return; // empty = shut down
+                    }
+                }
+            }
+        }
+        // Greedy drain of already-waiting jobs.
+        queue.drain_into(out, self.policy.max_batch);
+        if out.len() >= self.policy.max_batch {
+            return;
+        }
+        // Straggler window.
+        let formed = Instant::now();
+        while out.len() < self.policy.max_batch {
+            let left = self.policy.deadline.checked_sub(formed.elapsed());
+            let Some(left) = left else { break };
+            match queue.pop_timeout(left) {
+                Some(job) => out.push(job),
+                None => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_whats_waiting() {
+        let q = Arc::new(BoundedQueue::new(128));
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            deadline: Duration::from_micros(50),
+        });
+        let mut batch = Vec::new();
+        b.next_batch(&q, &mut batch);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        b.next_batch(&q, &mut batch);
+        assert_eq!(batch, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(16));
+        q.push(1).unwrap();
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 64,
+            deadline: Duration::from_millis(5),
+        });
+        let t0 = Instant::now();
+        let mut batch = Vec::new();
+        b.next_batch(&q, &mut batch);
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_batch_signals_shutdown() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        q.close();
+        let b = Batcher::new(BatchPolicy::default());
+        let mut batch = vec![99];
+        b.next_batch(&q, &mut batch);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn straggler_window_collects_late_arrivals() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.push(1u32).unwrap();
+        let qc = q.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(2));
+            qc.push(2).unwrap();
+        });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            deadline: Duration::from_millis(50),
+        });
+        let mut batch = Vec::new();
+        b.next_batch(&q, &mut batch);
+        producer.join().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+}

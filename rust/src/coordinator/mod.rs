@@ -1,0 +1,238 @@
+//! The L3 coordinator: a sharded, batching, backpressured serving
+//! pipeline over the sketch store.
+//!
+//! Topology:
+//!
+//! ```text
+//!           ┌──────────── ClientHandle (clone-able) ───────────┐
+//!           │ router: power-of-two-choices over shard queues   │
+//!           └──────┬───────────────┬───────────────┬───────────┘
+//!   bounded queue  ▼               ▼               ▼   (backpressure:
+//!            [ shard 0 ]     [ shard 1 ]     [ shard 2 ]  reject when full)
+//!            worker thread   worker thread   worker thread
+//!            dynamic batcher (size + deadline), estimator hot path
+//!                  ▲ read-mostly Arc<SketchStore> snapshots
+//!  ingest thread ──┘ turnstile events → new snapshot per epoch
+//! ```
+//!
+//! Distances are estimated with the optimal quantile estimator by
+//! default (select + one pow — the paper's point is that this is cheap
+//! enough to sit on a serving hot path); gm/fp/median are available
+//! per-query for comparison workloads.
+
+mod backpressure;
+mod batcher;
+mod router;
+mod shard;
+mod worker;
+
+pub use backpressure::{BoundedQueue, QueueError};
+pub use batcher::{BatchPolicy, Batcher};
+pub use router::Router;
+pub use shard::ShardSet;
+
+use crate::estimators::{
+    FractionalPower, GeometricMean, OptimalQuantile, QuantileEstimator, ScaleEstimator,
+};
+use crate::metrics::PipelineMetrics;
+use crate::sketch::{SketchStore, StreamEvent, StreamingSketcher};
+use crate::util::config::PipelineConfig;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which estimator serves a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryKind {
+    /// Optimal quantile (default; the paper's contribution).
+    Oq,
+    /// Geometric mean (k pow baseline).
+    Gm,
+    /// Fractional power.
+    Fp,
+    /// Sample median (Indyk baseline).
+    Median,
+}
+
+/// One distance query.
+#[derive(Debug, Clone, Copy)]
+pub struct PairQuery {
+    pub i: u32,
+    pub j: u32,
+    pub kind: QueryKind,
+}
+
+pub(crate) struct Job {
+    pub query: PairQuery,
+    pub seq: usize,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<(usize, f64)>,
+}
+
+/// Everything a worker needs, shared.
+pub(crate) struct Shared {
+    pub store: Mutex<Arc<SketchStore>>, // swapped by ingest epochs
+    pub oq: OptimalQuantile,
+    pub gm: GeometricMean,
+    pub fp: FractionalPower,
+    pub median: QuantileEstimator,
+    pub metrics: PipelineMetrics,
+    pub stop: AtomicBool,
+}
+
+impl Shared {
+    pub fn snapshot(&self) -> Arc<SketchStore> {
+        self.store.lock().unwrap().clone()
+    }
+
+    #[inline]
+    pub fn estimate(&self, kind: QueryKind, buf: &mut [f64]) -> f64 {
+        match kind {
+            QueryKind::Oq => self.oq.estimate(buf),
+            QueryKind::Gm => self.gm.estimate(buf),
+            QueryKind::Fp => self.fp.estimate(buf),
+            QueryKind::Median => self.median.estimate(buf),
+        }
+    }
+}
+
+/// The running pipeline.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    router: Router,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    ingest: Mutex<StreamingSketcher>,
+    config: PipelineConfig,
+}
+
+impl Coordinator {
+    /// Start workers over an existing sketch store.
+    pub fn start(config: PipelineConfig, store: SketchStore) -> Result<Coordinator> {
+        if store.k != config.k {
+            bail!("store k={} != config k={}", store.k, config.k);
+        }
+        let alpha = config.alpha;
+        let k = config.k;
+        let n = store.n;
+        let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, n);
+        let shared = Arc::new(Shared {
+            store: Mutex::new(Arc::new(store)),
+            oq: OptimalQuantile::new(alpha, k),
+            gm: GeometricMean::new(alpha, k),
+            fp: FractionalPower::new(alpha, k),
+            median: QuantileEstimator::median(alpha, k),
+            metrics: PipelineMetrics::default(),
+            stop: AtomicBool::new(false),
+        });
+        let mut queues = Vec::with_capacity(config.shards);
+        let mut workers = Vec::with_capacity(config.shards);
+        for w in 0..config.shards {
+            let queue = Arc::new(BoundedQueue::new(config.queue_depth));
+            let policy = BatchPolicy {
+                max_batch: config.max_batch,
+                deadline: std::time::Duration::from_micros(config.batch_deadline_us),
+            };
+            let shared2 = shared.clone();
+            let queue2 = queue.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sketch-worker-{w}"))
+                    .spawn(move || worker::run(shared2, queue2, policy))
+                    .expect("spawning worker"),
+            );
+            queues.push(queue);
+        }
+        Ok(Coordinator {
+            router: Router::new(queues, config.seed),
+            shared,
+            workers,
+            ingest: Mutex::new(ingest),
+            config,
+        })
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.config
+    }
+
+    pub fn metrics(&self) -> &PipelineMetrics {
+        &self.shared.metrics
+    }
+
+    /// Synchronous single query (round-trips one batch slot).
+    pub fn query(&self, q: PairQuery) -> Result<f64> {
+        Ok(self.query_batch(&[q])?[0])
+    }
+
+    /// Submit a batch; blocks until all answers arrive. Returns answers
+    /// in input order.
+    pub fn query_batch(&self, queries: &[PairQuery]) -> Result<Vec<f64>> {
+        let n = {
+            let snap = self.shared.snapshot();
+            snap.n as u32
+        };
+        for q in queries {
+            if q.i >= n || q.j >= n {
+                bail!("query ({}, {}) out of range (n={n})", q.i, q.j);
+            }
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, f64)>();
+        let mut pending = 0usize;
+        for (seq, &query) in queries.iter().enumerate() {
+            let job = Job {
+                query,
+                seq,
+                submitted: Instant::now(),
+                reply: tx.clone(),
+            };
+            self.shared.metrics.queries_submitted.inc();
+            match self.router.route(job) {
+                Ok(()) => pending += 1,
+                Err(QueueError::Full(_)) => {
+                    self.shared.metrics.queries_rejected.inc();
+                    bail!("backpressure: shard queues full after {pending} submissions");
+                }
+                Err(QueueError::Closed) => bail!("pipeline is shut down"),
+            }
+        }
+        drop(tx);
+        let mut out = vec![f64::NAN; queries.len()];
+        for _ in 0..pending {
+            let (seq, val) = rx.recv()?;
+            out[seq] = val;
+        }
+        Ok(out)
+    }
+
+    /// Apply turnstile events and publish a fresh snapshot (epoch).
+    pub fn ingest(&self, events: &[StreamEvent]) -> Result<()> {
+        let mut ingest = self.ingest.lock().unwrap();
+        for &ev in events {
+            ingest.apply(ev);
+            self.shared.metrics.events_ingested.inc();
+        }
+        let snapshot = Arc::new(ingest.store().clone());
+        *self.shared.store.lock().unwrap() = snapshot;
+        Ok(())
+    }
+
+    /// Graceful shutdown: drain queues, join workers.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.router.close_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.router.close_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

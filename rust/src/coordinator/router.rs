@@ -1,0 +1,69 @@
+//! Query routing: power-of-two-choices over the shard queues.
+//!
+//! The sketch store is replicated (read-mostly Arc snapshot) so any
+//! worker can serve any pair; routing is purely a load-balancing
+//! decision. Two random queues are probed and the shallower one wins —
+//! the classic d=2 trick gets exponentially better max-load than random
+//! placement with only two depth reads, and it *self-rebalances* when a
+//! worker stalls (its queue deepens, traffic drains to the others).
+
+use super::backpressure::{BoundedQueue, QueueError};
+use super::Job;
+use crate::numerics::SplitMix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub struct Router {
+    queues: Vec<Arc<BoundedQueue<Job>>>,
+    counter: AtomicU64,
+    seed: u64,
+}
+
+impl Router {
+    pub(crate) fn new(queues: Vec<Arc<BoundedQueue<Job>>>, seed: u64) -> Self {
+        assert!(!queues.is_empty());
+        Self {
+            queues,
+            counter: AtomicU64::new(0),
+            seed,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Route a job to the less-loaded of two pseudo-random shards;
+    /// on Full, retry the other, then fail (explicit backpressure).
+    pub(crate) fn route(&self, job: Job) -> Result<(), QueueError<Job>> {
+        let n = self.queues.len();
+        if n == 1 {
+            return self.queues[0].push(job);
+        }
+        let c = self.counter.fetch_add(1, Ordering::Relaxed);
+        let h = SplitMix64::hash(self.seed, c);
+        let a = (h % n as u64) as usize;
+        let b = ((h >> 32) % n as u64) as usize;
+        let (first, second) = if self.queues[a].depth() <= self.queues[b].depth() {
+            (a, b)
+        } else {
+            (b, a)
+        };
+        match self.queues[first].push(job) {
+            Ok(()) => Ok(()),
+            Err(QueueError::Full(job)) => self.queues[second].push(job),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Queue depths (diagnostics).
+    pub fn depths(&self) -> Vec<usize> {
+        self.queues.iter().map(|q| q.depth()).collect()
+    }
+
+    pub fn close_all(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+}

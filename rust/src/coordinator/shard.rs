@@ -1,0 +1,156 @@
+//! Row-range shard assignment with rebalancing — used by the *ingest*
+//! side to partition turnstile streams across ingest workers, and by
+//! bulk sketching to split a corpus into projection jobs.
+//!
+//! (Query-side load balancing is the router's power-of-two-choices; this
+//! module owns the data-partitioning maps.)
+
+/// Contiguous row-range shards over n rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSet {
+    /// `bounds[s]..bounds[s+1]` is shard s's row range.
+    bounds: Vec<usize>,
+}
+
+impl ShardSet {
+    /// Evenly split n rows into `shards` ranges (remainder spread over
+    /// the first shards).
+    pub fn even(n: usize, shards: usize) -> ShardSet {
+        assert!(shards > 0);
+        let base = n / shards;
+        let rem = n % shards;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut at = 0usize;
+        bounds.push(0);
+        for s in 0..shards {
+            at += base + usize::from(s < rem);
+            bounds.push(at);
+        }
+        ShardSet { bounds }
+    }
+
+    /// Split by explicit per-shard load weights (e.g. observed ingest
+    /// rates): shard s gets a row span proportional to 1/weight[s].
+    pub fn weighted(n: usize, weights: &[f64]) -> ShardSet {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w > 0.0));
+        // Capacity ∝ 1/weight (a slow shard gets fewer rows).
+        let caps: Vec<f64> = weights.iter().map(|w| 1.0 / w).collect();
+        let total: f64 = caps.iter().sum();
+        let mut bounds = Vec::with_capacity(weights.len() + 1);
+        bounds.push(0usize);
+        let mut acc = 0.0;
+        for (s, c) in caps.iter().enumerate() {
+            acc += c;
+            let b = if s + 1 == weights.len() {
+                n
+            } else {
+                ((acc / total) * n as f64).round() as usize
+            };
+            bounds.push(b.max(*bounds.last().unwrap()));
+        }
+        ShardSet { bounds }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Which shard owns row i.
+    pub fn owner(&self, row: usize) -> usize {
+        assert!(row < *self.bounds.last().unwrap(), "row {row} out of range");
+        // binary search over bounds
+        match self.bounds.binary_search(&row) {
+            Ok(exact) => exact.min(self.shards() - 1),
+            Err(ins) => ins - 1,
+        }
+    }
+
+    pub fn range(&self, shard: usize) -> std::ops::Range<usize> {
+        self.bounds[shard]..self.bounds[shard + 1]
+    }
+
+    /// Rebalance: recompute ranges from observed per-shard costs while
+    /// keeping total coverage; returns the rows that changed owner as
+    /// (row_start, row_end, from, to) move descriptors.
+    pub fn rebalance(&self, costs: &[f64]) -> (ShardSet, Vec<(usize, usize, usize, usize)>) {
+        assert_eq!(costs.len(), self.shards());
+        let n = *self.bounds.last().unwrap();
+        let new = ShardSet::weighted(n, costs);
+        let mut moves = Vec::new();
+        for row_block in 0..self.shards().max(new.shards()) {
+            let _ = row_block;
+        }
+        // Compute ownership diffs as maximal runs.
+        let mut row = 0usize;
+        while row < n {
+            let from = self.owner(row);
+            let to = new.owner(row);
+            let mut end = row + 1;
+            while end < n && self.owner(end) == from && new.owner(end) == to {
+                end += 1;
+            }
+            if from != to {
+                moves.push((row, end, from, to));
+            }
+            row = end;
+        }
+        (new, moves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_covers_everything() {
+        let s = ShardSet::even(103, 4);
+        assert_eq!(s.shards(), 4);
+        let mut total = 0;
+        for i in 0..4 {
+            total += s.range(i).len();
+        }
+        assert_eq!(total, 103);
+        // ranges differ by at most 1
+        let lens: Vec<usize> = (0..4).map(|i| s.range(i).len()).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn owner_is_consistent_with_ranges() {
+        let s = ShardSet::even(50, 3);
+        for shard in 0..3 {
+            for row in s.range(shard) {
+                assert_eq!(s.owner(row), shard, "row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_gives_slow_shards_fewer_rows() {
+        // shard 1 is 4x slower => should own ~4x fewer rows
+        let s = ShardSet::weighted(100, &[1.0, 4.0]);
+        let fast = s.range(0).len();
+        let slow = s.range(1).len();
+        assert!(fast > 3 * slow, "fast {fast} slow {slow}");
+        assert_eq!(fast + slow, 100);
+    }
+
+    #[test]
+    fn rebalance_produces_moves_and_coverage() {
+        let s = ShardSet::even(100, 2);
+        let (new, moves) = s.rebalance(&[1.0, 3.0]); // shard 1 got slow
+        assert_eq!(new.range(0).len() + new.range(1).len(), 100);
+        assert!(!moves.is_empty());
+        // all moved rows now belong to their 'to' shard
+        for &(start, end, _from, to) in &moves {
+            for row in start..end {
+                assert_eq!(new.owner(row), to);
+            }
+        }
+        // balanced costs => no moves
+        let (_, no_moves) = s.rebalance(&[1.0, 1.0]);
+        assert!(no_moves.is_empty());
+    }
+}

@@ -1,0 +1,44 @@
+//! Shard worker loop: form a batch, snapshot the store once, serve every
+//! query in the batch with a reused scratch buffer.
+
+use super::backpressure::BoundedQueue;
+use super::batcher::{BatchPolicy, Batcher};
+use super::{Job, Shared};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: BatchPolicy) {
+    let batcher = Batcher::new(policy);
+    let mut batch: Vec<Job> = Vec::with_capacity(policy.max_batch);
+    let mut buf: Vec<f64> = Vec::new();
+    loop {
+        batcher.next_batch(&queue, &mut batch);
+        if batch.is_empty() {
+            return; // queue closed & drained
+        }
+        let t_batch = Instant::now();
+        // One snapshot per batch: queries in a batch see a consistent
+        // epoch, and the Arc clone cost is amortized.
+        let store = shared.snapshot();
+        buf.resize(store.k, 0.0);
+        shared.metrics.batches_formed.inc();
+        shared.metrics.batch_fill.add(batch.len() as u64);
+        for job in batch.drain(..) {
+            let (i, j) = (job.query.i as usize, job.query.j as usize);
+            let d = if i == j {
+                0.0
+            } else {
+                store.diff_into(i, j, &mut buf);
+                shared.estimate(job.query.kind, &mut buf)
+            };
+            shared
+                .metrics
+                .query_latency
+                .record(job.submitted.elapsed());
+            shared.metrics.queries_completed.inc();
+            // Receiver may have given up (client dropped) — ignore.
+            let _ = job.reply.send((job.seq, d));
+        }
+        shared.metrics.batch_latency.record(t_batch.elapsed());
+    }
+}

@@ -1,0 +1,78 @@
+//! Arithmetic mean estimator — the classical (and statistically optimal)
+//! estimator for α = 2 (normal random projections / JL).
+//!
+//! In the paper's parametrization `S(2, d)` has characteristic function
+//! `exp(−d t²)`, i.e. it is N(0, 2d) — so `E x² = 2d` and the unbiased
+//! arithmetic-mean estimator is `d̂ = (1/(2k)) Σ x_j²`.
+
+use super::ScaleEstimator;
+
+/// `d̂_(2) = (1/(2k)) Σ x_j²`. Only defined at α = 2 (for α < 2 the
+/// second moment is infinite and this estimator diverges — constructing
+/// it for α < 2 panics).
+#[derive(Debug, Clone, Copy)]
+pub struct ArithmeticMean {
+    k: usize,
+}
+
+impl ArithmeticMean {
+    pub fn new(alpha: f64, k: usize) -> Self {
+        assert!(
+            (alpha - 2.0).abs() < 1e-12,
+            "arithmetic mean estimator requires alpha = 2 (got {alpha}); \
+             E|x|^2 = ∞ for alpha < 2"
+        );
+        assert!(k > 0);
+        Self { k }
+    }
+}
+
+impl ScaleEstimator for ArithmeticMean {
+    fn alpha(&self) -> f64 {
+        2.0
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    fn estimate(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        let mut acc = 0.0;
+        for &x in samples.iter() {
+            acc += x * x;
+        }
+        acc / (2.0 * self.k as f64)
+    }
+
+    fn asymptotic_variance_factor(&self) -> f64 {
+        // x ~ N(0, 2d): Var(x²) = 8d² ⇒ Var(d̂) = 8d²/(4k) = 2d²/k.
+        2.0
+    }
+
+    fn name(&self) -> &'static str {
+        "arithmetic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mc_mean_mse;
+    use super::*;
+
+    #[test]
+    fn unbiased_and_efficient_at_alpha_two() {
+        let est = ArithmeticMean::new(2.0, 50);
+        let (mean, mse) = mc_mean_mse(&est, 3.0, 20_000, 7);
+        assert!((mean / 3.0 - 1.0).abs() < 0.01, "mean {mean}");
+        // Var ≈ 2 d²/k = 2*9/50 = 0.36
+        assert!((mse / 0.36 - 1.0).abs() < 0.1, "mse {mse}");
+    }
+
+    #[test]
+    #[should_panic(expected = "requires alpha = 2")]
+    fn rejects_alpha_below_two() {
+        let _ = ArithmeticMean::new(1.5, 10);
+    }
+}

@@ -1,0 +1,189 @@
+//! Cramér–Rao efficiencies (Fig 1): the ratio of the smallest possible
+//! asymptotic variance (inverse Fisher information of the scale family)
+//! to each estimator's asymptotic variance.
+//!
+//! For the scale family `f(x; d) = d^{−1/α} f(x d^{−1/α})`, the per-sample
+//! Fisher information about d at d = 1 is
+//!
+//! ```text
+//!   I₁ = (1/α²) · E[ (1 + z · ∂ log f(z)/∂z)² ],   z ~ S(α, 1)
+//! ```
+//!
+//! so the CR lower bound is `Var ≥ d²/(k · I₁)` and the efficiency of an
+//! estimator with `Var → V d²/k` is `1/(I₁ V)`.
+
+use super::{
+    tables, FractionalPower, GeometricMean, HarmonicMean, QuantileEstimator, ScaleEstimator,
+};
+use crate::numerics::quadrature::adaptive;
+use crate::stable::StandardStable;
+
+/// Which estimator a Fig-1 curve refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorKind {
+    GeometricMean,
+    HarmonicMean,
+    FractionalPower,
+    OptimalQuantile,
+    Median,
+}
+
+impl EstimatorKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::GeometricMean => "gm",
+            Self::HarmonicMean => "hm",
+            Self::FractionalPower => "fp",
+            Self::OptimalQuantile => "oq",
+            Self::Median => "median",
+        }
+    }
+
+    /// Asymptotic variance factor V (Var → V d²/k) at this α, NaN where
+    /// the estimator is undefined / has infinite variance.
+    pub fn variance_factor(&self, alpha: f64) -> f64 {
+        // k only affects finite-sample corrections, not V; use any k.
+        let k = 64;
+        match self {
+            Self::GeometricMean => GeometricMean::new(alpha, k).asymptotic_variance_factor(),
+            Self::HarmonicMean => {
+                if alpha < 1.0 {
+                    HarmonicMean::new(alpha, k).asymptotic_variance_factor()
+                } else {
+                    f64::NAN
+                }
+            }
+            Self::FractionalPower => {
+                FractionalPower::new(alpha, k).asymptotic_variance_factor()
+            }
+            Self::OptimalQuantile => {
+                let q = tables::q_star(alpha);
+                QuantileEstimator::new(alpha, k, q).asymptotic_variance_factor()
+            }
+            Self::Median => QuantileEstimator::median(alpha, k).asymptotic_variance_factor(),
+        }
+    }
+}
+
+/// Per-sample Fisher information about the scale parameter d, at d = 1.
+///
+/// Integrated in the *quantile domain*: with `z(u) = F⁻¹((1+u)/2)`,
+///
+/// ```text
+///   I₁ = (1/α²) · 2∫_0^∞ s(z)² f(z) dz = (1/α²) ∫_0^1 s(z(u))² du,
+///   s(z) = 1 + z · ∂log f/∂z
+/// ```
+///
+/// which maps the heavy tail (z up to 10^80 for small α) into u → 1
+/// where the integrand tends smoothly to α² (since z·dlogf → −(α+1)) —
+/// a bounded integrand on [0,1] instead of an un-truncatable improper
+/// one.
+pub fn fisher_information(alpha: f64) -> f64 {
+    use once_cell::sync::Lazy;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    static CACHE: Lazy<Mutex<HashMap<u64, f64>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+    let key = (alpha * 1e9).round() as u64;
+    if let Some(&v) = CACHE.lock().unwrap().get(&key) {
+        return v;
+    }
+    let v = fisher_information_uncached(alpha);
+    CACHE.lock().unwrap().insert(key, v);
+    v
+}
+
+fn fisher_information_uncached(alpha: f64) -> f64 {
+    let std = StandardStable::new(alpha);
+    let integrand = |u: f64| {
+        let z = std.abs_quantile(u.clamp(1e-12, 1.0 - 1e-12));
+        let s = 1.0 + z * std.dlogpdf(z);
+        s * s
+    };
+    // Endpoint values are finite; keep nodes interior.
+    let total = adaptive(&integrand, 1e-9, 1.0 - 1e-9, 1e-8);
+    total / (alpha * alpha)
+}
+
+/// Cramér–Rao bound factor: smallest possible V (Var ≥ V_cr · d²/k).
+pub fn cramer_rao_bound_factor(alpha: f64) -> f64 {
+    1.0 / fisher_information(alpha)
+}
+
+/// One point of Fig 1: efficiency (in [0,1]) of `kind` at `alpha`.
+pub fn efficiency(kind: EstimatorKind, alpha: f64) -> f64 {
+    let v = kind.variance_factor(alpha);
+    if !v.is_finite() {
+        return f64::NAN;
+    }
+    cramer_rao_bound_factor(alpha) / v
+}
+
+/// A full Fig-1 curve over an α grid.
+pub fn efficiency_curve(kind: EstimatorKind, alphas: &[f64]) -> Vec<(f64, f64)> {
+    alphas
+        .iter()
+        .map(|&a| (a, efficiency(kind, a)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fisher_information_gaussian_closed_form() {
+        // α = 2: d is the variance of N(0, d); I(d) = 1/(2d²) ⇒ I₁ = 1/2.
+        let i1 = fisher_information(2.0);
+        assert!((i1 - 0.5).abs() < 1e-3, "I1(2) = {i1}");
+    }
+
+    #[test]
+    fn fisher_information_cauchy_closed_form() {
+        // α = 1: scale family of Cauchy with scale γ = d; I_γ = 1/(2γ²)
+        // ⇒ in d-parametrization (d = γ here since α=1) I₁ = 1/2.
+        let i1 = fisher_information(1.0);
+        assert!((i1 - 0.5).abs() < 1e-3, "I1(1) = {i1}");
+    }
+
+    #[test]
+    fn efficiencies_are_probabilities() {
+        for &alpha in &[0.3, 0.7, 1.0, 1.4, 1.8, 2.0] {
+            for kind in [
+                EstimatorKind::GeometricMean,
+                EstimatorKind::FractionalPower,
+                EstimatorKind::OptimalQuantile,
+                EstimatorKind::Median,
+            ] {
+                let e = efficiency(kind, alpha);
+                assert!(
+                    e > 0.0 && e <= 1.0 + 1e-6,
+                    "{} at alpha={alpha}: {e}",
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_orderings_hold() {
+        // oq ≈ gm for α < 1; oq considerably better for α > 1;
+        // oq < fp variance for 1 < α ≤ 1.8 i.e. eff_oq > eff_fp there.
+        let e_oq_15 = efficiency(EstimatorKind::OptimalQuantile, 1.5);
+        let e_gm_15 = efficiency(EstimatorKind::GeometricMean, 1.5);
+        let e_fp_15 = efficiency(EstimatorKind::FractionalPower, 1.5);
+        assert!(e_oq_15 > e_gm_15, "oq {e_oq_15} vs gm {e_gm_15}");
+        assert!(e_oq_15 > e_fp_15, "oq {e_oq_15} vs fp {e_fp_15}");
+        // fp beats oq near α = 2 (paper: fp is near-optimal there in
+        // asymptotic variance).
+        let e_oq_2 = efficiency(EstimatorKind::OptimalQuantile, 1.95);
+        let e_fp_2 = efficiency(EstimatorKind::FractionalPower, 1.95);
+        assert!(e_fp_2 > e_oq_2, "fp {e_fp_2} vs oq {e_oq_2} at 1.95");
+    }
+
+    #[test]
+    fn hm_efficient_only_small_alpha() {
+        let e_small = efficiency(EstimatorKind::HarmonicMean, 0.2);
+        assert!(e_small > 0.5, "hm at 0.2: {e_small}");
+        assert!(efficiency(EstimatorKind::HarmonicMean, 1.5).is_nan());
+    }
+}

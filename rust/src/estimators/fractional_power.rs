@@ -1,0 +1,168 @@
+//! Fractional power estimator (Li & Hastie, NIPS'08):
+//!
+//! ```text
+//!   d̂_fp = ( (1/k) Σ|x_j|^{λ*α} / m(λ*) )^{1/λ*} · (1 − c/k)
+//! ```
+//! with `m(λ) = (2/π)Γ(1−λ)Γ(λα)sin(πλα/2) = E|x|^{λα}`, the first-order
+//! bias correction `c = (1/(2λ*))(1/λ* − 1)(R(λ*) − 1)`,
+//! `R(λ) = m(2λ)/m(λ)²`, and
+//!
+//! ```text
+//!   λ* = argmin_{−1/(2α) < λ < 1/2}  (1/λ²)(R(λ) − 1)
+//! ```
+//!
+//! Near-optimal asymptotic variance, but no exponential tail bounds: as
+//! α → 2, λ* → 1/2 and the estimator has finite moments only slightly
+//! above order 2 (heavy right tail — reproduced in Fig 7).
+
+use super::ScaleEstimator;
+use crate::numerics::optimize::grid_then_golden;
+use crate::numerics::specfun::stable_abs_moment;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FractionalPower {
+    alpha: f64,
+    k: usize,
+    lambda: f64,
+    exponent: f64,     // λ*·α
+    inv_lambda: f64,   // 1/λ*
+    inv_moment: f64,   // 1/m(λ*)
+    bias_factor: f64,  // (1 − c/k)
+    var_factor: f64,   // (1/λ*²)(R(λ*) − 1)
+}
+
+/// The objective `(1/λ²)(R(λ) − 1)`; its λ→0 limit is the geometric
+/// mean's variance factor (the gm estimator is the λ→0 member of this
+/// family).
+pub fn fp_objective(alpha: f64, lambda: f64) -> f64 {
+    if lambda.abs() < 1e-4 {
+        // Smooth limit: α² Var(log|x|) = (π²/6)(1 + α²/2).
+        return std::f64::consts::PI.powi(2) / 6.0 * (1.0 + alpha * alpha / 2.0);
+    }
+    let m1 = stable_abs_moment(alpha, lambda * alpha);
+    let m2 = stable_abs_moment(alpha, 2.0 * lambda * alpha);
+    (m2 / (m1 * m1) - 1.0) / (lambda * lambda)
+}
+
+/// Solve for λ*(α) by coarse grid + golden-section refinement over the
+/// admissible interval (−1/(2α), 1/2).
+pub fn solve_lambda_star(alpha: f64) -> f64 {
+    let lo = -1.0 / (2.0 * alpha) + 1e-6;
+    let hi = 0.5 - 1e-9;
+    let (lambda, _) = grid_then_golden(&|l| fp_objective(alpha, l), lo, hi, 200, 1e-10);
+    lambda
+}
+
+impl FractionalPower {
+    pub fn new(alpha: f64, k: usize) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0, "alpha in (0,2]");
+        assert!(k >= 2);
+        let lambda = solve_lambda_star(alpha);
+        let m1 = stable_abs_moment(alpha, lambda * alpha);
+        let m2 = stable_abs_moment(alpha, 2.0 * lambda * alpha);
+        let r = m2 / (m1 * m1);
+        let c = (1.0 / (2.0 * lambda)) * (1.0 / lambda - 1.0) * (r - 1.0);
+        Self {
+            alpha,
+            k,
+            lambda,
+            exponent: lambda * alpha,
+            inv_lambda: 1.0 / lambda,
+            inv_moment: 1.0 / m1,
+            bias_factor: 1.0 - c / k as f64,
+            var_factor: (r - 1.0) / (lambda * lambda),
+        }
+    }
+
+    pub fn lambda_star(&self) -> f64 {
+        self.lambda
+    }
+}
+
+impl ScaleEstimator for FractionalPower {
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Cost model: one `pow` per sample (like gm) plus one final
+    /// `powf(1/λ*)`.
+    #[inline]
+    fn estimate(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        let mut acc = 0.0f64;
+        for &x in samples.iter() {
+            acc += x.abs().powf(self.exponent);
+        }
+        let mean = acc / self.k as f64;
+        (mean * self.inv_moment).powf(self.inv_lambda) * self.bias_factor
+    }
+
+    fn asymptotic_variance_factor(&self) -> f64 {
+        self.var_factor
+    }
+
+    fn name(&self) -> &'static str {
+        "fractional_power"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mc_mean_mse;
+    use super::super::GeometricMean;
+    use super::*;
+
+    #[test]
+    fn lambda_star_limits() {
+        // As α → 2 the optimum pushes (slowly) toward λ = 1/2 (paper
+        // §2.1: λ* → 0.5 as α → 2); for small α the optimum is negative
+        // (harmonic-mean-like).
+        let l195 = solve_lambda_star(1.95);
+        let l199 = solve_lambda_star(1.99);
+        assert!(l195 > 0.3, "λ*(1.95)={l195}");
+        assert!(l199 > l195 && l199 > 0.4, "λ*(1.99)={l199}");
+        assert!(solve_lambda_star(0.2) < 0.0);
+    }
+
+    #[test]
+    fn beats_gm_variance_everywhere() {
+        // fp is the variance-optimal member of the family containing gm.
+        for &alpha in &[0.3, 0.8, 1.2, 1.8] {
+            let fp = FractionalPower::new(alpha, 50);
+            let gm = GeometricMean::new(alpha, 50);
+            assert!(
+                fp.asymptotic_variance_factor() <= gm.asymptotic_variance_factor() + 1e-9,
+                "alpha={alpha}"
+            );
+        }
+    }
+
+    #[test]
+    fn nearly_unbiased() {
+        for &alpha in &[0.5, 1.0, 1.5] {
+            let est = FractionalPower::new(alpha, 50);
+            let (mean, _) = mc_mean_mse(&est, 2.0, 40_000, 23);
+            assert!(
+                (mean / 2.0 - 1.0).abs() < 0.03,
+                "alpha={alpha}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn mse_tracks_asymptotic_variance_moderate_alpha() {
+        let alpha = 0.8;
+        let k = 100;
+        let est = FractionalPower::new(alpha, k);
+        let (_, mse) = mc_mean_mse(&est, 1.0, 50_000, 29);
+        let predicted = est.asymptotic_variance_factor() / k as f64;
+        assert!(
+            (mse / predicted - 1.0).abs() < 0.3,
+            "mse {mse} vs {predicted}"
+        );
+    }
+}

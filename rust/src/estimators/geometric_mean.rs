@@ -1,0 +1,138 @@
+//! Geometric mean estimator (Li, SODA'08):
+//!
+//! ```text
+//!   d̂_gm = Π_j |x_j|^{α/k}  /  [ (2/π) Γ(α/k) Γ(1−1/k) sin(πα/(2k)) ]^k
+//! ```
+//!
+//! Exactly unbiased for every k ≥ 2 (the denominator is E|x|^{α/k} raised
+//! to k), with exponential tail bounds. Its hot path is k fractional
+//! powers — the cost the optimal quantile estimator removes.
+
+use super::ScaleEstimator;
+use crate::numerics::specfun::stable_abs_moment;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GeometricMean {
+    alpha: f64,
+    k: usize,
+    exponent: f64,  // α/k
+    inv_denom: f64, // [E|x|^{α/k}]^{−k}, precomputed (paper §3.3)
+}
+
+impl GeometricMean {
+    pub fn new(alpha: f64, k: usize) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0, "alpha in (0,2]");
+        assert!(k >= 2, "geometric mean needs k >= 2 (moment existence)");
+        let exponent = alpha / k as f64;
+        // E|x|^{α/k} = (2/π) Γ(1−1/k) Γ(α/k) sin(πα/(2k))
+        let moment = stable_abs_moment(alpha, exponent);
+        let inv_denom = (-(k as f64) * moment.ln()).exp();
+        Self {
+            alpha,
+            k,
+            exponent,
+            inv_denom,
+        }
+    }
+
+    /// Exact relative variance (Var(d̂)/d²) at finite k — the gm
+    /// estimator has a closed-form second moment (used for the exact
+    /// curve in Fig 6):
+    /// `E d̂² / d² = [E|x|^{2α/k}]^k / [E|x|^{α/k}]^{2k}`.
+    pub fn exact_variance_factor(&self) -> f64 {
+        assert!(self.k >= 3, "second moment needs k >= 3");
+        let kf = self.k as f64;
+        let m1 = stable_abs_moment(self.alpha, self.exponent);
+        let m2 = stable_abs_moment(self.alpha, 2.0 * self.exponent);
+        (kf * m2.ln() - 2.0 * kf * m1.ln()).exp() - 1.0
+    }
+}
+
+impl ScaleEstimator for GeometricMean {
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The paper's cost model: one `pow` per sample (gcc `pow` there,
+    /// `f64::powf` here), multiplied into a running product. Each factor
+    /// is |x|^{α/k} ≈ O(1) so the product cannot over/underflow for
+    /// realistic k.
+    #[inline]
+    fn estimate(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        let mut prod = 1.0f64;
+        for &x in samples.iter() {
+            prod *= x.abs().powf(self.exponent);
+        }
+        prod * self.inv_denom
+    }
+
+    fn asymptotic_variance_factor(&self) -> f64 {
+        // Var → d²/k · (π²/6)(1 + α²/2)   [Li'08, via Var(log|x|)]
+        std::f64::consts::PI.powi(2) / 6.0 * (1.0 + self.alpha * self.alpha / 2.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "geometric_mean"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mc_mean_mse;
+    use super::*;
+
+    #[test]
+    fn unbiased_across_alpha() {
+        for &alpha in &[0.5, 1.0, 1.5, 2.0] {
+            let est = GeometricMean::new(alpha, 30);
+            let (mean, _) = mc_mean_mse(&est, 2.5, 30_000, 11);
+            assert!(
+                (mean / 2.5 - 1.0).abs() < 0.02,
+                "alpha={alpha}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_variance_matches_monte_carlo() {
+        for &alpha in &[0.8, 1.5] {
+            let est = GeometricMean::new(alpha, 25);
+            let exact = est.exact_variance_factor();
+            let (_, mse) = mc_mean_mse(&est, 1.0, 60_000, 13);
+            assert!(
+                (mse / exact - 1.0).abs() < 0.1,
+                "alpha={alpha}: mc {mse} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_variance_approaches_asymptotic() {
+        let alpha = 1.3;
+        let k = 400;
+        let est = GeometricMean::new(alpha, k);
+        let exact_scaled = est.exact_variance_factor() * k as f64;
+        let asym = est.asymptotic_variance_factor();
+        assert!(
+            (exact_scaled / asym - 1.0).abs() < 0.05,
+            "k·exactVar {exact_scaled} vs asym {asym}"
+        );
+    }
+
+    #[test]
+    fn scale_equivariance() {
+        // d̂(c^{1/α}·x) = c·d̂(x) exactly.
+        let est = GeometricMean::new(1.2, 10);
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 0.3 - 1.6).collect();
+        let base = est.estimate(&mut xs.clone());
+        let c = 7.0f64;
+        let mut scaled: Vec<f64> = xs.iter().map(|x| x * c.powf(1.0 / 1.2)).collect();
+        let got = est.estimate(&mut scaled);
+        assert!((got / (c * base) - 1.0).abs() < 1e-12);
+    }
+}

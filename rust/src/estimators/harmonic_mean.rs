@@ -1,0 +1,127 @@
+//! Harmonic mean estimator (Li, SODA'08):
+//!
+//! ```text
+//!   d̂_hm = −(2/π)Γ(−α)sin(πα/2) / Σ_j |x_j|^{−α}
+//!           · ( k − ( −πΓ(−2α)sin(πα) / [Γ(−α)sin(πα/2)]² − 1 ) )
+//! ```
+//!
+//! The coefficient `−(2/π)Γ(−α)sin(πα/2)` is exactly `E|x|^{−α}` of the
+//! standard stable law; the trailing factor is the first-order bias
+//! correction. The estimator needs E|x|^{−α} < ∞ (α < 1) and its
+//! asymptotic variance needs E|x|^{−2α} < ∞ (α < 1/2) — the paper's
+//! "works well for small α".
+
+use super::ScaleEstimator;
+use crate::numerics::specfun::stable_abs_moment;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HarmonicMean {
+    alpha: f64,
+    k: usize,
+    neg_alpha: f64,
+    /// m₁ = E|x|^{−α} (standard), times the bias factor — precomputed.
+    numer: f64,
+    var_factor: f64,
+}
+
+impl HarmonicMean {
+    /// Panics unless 0 < α < 1 (moment existence).
+    pub fn new(alpha: f64, k: usize) -> Self {
+        assert!(
+            alpha > 0.0 && alpha < 1.0,
+            "harmonic mean requires 0 < alpha < 1 (E|x|^(-α) = ∞ otherwise), got {alpha}"
+        );
+        assert!(k >= 2);
+        let m1 = stable_abs_moment(alpha, -alpha);
+        // Variance ratio R = E|x|^{−2α}/(E|x|^{−α})²; finite only for α<1/2.
+        let (bias_term, var_factor) = if 2.0 * alpha < 1.0 {
+            let m2 = stable_abs_moment(alpha, -2.0 * alpha);
+            let r = m2 / (m1 * m1);
+            (r - 1.0, r - 1.0)
+        } else {
+            // Bias/variance corrections blow up; keep the raw estimator.
+            (0.0, f64::NAN)
+        };
+        let numer = m1 * (k as f64 - bias_term);
+        Self {
+            alpha,
+            k,
+            neg_alpha: -alpha,
+            numer,
+            var_factor,
+        }
+    }
+}
+
+impl ScaleEstimator for HarmonicMean {
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    fn estimate(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        let mut denom = 0.0f64;
+        for &x in samples.iter() {
+            denom += x.abs().powf(self.neg_alpha);
+        }
+        self.numer / denom
+    }
+
+    fn asymptotic_variance_factor(&self) -> f64 {
+        self.var_factor
+    }
+
+    fn name(&self) -> &'static str {
+        "harmonic_mean"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mc_mean_mse;
+    use super::*;
+
+    #[test]
+    fn nearly_unbiased_small_alpha() {
+        for &alpha in &[0.2, 0.4] {
+            let est = HarmonicMean::new(alpha, 50);
+            let (mean, _) = mc_mean_mse(&est, 1.5, 40_000, 17);
+            assert!(
+                (mean / 1.5 - 1.0).abs() < 0.02,
+                "alpha={alpha}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_close_to_asymptotic() {
+        let alpha = 0.3;
+        let k = 100;
+        let est = HarmonicMean::new(alpha, k);
+        let v = est.asymptotic_variance_factor();
+        assert!(v.is_finite() && v > 0.0);
+        let (_, mse) = mc_mean_mse(&est, 1.0, 60_000, 19);
+        let predicted = v / k as f64;
+        assert!(
+            (mse / predicted - 1.0).abs() < 0.25,
+            "mse {mse} vs predicted {predicted}"
+        );
+    }
+
+    #[test]
+    fn variance_factor_nan_when_moment_infinite() {
+        let est = HarmonicMean::new(0.7, 20);
+        assert!(est.asymptotic_variance_factor().is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "requires 0 < alpha < 1")]
+    fn rejects_alpha_ge_one() {
+        let _ = HarmonicMean::new(1.2, 10);
+    }
+}

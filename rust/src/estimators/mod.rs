@@ -1,0 +1,80 @@
+//! The paper core: estimators of the scale parameter `d_(α)` from k
+//! i.i.d. samples `x_j ~ S(α, d_(α))` produced by stable random
+//! projections, plus tail bounds and sample-complexity planning.
+//!
+//! All estimators implement [`ScaleEstimator`]; coefficients that depend
+//! only on `(α, k)` are precomputed at construction (the paper does the
+//! same for fairness of its Figure 4 cost comparison).
+
+mod arithmetic;
+pub mod confidence;
+mod efficiency;
+mod fractional_power;
+mod geometric_mean;
+mod harmonic_mean;
+mod optimal_quantile;
+mod quantile;
+pub mod quickselect;
+pub mod tables;
+pub mod tail_bounds;
+
+pub use arithmetic::ArithmeticMean;
+pub use confidence::{ConfidenceInterval, IntervalBuilder};
+pub use efficiency::{cramer_rao_bound_factor, efficiency_curve, EstimatorKind};
+pub use fractional_power::FractionalPower;
+pub use geometric_mean::GeometricMean;
+pub use harmonic_mean::HarmonicMean;
+pub use optimal_quantile::OptimalQuantile;
+pub use quantile::QuantileEstimator;
+
+/// A scale-parameter estimator bound to fixed `(α, k)`.
+///
+/// `estimate` consumes a *scratch-mutable* sample buffer: the quantile
+/// estimators select in place (that's the whole point of the paper), and
+/// forcing a copy on them would bill the baselines' weakness to the
+/// contribution. Callers that need the samples preserved must copy.
+pub trait ScaleEstimator {
+    /// The α this estimator was built for.
+    fn alpha(&self) -> f64;
+
+    /// The sample count k this estimator was built for.
+    fn k(&self) -> usize;
+
+    /// Estimate `d_(α)` from exactly k samples (panics on length
+    /// mismatch — the pipeline always hands fixed-k rows).
+    fn estimate(&self, samples: &mut [f64]) -> f64;
+
+    /// Asymptotic variance factor `V` such that
+    /// `Var(d̂) → V · d² / k` as k → ∞ (NaN when the estimator has no
+    /// finite asymptotic variance at this α).
+    fn asymptotic_variance_factor(&self) -> f64;
+
+    /// Short stable name for reports/benches.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::numerics::{Rng, Xoshiro256pp};
+    use crate::stable::StableDist;
+
+    /// Monte-Carlo mean/MSE of an estimator at d=dtrue.
+    pub fn mc_mean_mse<E: super::ScaleEstimator>(
+        est: &E,
+        dtrue: f64,
+        reps: usize,
+        seed: u64,
+    ) -> (f64, f64) {
+        let dist = StableDist::new(est.alpha(), dtrue);
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut buf = vec![0.0; est.k()];
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..reps {
+            dist.sample_into(&mut rng, &mut buf);
+            let dh = est.estimate(&mut buf);
+            sum += dh;
+            sq += (dh - dtrue) * (dh - dtrue);
+        }
+        (sum / reps as f64, sq / reps as f64)
+    }
+}

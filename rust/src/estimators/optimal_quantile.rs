@@ -1,0 +1,191 @@
+//! The paper's contribution: the **optimal quantile estimator**
+//!
+//! ```text
+//!   d̂_(α),oq,c = ( q*-quantile{|x_j|} / W )^α / B_{α,k}
+//! ```
+//!
+//! where q*(α) minimizes the asymptotic variance (Eq. 6) and B_{α,k}
+//! removes the finite-k bias (§3.2). Everything that depends only on
+//! (α, k) — q*, the order-statistic index, 1/(W^α · B) — is folded into
+//! one precomputed multiplier, so the hot path is:
+//!
+//!   *k absolute values → one selection → one pow → one multiply.*
+//!
+//! No per-sample fractional powers: that is the paper's ~order-of-
+//! magnitude cost win over gm/fp (Fig 4), reproduced by
+//! `benches/fig4_cost.rs`.
+
+use super::quantile::QuantileEstimator;
+use super::quickselect::select_kth;
+use super::{tables, ScaleEstimator};
+
+#[derive(Debug, Clone, Copy)]
+pub struct OptimalQuantile {
+    alpha: f64,
+    k: usize,
+    q_star: f64,
+    idx: usize,
+    /// 1 / (W^α · B_{α,k}): the single fused constant of §3.2 ("absorbed
+    /// into other coefficients ... does not increase cost at run time").
+    scale: f64,
+    /// 1 / (W · B^{1/α}) for the root form.
+    scale_root: f64,
+    bias: f64,
+    var_factor: f64,
+}
+
+impl OptimalQuantile {
+    /// Bias-corrected estimator d̂_(α),oq,c (the recommended default).
+    pub fn new(alpha: f64, k: usize) -> Self {
+        Self::with_bias_correction(alpha, k, true)
+    }
+
+    /// Uncorrected d̂_(α),oq (used by the bias simulations themselves and
+    /// the Fig 3 bench).
+    pub fn uncorrected(alpha: f64, k: usize) -> Self {
+        Self::with_bias_correction(alpha, k, false)
+    }
+
+    fn with_bias_correction(alpha: f64, k: usize, correct: bool) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0, "alpha in (0,2]");
+        assert!(k >= 2);
+        let q_star = tables::q_star(alpha);
+        // Reuse the general quantile estimator's construction for W and
+        // the variance factor; only the bias fold differs.
+        let base = QuantileEstimator::new(alpha, k, q_star);
+        let bias = if correct {
+            tables::bias_correction(alpha, k)
+        } else {
+            1.0
+        };
+        let w = base.w();
+        Self {
+            alpha,
+            k,
+            q_star,
+            idx: base.order_index(),
+            scale: 1.0 / (w.powf(alpha) * bias),
+            scale_root: 1.0 / (w * bias.powf(1.0 / alpha)),
+            bias,
+            var_factor: base.asymptotic_variance_factor(),
+        }
+    }
+
+    pub fn q_star(&self) -> f64 {
+        self.q_star
+    }
+
+    /// The B_{α,k} actually folded in (1.0 when uncorrected).
+    pub fn bias_factor(&self) -> f64 {
+        self.bias
+    }
+
+    /// Estimate `d^{1/α}` with **zero** pow operations: select + multiply.
+    #[inline]
+    pub fn estimate_root(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        for x in samples.iter_mut() {
+            *x = x.abs();
+        }
+        select_kth(samples, self.idx) * self.scale_root
+    }
+}
+
+impl ScaleEstimator for OptimalQuantile {
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    fn estimate(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        for x in samples.iter_mut() {
+            *x = x.abs();
+        }
+        let sel = select_kth(samples, self.idx);
+        sel.powf(self.alpha) * self.scale
+    }
+
+    fn asymptotic_variance_factor(&self) -> f64 {
+        self.var_factor
+    }
+
+    fn name(&self) -> &'static str {
+        "optimal_quantile"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mc_mean_mse;
+    use super::super::{FractionalPower, GeometricMean};
+    use super::*;
+
+    #[test]
+    fn bias_correction_centers_small_k() {
+        // Uncorrected is visibly biased at k=10; corrected is not.
+        let alpha = 0.5;
+        let raw = OptimalQuantile::uncorrected(alpha, 10);
+        let cor = OptimalQuantile::new(alpha, 10);
+        let (m_raw, _) = mc_mean_mse(&raw, 1.0, 60_000, 41);
+        let (m_cor, _) = mc_mean_mse(&cor, 1.0, 60_000, 41);
+        assert!(m_raw > 1.03, "raw mean {m_raw} should exceed 1");
+        assert!((m_cor - 1.0).abs() < 0.015, "corrected mean {m_cor}");
+    }
+
+    #[test]
+    fn beats_gm_variance_above_one() {
+        // Fig 1: oq variance < gm variance for α > 1.
+        for &alpha in &[1.2, 1.5, 1.8, 2.0] {
+            let oq = OptimalQuantile::new(alpha, 50);
+            let gm = GeometricMean::new(alpha, 50);
+            assert!(
+                oq.asymptotic_variance_factor() < gm.asymptotic_variance_factor(),
+                "alpha={alpha}: oq {} vs gm {}",
+                oq.asymptotic_variance_factor(),
+                gm.asymptotic_variance_factor()
+            );
+        }
+    }
+
+    #[test]
+    fn beats_fp_variance_in_mid_band() {
+        // Fig 1: oq variance < fp variance for 1 < α ≤ 1.8.
+        for &alpha in &[1.2, 1.5, 1.7] {
+            let oq = OptimalQuantile::new(alpha, 50);
+            let fp = FractionalPower::new(alpha, 50);
+            assert!(
+                oq.asymptotic_variance_factor() < fp.asymptotic_variance_factor(),
+                "alpha={alpha}"
+            );
+        }
+    }
+
+    #[test]
+    fn mse_beats_fp_at_alpha_above_one_small_k() {
+        // §4.1: oq outperforms fp for α>1, k≥20 in finite-sample MSE.
+        let alpha = 1.8;
+        let k = 50;
+        let oq = OptimalQuantile::new(alpha, k);
+        let fp = FractionalPower::new(alpha, k);
+        let (_, mse_oq) = mc_mean_mse(&oq, 1.0, 60_000, 43);
+        let (_, mse_fp) = mc_mean_mse(&fp, 1.0, 60_000, 43);
+        assert!(
+            mse_oq < mse_fp,
+            "alpha={alpha} k={k}: oq {mse_oq} vs fp {mse_fp}"
+        );
+    }
+
+    #[test]
+    fn root_form_consistency() {
+        let est = OptimalQuantile::new(1.5, 31);
+        let xs: Vec<f64> = (0..31).map(|i| ((i * 7) % 31) as f64 * 0.21 - 3.0).collect();
+        let d = est.estimate(&mut xs.clone());
+        let r = est.estimate_root(&mut xs.clone());
+        assert!((r.powf(1.5) / d - 1.0).abs() < 1e-10);
+    }
+}

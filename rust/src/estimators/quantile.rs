@@ -1,0 +1,173 @@
+//! General q-quantile estimator (paper Eq. 4):
+//!
+//! ```text
+//!   d̂_(α),q = ( q-quantile{|x_j|} / W )^α ,   W = q-quantile{|S(α,1)|}
+//! ```
+//!
+//! Any q gives an asymptotically unbiased estimator; the asymptotic
+//! variance is Lemma 1:
+//!
+//! ```text
+//!   Var → (1/k) · (q−q²)α²/4 / (f_X(W;α,1)² W²) · d²
+//! ```
+//!
+//! Includes the two historical baselines the paper cites: `q = 0.5`
+//! (Indyk's median estimator) and `q = 0.44` (Fama–Roll).
+
+use super::quickselect::{quantile_index, select_kth};
+use super::ScaleEstimator;
+use crate::stable::StandardStable;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantileEstimator {
+    alpha: f64,
+    k: usize,
+    q: f64,
+    idx: usize,
+    /// 1/W^α — precomputed so the hot path is select + 1 pow + 1 mul.
+    inv_w_alpha: f64,
+    /// W itself (for the root-form estimate and for diagnostics).
+    w: f64,
+    var_factor: f64,
+}
+
+impl QuantileEstimator {
+    pub fn new(alpha: f64, k: usize, q: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0, "alpha in (0,2]");
+        assert!(q > 0.0 && q < 1.0, "q in (0,1)");
+        assert!(k >= 1);
+        let std = StandardStable::new(alpha);
+        let w = std.abs_quantile(q);
+        let f_w = std.pdf(w);
+        let var_factor = (q - q * q) * alpha * alpha / (4.0 * f_w * f_w * w * w);
+        Self {
+            alpha,
+            k,
+            q,
+            idx: quantile_index(q, k),
+            inv_w_alpha: w.powf(-alpha),
+            w,
+            var_factor,
+        }
+    }
+
+    /// Indyk's sample-median baseline (q = 0.5).
+    pub fn median(alpha: f64, k: usize) -> Self {
+        Self::new(alpha, k, 0.5)
+    }
+
+    /// Fama–Roll (1971) baseline (q = 0.44, chosen there for small bias).
+    pub fn fama_roll(alpha: f64, k: usize) -> Self {
+        Self::new(alpha, k, 0.44)
+    }
+
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    /// The population quantile W = q-quantile{|S(α,1)|}.
+    pub fn w(&self) -> f64 {
+        self.w
+    }
+
+    pub(crate) fn order_index(&self) -> usize {
+        self.idx
+    }
+
+    /// Estimate `d^{1/α}` directly — **zero** fractional powers (paper
+    /// §2.3: "we do not even need to evaluate any fractional powers").
+    #[inline]
+    pub fn estimate_root(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        for x in samples.iter_mut() {
+            *x = x.abs();
+        }
+        select_kth(samples, self.idx) / self.w
+    }
+}
+
+impl ScaleEstimator for QuantileEstimator {
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    /// select (linear, no pow) + one `powf(α)` + one multiply.
+    #[inline]
+    fn estimate(&self, samples: &mut [f64]) -> f64 {
+        assert_eq!(samples.len(), self.k);
+        for x in samples.iter_mut() {
+            *x = x.abs();
+        }
+        let sel = select_kth(samples, self.idx);
+        sel.powf(self.alpha) * self.inv_w_alpha
+    }
+
+    fn asymptotic_variance_factor(&self) -> f64 {
+        self.var_factor
+    }
+
+    fn name(&self) -> &'static str {
+        "quantile"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mc_mean_mse;
+    use super::*;
+
+    #[test]
+    fn asymptotically_unbiased_large_k() {
+        for &alpha in &[0.6, 1.0, 1.6] {
+            let est = QuantileEstimator::median(alpha, 400);
+            let (mean, _) = mc_mean_mse(&est, 2.0, 15_000, 31);
+            assert!(
+                (mean / 2.0 - 1.0).abs() < 0.02,
+                "alpha={alpha}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_matches_lemma1() {
+        let alpha = 1.0;
+        let k = 500;
+        let est = QuantileEstimator::median(alpha, k);
+        // Lemma 2: at α=1, q=0.5: g = (q−q²)π²/sin²(πq) = π²/4·... and
+        // the factor should equal (π²/4)·α²·... — cross-check numerically:
+        let (_, mse) = mc_mean_mse(&est, 1.0, 30_000, 37);
+        let predicted = est.asymptotic_variance_factor() / k as f64;
+        assert!(
+            (mse / predicted - 1.0).abs() < 0.2,
+            "mse {mse} vs {predicted}"
+        );
+    }
+
+    #[test]
+    fn cauchy_median_variance_closed_form() {
+        // α=1, q=0.5: W=1, f(W)=1/(2π)... f_X(1;1,1)=1/(2π)? No:
+        // f(1)=1/(π(1+1))=1/(2π). factor=(0.25)·1/(4·(1/(2π))²·1)
+        //      = 0.25·π²·... = (q−q²)α²/(4 f² W²) = 0.25/(4/(4π²)) = π²/4.
+        let est = QuantileEstimator::median(1.0, 10);
+        let expect = std::f64::consts::PI.powi(2) / 4.0;
+        assert!(
+            (est.asymptotic_variance_factor() / expect - 1.0).abs() < 1e-9,
+            "got {}",
+            est.asymptotic_variance_factor()
+        );
+    }
+
+    #[test]
+    fn root_form_squares_to_distance_form() {
+        let alpha = 1.4;
+        let est = QuantileEstimator::new(alpha, 21, 0.7);
+        let xs: Vec<f64> = (0..21).map(|i| (i as f64 - 10.0) * 0.37).collect();
+        let d = est.estimate(&mut xs.clone());
+        let r = est.estimate_root(&mut xs.clone());
+        assert!((r.powf(alpha) / d - 1.0).abs() < 1e-12);
+    }
+}

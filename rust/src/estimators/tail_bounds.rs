@@ -1,0 +1,217 @@
+//! Explicit exponential tail bounds for quantile estimators (Lemma 3)
+//! and the sample-complexity planner (Lemma 4).
+//!
+//! For `d̂_(α),q` with k samples:
+//!
+//! ```text
+//!   Pr( d̂ ≥ (1+ε) d ) ≤ exp(−k ε²/G_R),   Pr( d̂ ≤ (1−ε) d ) ≤ exp(−k ε²/G_L)
+//!
+//!   ε²/G_R = −(1−q)·ln(2−2F_R) − q·ln(2F_R−1) + (1−q)·ln(1−q) + q·ln q
+//!   F_R = F_X((1+ε)^{1/α} W; α, 1),  W = F_X⁻¹((q+1)/2; α, 1)
+//! ```
+//!
+//! (and G_L with F_L = F_X((1−ε)^{1/α} W)). No hidden constants; these
+//! are the bounds a practitioner sizes k with.
+
+use crate::stable::StandardStable;
+
+/// Tail-bound constants at one (α, q, ε).
+#[derive(Debug, Clone, Copy)]
+pub struct TailConstants {
+    pub g_right: f64,
+    pub g_left: f64,
+}
+
+/// The binomial-Chernoff exponent of Lemma 3 (the ε²/G expression) given
+/// q and the cdf value F at the shifted quantile point.
+fn chernoff_exponent(q: f64, f_val: f64) -> f64 {
+    // Guard the logs: F must lie in ((q+1)/2's admissible range) —
+    // 2F−1 and 2−2F positive.
+    let a = 2.0 - 2.0 * f_val;
+    let b = 2.0 * f_val - 1.0;
+    if a <= 0.0 || b <= 0.0 {
+        return f64::INFINITY; // probability-zero event ⇒ infinitely strong bound
+    }
+    -(1.0 - q) * a.ln() - q * b.ln() + (1.0 - q) * (1.0 - q).ln() + q * q.ln()
+}
+
+/// Compute G_{R,q} and G_{L,q} at relative error ε (paper Eqs. 8–11).
+/// `epsilon` must be in (0, ∞) for G_R; G_L additionally requires ε < 1
+/// (returns NaN otherwise, matching the lemma's domain).
+pub fn tail_constants(alpha: f64, q: f64, epsilon: f64) -> TailConstants {
+    assert!(epsilon > 0.0, "epsilon > 0 required");
+    assert!(q > 0.0 && q < 1.0);
+    let std = StandardStable::new(alpha);
+    let w = std.abs_quantile(q);
+    let e2 = epsilon * epsilon;
+
+    let f_r = std.cdf((1.0 + epsilon).powf(1.0 / alpha) * w);
+    let exp_r = chernoff_exponent(q, f_r);
+    let g_right = e2 / exp_r;
+
+    let g_left = if epsilon < 1.0 {
+        let f_l = std.cdf((1.0 - epsilon).powf(1.0 / alpha) * w);
+        let exp_l = chernoff_exponent(q, f_l);
+        e2 / exp_l
+    } else {
+        f64::NAN
+    };
+    TailConstants { g_right, g_left }
+}
+
+/// The ε→0 limit of both constants (Eq. 12): `q(1−q)α²/2 / (f(W)² W²)` —
+/// exactly twice the asymptotic variance factor of Lemma 1, i.e. the
+/// bounds achieve the large-deviation "optimal rate".
+pub fn tail_constant_limit(alpha: f64, q: f64) -> f64 {
+    let std = StandardStable::new(alpha);
+    let w = std.abs_quantile(q);
+    let f = std.pdf(w);
+    q * (1.0 - q) * alpha * alpha / 2.0 / (f * f * w * w)
+}
+
+/// Lemma 4: the number of projections k needed so that *all* n²/2
+/// pairwise distances are within 1±ε with probability ≥ 1−δ
+/// (Bonferroni over pairs):  k ≥ (G/ε²)(2 ln n − ln δ).
+pub fn sample_size_all_pairs(alpha: f64, q: f64, epsilon: f64, n: usize, delta: f64) -> usize {
+    let tc = tail_constants(alpha, q, epsilon);
+    let g = tc.g_right.max(tc.g_left);
+    let k = g / (epsilon * epsilon) * (2.0 * (n as f64).ln() - delta.ln());
+    k.ceil() as usize
+}
+
+/// The paper's relaxation: except for a 1/T fraction of pairs, each
+/// distance is within 1±ε with probability 1−δ:
+/// k ≥ (G/ε²)(ln 2T − ln δ).
+pub fn sample_size_fraction(alpha: f64, q: f64, epsilon: f64, t: f64, delta: f64) -> usize {
+    let tc = tail_constants(alpha, q, epsilon);
+    let g = tc.g_right.max(tc.g_left);
+    let k = g / (epsilon * epsilon) * ((2.0 * t).ln() - delta.ln());
+    k.ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::tables;
+
+    #[test]
+    fn limit_is_twice_variance_factor() {
+        // Eq. 12 vs Lemma 1: G(ε→0) = 2 · VarFactor.
+        use crate::estimators::{QuantileEstimator, ScaleEstimator};
+        for &(alpha, q) in &[(0.8, 0.4), (1.5, 0.7), (1.0, 0.5)] {
+            let lim = tail_constant_limit(alpha, q);
+            let var = QuantileEstimator::new(alpha, 10, q).asymptotic_variance_factor();
+            assert!(
+                (lim / (2.0 * var) - 1.0).abs() < 1e-8,
+                "alpha={alpha} q={q}: {lim} vs 2*{var}"
+            );
+        }
+    }
+
+    #[test]
+    fn constants_approach_limit_as_epsilon_shrinks() {
+        for &alpha in &[0.7, 1.4] {
+            let q = tables::q_star(alpha);
+            let lim = tail_constant_limit(alpha, q);
+            let tc = tail_constants(alpha, q, 0.01);
+            assert!((tc.g_right / lim - 1.0).abs() < 0.05, "G_R {}", tc.g_right);
+            assert!((tc.g_left / lim - 1.0).abs() < 0.05, "G_L {}", tc.g_left);
+        }
+    }
+
+    #[test]
+    fn left_constant_smaller_than_right() {
+        // §3.4 observation (C): G_L is usually much smaller than G_R.
+        for &alpha in &[0.5, 1.0, 1.5] {
+            let q = tables::q_star(alpha);
+            let tc = tail_constants(alpha, q, 0.5);
+            assert!(
+                tc.g_left < tc.g_right,
+                "alpha={alpha}: G_L {} !< G_R {}",
+                tc.g_left,
+                tc.g_right
+            );
+        }
+    }
+
+    #[test]
+    fn paper_headline_sample_sizes() {
+        // §3.4: δ=0.05, ε=0.5, T=10 ⇒ G_R ≈ 5–9 ⇒ k ≈ 120–215;
+        // ε=1 ⇒ k ≈ 40–65.
+        let delta = 0.05;
+        let mut k_half_lo = usize::MAX;
+        let mut k_half_hi = 0usize;
+        for &alpha in &[0.5, 1.0, 1.5, 2.0] {
+            let q = tables::q_star(alpha);
+            let tc = tail_constants(alpha, q, 0.5);
+            assert!(
+                tc.g_right > 3.0 && tc.g_right < 12.0,
+                "alpha={alpha}: G_R(0.5) = {}",
+                tc.g_right
+            );
+            let k = sample_size_fraction(alpha, q, 0.5, 10.0, delta);
+            k_half_lo = k_half_lo.min(k);
+            k_half_hi = k_half_hi.max(k);
+        }
+        assert!(
+            k_half_lo >= 90 && k_half_hi <= 260,
+            "k range [{k_half_lo}, {k_half_hi}] vs paper 120–215"
+        );
+    }
+
+    #[test]
+    fn oq_bounds_tighter_than_median_bounds() {
+        // Fig 5: optimal-quantile constants below the q=0.5 median's
+        // (for α where q* ≠ 0.5), at moderate ε.
+        for &alpha in &[1.5, 2.0] {
+            let q = tables::q_star(alpha);
+            let oq = tail_constants(alpha, q, 0.5);
+            let med = tail_constants(alpha, 0.5, 0.5);
+            assert!(
+                oq.g_right < med.g_right,
+                "alpha={alpha}: {} !< {}",
+                oq.g_right,
+                med.g_right
+            );
+        }
+    }
+
+    #[test]
+    fn bonferroni_monotone_in_n() {
+        let q = 0.5;
+        let k1 = sample_size_all_pairs(1.0, q, 0.3, 1_000, 0.05);
+        let k2 = sample_size_all_pairs(1.0, q, 0.3, 1_000_000, 0.05);
+        assert!(k2 > k1);
+    }
+
+    #[test]
+    fn empirical_tail_below_bound() {
+        // The bound must *hold* empirically: simulate and compare.
+        use crate::estimators::{QuantileEstimator, ScaleEstimator};
+        use crate::numerics::Xoshiro256pp;
+        use crate::stable::StableDist;
+        let alpha = 1.0;
+        let q = 0.5;
+        let k = 50;
+        let eps = 0.5;
+        let est = QuantileEstimator::new(alpha, k, q);
+        let dist = StableDist::new(alpha, 1.0);
+        let mut rng = Xoshiro256pp::new(97);
+        let mut buf = vec![0.0; k];
+        let reps = 60_000;
+        let mut hits = 0usize;
+        for _ in 0..reps {
+            dist.sample_into(&mut rng, &mut buf);
+            if est.estimate(&mut buf) >= 1.0 + eps {
+                hits += 1;
+            }
+        }
+        let emp = hits as f64 / reps as f64;
+        let tc = tail_constants(alpha, q, eps);
+        let bound = (-(k as f64) * eps * eps / tc.g_right).exp();
+        assert!(
+            emp <= bound * 1.2 + 3.0 / reps as f64,
+            "empirical {emp} exceeds bound {bound}"
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! # stablesketch
+//!
+//! A production reproduction of **Ping Li, "Computationally Efficient
+//! Estimators for Dimension Reductions Using Stable Random Projections"
+//! (2008)** as a three-layer Rust + JAX + Pallas data pipeline.
+//!
+//! The library sketches a massive data matrix `A ∈ R^{n×D}` down to
+//! `B = A·R ∈ R^{n×k}` with an α-stable random matrix `R`, then recovers
+//! any pairwise `l_α` distance from the sketches. The paper's
+//! contribution — the **optimal quantile estimator**, whose hot-path
+//! operation is *selection* rather than fractional powers — lives in
+//! [`estimators`], together with all the baselines it is compared
+//! against (geometric mean, harmonic mean, fractional power, sample
+//! median, Fama–Roll).
+//!
+//! Layer map (see DESIGN.md):
+//! * [`numerics`], [`stable`] — numerical substrates (offline build: no
+//!   external math crates).
+//! * [`estimators`] — the paper core: estimators, tail bounds, sample
+//!   complexity, precomputed tables.
+//! * [`sketch`] — projection engine (native blocked + PJRT-offloaded) and
+//!   streaming turnstile updates.
+//! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
+//! * [`coordinator`] — the serving pipeline: sharding, batching,
+//!   backpressure, routing.
+//! * [`simul`] — Monte-Carlo drivers regenerating the paper's figures.
+
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod estimators;
+pub mod metrics;
+pub mod numerics;
+pub mod runtime;
+pub mod simul;
+pub mod sketch;
+pub mod stable;
+pub mod testkit;
+pub mod util;
+
+pub use stable::{StableDist, StandardStable};

@@ -1,0 +1,81 @@
+//! stablesketch CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `sketch`      — build sketches for a (synthetic) corpus and write them out
+//! * `query`       — estimate pairwise distances from a sketch file
+//! * `serve`       — run the coordinator pipeline on a synthetic workload
+//! * `experiment`  — regenerate one paper figure (fig1..fig7) quickly
+//! * `gen-tables`  — regenerate rust/src/estimators/tables_data.rs
+//! * `info`        — print constants for a given α (q*, W^α, bounds, k-planner)
+
+use anyhow::{bail, Context, Result};
+use stablesketch::estimators::{tables, tail_bounds};
+use stablesketch::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("gen-tables") => cmd_gen_tables(&args),
+        Some("info") => cmd_info(&args),
+        Some("sketch") => stablesketch::cli::cmd_sketch(&args),
+        Some("query") => stablesketch::cli::cmd_query(&args),
+        Some("serve") => stablesketch::cli::cmd_serve(&args),
+        Some("experiment") => stablesketch::cli::cmd_experiment(&args),
+        Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+stablesketch — stable random projections with optimal-quantile estimation
+
+USAGE: stablesketch <subcommand> [options]
+
+  sketch      --n 1000 --dim 4096 --k 64 --alpha 1.0 [--out sketches.json]
+  query       --i 0 --j 1 [--estimator oq|gm|fp|hm|median] (uses sketch run inline)
+  serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
+  experiment  fig1|fig2|fig3|fig4|fig5|fig6|fig7 [--fast]
+  gen-tables  [--reps 200000] [--out rust/src/estimators/tables_data.rs]
+  info        --alpha 1.5 [--k 100] [--eps 0.5] [--delta 0.05]
+";
+
+fn cmd_gen_tables(args: &Args) -> Result<()> {
+    let reps = args.usize_or("reps", 200_000)?;
+    let seed = args.u64_or("seed", 0x7AB1E5)?;
+    let out = args.str_or("out", "rust/src/estimators/tables_data.rs");
+    eprintln!("gen-tables: reps/cell={reps} seed={seed:#x} -> {out}");
+    let t0 = std::time::Instant::now();
+    let src = tables::generate_tables_source(reps, seed);
+    std::fs::write(&out, src).with_context(|| format!("writing {out}"))?;
+    eprintln!("gen-tables: done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let alpha = args.f64_or("alpha", 1.0)?;
+    let k = args.usize_or("k", 100)?;
+    let eps = args.f64_or("eps", 0.5)?;
+    let delta = args.f64_or("delta", 0.05)?;
+    let q = tables::q_star(alpha);
+    let w_alpha = tables::w_alpha_star(alpha);
+    let b = tables::bias_correction(alpha, k);
+    let tc = tail_bounds::tail_constants(alpha, q, eps);
+    println!("alpha          = {alpha}");
+    println!("q*             = {q:.6}");
+    println!("W^alpha(q*)    = {w_alpha:.6}");
+    println!("B_(alpha,k={k}) = {b:.6}");
+    println!("G_R(eps={eps})   = {:.4}", tc.g_right);
+    println!("G_L(eps={eps})   = {:.4}", tc.g_left);
+    println!(
+        "k for all pairs of n=1e5 (eps={eps}, delta={delta}): {}",
+        tail_bounds::sample_size_all_pairs(alpha, q, eps, 100_000, delta)
+    );
+    println!(
+        "k for all-but-1/10 of pairs (eps={eps}, delta={delta}): {}",
+        tail_bounds::sample_size_fraction(alpha, q, eps, 10.0, delta)
+    );
+    Ok(())
+}

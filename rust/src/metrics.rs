@@ -1,0 +1,170 @@
+//! Lightweight metrics: atomic counters and log-bucketed latency
+//! histograms with p50/p95/p99 readout. Shared across coordinator
+//! workers via `Arc`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exponential buckets: bucket b covers
+/// [2^b, 2^(b+1)) nanoseconds, 0..=47 (≈ 140,000 s cap).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        let b = (64 - ns.max(1).leading_zeros() - 1).min(47) as usize;
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile (upper edge of the covering bucket).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            acc += bucket.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50<{:.1}us p95<{:.1}us p99<{:.1}us",
+            self.count(),
+            self.mean_ns() / 1e3,
+            self.quantile_ns(0.50) as f64 / 1e3,
+            self.quantile_ns(0.95) as f64 / 1e3,
+            self.quantile_ns(0.99) as f64 / 1e3,
+        )
+    }
+}
+
+/// Coordinator-wide metrics bundle.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    pub queries_submitted: Counter,
+    pub queries_completed: Counter,
+    pub queries_rejected: Counter,
+    pub batches_formed: Counter,
+    pub batch_fill: Counter, // sum of batch sizes (fill ratio = /batches)
+    pub events_ingested: Counter,
+    pub query_latency: LatencyHistogram,
+    pub batch_latency: LatencyHistogram,
+}
+
+impl PipelineMetrics {
+    pub fn report(&self) -> String {
+        let batches = self.batches_formed.get().max(1);
+        format!(
+            "queries: {} submitted, {} done, {} rejected | batches: {} (avg fill {:.1}) | \
+             ingest: {} | query latency: {} | batch latency: {}",
+            self.queries_submitted.get(),
+            self.queries_completed.get(),
+            self.queries_rejected.get(),
+            self.batches_formed.get(),
+            self.batch_fill.get() as f64 / batches as f64,
+            self.events_ingested.get(),
+            self.query_latency.summary(),
+            self.batch_latency.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_data() {
+        let h = LatencyHistogram::new();
+        for ns in [100u64, 200, 400, 800, 1600, 3200, 6400, 12800, 25600, 51200] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.quantile_ns(0.5);
+        assert!(p50 >= 800 && p50 <= 4096, "p50 {p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!(p99 >= 51200, "p99 {p99}");
+        assert!(h.mean_ns() > 5_000.0 && h.mean_ns() < 15_000.0);
+    }
+
+    #[test]
+    fn counters_are_threadsafe() {
+        let c = std::sync::Arc::new(Counter::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,16 @@
+//! Numerical substrate: special functions, RNG, quadrature, root finding,
+//! scalar optimization and compensated summation.
+//!
+//! Everything in this module is dependency-free (the build environment is
+//! offline; no `rand`/`statrs`/`libm` crates) and validated against closed
+//! forms in unit tests.
+
+pub mod kahan;
+pub mod optimize;
+pub mod quadrature;
+pub mod rng;
+pub mod roots;
+pub mod specfun;
+
+pub use kahan::KahanSum;
+pub use rng::{Rng, SplitMix64, Xoshiro256pp};

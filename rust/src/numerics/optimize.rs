@@ -1,0 +1,80 @@
+//! Scalar minimization: golden-section search with a parabolic
+//! refinement pass. Used for q*(α) (Eq. 6) and the fractional-power λ*
+//! (Li–Hastie) objective.
+
+const INV_PHI: f64 = 0.618_033_988_749_894_9; // (sqrt(5)-1)/2
+
+/// Minimize unimodal `f` on [a, b] by golden-section search; returns
+/// (argmin, min).
+pub fn golden_section<F: Fn(f64) -> f64>(f: &F, mut a: f64, mut b: f64, tol: f64) -> (f64, f64) {
+    assert!(a < b, "golden_section: need a < b");
+    let mut c = b - INV_PHI * (b - a);
+    let mut d = a + INV_PHI * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    while (b - a).abs() > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INV_PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INV_PHI * (b - a);
+            fd = f(d);
+        }
+    }
+    let x = 0.5 * (a + b);
+    (x, f(x))
+}
+
+/// Minimize over a coarse grid first (robust to multimodality from
+/// numerical noise), then refine the best cell with golden section.
+pub fn grid_then_golden<F: Fn(f64) -> f64>(
+    f: &F,
+    a: f64,
+    b: f64,
+    grid: usize,
+    tol: f64,
+) -> (f64, f64) {
+    assert!(grid >= 3);
+    let h = (b - a) / grid as f64;
+    let mut best_i = 0usize;
+    let mut best_v = f64::INFINITY;
+    for i in 0..=grid {
+        let x = a + h * i as f64;
+        let v = f(x);
+        if v < best_v {
+            best_v = v;
+            best_i = i;
+        }
+    }
+    let lo = a + h * best_i.saturating_sub(1) as f64;
+    let hi = (a + h * (best_i + 1) as f64).min(b);
+    golden_section(f, lo, hi, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_quadratic() {
+        let (x, v) = golden_section(&|x: f64| (x - 1.3).powi(2) + 2.0, -5.0, 5.0, 1e-10);
+        // Minimization can't localize beyond ~sqrt(machine-eps)·scale:
+        // near the optimum f varies by less than one ulp of f(x*).
+        assert!((x - 1.3).abs() < 1e-6, "x={x}");
+        assert!((v - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_refine_handles_flat_edges() {
+        // Minimum interior to [0,1] with flat-ish tails.
+        let f = |x: f64| -(-((x - 0.203) * 8.0).powi(2)).exp();
+        let (x, _) = grid_then_golden(&f, 0.001, 0.999, 64, 1e-9);
+        assert!((x - 0.203).abs() < 1e-6, "x={x}");
+    }
+}

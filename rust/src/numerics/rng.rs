@@ -1,0 +1,257 @@
+//! Seedable, counter-splittable PRNGs.
+//!
+//! The sketch matrix `R ∈ R^{D×k}` is never materialized globally: every
+//! entry r_{ij} must be *re-derivable* from `(seed, i, j)` so that
+//! streaming turnstile updates (paper §1.3) can regenerate the needed row
+//! on the fly in one pass. `SplitMix64` provides the stateless
+//! counter-hash; `Xoshiro256pp` provides the fast sequential stream for
+//! Monte-Carlo work.
+
+/// Trait for the minimal RNG surface the library needs.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in the *open* interval (0, 1) — safe for log/tan transforms.
+    #[inline]
+    fn uniform_open(&mut self) -> f64 {
+        loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
+
+    /// Uniform in (lo, hi).
+    #[inline]
+    fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform_open()
+    }
+
+    /// Exp(1) via inversion.
+    #[inline]
+    fn exponential(&mut self) -> f64 {
+        -self.uniform_open().ln()
+    }
+
+    /// Standard normal via Box–Muller (no cached spare: keeps the trait
+    /// object-safe and the streams reproducible regardless of call mix).
+    #[inline]
+    fn normal(&mut self) -> f64 {
+        let u1 = self.uniform_open();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection.
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+}
+
+/// SplitMix64: stateless-hashable; `SplitMix64::hash(seed, ctr)` is the
+/// counter-based generator used for sketch matrix entries.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// One finalization round: a high-quality 64-bit mix of `x`.
+    #[inline]
+    pub fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+
+    /// Stateless counter hash: independent 64-bit value per (seed, ctr).
+    #[inline]
+    pub fn hash(seed: u64, ctr: u64) -> u64 {
+        Self::mix(seed ^ Self::mix(ctr))
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the main sequential generator (Blackman & Vigna).
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (never produces the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent stream for a labelled subtask (worker id,
+    /// column block, ...): equivalent to seeding from `hash(seed,label)`.
+    pub fn substream(seed: u64, label: u64) -> Self {
+        Self::new(SplitMix64::hash(seed, label))
+    }
+
+    /// The 2^128 jump polynomial: advances the state as if 2^128 calls to
+    /// next_u64 were made. Used to hand non-overlapping subsequences to
+    /// worker threads.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180e_c6d3_3cfd_0aba,
+            0xd5a6_1266_f0c9_392c,
+            0xa958_2618_e03f_c9aa,
+            0x39ab_dc45_29b1_661c,
+        ];
+        let mut t = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    t[0] ^= self.s[0];
+                    t[1] ^= self.s[1];
+                    t[2] ^= self.s[2];
+                    t[3] ^= self.s[3];
+                }
+                let _ = self.next_u64();
+            }
+        }
+        self.s = t;
+    }
+}
+
+impl Rng for Xoshiro256pp {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xoshiro_reference_vector() {
+        // First outputs for seed state {1,2,3,4} per the reference
+        // implementation of xoshiro256++.
+        let mut g = Xoshiro256pp { s: [1, 2, 3, 4] };
+        let got: Vec<u64> = (0..4).map(|_| g.next_u64()).collect();
+        assert_eq!(got, vec![41943041, 58720359, 3588806011781223, 3591011842654386]);
+    }
+
+    #[test]
+    fn splitmix_hash_is_deterministic_and_spread() {
+        let a = SplitMix64::hash(42, 7);
+        let b = SplitMix64::hash(42, 7);
+        let c = SplitMix64::hash(42, 8);
+        let d = SplitMix64::hash(43, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut g = Xoshiro256pp::new(7);
+        let mut acc = 0.0;
+        let n = 100_000;
+        for _ in 0..n {
+            let u = g.uniform();
+            assert!((0.0..1.0).contains(&u));
+            acc += u;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Xoshiro256pp::new(11);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = g.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.01, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var {m2}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut g = Xoshiro256pp::new(13);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| g.exponential()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut g = Xoshiro256pp::new(17);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[g.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn jump_produces_disjoint_streams() {
+        let mut a = Xoshiro256pp::new(23);
+        let mut b = a.clone();
+        b.jump();
+        let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

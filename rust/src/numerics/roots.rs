@@ -1,0 +1,121 @@
+//! Root finding: Brent's method on a bracketing interval, plus a bracket
+//! grower. Used for stable quantiles F^{-1}(p) and the bias-table
+//! inversions.
+
+/// Find x in [a, b] with f(x) = 0 via Brent's method. `f(a)` and `f(b)`
+/// must have opposite signs.
+pub fn brent<F: Fn(f64) -> f64>(f: &F, mut a: f64, mut b: f64, tol: f64, max_iter: u32) -> f64 {
+    let mut fa = f(a);
+    let mut fb = f(b);
+    assert!(
+        fa * fb <= 0.0,
+        "brent: not a bracket: f({a})={fa}, f({b})={fb}"
+    );
+    if fa.abs() < fb.abs() {
+        std::mem::swap(&mut a, &mut b);
+        std::mem::swap(&mut fa, &mut fb);
+    }
+    let mut c = a;
+    let mut fc = fa;
+    let mut d = b - a;
+    let mut mflag = true;
+    for _ in 0..max_iter {
+        if fb == 0.0 || (b - a).abs() < tol {
+            return b;
+        }
+        let mut s = if fa != fc && fb != fc {
+            // Inverse quadratic interpolation.
+            a * fb * fc / ((fa - fb) * (fa - fc))
+                + b * fa * fc / ((fb - fa) * (fb - fc))
+                + c * fa * fb / ((fc - fa) * (fc - fb))
+        } else {
+            // Secant.
+            b - fb * (b - a) / (fb - fa)
+        };
+        let cond = {
+            let lo = (3.0 * a + b) / 4.0;
+            let (lo, hi) = if lo < b { (lo, b) } else { (b, lo) };
+            !(lo < s && s < hi)
+                || (mflag && (s - b).abs() >= (b - c).abs() / 2.0)
+                || (!mflag && (s - b).abs() >= (c - d).abs() / 2.0)
+                || (mflag && (b - c).abs() < tol)
+                || (!mflag && (c - d).abs() < tol)
+        };
+        if cond {
+            s = 0.5 * (a + b);
+            mflag = true;
+        } else {
+            mflag = false;
+        }
+        let fs = f(s);
+        d = c;
+        c = b;
+        fc = fb;
+        if fa * fs < 0.0 {
+            b = s;
+            fb = fs;
+        } else {
+            a = s;
+            fa = fs;
+        }
+        if fa.abs() < fb.abs() {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut fa, &mut fb);
+        }
+    }
+    b
+}
+
+/// Grow a bracket for a monotone-increasing-ish `f` around an initial
+/// guess until sign change is found; returns (lo, hi).
+pub fn grow_bracket<F: Fn(f64) -> f64>(f: &F, x0: f64, step0: f64) -> (f64, f64) {
+    let f0 = f(x0);
+    if f0 == 0.0 {
+        return (x0, x0);
+    }
+    let mut step = step0.abs().max(1e-12);
+    // Search in the direction that should reduce |f| for increasing f.
+    let dir = if f0 < 0.0 { 1.0 } else { -1.0 };
+    let mut prev = x0;
+    let mut x = x0;
+    for _ in 0..200 {
+        x += dir * step;
+        let fx = f(x);
+        if fx == 0.0 {
+            return (x, x);
+        }
+        if fx * f0 < 0.0 {
+            return if prev < x { (prev, x) } else { (x, prev) };
+        }
+        prev = x;
+        step *= 2.0;
+    }
+    panic!("grow_bracket: no sign change found from x0={x0}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brent_cubic() {
+        let f = |x: f64| x * x * x - 2.0;
+        let r = brent(&f, 0.0, 2.0, 1e-14, 200);
+        assert!((r - 2f64.powf(1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn brent_transcendental() {
+        let f = |x: f64| x.cos() - x;
+        let r = brent(&f, 0.0, 1.0, 1e-14, 200);
+        assert!((f(r)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bracket_then_solve() {
+        let f = |x: f64| x.exp() - 10.0;
+        let (lo, hi) = grow_bracket(&f, 0.0, 0.5);
+        let r = brent(&f, lo, hi, 1e-13, 200);
+        assert!((r - 10f64.ln()).abs() < 1e-10);
+    }
+}

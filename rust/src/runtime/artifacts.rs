@@ -1,0 +1,176 @@
+//! Artifact manifest: the contract between `aot.py` and the rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One lowered computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Operation family: "project" | "absdiff" | "gm_estimate" | "oq_estimate".
+    pub op: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input shapes ([] = scalar).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+    /// Free-form metadata (α, q, tile sizes...).
+    pub alpha: Option<f64>,
+    pub q: Option<f64>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let raw_entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        for e in raw_entries {
+            let shape_list = |key: &str| -> Result<Vec<Vec<usize>>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .ok_or_else(|| anyhow!("bad shape in {key}"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect()
+                    })
+                    .collect()
+            };
+            let meta = e.get("meta");
+            entries.push(ArtifactEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                op: e
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing op"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                inputs: shape_list("inputs")?,
+                output: e
+                    .get("output")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing output"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                alpha: meta.and_then(|m| m.get("alpha")).and_then(Json::as_f64),
+                q: meta.and_then(|m| m.get("q")).and_then(Json::as_f64),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Exact-name lookup.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find a projection artifact for an exact (n_block, D, k).
+    pub fn find_project(&self, n: usize, d: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.op == "project" && e.inputs[0] == [n, d] && e.inputs[1] == [d, k])
+    }
+
+    /// Find an estimator batch artifact: op + (batch, k) and, for oq, α.
+    pub fn find_estimate(
+        &self,
+        op: &str,
+        batch: usize,
+        k: usize,
+        alpha: Option<f64>,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.op == op
+                && e.inputs[0] == [batch, k]
+                && match (alpha, e.alpha) {
+                    (Some(a), Some(ea)) => (a - ea).abs() < 1e-9,
+                    (None, _) => true,
+                    (Some(_), None) => false,
+                }
+        })
+    }
+
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let dir = std::env::temp_dir().join("ss_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "entries": [
+                {"name": "project_n128_d2048_k64", "op": "project",
+                 "file": "p.hlo.txt", "inputs": [[128, 2048], [2048, 64]],
+                 "output": [128, 64], "meta": {"tiles": [64, 64, 512]}},
+                {"name": "oqest_b512_k64_a1.5", "op": "oq_estimate",
+                 "file": "o.hlo.txt",
+                 "inputs": [[512, 64], [512, 64], [], []],
+                 "output": [512], "meta": {"alpha": 1.5, "q": 0.7028}}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.find_project(128, 2048, 64).is_some());
+        assert!(m.find_project(128, 2048, 65).is_none());
+        let oq = m.find_estimate("oq_estimate", 512, 64, Some(1.5)).unwrap();
+        assert_eq!(oq.q, Some(0.7028));
+        assert!(m.find_estimate("oq_estimate", 512, 64, Some(0.5)).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        let dir = std::env::temp_dir().join("ss_manifest_bad");
+        write_manifest(&dir, r#"{"version": 9, "entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, r#"{"entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

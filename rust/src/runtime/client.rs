@@ -1,0 +1,153 @@
+//! PJRT client wrapper: compile-once/execute-many over the artifact set.
+//!
+//! Executables are compiled lazily on first use and cached by artifact
+//! name; the client itself is `Send` but not `Sync` by policy — the
+//! coordinator gives each PJRT-using worker its own `Runtime` (compiling
+//! per worker) rather than serializing the hot path through a lock.
+
+use super::artifacts::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Execution counters (observability; surfaced by the CLI and benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ns: u64,
+    pub execute_ns: u64,
+}
+
+/// A PJRT CPU runtime bound to one artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create against an artifact directory (must contain manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        let path = self.manifest.path_of(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_ns += t0.elapsed().as_nanos() as u64;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 tensors. `inputs` are (data, shape)
+    /// pairs; scalars use shape `&[]`. Returns the flat f32 output (the
+    /// graphs are lowered with return_tuple=True and single output).
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        self.executable(name)?;
+        let entry = self.manifest.by_name(name).unwrap();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, ((data, shape), expect)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if shape != &expect.as_slice() {
+                bail!(
+                    "artifact '{name}' input {i}: shape {shape:?} != manifest {expect:?}"
+                );
+            }
+            let want: usize = expect.iter().product::<usize>().max(1);
+            if data.len() != want {
+                bail!("artifact '{name}' input {i}: {} elems != {want}", data.len());
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    // scalar: reshape to rank-0
+                    lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of '{name}': {e:?}"))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading result of '{name}': {e:?}"))?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        }
+        let want: usize = entry.output.iter().product::<usize>().max(1);
+        if values.len() != want {
+            bail!(
+                "artifact '{name}': output has {} elems, manifest says {want}",
+                values.len()
+            );
+        }
+        Ok(values)
+    }
+}

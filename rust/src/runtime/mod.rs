@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! (HLO text + manifest.json) and executes them on the `xla` crate's CPU
+//! PJRT client from the L3 hot path. Python is never involved at runtime.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use client::{Runtime, RuntimeStats};

@@ -1,0 +1,166 @@
+//! Monte-Carlo drivers for the paper's simulation study (§4).
+//!
+//! "Without loss of generality, we simulate samples from S(α,1) and
+//! estimate the scale parameter (i.e. 1)" — after projection the sketch
+//! differences are *exactly* stable no matter the raw data, so pure
+//! simulation evaluates the estimators faithfully (§4, paragraph 2).
+
+use crate::estimators::ScaleEstimator;
+use crate::numerics::{KahanSum, Xoshiro256pp};
+use crate::stable::StableDist;
+
+/// Replicates + seeding for one MC experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct McConfig {
+    pub reps: usize,
+    pub seed: u64,
+    /// True scale parameter (the paper uses 1).
+    pub d_true: f64,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        Self {
+            reps: 100_000,
+            seed: 0xC0FFEE,
+            d_true: 1.0,
+        }
+    }
+}
+
+/// Aggregates from one estimator MC run.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimatorStats {
+    pub mean: f64,
+    pub bias: f64,
+    pub variance: f64,
+    pub mse: f64,
+    /// k · MSE / d² — the normalized quantity Fig 6 plots.
+    pub k_mse_normalized: f64,
+}
+
+/// One point of a tail-probability curve (Fig 7).
+#[derive(Debug, Clone, Copy)]
+pub struct TailPoint {
+    pub epsilon: f64,
+    pub prob: f64,
+}
+
+/// Run an estimator over `reps` synthetic sketches; returns moments/MSE.
+pub fn run_estimator<E: ScaleEstimator>(est: &E, cfg: &McConfig) -> EstimatorStats {
+    let dist = StableDist::new(est.alpha(), cfg.d_true);
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut buf = vec![0.0f64; est.k()];
+    let mut sum = KahanSum::new();
+    let mut sq = KahanSum::new();
+    for _ in 0..cfg.reps {
+        dist.sample_into(&mut rng, &mut buf);
+        let dh = est.estimate(&mut buf);
+        sum.add(dh);
+        sq.add((dh - cfg.d_true) * (dh - cfg.d_true));
+    }
+    let mean = sum.mean();
+    let mse = sq.mean();
+    let bias = mean - cfg.d_true;
+    let variance = (mse - bias * bias).max(0.0);
+    EstimatorStats {
+        mean,
+        bias,
+        variance,
+        mse,
+        k_mse_normalized: est.k() as f64 * mse / (cfg.d_true * cfg.d_true),
+    }
+}
+
+/// Empirical right-tail curve Pr(d̂ ≥ (1+ε)d) over an ε grid (Fig 7).
+/// One pass: estimates are binned against all thresholds.
+pub fn right_tail_curve<E: ScaleEstimator>(
+    est: &E,
+    cfg: &McConfig,
+    epsilons: &[f64],
+) -> Vec<TailPoint> {
+    let dist = StableDist::new(est.alpha(), cfg.d_true);
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut buf = vec![0.0f64; est.k()];
+    let mut counts = vec![0u64; epsilons.len()];
+    let thresholds: Vec<f64> = epsilons.iter().map(|e| (1.0 + e) * cfg.d_true).collect();
+    for _ in 0..cfg.reps {
+        dist.sample_into(&mut rng, &mut buf);
+        let dh = est.estimate(&mut buf);
+        for (i, &t) in thresholds.iter().enumerate() {
+            if dh >= t {
+                counts[i] += 1;
+            }
+        }
+    }
+    epsilons
+        .iter()
+        .zip(counts)
+        .map(|(&epsilon, c)| TailPoint {
+            epsilon,
+            prob: c as f64 / cfg.reps as f64,
+        })
+        .collect()
+}
+
+/// Both-sided empirical error probability Pr(|d̂−d| ≥ εd).
+pub fn two_sided_error<E: ScaleEstimator>(est: &E, cfg: &McConfig, epsilon: f64) -> f64 {
+    let dist = StableDist::new(est.alpha(), cfg.d_true);
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut buf = vec![0.0f64; est.k()];
+    let mut hits = 0u64;
+    for _ in 0..cfg.reps {
+        dist.sample_into(&mut rng, &mut buf);
+        let dh = est.estimate(&mut buf);
+        if (dh - cfg.d_true).abs() >= epsilon * cfg.d_true {
+            hits += 1;
+        }
+    }
+    hits as f64 / cfg.reps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::{GeometricMean, OptimalQuantile};
+
+    #[test]
+    fn gm_mc_matches_exact_variance() {
+        let est = GeometricMean::new(1.0, 20);
+        let cfg = McConfig {
+            reps: 60_000,
+            ..Default::default()
+        };
+        let stats = run_estimator(&est, &cfg);
+        let exact = est.exact_variance_factor();
+        assert!((stats.mse / exact - 1.0).abs() < 0.1, "{} vs {exact}", stats.mse);
+        assert!(stats.bias.abs() < 0.02);
+    }
+
+    #[test]
+    fn tail_curve_is_monotone_decreasing() {
+        let est = OptimalQuantile::new(1.5, 30);
+        let cfg = McConfig {
+            reps: 20_000,
+            ..Default::default()
+        };
+        let eps: Vec<f64> = (1..=8).map(|i| i as f64 * 0.25).collect();
+        let curve = right_tail_curve(&est, &cfg, &eps);
+        for w in curve.windows(2) {
+            assert!(w[1].prob <= w[0].prob + 1e-12);
+        }
+        assert!(curve[0].prob > 0.0);
+    }
+
+    #[test]
+    fn two_sided_dominates_one_sided() {
+        let est = GeometricMean::new(0.8, 25);
+        let cfg = McConfig {
+            reps: 20_000,
+            ..Default::default()
+        };
+        let both = two_sided_error(&est, &cfg, 0.5);
+        let right = right_tail_curve(&est, &cfg, &[0.5])[0].prob;
+        assert!(both >= right);
+    }
+}

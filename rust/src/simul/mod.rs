@@ -1,0 +1,11 @@
+//! Monte-Carlo simulation substrate: the drivers behind Figures 3, 6, 7
+//! plus the synthetic heavy-tailed corpus generator used by the
+//! end-to-end examples.
+
+pub mod corpus;
+pub mod mc;
+pub mod stats;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use mc::{EstimatorStats, McConfig, TailPoint};
+pub use stats::Summary;

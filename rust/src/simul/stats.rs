@@ -1,0 +1,81 @@
+//! Descriptive statistics over simulation outputs.
+
+/// Five-number-plus summary of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub var: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from a sample (sorts a copy).
+    pub fn from(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty());
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| v[((p * n as f64) as usize).min(n - 1)];
+        Summary {
+            n,
+            mean,
+            var,
+            min: v[0],
+            p25: q(0.25),
+            median: q(0.5),
+            p75: q(0.75),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: v[n - 1],
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.var.sqrt()
+    }
+}
+
+/// Mean squared error of estimates against a known truth.
+pub fn mse(estimates: &[f64], truth: f64) -> f64 {
+    let mut acc = crate::numerics::KahanSum::new();
+    for &e in estimates {
+        acc.add((e - truth) * (e - truth));
+    }
+    acc.mean()
+}
+
+/// Empirical exceedance probability Pr(x >= thresh).
+pub fn exceedance(estimates: &[f64], thresh: f64) -> f64 {
+    estimates.iter().filter(|&&x| x >= thresh).count() as f64 / estimates.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.median - 51.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn mse_and_exceedance() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((mse(&xs, 2.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((exceedance(&xs, 2.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

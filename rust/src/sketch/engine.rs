@@ -1,0 +1,265 @@
+//! SketchEngine: corpus → sketches → distance estimates.
+
+use super::matrix::StableMatrix;
+use crate::estimators::{OptimalQuantile, ScaleEstimator};
+use crate::runtime::Runtime;
+use anyhow::{bail, Result};
+
+/// Which implementation performed a projection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjectionPath {
+    /// Blocked matmul in rust.
+    Native,
+    /// AOT Pallas artifact through PJRT.
+    Pjrt,
+}
+
+/// The sketch store: `n × k` f32, row-major — the only thing kept in
+/// memory at serving time (the corpus itself can be discarded, §1.3).
+#[derive(Debug, Clone)]
+pub struct SketchStore {
+    pub n: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub seed: u64,
+    data: Vec<f32>,
+}
+
+impl SketchStore {
+    pub fn zeros(n: usize, k: usize, alpha: f64, seed: u64) -> Self {
+        Self {
+            n,
+            k,
+            alpha,
+            seed,
+            data: vec![0.0; n * k],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Fill `buf` (len k) with the f64 sketch differences of rows (i, j)
+    /// — the estimator input.
+    #[inline]
+    pub fn diff_into(&self, i: usize, j: usize, buf: &mut [f64]) {
+        debug_assert_eq!(buf.len(), self.k);
+        let (a, b) = (self.row(i), self.row(j));
+        for ((slot, x), y) in buf.iter_mut().zip(a).zip(b) {
+            *slot = (*x - *y) as f64;
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Projection + estimation engine for one (α, k, D, seed) configuration.
+pub struct SketchEngine {
+    matrix: StableMatrix,
+    /// Dense R cache (f32, row-major D×k) for the bulk paths.
+    dense_r: Vec<f32>,
+    estimator: OptimalQuantile,
+}
+
+impl SketchEngine {
+    pub fn new(alpha: f64, dim: usize, k: usize, seed: u64) -> Self {
+        let matrix = StableMatrix::new(alpha, seed, dim, k);
+        let dense_r = matrix.materialize_f32();
+        Self {
+            matrix,
+            dense_r,
+            estimator: OptimalQuantile::new(alpha, k),
+        }
+    }
+
+    pub fn matrix(&self) -> &StableMatrix {
+        &self.matrix
+    }
+
+    pub fn estimator(&self) -> &OptimalQuantile {
+        &self.estimator
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.matrix.alpha()
+    }
+
+    pub fn k(&self) -> usize {
+        self.matrix.k()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.matrix.dim()
+    }
+
+    /// Project one row natively: v = uᵀ R.
+    pub fn project_row(&self, u: &[f32], out: &mut [f32]) {
+        assert_eq!(u.len(), self.dim());
+        assert_eq!(out.len(), self.k());
+        let k = self.k();
+        let mut acc = vec![0.0f64; k];
+        // Skip exact zeros: corpus rows are sparse.
+        for (d, &x) in u.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let xr = x as f64;
+            let row = &self.dense_r[d * k..(d + 1) * k];
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a += xr * r as f64;
+            }
+        }
+        for (o, a) in out.iter_mut().zip(acc) {
+            *o = a as f32;
+        }
+    }
+
+    /// Sketch a whole corpus natively.
+    pub fn sketch_all(&self, rows: &[f32], n: usize) -> SketchStore {
+        assert_eq!(rows.len(), n * self.dim());
+        let mut store = SketchStore::zeros(n, self.k(), self.alpha(), 0);
+        for i in 0..n {
+            let u = &rows[i * self.dim()..(i + 1) * self.dim()];
+            self.project_row(u, store.row_mut(i));
+        }
+        store
+    }
+
+    /// Sketch through the PJRT projection artifact (block shape must be
+    /// in the manifest; rows are padded up to the block size).
+    pub fn sketch_all_pjrt(&self, rt: &Runtime, rows: &[f32], n: usize) -> Result<SketchStore> {
+        let (dim, k) = (self.dim(), self.k());
+        assert_eq!(rows.len(), n * dim);
+        // Find any projection artifact for (·, dim, k).
+        let entry = rt
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.op == "project" && e.inputs[0][1] == dim && e.inputs[1] == [dim, k]);
+        let Some(entry) = entry else {
+            bail!("no projection artifact for D={dim}, k={k} in manifest");
+        };
+        let n_block = entry.inputs[0][0];
+        let name = entry.name.clone();
+        let mut store = SketchStore::zeros(n, k, self.alpha(), 0);
+        let mut xbuf = vec![0.0f32; n_block * dim];
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(n_block);
+            xbuf[..take * dim].copy_from_slice(&rows[done * dim..(done + take) * dim]);
+            for v in xbuf[take * dim..].iter_mut() {
+                *v = 0.0;
+            }
+            let out = rt.execute_f32(
+                &name,
+                &[(&xbuf, &[n_block, dim]), (&self.dense_r, &[dim, k])],
+            )?;
+            for i in 0..take {
+                store
+                    .row_mut(done + i)
+                    .copy_from_slice(&out[i * k..(i + 1) * k]);
+            }
+            done += take;
+        }
+        Ok(store)
+    }
+
+    /// Estimate d_(α)(i, j) from the sketches with the optimal quantile
+    /// estimator (the serving hot path).
+    pub fn estimate(&self, store: &SketchStore, i: usize, j: usize, buf: &mut [f64]) -> f64 {
+        store.diff_into(i, j, buf);
+        self.estimator.estimate(buf)
+    }
+
+    /// Same, with an arbitrary estimator (bench/ablation paths).
+    pub fn estimate_with<E: ScaleEstimator>(
+        &self,
+        est: &E,
+        store: &SketchStore,
+        i: usize,
+        j: usize,
+        buf: &mut [f64],
+    ) -> f64 {
+        store.diff_into(i, j, buf);
+        est.estimate(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simul::{Corpus, CorpusConfig};
+
+    fn small_corpus() -> Corpus {
+        Corpus::generate(&CorpusConfig {
+            n: 24,
+            dim: 512,
+            density: 0.2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn sketch_estimates_track_exact_distances() {
+        // The end-to-end statistical contract: with k = 256 the oq
+        // estimate is within ~25% of the exact distance w.h.p.
+        let corpus = small_corpus();
+        for &alpha in &[1.0, 1.5] {
+            let eng = SketchEngine::new(alpha, corpus.dim, 256, 99);
+            let store = eng.sketch_all(corpus.as_slice(), corpus.n);
+            let mut buf = vec![0.0; 256];
+            let mut rel_errs = Vec::new();
+            for (i, j) in [(0usize, 1usize), (2, 3), (4, 9), (10, 20)] {
+                let exact = corpus.exact_distance(i, j, alpha);
+                let est = eng.estimate(&store, i, j, &mut buf);
+                rel_errs.push((est / exact - 1.0).abs());
+            }
+            let median = {
+                let mut e = rel_errs.clone();
+                e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                e[e.len() / 2]
+            };
+            assert!(
+                median < 0.25,
+                "alpha={alpha}: median rel err {median} ({rel_errs:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn projection_is_linear() {
+        let eng = SketchEngine::new(1.2, 128, 32, 5);
+        let mut u = vec![0.0f32; 128];
+        u[3] = 1.5;
+        u[77] = -2.0;
+        let mut v = vec![0.0f32; 32];
+        eng.project_row(&u, &mut v);
+        // v must equal 1.5·R[3,:] − 2.0·R[77,:]
+        for j in 0..32 {
+            let expect = 1.5 * eng.matrix().entry(3, j) - 2.0 * eng.matrix().entry(77, j);
+            assert!(
+                (v[j] as f64 - expect).abs() < 1e-4 * (1.0 + expect.abs()),
+                "j={j}"
+            );
+        }
+    }
+
+    #[test]
+    fn identical_rows_estimate_zero() {
+        let corpus = small_corpus();
+        let eng = SketchEngine::new(1.0, corpus.dim, 64, 1);
+        let store = eng.sketch_all(corpus.as_slice(), corpus.n);
+        let mut buf = vec![0.0; 64];
+        let d = eng.estimate(&store, 5, 5, &mut buf);
+        assert_eq!(d, 0.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Exact brute-force l_α distances — the O(n²D) baseline the paper's
+//! whole premise replaces, kept for accuracy/recall evaluation.
+
+/// Full pairwise distance matrix (upper triangle mirrored), n × n.
+pub fn exact_distance_matrix(rows: &[f32], n: usize, dim: usize, alpha: f64) -> Vec<f64> {
+    assert_eq!(rows.len(), n * dim);
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let a = &rows[i * dim..(i + 1) * dim];
+            let b = &rows[j * dim..(j + 1) * dim];
+            let d = exact_distance(a, b, alpha);
+            out[i * n + j] = d;
+            out[j * n + i] = d;
+        }
+    }
+    out
+}
+
+/// d_(α)(u, v) = Σ |u_i − v_i|^α with fast paths for α ∈ {1, 2}.
+pub fn exact_distance(a: &[f32], b: &[f32], alpha: f64) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if (alpha - 2.0).abs() < 1e-12 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let d = (*x - *y) as f64;
+                d * d
+            })
+            .sum()
+    } else if (alpha - 1.0).abs() < 1e-12 {
+        a.iter().zip(b).map(|(x, y)| ((*x - *y) as f64).abs()).sum()
+    } else {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let d = ((*x - *y) as f64).abs();
+                if d > 0.0 {
+                    d.powf(alpha)
+                } else {
+                    0.0
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_is_symmetric_with_zero_diagonal() {
+        let rows: Vec<f32> = (0..4 * 8).map(|i| (i as f32 * 0.37).sin()).collect();
+        let m = exact_distance_matrix(&rows, 4, 8, 1.3);
+        for i in 0..4 {
+            assert_eq!(m[i * 4 + i], 0.0);
+            for j in 0..4 {
+                assert_eq!(m[i * 4 + j], m[j * 4 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_general() {
+        let a: Vec<f32> = (0..16).map(|i| (i as f32).cos()).collect();
+        let b: Vec<f32> = (0..16).map(|i| (i as f32 * 0.5).sin()).collect();
+        for alpha in [1.0, 2.0] {
+            let fast = exact_distance(&a, &b, alpha);
+            let gen: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| ((*x - *y) as f64).abs().powf(alpha))
+                .sum();
+            assert!((fast - gen).abs() < 1e-9 * (1.0 + gen));
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Sketch store persistence: a small binary format so `B ∈ R^{n×k}` can
+//! be written once and served from disk (§1.3: "store B in the memory
+//! and estimate any distance on the fly" — across process restarts).
+//!
+//! Format (little-endian):
+//!   magic "SSK1" | u32 n | u32 k | f64 alpha | u64 seed
+//!   | n·k f32 row-major | u64 xxh-style checksum of the payload
+
+use super::engine::SketchStore;
+use crate::numerics::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SSK1";
+
+fn checksum(bytes: &[u8]) -> u64 {
+    // SplitMix over 8-byte windows: not cryptographic, catches
+    // truncation/corruption.
+    let mut acc = 0x5353_4B31u64;
+    for chunk in bytes.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        acc = SplitMix64::hash(acc, u64::from_le_bytes(w));
+    }
+    acc
+}
+
+/// Write a sketch store to `path`.
+pub fn save(store: &SketchStore, path: &Path) -> Result<()> {
+    let mut payload = Vec::with_capacity(store.n * store.k * 4);
+    for i in 0..store.n {
+        for &v in store.row(i) {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(store.n as u32).to_le_bytes())?;
+    f.write_all(&(store.k as u32).to_le_bytes())?;
+    f.write_all(&store.alpha.to_le_bytes())?;
+    f.write_all(&store.seed.to_le_bytes())?;
+    f.write_all(&payload)?;
+    f.write_all(&checksum(&payload).to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a sketch store from `path`, verifying magic, sizes and checksum.
+pub fn load(path: &Path) -> Result<SketchStore> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut head = [0u8; 4 + 4 + 4 + 8 + 8];
+    f.read_exact(&mut head).context("reading header")?;
+    if &head[0..4] != MAGIC {
+        bail!("not a stablesketch store (bad magic)");
+    }
+    let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    let k = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    let alpha = f64::from_le_bytes(head[12..20].try_into().unwrap());
+    let seed = u64::from_le_bytes(head[20..28].try_into().unwrap());
+    if n == 0 || k == 0 || n.checked_mul(k).map(|t| t > 1 << 34).unwrap_or(true) {
+        bail!("implausible dimensions n={n} k={k}");
+    }
+    if !(alpha > 0.0 && alpha <= 2.0) {
+        bail!("bad alpha {alpha}");
+    }
+    let mut payload = vec![0u8; n * k * 4];
+    f.read_exact(&mut payload).context("reading payload")?;
+    let mut ck = [0u8; 8];
+    f.read_exact(&mut ck).context("reading checksum")?;
+    if u64::from_le_bytes(ck) != checksum(&payload) {
+        bail!("checksum mismatch (truncated or corrupted store)");
+    }
+    let mut store = SketchStore::zeros(n, k, alpha, seed);
+    for i in 0..n {
+        let row = store.row_mut(i);
+        for (j, slot) in row.iter_mut().enumerate() {
+            let at = (i * k + j) * 4;
+            *slot = f32::from_le_bytes(payload[at..at + 4].try_into().unwrap());
+        }
+    }
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_store() -> SketchStore {
+        let mut s = SketchStore::zeros(7, 5, 1.3, 42);
+        for i in 0..7 {
+            for (j, v) in s.row_mut(i).iter_mut().enumerate() {
+                *v = (i * 5 + j) as f32 * 0.25 - 3.0;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let dir = std::env::temp_dir().join("ss_io_rt");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("store.ssk");
+        let s = sample_store();
+        save(&s, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.n, 7);
+        assert_eq!(back.k, 5);
+        assert_eq!(back.alpha, 1.3);
+        assert_eq!(back.seed, 42);
+        for i in 0..7 {
+            assert_eq!(back.row(i), s.row(i));
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = std::env::temp_dir().join("ss_io_bad");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("store.ssk");
+        save(&sample_store(), &path).unwrap();
+        // Flip one payload byte.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Truncation.
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load(&path).is_err());
+        // Garbage magic.
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

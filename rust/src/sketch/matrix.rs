@@ -1,0 +1,183 @@
+//! The stable random projection matrix `R ∈ R^{D×k}`, entries i.i.d.
+//! `S(α, 1)`.
+//!
+//! Entries are *counter-derived*: `r[d][j] = CMS(hash(seed, d·k + j))`,
+//! so any row can be regenerated in isolation — the property the
+//! streaming path (paper: "one-pass of the data") depends on. The dense
+//! materialization below is just a cache of the same values; both paths
+//! are bit-identical (tested).
+
+use crate::numerics::rng::{Rng, SplitMix64};
+use std::f64::consts::FRAC_PI_2;
+
+/// Counter-based view of R (no storage).
+#[derive(Debug, Clone, Copy)]
+pub struct StableMatrix {
+    alpha: f64,
+    seed: u64,
+    dim: usize,
+    k: usize,
+}
+
+/// A two-value counter RNG: exactly the randomness one CMS draw needs.
+struct PairRng {
+    vals: [u64; 2],
+    next: usize,
+}
+
+impl Rng for PairRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let v = self.vals[self.next & 1];
+        self.next += 1;
+        // Re-mix on wrap so pathological rejection loops cannot cycle.
+        if self.next % 2 == 0 {
+            self.vals[0] = SplitMix64::mix(self.vals[0]);
+            self.vals[1] = SplitMix64::mix(self.vals[1]);
+        }
+        v
+    }
+}
+
+impl StableMatrix {
+    pub fn new(alpha: f64, seed: u64, dim: usize, k: usize) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0);
+        assert!(dim > 0 && k > 0);
+        Self {
+            alpha,
+            seed,
+            dim,
+            k,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Entry r[d][j], derived from (seed, d, j) alone.
+    #[inline]
+    pub fn entry(&self, d: usize, j: usize) -> f64 {
+        debug_assert!(d < self.dim && j < self.k);
+        let ctr = (d * self.k + j) as u64;
+        let mut rng = PairRng {
+            vals: [
+                SplitMix64::hash(self.seed, ctr.wrapping_mul(2)),
+                SplitMix64::hash(self.seed ^ 0x9E3779B97F4A7C15, ctr.wrapping_mul(2) + 1),
+            ],
+            next: 0,
+        };
+        // CMS, symmetric case (mirrors stable::sampler, which is
+        // stream-based; this one is counter-based).
+        let v = rng.uniform_in(-FRAC_PI_2, FRAC_PI_2);
+        if (self.alpha - 1.0).abs() < 1e-10 {
+            return v.tan();
+        }
+        let e = rng.exponential();
+        let cv = v.cos();
+        let a = (self.alpha * v).sin() / cv.powf(1.0 / self.alpha);
+        let b = (((1.0 - self.alpha) * v).cos() / e).powf((1.0 - self.alpha) / self.alpha);
+        a * b
+    }
+
+    /// Write row d (all k columns) into `out` — the streaming-update
+    /// primitive.
+    pub fn row_into(&self, d: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.k);
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = self.entry(d, j);
+        }
+    }
+
+    /// Materialize the full matrix row-major as f32 (cache for the bulk
+    /// projection paths; the PJRT artifact takes exactly this buffer).
+    pub fn materialize_f32(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim * self.k];
+        for d in 0..self.dim {
+            for j in 0..self.k {
+                out[d * self.k + j] = self.entry(d, j) as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let m = StableMatrix::new(1.5, 7, 64, 16);
+        assert_eq!(m.entry(3, 5), m.entry(3, 5));
+        let m2 = StableMatrix::new(1.5, 8, 64, 16);
+        assert_ne!(m.entry(3, 5), m2.entry(3, 5));
+    }
+
+    #[test]
+    fn row_matches_entries_and_materialization() {
+        let m = StableMatrix::new(0.8, 42, 32, 8);
+        let mut row = vec![0.0; 8];
+        m.row_into(13, &mut row);
+        for (j, &v) in row.iter().enumerate() {
+            assert_eq!(v, m.entry(13, j));
+        }
+        let dense = m.materialize_f32();
+        for j in 0..8 {
+            assert_eq!(dense[13 * 8 + j], m.entry(13, j) as f32);
+        }
+    }
+
+    #[test]
+    fn entries_are_stable_distributed() {
+        // Median of |entries| should match the standard stable law's
+        // abs-median W(0.5).
+        for &alpha in &[1.0f64, 1.7] {
+            let m = StableMatrix::new(alpha, 123, 512, 64);
+            let mut vals: Vec<f64> = Vec::with_capacity(512 * 64);
+            for d in 0..512 {
+                for j in 0..64 {
+                    vals.push(m.entry(d, j).abs());
+                }
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = vals[vals.len() / 2];
+            let expect = crate::stable::StandardStable::new(alpha).abs_quantile(0.5);
+            assert!(
+                (med / expect - 1.0).abs() < 0.03,
+                "alpha={alpha}: {med} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_correlation_between_adjacent_entries() {
+        let m = StableMatrix::new(2.0, 5, 256, 32);
+        // Pearson correlation of (r[d][j], r[d][j+1]) — should be ~0.
+        let (mut sx, mut sy, mut sxx, mut syy, mut sxy, mut n) =
+            (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        for d in 0..256 {
+            for j in 0..31 {
+                let x = m.entry(d, j);
+                let y = m.entry(d, j + 1);
+                sx += x;
+                sy += y;
+                sxx += x * x;
+                syy += y * y;
+                sxy += x * y;
+                n += 1.0;
+            }
+        }
+        let cov = sxy / n - sx / n * (sy / n);
+        let corr = cov / ((sxx / n - (sx / n).powi(2)).sqrt() * (syy / n - (sy / n).powi(2)).sqrt());
+        assert!(corr.abs() < 0.05, "corr {corr}");
+    }
+}

@@ -1,0 +1,19 @@
+//! The sketch engine: stable random projections of a corpus
+//! (`B = A · R`, paper §1.3) with three execution paths —
+//!
+//! * **native** — blocked f32 matmul in rust (always available);
+//! * **PJRT** — the AOT-compiled Pallas projection artifact, when the
+//!   shape matches one in the manifest;
+//! * **streaming** — one-pass turnstile updates that regenerate rows of
+//!   `R` on the fly from the counter-based RNG (R is never stored).
+
+mod engine;
+mod exact;
+pub mod io;
+mod matrix;
+mod streaming;
+
+pub use engine::{ProjectionPath, SketchEngine, SketchStore};
+pub use exact::exact_distance_matrix;
+pub use matrix::StableMatrix;
+pub use streaming::{StreamEvent, StreamingSketcher};

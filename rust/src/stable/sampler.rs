@@ -1,0 +1,162 @@
+//! Chambers–Mallows–Stuck sampler for standard symmetric α-stable
+//! variates (characteristic function `exp(−|t|^α)`).
+//!
+//! For symmetric stable (β = 0):
+//!
+//! ```text
+//!   X = sin(αV) / cos(V)^{1/α} · [ cos((1−α)V) / E ]^{(1−α)/α}
+//! ```
+//!
+//! with `V ~ U(−π/2, π/2)` and `E ~ Exp(1)`. At α = 1 this degenerates to
+//! `X = tan(V)` (Cauchy); at α = 2 it reduces to a N(0, 2) draw (the
+//! paper's convention: scale = "σ²" so the standard α = 2 stable has
+//! variance 2).
+
+use crate::numerics::Rng;
+use std::f64::consts::FRAC_PI_2;
+
+/// Draw one standard `S(α, 1)` variate.
+#[inline]
+pub fn sample_standard<R: Rng>(alpha: f64, rng: &mut R) -> f64 {
+    debug_assert!(alpha > 0.0 && alpha <= 2.0);
+    let v = rng.uniform_in(-FRAC_PI_2, FRAC_PI_2);
+    if (alpha - 1.0).abs() < 1e-10 {
+        return v.tan();
+    }
+    let e = rng.exponential();
+    let cv = v.cos();
+    // sin(αV)/cos(V)^{1/α}
+    let a = (alpha * v).sin() / cv.powf(1.0 / alpha);
+    // (cos((1−α)V)/E)^{(1−α)/α}
+    let b = (((1.0 - alpha) * v).cos() / e).powf((1.0 - alpha) / alpha);
+    a * b
+}
+
+/// Reusable sampler bound to a fixed α (precomputes the exponents).
+#[derive(Debug, Clone, Copy)]
+pub struct StableSampler {
+    alpha: f64,
+    inv_alpha: f64,
+    exponent: f64,
+    is_cauchy: bool,
+    is_gaussian: bool,
+}
+
+impl StableSampler {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0, "alpha in (0,2], got {alpha}");
+        Self {
+            alpha,
+            inv_alpha: 1.0 / alpha,
+            exponent: (1.0 - alpha) / alpha,
+            is_cauchy: (alpha - 1.0).abs() < 1e-10,
+            is_gaussian: (alpha - 2.0).abs() < 1e-12,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// One standard draw. The Gaussian branch uses Box–Muller directly
+    /// (exact and ~2x cheaper than CMS at α=2).
+    #[inline]
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        if self.is_gaussian {
+            // S(2,1) = N(0, 2) = sqrt(2) * N(0,1)
+            return std::f64::consts::SQRT_2 * rng.normal();
+        }
+        let v = rng.uniform_in(-FRAC_PI_2, FRAC_PI_2);
+        if self.is_cauchy {
+            return v.tan();
+        }
+        let e = rng.exponential();
+        let cv = v.cos();
+        let a = (self.alpha * v).sin() / cv.powf(self.inv_alpha);
+        let b = (((1.0 - self.alpha) * v).cos() / e).powf(self.exponent);
+        a * b
+    }
+
+    /// Fill a slice with i.i.d. standard draws.
+    pub fn fill<R: Rng>(&self, rng: &mut R, out: &mut [f64]) {
+        for slot in out.iter_mut() {
+            *slot = self.sample(rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::{Rng, Xoshiro256pp};
+
+    /// Empirical CDF at point x.
+    fn ecdf(xs: &[f64], x: f64) -> f64 {
+        xs.iter().filter(|&&v| v <= x).count() as f64 / xs.len() as f64
+    }
+
+    #[test]
+    fn cauchy_case_matches_closed_form() {
+        let mut rng = Xoshiro256pp::new(1);
+        let s = StableSampler::new(1.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| s.sample(&mut rng)).collect();
+        for &x in &[-2.0f64, -0.5, 0.0, 0.5, 2.0] {
+            let expect = 0.5 + x.atan() / std::f64::consts::PI;
+            let got = ecdf(&xs, x);
+            assert!((got - expect).abs() < 0.01, "x={x}: {got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn gaussian_case_has_variance_two() {
+        let mut rng = Xoshiro256pp::new(2);
+        let s = StableSampler::new(2.0);
+        let n = 200_000;
+        let m2: f64 = (0..n).map(|_| s.sample(&mut rng).powi(2)).sum::<f64>() / n as f64;
+        assert!((m2 - 2.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn symmetry_for_general_alpha() {
+        let mut rng = Xoshiro256pp::new(3);
+        for &alpha in &[0.4, 0.8, 1.3, 1.7] {
+            let s = StableSampler::new(alpha);
+            let n = 60_000;
+            let pos = (0..n).filter(|_| s.sample(&mut rng) > 0.0).count() as f64 / n as f64;
+            assert!((pos - 0.5).abs() < 0.01, "alpha={alpha}: P(X>0)={pos}");
+        }
+    }
+
+    #[test]
+    fn alpha_to_zero_limit_exponential_law() {
+        // As α→0+, |S(α,1)|^α → 1/E where E ~ Exp(1) (paper Appendix B).
+        // Check the median: median(1/E) = 1/ln 2.
+        let mut rng = Xoshiro256pp::new(4);
+        let alpha = 0.05;
+        let s = StableSampler::new(alpha);
+        let n = 60_000;
+        let mut xs: Vec<f64> = (0..n)
+            .map(|_| s.sample(&mut rng).abs().powf(alpha))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        let expect = 1.0 / std::f64::consts::LN_2;
+        assert!((med / expect - 1.0).abs() < 0.05, "med {med} vs {expect}");
+    }
+
+    #[test]
+    fn free_function_matches_struct() {
+        let mut r1 = Xoshiro256pp::new(5);
+        let mut r2 = Xoshiro256pp::new(5);
+        let s = StableSampler::new(1.4);
+        for _ in 0..100 {
+            let a = sample_standard(1.4, &mut r1);
+            let b = s.sample(&mut r2);
+            assert_eq!(a, b);
+        }
+        // α=2 intentionally diverges (Box–Muller fast path); both must
+        // still have the right distribution — checked elsewhere.
+        let _ = (Xoshiro256pp::new(6).normal(),);
+    }
+}

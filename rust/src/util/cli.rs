@@ -1,0 +1,161 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--flag`,
+//! `--key value` pairs, with typed accessors and a usage printer.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: `prog subcommand [--k v | --flag] [positional..]`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("option --{0} has invalid value '{1}': expected {2}")]
+    Invalid(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.into()))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError::Invalid(name.into(), s.into(), "float")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError::Invalid(name.into(), s.into(), "integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError::Invalid(name.into(), s.into(), "integer")),
+        }
+    }
+
+    /// Comma-separated f64 list, e.g. `--alphas 0.5,1,1.5`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| CliError::Invalid(name.into(), s.into(), "float list"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| CliError::Invalid(name.into(), s.into(), "integer list"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_opts_flags() {
+        let a = parse("serve --port 8080 --verbose --alpha=1.5 input.json");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 1.5);
+        assert_eq!(a.positional, vec!["input.json"]);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("bench --alphas 0.5,1.0,2 --ks 10,50");
+        assert_eq!(a.f64_list_or("alphas", &[]).unwrap(), vec![0.5, 1.0, 2.0]);
+        assert_eq!(a.usize_list_or("ks", &[]).unwrap(), vec![10, 50]);
+        assert_eq!(a.f64_or("missing", 7.5).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn errors_are_typed() {
+        let a = parse("x --n abc");
+        assert!(matches!(a.usize_or("n", 1), Err(CliError::Invalid(..))));
+        assert!(matches!(a.req("absent"), Err(CliError::Missing(_))));
+    }
+}

@@ -1,0 +1,175 @@
+//! Pipeline configuration: a typed view over a JSON config file plus
+//! CLI overrides. This is what `stablesketch serve` / the examples load.
+
+use super::cli::Args;
+use super::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Full pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// The l_α index (0 < α ≤ 2).
+    pub alpha: f64,
+    /// Number of projections (sketch width).
+    pub k: usize,
+    /// Original dimensionality D.
+    pub dim: usize,
+    /// RNG seed for the projection matrix R (entries are re-derivable
+    /// from (seed, i, j) — see `numerics::rng`).
+    pub seed: u64,
+    /// Number of shard workers.
+    pub shards: usize,
+    /// Max queries per batch (dynamic batcher).
+    pub max_batch: usize,
+    /// Batch deadline in microseconds.
+    pub batch_deadline_us: u64,
+    /// Bounded queue depth per shard (backpressure).
+    pub queue_depth: usize,
+    /// Use the PJRT artifact path for projections when available.
+    pub use_pjrt: bool,
+    /// Directory of AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 1.0,
+            k: 64,
+            dim: 4096,
+            seed: 0x57AB1E_u64,
+            shards: 2,
+            max_batch: 64,
+            batch_deadline_us: 200,
+            queue_depth: 1024,
+            use_pjrt: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Load from a JSON file; unknown keys are rejected (typo safety).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        let Json::Obj(map) = v else {
+            bail!("config root must be an object");
+        };
+        for (key, val) in map {
+            match key.as_str() {
+                "alpha" => cfg.alpha = val.as_f64().context("alpha: number")?,
+                "k" => cfg.k = val.as_usize().context("k: integer")?,
+                "dim" => cfg.dim = val.as_usize().context("dim: integer")?,
+                "seed" => cfg.seed = val.as_f64().context("seed: number")? as u64,
+                "shards" => cfg.shards = val.as_usize().context("shards: integer")?,
+                "max_batch" => cfg.max_batch = val.as_usize().context("max_batch: integer")?,
+                "batch_deadline_us" => {
+                    cfg.batch_deadline_us = val.as_f64().context("batch_deadline_us")? as u64
+                }
+                "queue_depth" => {
+                    cfg.queue_depth = val.as_usize().context("queue_depth: integer")?
+                }
+                "use_pjrt" => cfg.use_pjrt = val.as_bool().context("use_pjrt: bool")?,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = val.as_str().context("artifacts_dir: string")?.into()
+                }
+                other => bail!("unknown config key: {other}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides (--alpha, --k, --dim, --seed, --shards ...).
+    pub fn apply_args(mut self, args: &Args) -> Result<Self> {
+        self.alpha = args.f64_or("alpha", self.alpha)?;
+        self.k = args.usize_or("k", self.k)?;
+        self.dim = args.usize_or("dim", self.dim)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.shards = args.usize_or("shards", self.shards)?;
+        self.max_batch = args.usize_or("max-batch", self.max_batch)?;
+        self.queue_depth = args.usize_or("queue-depth", self.queue_depth)?;
+        if args.flag("pjrt") {
+            self.use_pjrt = true;
+        }
+        if let Some(dir) = args.get("artifacts-dir") {
+            self.artifacts_dir = dir.to_string();
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.alpha > 0.0 && self.alpha <= 2.0) {
+            bail!("alpha must be in (0, 2], got {}", self.alpha);
+        }
+        if self.k < 2 {
+            bail!("k must be >= 2, got {}", self.k);
+        }
+        if self.dim == 0 || self.shards == 0 || self.max_batch == 0 || self.queue_depth == 0 {
+            bail!("dim/shards/max_batch/queue_depth must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alpha", Json::num(self.alpha)),
+            ("k", Json::num(self.k as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("batch_deadline_us", Json::num(self.batch_deadline_us as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("use_pjrt", Json::Bool(self.use_pjrt)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_json() {
+        let cfg = PipelineConfig {
+            alpha: 1.5,
+            k: 128,
+            ..Default::default()
+        };
+        let v = cfg.to_json();
+        let back = PipelineConfig::from_json(&v).unwrap();
+        assert_eq!(back.alpha, 1.5);
+        assert_eq!(back.k, 128);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let bad = Json::parse(r#"{"alhpa": 1.0}"#).unwrap();
+        assert!(PipelineConfig::from_json(&bad).is_err());
+        let bad2 = Json::parse(r#"{"alpha": 3.0}"#).unwrap();
+        assert!(PipelineConfig::from_json(&bad2).is_err());
+        let bad3 = Json::parse(r#"{"k": 1}"#).unwrap();
+        assert!(PipelineConfig::from_json(&bad3).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = crate::util::cli::Args::parse(
+            "serve --alpha 0.5 --k 32".split_whitespace().map(String::from),
+        );
+        let cfg = PipelineConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.alpha, 0.5);
+        assert_eq!(cfg.k, 32);
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime-free utility substrates (the offline build has no serde /
+//! clap): a JSON parser + writer, a CLI argument parser, and config
+//! loading.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,203 @@
+//! Integration: the full coordinator pipeline — sketch a corpus, serve
+//! batched queries across shard workers, stream turnstile updates,
+//! exercise backpressure and shutdown.
+
+use stablesketch::coordinator::{Coordinator, PairQuery, QueryKind};
+use stablesketch::sketch::{SketchEngine, StreamEvent};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+
+fn setup(n: usize, k: usize, alpha: f64, shards: usize) -> (Corpus, Coordinator) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 1024,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha,
+        k,
+        dim: corpus.dim,
+        shards,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Coordinator::start(cfg, store).expect("coordinator start");
+    (corpus, coord)
+}
+
+#[test]
+fn batched_queries_return_accurate_estimates_in_order() {
+    let (corpus, coord) = setup(60, 128, 1.0, 2);
+    let mut queries: Vec<PairQuery> = (0..50)
+        .map(|t| PairQuery {
+            i: (t % 10) as u32,
+            j: (t % 50 + 10) as u32,
+            kind: QueryKind::Oq,
+        })
+        .collect();
+    queries.push(queries[0]); // duplicate query → must get identical answer
+    let answers = coord.query_batch(&queries).expect("batch");
+    assert_eq!(answers.len(), queries.len());
+    // In-order correspondence: identical queries must get identical
+    // answers (deterministic estimator over the same snapshot).
+    assert_eq!(answers[0], answers[50]);
+    // Accuracy: median relative error over the batch < 30% at k=128.
+    let mut errs: Vec<f64> = queries
+        .iter()
+        .zip(&answers)
+        .filter_map(|(q, &a)| {
+            let exact = corpus.exact_distance(q.i as usize, q.j as usize, 1.0);
+            (exact > 0.0).then(|| (a / exact - 1.0).abs())
+        })
+        .collect();
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = errs[errs.len() / 2];
+    assert!(med < 0.3, "median rel err {med}");
+    let m = coord.metrics();
+    assert_eq!(m.queries_completed.get(), queries.len() as u64);
+    assert!(m.batches_formed.get() >= 1);
+    coord.shutdown();
+}
+
+#[test]
+fn all_estimator_kinds_serve() {
+    let (_corpus, coord) = setup(20, 64, 1.5, 2);
+    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median] {
+        let d = coord.query(PairQuery { i: 1, j: 2, kind }).expect("query");
+        assert!(d.is_finite() && d > 0.0, "{kind:?}: {d}");
+    }
+    // Self-distance is exactly zero for every kind.
+    let d = coord
+        .query(PairQuery {
+            i: 3,
+            j: 3,
+            kind: QueryKind::Oq,
+        })
+        .unwrap();
+    assert_eq!(d, 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn out_of_range_queries_are_rejected() {
+    let (_corpus, coord) = setup(10, 32, 1.0, 1);
+    let err = coord
+        .query(PairQuery {
+            i: 0,
+            j: 10_000,
+            kind: QueryKind::Oq,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn streaming_ingest_changes_answers() {
+    let (_corpus, coord) = setup(16, 64, 1.0, 2);
+    let before = coord
+        .query(PairQuery {
+            i: 0,
+            j: 1,
+            kind: QueryKind::Oq,
+        })
+        .unwrap();
+    // Ingesting a large delta into row 0 must move its distances.
+    // NOTE: the ingest store starts from zeros (it tracks the *stream*);
+    // so after the first ingest the snapshot is the streamed state.
+    let events: Vec<StreamEvent> = (0..200)
+        .map(|c| StreamEvent {
+            row: 0,
+            coord: c * 5,
+            delta: 1.0,
+        })
+        .collect();
+    coord.ingest(&events).unwrap();
+    let after = coord
+        .query(PairQuery {
+            i: 0,
+            j: 1,
+            kind: QueryKind::Oq,
+        })
+        .unwrap();
+    assert_ne!(before, after);
+    assert_eq!(coord.metrics().events_ingested.get(), 200);
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_clients_from_multiple_threads() {
+    let (_corpus, coord) = setup(40, 64, 1.0, 3);
+    let coord = std::sync::Arc::new(coord);
+    let mut handles = Vec::new();
+    for t in 0..4u32 {
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let queries: Vec<PairQuery> = (0..200)
+                .map(|s| PairQuery {
+                    i: (s * 7 + t) % 40,
+                    j: (s * 13 + t * 3) % 40,
+                    kind: QueryKind::Oq,
+                })
+                .collect();
+            let out = c.query_batch(&queries).expect("batch");
+            assert!(out.iter().all(|d| d.is_finite()));
+            out.len()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 800);
+    assert_eq!(coord.metrics().queries_completed.get(), 800);
+}
+
+#[test]
+fn backpressure_rejects_instead_of_blocking() {
+    // Tiny queues + a flood from a client while workers are saturated.
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 8,
+        dim: 256,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.0,
+        k: 16,
+        dim: corpus.dim,
+        shards: 1,
+        max_batch: 2,
+        batch_deadline_us: 1,
+        queue_depth: 4, // tiny
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(1.0, corpus.dim, 16, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Coordinator::start(cfg, store).unwrap();
+    // A single huge batch must either complete or return the explicit
+    // backpressure error — never deadlock (the test harness enforces
+    // completion in bounded time by construction).
+    let queries: Vec<PairQuery> = (0..10_000)
+        .map(|s| PairQuery {
+            i: (s % 8) as u32,
+            j: ((s + 1) % 8) as u32,
+            kind: QueryKind::Oq,
+        })
+        .collect();
+    match coord.query_batch(&queries) {
+        Ok(out) => assert_eq!(out.len(), 10_000),
+        Err(e) => assert!(e.to_string().contains("backpressure"), "{e}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_and_clean() {
+    let (_c, coord) = setup(8, 32, 0.8, 2);
+    coord.shutdown(); // explicit
+                      // Drop of a second coordinator also exercises the Drop path.
+    let (_c2, coord2) = setup(8, 32, 0.8, 2);
+    drop(coord2);
+}

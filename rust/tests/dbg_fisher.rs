@@ -1,0 +1,15 @@
+use stablesketch::stable::StandardStable;
+
+#[test]
+fn dbg_fisher_integrand() {
+    for &alpha in &[0.4f64, 0.8, 1.9] {
+        let s = StandardStable::new(alpha);
+        println!("--- alpha={alpha} (tail_cut region scan) ---");
+        for &u in &[0.05, 0.2, 0.4, 0.6, 0.8, 0.9, 0.95, 0.99, 0.999, 0.99999] {
+            let z = s.abs_quantile(u);
+            let d = s.dlogpdf(z);
+            let score = 1.0 + z * d;
+            println!("u={u:<8} z={z:<12.4e} dlogf={d:<12.4e} score={score:.4} score^2={:.4}", score*score);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+use stablesketch::stable::StandardStable;
+
+#[test]
+fn dbg_fisher_bruteforce() {
+    for &alpha in &[0.4f64, 0.8, 1.9] {
+        let s = StandardStable::new(alpha);
+        // brute-force Simpson over u with 4000 intervals
+        let n = 4000;
+        let mut acc = 0.0;
+        let mut max_s2: (f64, f64) = (0.0, 0.0);
+        for i in 0..=n {
+            let u = (i as f64 / n as f64).clamp(1e-9, 1.0 - 1e-9);
+            let z = s.abs_quantile(u);
+            let d = s.dlogpdf(z);
+            let sc = 1.0 + z * d;
+            let s2 = sc * sc;
+            if s2 > max_s2.1 { max_s2 = (u, s2); }
+            let w = if i == 0 || i == n { 1.0 } else if i % 2 == 1 { 4.0 } else { 2.0 };
+            acc += w * s2;
+        }
+        let integral = acc / (3.0 * n as f64);
+        let i1 = integral / (alpha * alpha);
+        println!("alpha={alpha}: brute I1={i1:.4} CR-var={:.4} max_s2={max_s2:?}", 1.0/i1);
+        let lib = stablesketch::estimators::cramer_rao_bound_factor(alpha);
+        println!("          lib CR-var={lib:.4}");
+    }
+}

@@ -1,0 +1,25 @@
+use stablesketch::stable::StandardStable;
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+
+#[test]
+fn dbg_find_spikes() {
+    let mut rng = Xoshiro256pp::new(1);
+    for &alpha in &[0.4f64, 1.9] {
+        let s = StandardStable::new(alpha);
+        let mut worst: (f64, f64, f64) = (0.0, 0.0, 0.0);
+        for _ in 0..100_000 {
+            let u = rng.uniform_open();
+            let z = s.abs_quantile(u.clamp(1e-12, 1.0-1e-12));
+            let sc = 1.0 + z * s.dlogpdf(z);
+            if sc * sc > worst.2 { worst = (u, z, sc * sc); }
+        }
+        println!("alpha={alpha}: worst u={:.8} z={:.6e} s2={:.3e}", worst.0, worst.1, worst.2);
+        // examine pdf near that z
+        let z = worst.1;
+        for m in [-2.0f64, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0] {
+            let h = 1e-4 * (1.0 + z);
+            let x = z + m * h;
+            println!("   pdf({x:.8e}) = {:.10e}", s.pdf(x));
+        }
+    }
+}

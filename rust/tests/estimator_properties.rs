@@ -1,0 +1,200 @@
+//! Property-based tests (testkit) over estimator invariants — the
+//! contracts every `ScaleEstimator` must satisfy regardless of α, k, or
+//! data.
+
+use stablesketch::estimators::quickselect::{quantile_index, select_kth, select_kth_naive};
+use stablesketch::estimators::*;
+use stablesketch::testkit::{self, alpha_gen, assert_rel, f64_in, heavy_vec, usize_in};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+
+/// All constructible estimators at (α, k).
+fn estimators_for(alpha: f64, k: usize) -> Vec<Box<dyn ScaleEstimator>> {
+    let mut v: Vec<Box<dyn ScaleEstimator>> = vec![
+        Box::new(GeometricMean::new(alpha, k)),
+        Box::new(FractionalPower::new(alpha, k)),
+        Box::new(OptimalQuantile::new(alpha, k)),
+        Box::new(QuantileEstimator::median(alpha, k)),
+        Box::new(QuantileEstimator::fama_roll(alpha, k)),
+    ];
+    if alpha < 1.0 {
+        v.push(Box::new(HarmonicMean::new(alpha, k)));
+    }
+    if (alpha - 2.0).abs() < 1e-12 {
+        v.push(Box::new(ArithmeticMean::new(alpha, k)));
+    }
+    v
+}
+
+#[test]
+fn scale_equivariance_all_estimators() {
+    // d̂(c^{1/α} x) = c · d̂(x) exactly, for every estimator.
+    testkit::check2(
+        "scale-equivariance",
+        25,
+        alpha_gen(),
+        f64_in(0.01, 100.0),
+        |&alpha, &c| {
+            let k = 24;
+            let mut rng = Xoshiro256pp::new((alpha * 1e4) as u64 ^ (c * 1e6) as u64);
+            let xs: Vec<f64> = (0..k).map(|_| rng.normal() * 2.0 + 0.1).collect();
+            for est in estimators_for(alpha, k) {
+                let base = est.estimate(&mut xs.clone());
+                let mut scaled: Vec<f64> =
+                    xs.iter().map(|x| x * c.powf(1.0 / alpha)).collect();
+                let got = est.estimate(&mut scaled);
+                assert_rel(got, c * base, 1e-9)
+                    .map_err(|e| format!("{} alpha={alpha} c={c}: {e}", est.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sign_invariance_all_estimators() {
+    // Estimators see |x| only: flipping signs never changes the answer.
+    testkit::check2(
+        "sign-invariance",
+        20,
+        alpha_gen(),
+        heavy_vec(30),
+        |&alpha, xs| {
+            for est in estimators_for(alpha, 30) {
+                let a = est.estimate(&mut xs.clone());
+                let mut flipped: Vec<f64> =
+                    xs.iter().enumerate().map(|(i, x)| if i % 2 == 0 { -x } else { *x }).collect();
+                let b = est.estimate(&mut flipped);
+                assert_rel(a, b, 1e-12).map_err(|e| format!("{}: {e}", est.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn permutation_invariance_quantile_estimators() {
+    testkit::check("permutation-invariance", 20, heavy_vec(41), |xs| {
+        let est = OptimalQuantile::new(1.3, 41);
+        let a = est.estimate(&mut xs.clone());
+        let mut rev: Vec<f64> = xs.iter().rev().cloned().collect();
+        let b = est.estimate(&mut rev);
+        assert_rel(a, b, 1e-12)
+    });
+}
+
+#[test]
+fn estimates_are_nonnegative_and_finite() {
+    testkit::check2(
+        "nonnegative-finite",
+        25,
+        alpha_gen(),
+        heavy_vec(20),
+        |&alpha, xs| {
+            for est in estimators_for(alpha, 20) {
+                let d = est.estimate(&mut xs.clone());
+                if !(d.is_finite() && d >= 0.0) {
+                    return Err(format!("{}: estimate {d}", est.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quickselect_agrees_with_naive_and_sort() {
+    testkit::check2(
+        "select-consistency",
+        40,
+        usize_in(1, 300),
+        f64_in(0.0, 1.0),
+        |&n, &frac| {
+            let mut rng = Xoshiro256pp::new((n as u64) << 20 | (frac * 1e6) as u64);
+            let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+            let m = ((frac * n as f64) as usize).min(n - 1);
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut buf = xs.clone();
+            if select_kth(&mut buf, m) != sorted[m] {
+                return Err(format!("select_kth wrong at n={n} m={m}"));
+            }
+            if select_kth_naive(&xs, m) != sorted[m] {
+                return Err(format!("naive wrong at n={n} m={m}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantile_index_is_monotone_and_bounded() {
+    testkit::check2(
+        "quantile-index",
+        40,
+        f64_in(0.01, 0.99),
+        usize_in(1, 500),
+        |&q, &k| {
+            let idx = quantile_index(q, k);
+            if idx >= k {
+                return Err(format!("idx {idx} >= k {k}"));
+            }
+            // monotone in q
+            let idx2 = quantile_index((q + 0.005).min(0.999), k);
+            if idx2 < idx {
+                return Err("not monotone in q".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bias_corrected_oq_is_less_biased_than_raw() {
+    // For every α on a coarse grid, |E d̂_corrected − 1| ≤ |E d̂_raw − 1|
+    // (up to MC noise) at small k.
+    use stablesketch::simul::mc::{run_estimator, McConfig};
+    for &alpha in &[0.3, 0.8, 1.2, 1.8] {
+        let k = 15;
+        let cfg = McConfig {
+            reps: 30_000,
+            seed: 0xB1A5,
+            d_true: 1.0,
+        };
+        let raw = run_estimator(&OptimalQuantile::uncorrected(alpha, k), &cfg);
+        let cor = run_estimator(&OptimalQuantile::new(alpha, k), &cfg);
+        assert!(
+            cor.bias.abs() <= raw.bias.abs() + 0.01,
+            "alpha={alpha}: corrected bias {} vs raw {}",
+            cor.bias,
+            raw.bias
+        );
+    }
+}
+
+#[test]
+fn oq_root_form_needs_no_pow_and_matches() {
+    testkit::check("root-form", 15, heavy_vec(25), |xs| {
+        let alpha = 1.4;
+        let est = OptimalQuantile::new(alpha, 25);
+        let d = est.estimate(&mut xs.clone());
+        let r = est.estimate_root(&mut xs.clone());
+        assert_rel(r.powf(alpha), d, 1e-9)
+    });
+}
+
+#[test]
+fn variance_factor_ordering_matches_fig1_bands() {
+    // Sweep α finely: oq must beat gm for all α > 1.05; fp must beat gm
+    // everywhere (it is the optimized member of the same family).
+    let mut alpha = 0.15;
+    while alpha <= 1.95 {
+        let gm = GeometricMean::new(alpha, 50).asymptotic_variance_factor();
+        let fp = FractionalPower::new(alpha, 50).asymptotic_variance_factor();
+        assert!(fp <= gm + 1e-9, "fp > gm at alpha={alpha}");
+        if alpha > 1.05 {
+            let oq = OptimalQuantile::new(alpha, 50).asymptotic_variance_factor();
+            assert!(oq < gm, "oq !< gm at alpha={alpha}: {oq} vs {gm}");
+        }
+        alpha += 0.1;
+    }
+}

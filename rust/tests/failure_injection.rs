@@ -1,0 +1,167 @@
+//! Failure injection: every component must fail loudly and precisely —
+//! corrupted manifests, shape mismatches, invalid configs, closed
+//! queues, out-of-domain parameters.
+
+use stablesketch::coordinator::Coordinator;
+use stablesketch::runtime::{Manifest, Runtime};
+use stablesketch::sketch::SketchStore;
+use stablesketch::util::config::PipelineConfig;
+use stablesketch::util::json::Json;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ss_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn runtime_rejects_missing_and_corrupt_manifest() {
+    let d = tmpdir("nomanifest");
+    assert!(Runtime::new(&d).is_err());
+
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    let err = match Runtime::new(&d) {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt manifest accepted"),
+    };
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}
+
+#[test]
+fn runtime_rejects_missing_hlo_file() {
+    let d = tmpdir("nohlo");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,"entries":[{"name":"ghost","op":"project",
+            "file":"ghost.hlo.txt","inputs":[[2,2],[2,2]],"output":[2,2],
+            "meta":{}}]}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(&d).unwrap();
+    let x = [0.0f32; 4];
+    let err = rt
+        .execute_f32("ghost", &[(&x, &[2, 2]), (&x, &[2, 2])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+}
+
+#[test]
+fn runtime_rejects_shape_and_arity_mismatches() {
+    // Use the real artifacts if present (otherwise skip).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let entry = rt.manifest().entries[0].clone();
+    let tiny = [0.0f32; 1];
+    // wrong arity
+    let err = rt.execute_f32(&entry.name, &[(&tiny, &[1])]).unwrap_err();
+    assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+    // unknown artifact
+    assert!(rt.execute_f32("does_not_exist", &[]).is_err());
+}
+
+#[test]
+fn manifest_parser_rejects_malformed_entries() {
+    let d = tmpdir("badentries");
+    for bad in [
+        r#"{"version":1,"entries":[{"op":"x","file":"f","inputs":[],"output":[]}]}"#, // no name
+        r#"{"version":1,"entries":[{"name":"a","op":"x","file":"f","inputs":[[1,"x"]],"output":[]}]}"#, // bad dim
+        r#"{"version":2,"entries":[]}"#, // bad version
+    ] {
+        std::fs::write(d.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&d).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn config_validation_catches_domain_errors() {
+    for (key, val) in [
+        ("alpha", "0.0"),
+        ("alpha", "2.5"),
+        ("k", "1"),
+        ("shards", "0"),
+        ("queue_depth", "0"),
+    ] {
+        let j = Json::parse(&format!("{{\"{key}\": {val}}}")).unwrap();
+        assert!(
+            PipelineConfig::from_json(&j).is_err(),
+            "accepted {key}={val}"
+        );
+    }
+}
+
+#[test]
+fn coordinator_rejects_store_k_mismatch() {
+    let cfg = PipelineConfig {
+        k: 64,
+        ..Default::default()
+    };
+    let store = SketchStore::zeros(10, 32, cfg.alpha, 0); // wrong k
+    let err = match Coordinator::start(cfg, store) {
+        Err(e) => e,
+        Ok(_) => panic!("k mismatch accepted"),
+    };
+    assert!(err.to_string().contains("k="), "{err}");
+}
+
+#[test]
+fn estimator_constructors_enforce_domains() {
+    use stablesketch::estimators::*;
+    use std::panic::catch_unwind;
+    assert!(catch_unwind(|| GeometricMean::new(2.5, 10)).is_err());
+    assert!(catch_unwind(|| GeometricMean::new(1.0, 1)).is_err());
+    assert!(catch_unwind(|| HarmonicMean::new(1.0, 10)).is_err());
+    assert!(catch_unwind(|| QuantileEstimator::new(1.0, 10, 0.0)).is_err());
+    assert!(catch_unwind(|| QuantileEstimator::new(1.0, 10, 1.0)).is_err());
+    assert!(catch_unwind(|| ArithmeticMean::new(1.9, 10)).is_err());
+}
+
+#[test]
+fn estimator_estimate_enforces_sample_length() {
+    use stablesketch::estimators::{OptimalQuantile, ScaleEstimator};
+    let est = OptimalQuantile::new(1.0, 16);
+    let mut wrong = vec![1.0; 15];
+    assert!(std::panic::catch_unwind(move || est.estimate(&mut wrong)).is_err());
+}
+
+#[test]
+fn stable_dist_rejects_bad_parameters() {
+    use stablesketch::stable::StableDist;
+    use std::panic::catch_unwind;
+    assert!(catch_unwind(|| StableDist::new(0.0, 1.0)).is_err());
+    assert!(catch_unwind(|| StableDist::new(2.1, 1.0)).is_err());
+    assert!(catch_unwind(|| StableDist::new(1.0, 0.0)).is_err());
+    assert!(catch_unwind(|| StableDist::new(1.0, -3.0)).is_err());
+}
+
+#[test]
+fn quantile_domain_errors() {
+    use stablesketch::stable::StandardStable;
+    use std::panic::catch_unwind;
+    let s = StandardStable::new(1.5);
+    assert!(catch_unwind(|| s.quantile(0.0)).is_err());
+    assert!(catch_unwind(|| s.quantile(1.0)).is_err());
+    assert!(catch_unwind(|| s.abs_quantile(1.0)).is_err());
+}
+
+#[test]
+fn streaming_bounds_checked() {
+    use stablesketch::sketch::{StreamEvent, StreamingSketcher};
+    let mut s = StreamingSketcher::new(1.0, 32, 8, 1, 4);
+    assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        s.apply(StreamEvent {
+            row: 4, // out of range
+            coord: 0,
+            delta: 1.0,
+        })
+    }))
+    .is_err());
+}

@@ -1,0 +1,163 @@
+//! Integration: the python-AOT → rust-PJRT round trip.
+//!
+//! Requires `make artifacts` to have run (skips with a message if the
+//! directory is missing — CI runs `make test` which builds artifacts
+//! first).
+
+use stablesketch::runtime::Runtime;
+use stablesketch::sketch::{SketchEngine, StableMatrix};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let dir = p.join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_artifacts_all_compile_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).expect("runtime");
+    assert_eq!(rt.platform(), "cpu");
+    // Execute every artifact once with synthetic inputs of the declared
+    // shapes; outputs must be finite and correctly sized.
+    let entries: Vec<_> = rt.manifest().entries.clone();
+    assert!(entries.len() >= 4, "manifest too small: {}", entries.len());
+    for e in &entries {
+        let buffers: Vec<Vec<f32>> = e
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(idx, shape)| {
+                let len = shape.iter().product::<usize>().max(1);
+                (0..len)
+                    .map(|t| ((t * 37 + idx * 13) % 17) as f32 * 0.21 - 1.5)
+                    .collect()
+            })
+            .collect();
+        let inputs: Vec<(&[f32], &[usize])> = buffers
+            .iter()
+            .zip(&e.inputs)
+            .map(|(b, s)| (b.as_slice(), s.as_slice()))
+            .collect();
+        // Scalar inputs (α, coefficients) must be positive for pow paths.
+        let inputs: Vec<(Vec<f32>, &[usize])> = inputs
+            .iter()
+            .map(|(b, s)| {
+                if s.is_empty() {
+                    (vec![1.25f32], *s)
+                } else {
+                    (b.to_vec(), *s)
+                }
+            })
+            .collect();
+        let input_refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(b, s)| (b.as_slice(), *s)).collect();
+        let out = rt
+            .execute_f32(&e.name, &input_refs)
+            .unwrap_or_else(|err| panic!("executing {}: {err:#}", e.name));
+        assert_eq!(out.len(), e.output.iter().product::<usize>().max(1));
+        assert!(
+            out.iter().all(|v| v.is_finite()),
+            "{}: non-finite output",
+            e.name
+        );
+    }
+    let stats = rt.stats();
+    assert_eq!(stats.compiles as usize, entries.len());
+    assert_eq!(stats.executions as usize, entries.len());
+}
+
+#[test]
+fn pjrt_projection_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).expect("runtime");
+    // Use the first projection artifact's shape.
+    let entry = rt
+        .manifest()
+        .entries
+        .iter()
+        .find(|e| e.op == "project")
+        .expect("a projection artifact")
+        .clone();
+    let (_n_block, d) = (entry.inputs[0][0], entry.inputs[0][1]);
+    let k = entry.inputs[1][1];
+    let alpha = 1.0;
+    let engine = SketchEngine::new(alpha, d, k, 2024);
+    // A small corpus that doesn't divide the block size (exercises padding).
+    let n = 37;
+    let mut rows = vec![0.0f32; n * d];
+    for (t, v) in rows.iter_mut().enumerate() {
+        if t % 23 == 0 {
+            *v = ((t % 7) as f32 - 3.0) * 0.4;
+        }
+    }
+    let native = engine.sketch_all(&rows, n);
+    let pjrt = engine
+        .sketch_all_pjrt(&rt, &rows, n)
+        .expect("pjrt sketching");
+    for i in 0..n {
+        for j in 0..k {
+            let a = native.row(i)[j];
+            let b = pjrt.row(i)[j];
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + a.abs()),
+                "row {i} col {j}: native {a} vs pjrt {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_gm_estimates_match_rust_estimator() {
+    let Some(dir) = artifacts_dir() else { return };
+    use stablesketch::estimators::{GeometricMean, ScaleEstimator};
+    let rt = Runtime::new(dir).expect("runtime");
+    let entry = rt
+        .manifest()
+        .entries
+        .iter()
+        .find(|e| e.op == "gm_estimate")
+        .expect("gm artifact")
+        .clone();
+    let (b, k) = (entry.inputs[0][0], entry.inputs[0][1]);
+    let alpha = 1.5f64;
+    let gm = GeometricMean::new(alpha, k);
+    // inv_denom = the estimator's precomputed coefficient: probe it by
+    // feeding a row of ones (product = 1 ⇒ estimate = inv_denom).
+    let ones = vec![1.0f64; k];
+    let inv_denom = gm.estimate(&mut ones.clone());
+
+    let matrix = StableMatrix::new(alpha, 7, k, 1);
+    let mut v1 = vec![0.0f32; b * k];
+    for (t, v) in v1.iter_mut().enumerate() {
+        *v = matrix.entry(t % k, 0) as f32 * ((t % 5) as f32 * 0.3 + 0.2);
+    }
+    let v2 = vec![0.0f32; b * k];
+    let out = rt
+        .execute_f32(
+            &entry.name,
+            &[
+                (&v1, &[b, k]),
+                (&v2, &[b, k]),
+                (&[alpha as f32], &[]),
+                (&[inv_denom as f32], &[]),
+            ],
+        )
+        .expect("gm execute");
+    // Compare a few rows against the rust estimator.
+    for row in [0usize, 1, b / 2, b - 1] {
+        let mut samples: Vec<f64> = (0..k).map(|j| v1[row * k + j] as f64).collect();
+        let expect = gm.estimate(&mut samples);
+        let got = out[row] as f64;
+        assert!(
+            (got / expect - 1.0).abs() < 2e-2,
+            "row {row}: pjrt {got} vs rust {expect}"
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! System-level statistical contracts: the end-to-end pipeline (corpus →
+//! stable projection → estimator) must deliver the accuracy the theory
+//! promises, for every estimator and across α.
+
+use stablesketch::estimators::*;
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::simul::mc::{two_sided_error, McConfig};
+use stablesketch::simul::{Corpus, CorpusConfig};
+
+/// The Lemma-4 guarantee, verified end-to-end on real (synthetic) data:
+/// with k planned for (ε=0.5, δ=0.05, T=10), at most ~a tenth of pairs
+/// plus δ-slack may exceed ±50% relative error.
+#[test]
+fn lemma4_planned_k_delivers_promised_accuracy() {
+    let alpha = 1.0;
+    let q = tables::q_star(alpha);
+    let k = tail_bounds::sample_size_fraction(alpha, q, 0.5, 10.0, 0.05);
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 40,
+        dim: 2048,
+        density: 0.1,
+        ..Default::default()
+    });
+    let engine = SketchEngine::new(alpha, corpus.dim, k, 31337);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let mut buf = vec![0.0; k];
+    let (mut bad, mut total) = (0usize, 0usize);
+    for i in 0..corpus.n {
+        for j in (i + 1)..corpus.n {
+            let exact = corpus.exact_distance(i, j, alpha);
+            if exact <= 0.0 {
+                continue;
+            }
+            let est = engine.estimate(&store, i, j, &mut buf);
+            if (est / exact - 1.0).abs() > 0.5 {
+                bad += 1;
+            }
+            total += 1;
+        }
+    }
+    let frac = bad as f64 / total as f64;
+    // Budget: 1/T = 10% of pairs may fail, plus δ and shared-R slack.
+    assert!(frac < 0.2, "{bad}/{total} = {frac} of pairs outside ±50%");
+}
+
+/// Each estimator's two-sided error at the paper's (ε, k) operating
+/// point must not exceed its own theoretical bound (where one exists).
+#[test]
+fn estimators_meet_their_bounds_at_operating_point() {
+    let cfg = McConfig {
+        reps: 40_000,
+        seed: 2718,
+        d_true: 1.0,
+    };
+    for &alpha in &[0.5, 1.0, 1.5] {
+        let k = 100;
+        let q = tables::q_star(alpha);
+        let oq = OptimalQuantile::new(alpha, k);
+        let emp = two_sided_error(&oq, &cfg, 0.5);
+        let tc = tail_bounds::tail_constants(alpha, q, 0.5);
+        let bound = (-(k as f64) * 0.25 / tc.g_right).exp()
+            + (-(k as f64) * 0.25 / tc.g_left).exp();
+        assert!(
+            emp <= bound + 0.01,
+            "alpha={alpha}: empirical {emp} > bound {bound}"
+        );
+    }
+}
+
+/// Variance ratios at finite k reflect the asymptotic ordering (Fig 1)
+/// on actual sketch data, not just synthetic stable draws.
+#[test]
+fn finite_sample_ordering_on_sketch_data() {
+    let alpha = 1.5;
+    let k = 50;
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 30,
+        dim: 2048,
+        density: 0.1,
+        ..Default::default()
+    });
+    // Average squared relative error over pairs & seeds for oq vs gm.
+    let (mut se_oq, mut se_gm, mut cnt) = (0.0f64, 0.0f64, 0);
+    for seed in 0..4u64 {
+        let engine = SketchEngine::new(alpha, corpus.dim, k, 1000 + seed);
+        let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+        let gm = GeometricMean::new(alpha, k);
+        let mut buf = vec![0.0; k];
+        for i in 0..corpus.n {
+            for j in (i + 1)..corpus.n.min(i + 4) {
+                let exact = corpus.exact_distance(i, j, alpha);
+                if exact <= 0.0 {
+                    continue;
+                }
+                let oq = engine.estimate(&store, i, j, &mut buf);
+                let gme = engine.estimate_with(&gm, &store, i, j, &mut buf);
+                se_oq += (oq / exact - 1.0).powi(2);
+                se_gm += (gme / exact - 1.0).powi(2);
+                cnt += 1;
+            }
+        }
+    }
+    let (mse_oq, mse_gm) = (se_oq / cnt as f64, se_gm / cnt as f64);
+    assert!(
+        mse_oq < mse_gm * 1.1,
+        "oq should not lose to gm at alpha=1.5 on sketch data: {mse_oq} vs {mse_gm}"
+    );
+}
+
+/// Sketches of *independent* corpora are independent: distance estimates
+/// between a row and itself under different seeds decorrelate (sanity of
+/// the counter-based R derivation — no accidental seed reuse).
+#[test]
+fn different_seeds_give_independent_sketches() {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 4,
+        dim: 1024,
+        density: 0.2,
+        ..Default::default()
+    });
+    let e1 = SketchEngine::new(1.0, corpus.dim, 64, 1);
+    let e2 = SketchEngine::new(1.0, corpus.dim, 64, 2);
+    let s1 = e1.sketch_all(corpus.as_slice(), corpus.n);
+    let s2 = e2.sketch_all(corpus.as_slice(), corpus.n);
+    // Correlation between the two sketch vectors of row 0 should be ~0.
+    let (a, b) = (s1.row(0), s2.row(0));
+    let n = a.len() as f64;
+    let (ma, mb) = (
+        a.iter().map(|&x| x as f64).sum::<f64>() / n,
+        b.iter().map(|&x| x as f64).sum::<f64>() / n,
+    );
+    let mut cov = 0.0;
+    let (mut va, mut vb) = (0.0, 0.0);
+    for (x, y) in a.iter().zip(b) {
+        let (dx, dy) = (*x as f64 - ma, *y as f64 - mb);
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    let corr = cov / (va.sqrt() * vb.sqrt());
+    assert!(corr.abs() < 0.35, "cross-seed correlation {corr}");
+}
+
+/// Estimating with a *root* form and powering up is consistent with the
+/// direct form across the whole pipeline.
+#[test]
+fn root_and_direct_forms_agree_end_to_end() {
+    let alpha = 1.3;
+    let k = 64;
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 6,
+        dim: 512,
+        ..Default::default()
+    });
+    let engine = SketchEngine::new(alpha, corpus.dim, k, 5);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let mut buf = vec![0.0; k];
+    for (i, j) in [(0usize, 1usize), (2, 5), (3, 4)] {
+        store.diff_into(i, j, &mut buf);
+        let d = engine.estimator().estimate(&mut buf.clone());
+        let r = engine.estimator().estimate_root(&mut buf);
+        assert!((r.powf(alpha) / d - 1.0).abs() < 1e-9);
+    }
+}
+
+/// Randomized agreement between the two R-derivation paths under heavy
+/// concurrent access (the streaming property that matters operationally).
+#[test]
+fn concurrent_row_regeneration_is_stable() {
+    use stablesketch::sketch::StableMatrix;
+    let m = std::sync::Arc::new(StableMatrix::new(1.2, 99, 512, 32));
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let m = m.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256pp::new(t);
+            let mut out = vec![0.0; 32];
+            let mut acc = 0.0;
+            for _ in 0..2000 {
+                let d = rng.below(512) as usize;
+                m.row_into(d, &mut out);
+                acc += out[(d * 7) % 32];
+            }
+            acc
+        }));
+    }
+    let sums: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Re-run single-threaded must give the same values.
+    let mut rng = Xoshiro256pp::new(0);
+    let mut out = vec![0.0; 32];
+    let mut acc = 0.0;
+    for _ in 0..2000 {
+        let d = rng.below(512) as usize;
+        m.row_into(d, &mut out);
+        acc += out[(d * 7) % 32];
+    }
+    assert_eq!(acc, sums[0]);
+}
