@@ -2,18 +2,22 @@
 //! small workload — all three layers composing:
 //!
 //!   L2/L1 artifacts (`make artifacts`) → PJRT projection in the rust
-//!   runtime → coordinator serving batched kNN queries with the optimal
-//!   quantile estimator → recall + latency/throughput report.
+//!   runtime → coordinator serving **TopK query plans** (one-vs-all kNN
+//!   through the fused abs-diff-select kernel) → recall +
+//!   latency/throughput report.
 //!
 //! Workload: a Zipf/heavy-tailed synthetic corpus (stand-in for the
 //! paper's term-doc matrices, §1.1), k-nearest-neighbour search by l_α
-//! distance, evaluated against exact brute force.
+//! distance, evaluated against exact brute force. Each row's kNN is ONE
+//! `Query::TopK` — the coordinator scans all candidates under a single
+//! store snapshot with a single reused scratch, instead of the n−1
+//! separate pair queries this example used to issue.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example corpus_knn
 //! ```
 
-use stablesketch::coordinator::{Coordinator, PairQuery, QueryKind};
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, Reply};
 use stablesketch::runtime::Runtime;
 use stablesketch::sketch::{exact_distance_matrix, SketchEngine};
 use stablesketch::simul::{Corpus, CorpusConfig};
@@ -66,9 +70,12 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let exact = exact_distance_matrix(corpus.as_slice(), corpus.n, corpus.dim, alpha);
     let exact_dt = t0.elapsed();
-    println!("exact scan: {:.2}s (baseline being replaced)", exact_dt.as_secs_f64());
+    println!(
+        "exact scan: {:.2}s (baseline being replaced)",
+        exact_dt.as_secs_f64()
+    );
 
-    // ---- L3: coordinator serving
+    // ---- L3: coordinator serving one TopK plan for the whole corpus
     let cfg = PipelineConfig {
         alpha,
         k,
@@ -82,28 +89,26 @@ fn main() -> anyhow::Result<()> {
     let n = corpus.n;
     let coord = Coordinator::start(cfg, store)?;
 
-    // kNN for every row: n-1 pair queries per row, batched.
+    // kNN for every row: ONE TopK query per row — the plan API replaces
+    // the hand-rolled n·(n−1) pair-query loop.
     let t0 = Instant::now();
+    let plan: Vec<Query> = (0..n)
+        .map(|i| Query::TopK {
+            i: i as u32,
+            m: TOPK,
+            kind: QueryKind::Oq,
+        })
+        .collect();
+    let replies = coord.query_plan(plan)?;
+    let serve_dt = t0.elapsed();
+
     let mut recall_sum = 0.0f64;
-    for i in 0..n {
-        let queries: Vec<PairQuery> = (0..n)
-            .filter(|&j| j != i)
-            .map(|j| PairQuery {
-                i: i as u32,
-                j: j as u32,
-                kind: QueryKind::Oq,
-            })
-            .collect();
-        let ests = coord.query_batch(&queries)?;
-        // top-K by estimate vs top-K by exact
-        let mut est_pairs: Vec<(usize, f64)> = queries
-            .iter()
-            .zip(&ests)
-            .map(|(q, &d)| (q.j as usize, d))
-            .collect();
-        est_pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (i, reply) in replies.iter().enumerate() {
+        let Reply::TopK(neighbours) = reply else {
+            unreachable!("TopK plan returned a non-TopK reply");
+        };
         let est_top: std::collections::HashSet<usize> =
-            est_pairs.iter().take(TOPK).map(|&(j, _)| j).collect();
+            neighbours.iter().map(|&(j, _)| j as usize).collect();
         let mut exact_pairs: Vec<(usize, f64)> = (0..n)
             .filter(|&j| j != i)
             .map(|j| (j, exact[i * n + j]))
@@ -116,16 +121,15 @@ fn main() -> anyhow::Result<()> {
             .count();
         recall_sum += hits as f64 / TOPK as f64;
     }
-    let serve_dt = t0.elapsed();
-    let total_queries = n * (n - 1);
+    let total_distances = n * (n - 1);
     let recall = recall_sum / n as f64;
     println!(
-        "served {} distance queries in {:.2}s = {:.0} qps",
-        total_queries,
+        "served {n} TopK plans ({total_distances} fused distance estimates) in {:.2}s = \
+         {:.0} distances/s",
         serve_dt.as_secs_f64(),
-        total_queries as f64 / serve_dt.as_secs_f64()
+        total_distances as f64 / serve_dt.as_secs_f64()
     );
-    println!("recall@{TOPK} vs exact l_{alpha}: {:.3}", recall);
+    println!("recall@{TOPK} vs exact l_{alpha}: {recall:.3}");
     println!("{}", coord.metrics().report());
 
     // headline comparison: pipeline vs exact scan for this workload

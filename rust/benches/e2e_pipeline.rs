@@ -1,16 +1,19 @@
 //! System bench (E2E row in EXPERIMENTS.md): end-to-end pipeline
 //! throughput/latency across shard counts, batch sizes, and estimator
-//! kinds, on a synthetic heavy-tailed corpus.
+//! kinds, on a synthetic heavy-tailed corpus — all through the query
+//! plan API.
 //!
 //! This is the serving claim behind the paper's "reducing training time
 //! from one week to one day": per-distance cost is dominated by the
-//! estimator, so the oq estimator's cheap hot path shows up directly in
-//! queries/second.
+//! estimator, so the oq estimator's cheap fused hot path shows up
+//! directly in queries/second. The TopK section additionally shows the
+//! plan-level win: one `Query::TopK` amortizes snapshot + scratch over
+//! all n−1 candidates vs. issuing n−1 pair queries.
 
 mod common;
 
 use stablesketch::bench_util::Table;
-use stablesketch::coordinator::{Coordinator, PairQuery, QueryKind};
+use stablesketch::coordinator::{Coordinator, PairQuery, Query, QueryKind, Reply};
 use stablesketch::numerics::{Rng, Xoshiro256pp};
 use stablesketch::sketch::SketchEngine;
 use stablesketch::simul::{Corpus, CorpusConfig};
@@ -30,20 +33,59 @@ fn run_workload(
     let mut done = 0usize;
     while done < queries {
         let burst = (queries - done).min(512);
-        let batch: Vec<PairQuery> = (0..burst)
-            .map(|_| PairQuery {
+        let plan: Vec<Query> = (0..burst)
+            .map(|_| Query::Pair {
                 i: rng.below(n as u64) as u32,
                 j: rng.below(n as u64) as u32,
                 kind,
             })
             .collect();
-        coord.query_batch(&batch).expect("batch");
+        coord.query_plan(plan).expect("plan");
         done += burst;
     }
     let dt = t0.elapsed().as_secs_f64();
     let qps = queries as f64 / dt;
     let p99 = coord.metrics().query_latency.quantile_ns(0.99) as f64 / 1e3;
     (qps, p99)
+}
+
+/// TopK via the plan API vs. the same kNN answered with n−1 pair
+/// queries per anchor: returns (plan distances/s, pairs distances/s).
+fn run_topk_comparison(coord: &Coordinator, n: usize, anchors: usize, m: usize) -> (f64, f64) {
+    let scanned_before = coord.metrics().topk_candidates_scanned.get();
+    let t0 = Instant::now();
+    let plan: Vec<Query> = (0..anchors)
+        .map(|a| Query::TopK {
+            i: (a % n) as u32,
+            m,
+            kind: QueryKind::Oq,
+        })
+        .collect();
+    let replies = coord.query_plan(plan).expect("topk plan");
+    let plan_dt = t0.elapsed().as_secs_f64();
+    for r in &replies {
+        let Reply::TopK(v) = r else { panic!("non-topk reply") };
+        assert_eq!(v.len(), m.min(n - 1));
+    }
+    let scanned = coord.metrics().topk_candidates_scanned.get() - scanned_before;
+    assert_eq!(scanned as usize, anchors * (n - 1), "scan counter drifted");
+
+    let t0 = Instant::now();
+    for a in 0..anchors {
+        let i = (a % n) as u32;
+        let pairs: Vec<PairQuery> = (0..n as u32)
+            .filter(|&j| j != i)
+            .map(|j| PairQuery {
+                i,
+                j,
+                kind: QueryKind::Oq,
+            })
+            .collect();
+        coord.query_batch(&pairs).expect("pair batch");
+    }
+    let pairs_dt = t0.elapsed().as_secs_f64();
+    let distances = (anchors * (n - 1)) as f64;
+    (distances / plan_dt, distances / pairs_dt)
 }
 
 fn main() {
@@ -76,11 +118,7 @@ fn main() {
                 let store = engine.sketch_all(corpus.as_slice(), n);
                 let coord = Coordinator::start(cfg, store).expect("start");
                 let (qps, p99) = run_workload(&coord, n, queries, kind, 7);
-                let kind_s = match kind {
-                    QueryKind::Oq => "oq",
-                    QueryKind::Gm => "gm",
-                    _ => "?",
-                };
+                let kind_s = kind.label();
                 table.row(vec![
                     format!("{shards}"),
                     format!("{max_batch}"),
@@ -100,6 +138,33 @@ fn main() {
         }
     }
     table.print();
+
+    // --- TopK plan vs brute-force pair queries ----------------------
+    let cfg = PipelineConfig {
+        alpha,
+        k,
+        dim,
+        shards: 2,
+        max_batch: 64,
+        batch_deadline_us: 100,
+        queue_depth: 16_384,
+        ..Default::default()
+    };
+    let store = engine.sketch_all(corpus.as_slice(), n);
+    let coord = Coordinator::start(cfg, store).expect("start");
+    let anchors = (common::reps(60_000) / 600).max(8);
+    let (plan_dps, pairs_dps) = run_topk_comparison(&coord, n, anchors, 10);
+    println!(
+        "\nTopK@10 over {anchors} anchors: plan {plan_dps:.0} distances/s vs \
+         pair-queries {pairs_dps:.0} distances/s ({:.1}x)",
+        plan_dps / pairs_dps
+    );
+    println!("{}", coord.metrics().report());
+    rows.push(Json::obj(vec![
+        ("topk_plan_dps", Json::num(plan_dps)),
+        ("topk_pairs_dps", Json::num(pairs_dps)),
+    ]));
+    coord.shutdown();
     common::dump("e2e_pipeline.json", &rows);
 
     // Shape: oq must out-serve gm at the same configuration (the whole
@@ -107,9 +172,9 @@ fn main() {
     let qps_of = |kind: &str, shards: f64, batch: f64| {
         rows.iter()
             .find(|r| {
-                r.get("estimator").unwrap().as_str() == Some(kind)
-                    && r.get("shards").unwrap().as_f64() == Some(shards)
-                    && r.get("max_batch").unwrap().as_f64() == Some(batch)
+                r.get("estimator").and_then(|e| e.as_str()) == Some(kind)
+                    && r.get("shards").and_then(|s| s.as_f64()) == Some(shards)
+                    && r.get("max_batch").and_then(|b| b.as_f64()) == Some(batch)
             })
             .unwrap()
             .get("qps")
@@ -123,4 +188,8 @@ fn main() {
         "oq should out-serve gm at k={k}: {oq:.0} vs {gm:.0} qps"
     );
     println!("\nshape check passed: oq {oq:.0} qps vs gm {gm:.0} qps (1 shard, batch 256)");
+    assert!(
+        plan_dps > pairs_dps,
+        "TopK plan should beat brute-force pair queries: {plan_dps:.0} vs {pairs_dps:.0}"
+    );
 }

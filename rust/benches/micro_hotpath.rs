@@ -1,13 +1,15 @@
 //! Micro-benchmarks of the hot-path primitives (the §Perf ledger):
 //! selection vs fractional powers at the operation level, the naive vs
-//! optimized selector ablation, sampling, and projection throughput.
+//! optimized selector ablation, the fused abs-diff-select kernel vs the
+//! copy-then-estimate scalar path, sampling, and projection throughput.
 
 mod common;
 
 use stablesketch::bench_util::{bench, black_box, BenchConfig, Table};
 use stablesketch::estimators::quickselect::{select_kth, select_kth_naive};
+use stablesketch::estimators::{BatchScratch, FusedDiffEstimator, OptimalQuantile, ScaleEstimator};
 use stablesketch::numerics::{Rng, Xoshiro256pp};
-use stablesketch::sketch::SketchEngine;
+use stablesketch::sketch::{SketchEngine, SketchStore};
 use stablesketch::stable::StableSampler;
 use stablesketch::util::json::Json;
 
@@ -91,6 +93,51 @@ fn main() {
         );
     }
 
+    // --- fused abs-diff-select vs copy-then-estimate ----------------
+    // The serving hot path before this refactor: copy the f32 sketch
+    // diff into an f64 buffer (reused across the batch, as the old
+    // worker loop did — allocation is deliberately NOT timed), then
+    // estimate. The fused kernel selects straight over the f32
+    // differences in a reused scratch.
+    let mut fused_speedup_k256 = 0.0;
+    for &k in &[64usize, 256] {
+        let alpha = 1.0;
+        let est = OptimalQuantile::new(alpha, k);
+        let mut store = SketchStore::zeros(2, k, alpha, 0);
+        for i in 0..2 {
+            for v in store.row_mut(i).iter_mut() {
+                *v = rng.normal() as f32;
+            }
+        }
+        let mut buf = vec![0.0f64; k];
+        let m_scalar = bench("copy+estimate", &cfg, || {
+            store.diff_into(0, 1, &mut buf);
+            black_box(est.estimate(&mut buf))
+        });
+        push(
+            &format!("pair copy+estimate k={k}"),
+            m_scalar.ns_per_op_median,
+            "scalar path: f64 copy into a reused buffer",
+            &mut rows,
+            &mut table,
+        );
+        let mut scratch = BatchScratch::new(k);
+        let m_fused = bench("fused", &cfg, || {
+            black_box(est.estimate_diff(store.row(0), store.row(1), &mut scratch))
+        });
+        let speedup = m_scalar.ns_per_op_median / m_fused.ns_per_op_median;
+        push(
+            &format!("pair fused abs-diff-select k={k}"),
+            m_fused.ns_per_op_median,
+            &format!("f32 select, zero copy — {speedup:.1}x vs scalar"),
+            &mut rows,
+            &mut table,
+        );
+        if k == 256 {
+            fused_speedup_k256 = speedup;
+        }
+    }
+
     // --- sampling ---------------------------------------------------
     for &alpha in &[0.5f64, 1.0, 2.0] {
         let s = StableSampler::new(alpha);
@@ -127,4 +174,13 @@ fn main() {
 
     table.print();
     common::dump("micro_hotpath.json", &rows);
+
+    // Shape: the fused kernel must beat the copy-then-estimate scalar
+    // path at serving width (expected ~2x+ from halved memory traffic
+    // plus the removed per-query allocation).
+    println!("\nfused vs scalar at k=256: {fused_speedup_k256:.1}x");
+    assert!(
+        fused_speedup_k256 > 1.0,
+        "fused path slower than copy+estimate at k=256 ({fused_speedup_k256:.2}x)"
+    );
 }

@@ -2,8 +2,8 @@
 //! (`sketch`, `query`, `serve`, `experiment`). Kept in the library so the
 //! integration tests can drive them directly.
 
-use crate::coordinator::{Coordinator, PairQuery, QueryKind};
-use crate::estimators::{tables, EstimatorKind};
+use crate::coordinator::{Coordinator, Query, QueryKind, Reply};
+use crate::estimators::{tables, BatchScratch, EstimatorKind};
 use crate::numerics::{Rng, Xoshiro256pp};
 use crate::sketch::SketchEngine;
 use crate::simul::{Corpus, CorpusConfig};
@@ -47,9 +47,10 @@ pub fn cmd_sketch(args: &Args) -> Result<()> {
         store.memory_bytes() as f64 / (1 << 20) as f64,
         cfg.dim / cfg.k
     );
-    // accuracy sample
+    // accuracy sample (served through the fused kernel — the same path
+    // the coordinator runs)
     let mut rng = Xoshiro256pp::new(cfg.seed ^ 1);
-    let mut buf = vec![0.0; cfg.k];
+    let mut scratch = BatchScratch::new(cfg.k);
     let mut errs: Vec<f64> = Vec::new();
     for _ in 0..50.min(corpus.n * (corpus.n - 1) / 2) {
         let i = rng.below(corpus.n as u64) as usize;
@@ -61,7 +62,7 @@ pub fn cmd_sketch(args: &Args) -> Result<()> {
         if exact <= 0.0 {
             continue;
         }
-        let est = engine.estimate(&store, i, j, &mut buf);
+        let est = engine.estimate_fused(&store, i, j, &mut scratch);
         errs.push((est / exact - 1.0).abs());
     }
     errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -87,31 +88,37 @@ pub fn cmd_query(args: &Args) -> Result<()> {
     let exact = corpus.exact_distance(i, j, cfg.alpha);
     println!("exact d_(α)({i},{j}) = {exact:.6}");
     use crate::estimators::*;
-    let mut buf = vec![0.0; cfg.k];
+    let mut scratch = BatchScratch::new(cfg.k);
     let ests: Vec<(&str, f64)> = vec![
-        ("oq ", engine.estimate(&store, i, j, &mut buf)),
+        ("oq ", engine.estimate_fused(&store, i, j, &mut scratch)),
         (
             "gm ",
-            engine.estimate_with(&GeometricMean::new(cfg.alpha, cfg.k), &store, i, j, &mut buf),
+            engine.estimate_fused_with(
+                &GeometricMean::new(cfg.alpha, cfg.k),
+                &store,
+                i,
+                j,
+                &mut scratch,
+            ),
         ),
         (
             "fp ",
-            engine.estimate_with(
+            engine.estimate_fused_with(
                 &FractionalPower::new(cfg.alpha, cfg.k),
                 &store,
                 i,
                 j,
-                &mut buf,
+                &mut scratch,
             ),
         ),
         (
             "med",
-            engine.estimate_with(
+            engine.estimate_fused_with(
                 &QuantileEstimator::median(cfg.alpha, cfg.k),
                 &store,
                 i,
                 j,
-                &mut buf,
+                &mut scratch,
             ),
         ),
     ];
@@ -121,37 +128,90 @@ pub fn cmd_query(args: &Args) -> Result<()> {
             if exact > 0.0 { est / exact - 1.0 } else { f64::NAN }
         );
     }
+    // Embedded row-vs-many scan (the in-process counterpart of the
+    // coordinator's TopK plan): i's nearest neighbours by oq estimate.
+    let cands: Vec<usize> = (0..corpus.n).collect();
+    let mut dists = Vec::new();
+    engine.estimate_row_vs_many(&store, i, &cands, &mut scratch, &mut dists);
+    let mut ranked: Vec<(usize, f64)> = cands
+        .into_iter()
+        .zip(dists)
+        .filter(|&(j, _)| j != i)
+        .collect();
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let near: Vec<String> = ranked
+        .iter()
+        .take(5)
+        .map(|(j, d)| format!("{j} ({d:.4})"))
+        .collect();
+    println!("nearest to {i} by oq estimate: {}", near.join(", "));
     Ok(())
 }
 
-/// `serve`: run the coordinator on a synthetic query workload and print
-/// throughput + latency metrics.
+/// `serve`: run the coordinator on a synthetic query-plan workload
+/// (`--workload pair|topk|block|mixed`) and print throughput + latency
+/// metrics, including the per-kind estimate histograms.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let (corpus, cfg) = corpus_from_args(args)?;
     let queries = args.usize_or("queries", 20_000)?;
+    let workload = args.str_or("workload", "pair");
+    if !matches!(workload.as_str(), "pair" | "topk" | "block" | "mixed") {
+        bail!("unknown workload '{workload}' (pair|topk|block|mixed)");
+    }
+    let topk_m = args.usize_or("topk-m", 10)?;
+    let block_side = args.usize_or("block-side", 8)?;
     let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
     let store = engine.sketch_all(corpus.as_slice(), corpus.n);
     let coord = Coordinator::start(cfg.clone(), store)?;
     let mut rng = Xoshiro256pp::new(cfg.seed ^ 2);
+    let n = corpus.n as u64;
+    let mut make_query = |t: usize| -> Query {
+        let shape = match workload.as_str() {
+            "pair" => 0usize,
+            "topk" => 1,
+            "block" => 2,
+            _ => t % 3, // "mixed" (validated above)
+        };
+        match shape {
+            0 => Query::Pair {
+                i: rng.below(n) as u32,
+                j: rng.below(n) as u32,
+                kind: QueryKind::Oq,
+            },
+            1 => Query::TopK {
+                i: rng.below(n) as u32,
+                m: topk_m,
+                kind: QueryKind::Oq,
+            },
+            _ => Query::Block {
+                rows: (0..block_side).map(|_| rng.below(n) as u32).collect(),
+                cols: (0..block_side).map(|_| rng.below(n) as u32).collect(),
+                kind: QueryKind::Oq,
+            },
+        }
+    };
     let t0 = Instant::now();
     let mut done = 0usize;
+    let mut distances = 0u64;
     while done < queries {
         let burst = (queries - done).min(256);
-        let batch: Vec<PairQuery> = (0..burst)
-            .map(|_| PairQuery {
-                i: rng.below(corpus.n as u64) as u32,
-                j: rng.below(corpus.n as u64) as u32,
-                kind: QueryKind::Oq,
-            })
-            .collect();
-        let _ = coord.query_batch(&batch)?;
+        let plan: Vec<Query> = (done..done + burst).map(&mut make_query).collect();
+        for reply in coord.query_plan(plan)? {
+            distances += match reply {
+                Reply::Pair(_) => 1,
+                Reply::TopK(v) => v.len() as u64,
+                Reply::Block(v) => v.len() as u64,
+            };
+        }
         done += burst;
     }
     let dt = t0.elapsed();
     println!(
-        "served {queries} queries in {:.2}s = {:.0} qps (shards={})",
+        "served {queries} {workload} queries ({distances} distances) in {:.2}s = {:.0} qps, \
+         {:.0} distances/s (shards={})",
         dt.as_secs_f64(),
         queries as f64 / dt.as_secs_f64(),
+        distances as f64 / dt.as_secs_f64(),
         cfg.shards
     );
     println!("{}", coord.metrics().report());

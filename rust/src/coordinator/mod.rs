@@ -1,24 +1,34 @@
 //! The L3 coordinator: a sharded, batching, backpressured serving
-//! pipeline over the sketch store.
+//! pipeline executing **query plans** over the sketch store.
 //!
 //! Topology:
 //!
 //! ```text
-//!           ┌──────────── ClientHandle (clone-able) ───────────┐
-//!           │ router: power-of-two-choices over shard queues   │
-//!           └──────┬───────────────┬───────────────┬───────────┘
+//!           ┌──────────── ClientHandle (clone-able) ────────────┐
+//!           │ query plan: Pair | TopK | Block  → multi-value    │
+//!           │ replies; router: power-of-two-choices over shards │
+//!           └──────┬───────────────┬───────────────┬────────────┘
 //!   bounded queue  ▼               ▼               ▼   (backpressure:
 //!            [ shard 0 ]     [ shard 1 ]     [ shard 2 ]  reject when full)
 //!            worker thread   worker thread   worker thread
-//!            dynamic batcher (size + deadline), estimator hot path
+//!            dynamic batcher (size + deadline)
+//!            fused abs-diff-select kernel: f32 scan, one reused
+//!            scratch + one estimator per batch, no per-query copy
 //!                  ▲ read-mostly Arc<SketchStore> snapshots
 //!  ingest thread ──┘ turnstile events → new snapshot per epoch
 //! ```
 //!
+//! A [`Query`] is one unit of routing/batching: a single [`Query::Pair`]
+//! distance, a [`Query::TopK`] one-vs-all nearest-neighbour scan, or a
+//! [`Query::Block`] distance sub-matrix. TopK/Block amortize one store
+//! snapshot and one scratch across every candidate — the workload shape
+//! (kNN, pairwise blocks) the paper's cheap estimator exists for.
+//!
 //! Distances are estimated with the optimal quantile estimator by
 //! default (select + one pow — the paper's point is that this is cheap
 //! enough to sit on a serving hot path); gm/fp/median are available
-//! per-query for comparison workloads.
+//! per-query for comparison workloads, all through the same fused
+//! kernel (`estimators::batch`) so the comparison stays fair.
 
 mod backpressure;
 mod batcher;
@@ -32,7 +42,7 @@ pub use router::Router;
 pub use shard::ShardSet;
 
 use crate::estimators::{
-    FractionalPower, GeometricMean, OptimalQuantile, QuantileEstimator, ScaleEstimator,
+    FractionalPower, FusedDiffEstimator, GeometricMean, OptimalQuantile, QuantileEstimator,
 };
 use crate::metrics::PipelineMetrics;
 use crate::sketch::{SketchStore, StreamEvent, StreamingSketcher};
@@ -55,7 +65,61 @@ pub enum QueryKind {
     Median,
 }
 
-/// One distance query.
+impl QueryKind {
+    /// Stable index into the per-kind metrics arrays
+    /// (`metrics::KIND_LABELS` order).
+    pub fn index(self) -> usize {
+        match self {
+            QueryKind::Oq => 0,
+            QueryKind::Gm => 1,
+            QueryKind::Fp => 2,
+            QueryKind::Median => 3,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        crate::metrics::KIND_LABELS[self.index()]
+    }
+}
+
+/// One unit of the query plan — what the router places and a worker
+/// executes under a single store snapshot with a single reused scratch.
+#[derive(Debug, Clone)]
+pub enum Query {
+    /// One pairwise distance.
+    Pair { i: u32, j: u32, kind: QueryKind },
+    /// The `m` nearest neighbours of row `i` by estimated l_α distance
+    /// (one-vs-all fused scan; `m` is clamped to n−1).
+    TopK { i: u32, m: usize, kind: QueryKind },
+    /// The `rows × cols` distance sub-matrix (row-major reply). A block
+    /// is one routing unit, so its size is capped at
+    /// [`MAX_BLOCK_CELLS`] cells — larger requests must be split into
+    /// several block queries (which then batch/balance normally).
+    Block {
+        rows: Vec<u32>,
+        cols: Vec<u32>,
+        kind: QueryKind,
+    },
+}
+
+/// Upper bound on `rows.len() × cols.len()` for one [`Query::Block`].
+/// Backpressure accounts per queue slot; without this cap a single
+/// admitted block could pin a shard for an unbounded scan and allocate
+/// an unbounded reply. 2²⁰ cells ≈ 8 MiB of reply per slot.
+pub const MAX_BLOCK_CELLS: usize = 1 << 20;
+
+impl Query {
+    pub fn kind(&self) -> QueryKind {
+        match self {
+            Query::Pair { kind, .. } | Query::TopK { kind, .. } | Query::Block { kind, .. } => {
+                *kind
+            }
+        }
+    }
+}
+
+/// The single-pair convenience form (the original query model); any
+/// `PairQuery` is just a `Query::Pair`.
 #[derive(Debug, Clone, Copy)]
 pub struct PairQuery {
     pub i: u32,
@@ -63,11 +127,41 @@ pub struct PairQuery {
     pub kind: QueryKind,
 }
 
+impl From<PairQuery> for Query {
+    fn from(q: PairQuery) -> Query {
+        Query::Pair {
+            i: q.i,
+            j: q.j,
+            kind: q.kind,
+        }
+    }
+}
+
+/// One query's answer, shape-matched to its [`Query`] variant.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Pair(f64),
+    /// `(candidate row, distance)` sorted ascending by distance.
+    TopK(Vec<(u32, f64)>),
+    /// Row-major `rows × cols` distances.
+    Block(Vec<f64>),
+}
+
+impl Reply {
+    /// The pair distance, for plans known to be all-`Pair`.
+    pub fn pair(self) -> f64 {
+        match self {
+            Reply::Pair(d) => d,
+            other => panic!("expected a Pair reply, got {other:?}"),
+        }
+    }
+}
+
 pub(crate) struct Job {
-    pub query: PairQuery,
+    pub query: Query,
     pub seq: usize,
     pub submitted: Instant,
-    pub reply: std::sync::mpsc::Sender<(usize, f64)>,
+    pub reply: std::sync::mpsc::Sender<(usize, Reply)>,
 }
 
 /// Everything a worker needs, shared.
@@ -86,13 +180,14 @@ impl Shared {
         self.store.lock().unwrap().clone()
     }
 
+    /// The fused estimator serving a query kind.
     #[inline]
-    pub fn estimate(&self, kind: QueryKind, buf: &mut [f64]) -> f64 {
+    pub fn fused(&self, kind: QueryKind) -> &dyn FusedDiffEstimator {
         match kind {
-            QueryKind::Oq => self.oq.estimate(buf),
-            QueryKind::Gm => self.gm.estimate(buf),
-            QueryKind::Fp => self.fp.estimate(buf),
-            QueryKind::Median => self.median.estimate(buf),
+            QueryKind::Oq => &self.oq,
+            QueryKind::Gm => &self.gm,
+            QueryKind::Fp => &self.fp,
+            QueryKind::Median => &self.median,
         }
     }
 }
@@ -165,21 +260,55 @@ impl Coordinator {
         Ok(self.query_batch(&[q])?[0])
     }
 
-    /// Submit a batch; blocks until all answers arrive. Returns answers
-    /// in input order.
+    /// Submit a batch of pair queries; blocks until all answers arrive.
+    /// Returns distances in input order. (Convenience wrapper over
+    /// [`Self::query_plan`].)
     pub fn query_batch(&self, queries: &[PairQuery]) -> Result<Vec<f64>> {
+        let plan: Vec<Query> = queries.iter().map(|&q| Query::from(q)).collect();
+        Ok(self
+            .query_plan(plan)?
+            .into_iter()
+            .map(Reply::pair)
+            .collect())
+    }
+
+    /// The `m` nearest neighbours of row `i` (ascending distance).
+    pub fn top_k(&self, i: u32, m: usize, kind: QueryKind) -> Result<Vec<(u32, f64)>> {
+        match self.query_plan(vec![Query::TopK { i, m, kind }])?.pop() {
+            Some(Reply::TopK(v)) => Ok(v),
+            _ => unreachable!("TopK plan produced a non-TopK reply"),
+        }
+    }
+
+    /// The `rows × cols` distance sub-matrix, row-major.
+    pub fn block(&self, rows: Vec<u32>, cols: Vec<u32>, kind: QueryKind) -> Result<Vec<f64>> {
+        match self
+            .query_plan(vec![Query::Block { rows, cols, kind }])?
+            .pop()
+        {
+            Some(Reply::Block(v)) => Ok(v),
+            _ => unreachable!("Block plan produced a non-Block reply"),
+        }
+    }
+
+    /// Execute a full query plan: validate, route every query to the
+    /// shard workers, block until all replies arrive. Replies come back
+    /// in input order, shape-matched to their queries. Each query is a
+    /// routing/batching unit; a `TopK`/`Block` executes entirely on one
+    /// worker under one snapshot, so its multi-value reply is
+    /// epoch-consistent.
+    pub fn query_plan(&self, queries: Vec<Query>) -> Result<Vec<Reply>> {
         let n = {
             let snap = self.shared.snapshot();
             snap.n as u32
         };
-        for q in queries {
-            if q.i >= n || q.j >= n {
-                bail!("query ({}, {}) out of range (n={n})", q.i, q.j);
-            }
+        for q in &queries {
+            validate_query(q, n)?;
         }
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, f64)>();
+        let total = queries.len();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply)>();
         let mut pending = 0usize;
-        for (seq, &query) in queries.iter().enumerate() {
+        for (seq, query) in queries.into_iter().enumerate() {
             let job = Job {
                 query,
                 seq,
@@ -197,12 +326,15 @@ impl Coordinator {
             }
         }
         drop(tx);
-        let mut out = vec![f64::NAN; queries.len()];
+        let mut out: Vec<Option<Reply>> = vec![None; total];
         for _ in 0..pending {
-            let (seq, val) = rx.recv()?;
-            out[seq] = val;
+            let (seq, reply) = rx.recv()?;
+            out[seq] = Some(reply);
         }
-        Ok(out)
+        Ok(out
+            .into_iter()
+            .map(|r| r.expect("a reply for every routed query"))
+            .collect())
     }
 
     /// Apply turnstile events and publish a fresh snapshot (epoch).
@@ -225,6 +357,45 @@ impl Coordinator {
             let _ = w.join();
         }
     }
+}
+
+/// Admission checks against the current snapshot size. Kept out of the
+/// workers so a malformed query is rejected before it consumes a queue
+/// slot.
+fn validate_query(q: &Query, n: u32) -> Result<()> {
+    match q {
+        Query::Pair { i, j, .. } => {
+            if *i >= n || *j >= n {
+                bail!("query ({i}, {j}) out of range (n={n})");
+            }
+        }
+        Query::TopK { i, m, .. } => {
+            if *i >= n {
+                bail!("topk row {i} out of range (n={n})");
+            }
+            if *m == 0 {
+                bail!("topk m must be >= 1");
+            }
+        }
+        Query::Block { rows, cols, .. } => {
+            if rows.is_empty() || cols.is_empty() {
+                bail!("block query must name at least one row and one column");
+            }
+            let cells = rows.len().saturating_mul(cols.len());
+            if cells > MAX_BLOCK_CELLS {
+                bail!(
+                    "block of {}x{} = {cells} cells exceeds the per-query limit of \
+                     {MAX_BLOCK_CELLS}; split it into smaller blocks",
+                    rows.len(),
+                    cols.len()
+                );
+            }
+            if let Some(bad) = rows.iter().chain(cols).find(|&&r| r >= n) {
+                bail!("block index {bad} out of range (n={n})");
+            }
+        }
+    }
+    Ok(())
 }
 
 impl Drop for Coordinator {

@@ -1,16 +1,20 @@
-//! Shard worker loop: form a batch, snapshot the store once, serve every
-//! query in the batch with a reused scratch buffer.
+//! Shard worker loop: form a batch, snapshot the store once, execute
+//! every query in the batch through the fused abs-diff-select kernel
+//! with one reused scratch — no per-query copies or allocations on the
+//! estimate path.
 
 use super::backpressure::BoundedQueue;
 use super::batcher::{BatchPolicy, Batcher};
-use super::{Job, Shared};
+use super::{Job, Query, Reply, Shared};
+use crate::estimators::{BatchScratch, FusedDiffEstimator};
+use crate::sketch::SketchStore;
 use std::sync::Arc;
 use std::time::Instant;
 
 pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: BatchPolicy) {
     let batcher = Batcher::new(policy);
     let mut batch: Vec<Job> = Vec::with_capacity(policy.max_batch);
-    let mut buf: Vec<f64> = Vec::new();
+    let mut scratch = BatchScratch::default();
     loop {
         batcher.next_batch(&queue, &mut batch);
         if batch.is_empty() {
@@ -20,25 +24,90 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
         // One snapshot per batch: queries in a batch see a consistent
         // epoch, and the Arc clone cost is amortized.
         let store = shared.snapshot();
-        buf.resize(store.k, 0.0);
         shared.metrics.batches_formed.inc();
         shared.metrics.batch_fill.add(batch.len() as u64);
         for job in batch.drain(..) {
-            let (i, j) = (job.query.i as usize, job.query.j as usize);
-            let d = if i == j {
-                0.0
-            } else {
-                store.diff_into(i, j, &mut buf);
-                shared.estimate(job.query.kind, &mut buf)
-            };
+            let kind = job.query.kind();
+            let t_est = Instant::now();
+            let (reply, estimates) = execute(&shared, &store, &job.query, &mut scratch);
+            // One clock read per query; the histogram tracks cost *per
+            // fused estimate* so TopK/Block scans land in the same
+            // units as single pairs (see metrics::PipelineMetrics).
+            let est_ns = t_est.elapsed().as_nanos() as u64 / estimates.max(1);
+            shared.metrics.estimate_latency[kind.index()].record_ns(est_ns);
             shared
                 .metrics
                 .query_latency
                 .record(job.submitted.elapsed());
             shared.metrics.queries_completed.inc();
             // Receiver may have given up (client dropped) — ignore.
-            let _ = job.reply.send((job.seq, d));
+            let _ = job.reply.send((job.seq, reply));
         }
         shared.metrics.batch_latency.record(t_batch.elapsed());
+    }
+}
+
+/// Execute one (validated) query against a snapshot, returning the
+/// reply plus how many fused estimates it cost (for the per-estimate
+/// latency accounting). Self-pairs are exactly zero for every kind;
+/// TopK excludes the anchor row itself.
+fn execute(
+    shared: &Shared,
+    store: &SketchStore,
+    query: &Query,
+    scratch: &mut BatchScratch,
+) -> (Reply, u64) {
+    let est = shared.fused(query.kind());
+    match query {
+        Query::Pair { i, j, .. } => {
+            let (i, j) = (*i as usize, *j as usize);
+            let d = if i == j {
+                0.0
+            } else {
+                est.estimate_diff(store.row(i), store.row(j), scratch)
+            };
+            (Reply::Pair(d), 1)
+        }
+        Query::TopK { i, m, .. } => {
+            let i = *i as usize;
+            let m = (*m).min(store.n.saturating_sub(1));
+            let anchor = store.row(i);
+            // Bounded sorted buffer (ascending): insertion beats a heap
+            // for the small m of kNN serving, and the reply comes out
+            // already ordered. (The materializing variant of this scan
+            // lives in `SketchStore::estimate_row_vs_many`; the serving
+            // path streams instead so it never holds n distances.)
+            let mut best: Vec<(u32, f64)> = Vec::with_capacity(m + 1);
+            let mut scanned = 0u64;
+            for j in 0..store.n {
+                if j == i {
+                    continue;
+                }
+                let d = est.estimate_diff(anchor, store.row(j), scratch);
+                scanned += 1;
+                let worst = best.last().map_or(f64::INFINITY, |&(_, w)| w);
+                if best.len() < m || d < worst {
+                    let pos = best.partition_point(|&(_, w)| w <= d);
+                    best.insert(pos, (j as u32, d));
+                    if best.len() > m {
+                        best.pop();
+                    }
+                }
+            }
+            shared.metrics.topk_candidates_scanned.add(scanned);
+            (Reply::TopK(best), scanned)
+        }
+        Query::Block { rows, cols, .. } => {
+            let mut out = Vec::new();
+            store.estimate_block(
+                est,
+                rows.iter().map(|&r| r as usize),
+                cols.iter().map(|&c| c as usize),
+                scratch,
+                &mut out,
+            );
+            let cells = out.len() as u64;
+            (Reply::Block(out), cells)
+        }
     }
 }

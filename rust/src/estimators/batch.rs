@@ -1,0 +1,176 @@
+//! Batched estimation over f32 sketch rows: the **fused
+//! abs-diff-select** path.
+//!
+//! The scalar serving path copies each pair's sketch difference into a
+//! fresh f64 buffer before estimating (`SketchStore::diff_into` →
+//! `ScaleEstimator::estimate`). For one query that copy is noise; for
+//! the workloads the coordinator actually serves — TopK (one row
+//! against all candidates) and Block (distance sub-matrices) — it is
+//! half the memory traffic of the whole hot path. The fused kernel
+//! instead forms `|a_j − b_j|` in f32, runs quickselect directly over
+//! those f32 differences, and keeps f64 only for the final
+//! `powf(α) · scale` — no per-query f64 copy, no per-query allocation.
+//!
+//! Numerically the fused path is *bit-identical* to the scalar one:
+//! `diff_into` already subtracts in f32 before widening, f32 → f64 is
+//! exact, and widening is monotone so selection picks the same order
+//! statistic. The property tests in `tests/query_plan.rs` pin this
+//! down for every estimator kind.
+//!
+//! gm/fp have no selection to fuse, but they get the analogous batched
+//! entry points (diff formed on the fly, accumulated in f64, no copy
+//! buffer) so the coordinator's per-kind comparisons stay fair.
+
+use super::ScaleEstimator;
+
+/// Reusable per-worker scratch for the fused kernel: one f32 difference
+/// buffer, sized (and lazily resized) to the sketch width k. One
+/// `BatchScratch` serves an entire batch/plan — the whole point is that
+/// nothing is allocated per query.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    diff: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new(k: usize) -> Self {
+        Self {
+            diff: vec![0.0; k],
+        }
+    }
+
+    /// Current buffer width (grows on demand in `abs_diff`).
+    pub fn k(&self) -> usize {
+        self.diff.len()
+    }
+
+    /// Fill the scratch with `|a_j − b_j|` and hand it out for in-place
+    /// selection. Panics if the rows disagree in length.
+    #[inline]
+    pub fn abs_diff(&mut self, a: &[f32], b: &[f32]) -> &mut [f32] {
+        assert_eq!(a.len(), b.len(), "sketch rows must share k");
+        if self.diff.len() != a.len() {
+            self.diff.resize(a.len(), 0.0);
+        }
+        for ((slot, x), y) in self.diff.iter_mut().zip(a).zip(b) {
+            *slot = (*x - *y).abs();
+        }
+        &mut self.diff
+    }
+}
+
+/// A scale estimator that can run straight off two f32 sketch rows —
+/// the batched counterpart of [`ScaleEstimator::estimate`].
+///
+/// Implementations must agree with the scalar path: `estimate_diff(a,
+/// b, _)` equals `estimate(buf)` where `buf[j] = (a[j] − b[j]) as f64`
+/// (up to nothing — the reference implementations are bit-identical).
+pub trait FusedDiffEstimator: ScaleEstimator {
+    /// Estimate `d_(α)(a, b)` from two sketch rows of length k, using
+    /// `scratch` instead of allocating. Selection-based estimators
+    /// (oq, quantile) select over f32; gm/fp accumulate in f64 with the
+    /// difference formed on the fly.
+    fn estimate_diff(&self, a: &[f32], b: &[f32], scratch: &mut BatchScratch) -> f64;
+}
+
+/// Estimate one anchor row against many candidate rows with a single
+/// estimator and a single scratch — the estimator-layer building block
+/// for row-vs-many scans over raw rows, with no sketch-store coupling
+/// (the store-aware loops live in `sketch::SketchStore`, which also
+/// handles self-pair zeroes). Results are pushed onto `out` (cleared
+/// first) in candidate order.
+pub fn estimate_many<'a, E, I>(
+    est: &E,
+    anchor: &[f32],
+    candidates: I,
+    scratch: &mut BatchScratch,
+    out: &mut Vec<f64>,
+) where
+    E: FusedDiffEstimator + ?Sized,
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    out.clear();
+    for row in candidates {
+        out.push(est.estimate_diff(anchor, row, scratch));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        FractionalPower, GeometricMean, OptimalQuantile, QuantileEstimator, ScaleEstimator,
+    };
+    use super::*;
+    use crate::numerics::{Rng, Xoshiro256pp};
+
+    fn rows(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n)
+            .map(|_| (0..k).map(|_| rng.normal() as f32 * 1.7).collect())
+            .collect()
+    }
+
+    fn fused_all(alpha: f64, k: usize) -> Vec<Box<dyn FusedDiffEstimator>> {
+        vec![
+            Box::new(OptimalQuantile::new(alpha, k)),
+            Box::new(GeometricMean::new(alpha, k)),
+            Box::new(FractionalPower::new(alpha, k)),
+            Box::new(QuantileEstimator::median(alpha, k)),
+        ]
+    }
+
+    #[test]
+    fn fused_matches_scalar_for_every_kind() {
+        let k = 48;
+        let rs = rows(k, 6, 11);
+        let mut scratch = BatchScratch::new(k);
+        for &alpha in &[0.6, 1.0, 1.5] {
+            for est in fused_all(alpha, k) {
+                for pair in [(0usize, 1usize), (2, 3), (4, 5)] {
+                    let (a, b) = (&rs[pair.0], &rs[pair.1]);
+                    let mut buf: Vec<f64> =
+                        a.iter().zip(b.iter()).map(|(x, y)| (*x - *y) as f64).collect();
+                    let scalar = est.estimate(&mut buf);
+                    let fused = est.estimate_diff(a, b, &mut scratch);
+                    assert!(
+                        (fused - scalar).abs() <= 1e-12 * (1.0 + scalar.abs()),
+                        "{} alpha={alpha}: fused {fused} vs scalar {scalar}",
+                        est.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_many_matches_pairwise_loop() {
+        let k = 32;
+        let rs = rows(k, 8, 23);
+        let est = OptimalQuantile::new(1.2, k);
+        let mut scratch = BatchScratch::new(k);
+        let mut out = Vec::new();
+        estimate_many(
+            &est,
+            &rs[0],
+            rs[1..].iter().map(|r| r.as_slice()),
+            &mut scratch,
+            &mut out,
+        );
+        assert_eq!(out.len(), 7);
+        for (t, r) in rs[1..].iter().enumerate() {
+            let one = est.estimate_diff(&rs[0], r, &mut scratch);
+            assert_eq!(out[t], one);
+        }
+    }
+
+    #[test]
+    fn scratch_resizes_on_demand() {
+        let mut scratch = BatchScratch::new(0);
+        let a = vec![1.0f32; 16];
+        let b = vec![0.5f32; 16];
+        let d = scratch.abs_diff(&a, &b);
+        assert_eq!(d.len(), 16);
+        assert!(d.iter().all(|&x| (x - 0.5).abs() < 1e-7));
+        assert_eq!(scratch.k(), 16);
+    }
+}

@@ -15,6 +15,7 @@
 //! α → 2, λ* → 1/2 and the estimator has finite moments only slightly
 //! above order 2 (heavy right tail — reproduced in Fig 7).
 
+use super::batch::{BatchScratch, FusedDiffEstimator};
 use super::ScaleEstimator;
 use crate::numerics::optimize::grid_then_golden;
 use crate::numerics::specfun::stable_abs_moment;
@@ -107,6 +108,23 @@ impl ScaleEstimator for FractionalPower {
 
     fn name(&self) -> &'static str {
         "fractional_power"
+    }
+}
+
+impl FusedDiffEstimator for FractionalPower {
+    /// Batched fp: abs-diff formed on the fly, accumulated in f64 — the
+    /// same k pows plus one final `powf(1/λ*)` as the scalar path, with
+    /// the copy buffer removed.
+    #[inline]
+    fn estimate_diff(&self, a: &[f32], b: &[f32], _scratch: &mut BatchScratch) -> f64 {
+        assert_eq!(a.len(), self.k);
+        assert_eq!(b.len(), self.k);
+        let mut acc = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            acc += ((*x - *y) as f64).abs().powf(self.exponent);
+        }
+        let mean = acc / self.k as f64;
+        (mean * self.inv_moment).powf(self.inv_lambda) * self.bias_factor
     }
 }
 

@@ -8,6 +8,7 @@
 //! to k), with exponential tail bounds. Its hot path is k fractional
 //! powers — the cost the optimal quantile estimator removes.
 
+use super::batch::{BatchScratch, FusedDiffEstimator};
 use super::ScaleEstimator;
 use crate::numerics::specfun::stable_abs_moment;
 
@@ -78,6 +79,24 @@ impl ScaleEstimator for GeometricMean {
 
     fn name(&self) -> &'static str {
         "geometric_mean"
+    }
+}
+
+impl FusedDiffEstimator for GeometricMean {
+    /// Batched gm: the difference is formed on the fly (f32 subtract,
+    /// widened once per sample) and multiplied into a running f64
+    /// product — same k pows as the scalar path, but no copy buffer.
+    /// Kept so the coordinator's per-kind comparisons bill every
+    /// estimator the same memory traffic.
+    #[inline]
+    fn estimate_diff(&self, a: &[f32], b: &[f32], _scratch: &mut BatchScratch) -> f64 {
+        assert_eq!(a.len(), self.k);
+        assert_eq!(b.len(), self.k);
+        let mut prod = 1.0f64;
+        for (x, y) in a.iter().zip(b) {
+            prod *= ((*x - *y) as f64).abs().powf(self.exponent);
+        }
+        prod * self.inv_denom
     }
 }
 

@@ -4,9 +4,14 @@
 //!
 //! All estimators implement [`ScaleEstimator`]; coefficients that depend
 //! only on `(α, k)` are precomputed at construction (the paper does the
-//! same for fairness of its Figure 4 cost comparison).
+//! same for fairness of its Figure 4 cost comparison). The batched
+//! serving counterpart — the fused abs-diff-select kernel that runs
+//! straight off f32 sketch rows with zero per-query copies — lives in
+//! [`batch`] ([`FusedDiffEstimator`] / [`BatchScratch`] /
+//! [`estimate_many`]).
 
 mod arithmetic;
+pub mod batch;
 pub mod confidence;
 mod efficiency;
 mod fractional_power;
@@ -19,6 +24,7 @@ pub mod tables;
 pub mod tail_bounds;
 
 pub use arithmetic::ArithmeticMean;
+pub use batch::{estimate_many, BatchScratch, FusedDiffEstimator};
 pub use confidence::{ConfidenceInterval, IntervalBuilder};
 pub use efficiency::{cramer_rao_bound_factor, efficiency_curve, EstimatorKind};
 pub use fractional_power::FractionalPower;

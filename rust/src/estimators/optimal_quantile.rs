@@ -15,6 +15,7 @@
 //! magnitude cost win over gm/fp (Fig 4), reproduced by
 //! `benches/fig4_cost.rs`.
 
+use super::batch::{BatchScratch, FusedDiffEstimator};
 use super::quantile::QuantileEstimator;
 use super::quickselect::select_kth;
 use super::{tables, ScaleEstimator};
@@ -116,6 +117,19 @@ impl ScaleEstimator for OptimalQuantile {
 
     fn name(&self) -> &'static str {
         "optimal_quantile"
+    }
+}
+
+impl FusedDiffEstimator for OptimalQuantile {
+    /// The fused hot path: f32 abs-diff → f32 selection → one f64 pow ·
+    /// one multiply. No f64 copy, no allocation — this is what the
+    /// coordinator's TopK/Block plans run per candidate.
+    #[inline]
+    fn estimate_diff(&self, a: &[f32], b: &[f32], scratch: &mut BatchScratch) -> f64 {
+        assert_eq!(a.len(), self.k);
+        let diff = scratch.abs_diff(a, b);
+        let sel = select_kth(diff, self.idx) as f64;
+        sel.powf(self.alpha) * self.scale
     }
 }
 

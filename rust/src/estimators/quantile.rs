@@ -14,6 +14,7 @@
 //! Includes the two historical baselines the paper cites: `q = 0.5`
 //! (Indyk's median estimator) and `q = 0.44` (Fama–Roll).
 
+use super::batch::{BatchScratch, FusedDiffEstimator};
 use super::quickselect::{quantile_index, select_kth};
 use super::ScaleEstimator;
 use crate::stable::StandardStable;
@@ -112,6 +113,18 @@ impl ScaleEstimator for QuantileEstimator {
 
     fn name(&self) -> &'static str {
         "quantile"
+    }
+}
+
+impl FusedDiffEstimator for QuantileEstimator {
+    /// Fused q-quantile path (covers the median/Fama–Roll baselines):
+    /// f32 abs-diff → f32 selection → one f64 pow · one multiply.
+    #[inline]
+    fn estimate_diff(&self, a: &[f32], b: &[f32], scratch: &mut BatchScratch) -> f64 {
+        assert_eq!(a.len(), self.k);
+        let diff = scratch.abs_diff(a, b);
+        let sel = select_kth(diff, self.idx) as f64;
+        sel.powf(self.alpha) * self.inv_w_alpha
     }
 }
 

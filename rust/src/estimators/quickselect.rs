@@ -4,7 +4,10 @@
 //! Two implementations:
 //! * [`select_kth`] — the production path: iterative Hoare partition
 //!   with median-of-3 pivoting and an insertion-sort base case. O(n)
-//!   average, no allocation, no recursion.
+//!   average, no allocation, no recursion. Generic over the element
+//!   type so the fused batch kernel ([`crate::estimators::batch`]) can
+//!   select directly over f32 sketch differences while the scalar f64
+//!   path is unchanged.
 //! * [`select_kth_naive`] — the paper's own baseline ("recursions and
 //!   the middle element as pivot", §3.3), kept for the Fig 4 ablation:
 //!   the paper notes its reported ~9x speedup used the *naive* variant,
@@ -14,9 +17,9 @@
 /// Panics if `data` is empty or `m >= data.len()`. NaNs are not expected
 /// on this path (sketch differences are finite); debug builds assert.
 #[inline]
-pub fn select_kth(data: &mut [f64], m: usize) -> f64 {
+pub fn select_kth<T: Copy + PartialOrd>(data: &mut [T], m: usize) -> T {
     assert!(!data.is_empty() && m < data.len(), "select_kth: bad index");
-    debug_assert!(data.iter().all(|x| !x.is_nan()));
+    debug_assert!(data.iter().all(|x| x.partial_cmp(x).is_some()));
     let mut lo = 0usize;
     let mut hi = data.len() - 1;
     loop {
@@ -36,7 +39,7 @@ pub fn select_kth(data: &mut [f64], m: usize) -> f64 {
 /// Hoare-style partition with median-of-3 pivot; returns the final pivot
 /// index.
 #[inline]
-fn partition(data: &mut [f64], lo: usize, hi: usize) -> usize {
+fn partition<T: Copy + PartialOrd>(data: &mut [T], lo: usize, hi: usize) -> usize {
     let mid = lo + (hi - lo) / 2;
     // median-of-3: sort (lo, mid, hi) then park pivot at hi-1
     if data[mid] < data[lo] {
@@ -75,7 +78,7 @@ fn partition(data: &mut [f64], lo: usize, hi: usize) -> usize {
 }
 
 #[inline]
-fn insertion_sort(data: &mut [f64]) {
+fn insertion_sort<T: Copy + PartialOrd>(data: &mut [T]) {
     for i in 1..data.len() {
         let v = data[i];
         let mut j = i;
@@ -168,6 +171,23 @@ mod tests {
         assert_eq!(select_kth(&mut asc, 17), 17.0);
         let mut desc: Vec<f64> = (0..200).rev().map(|i| i as f64).collect();
         assert_eq!(select_kth(&mut desc, 17), 17.0);
+    }
+
+    #[test]
+    fn select_is_generic_over_f32() {
+        // The fused batch kernel selects over f32 sketch differences;
+        // the order statistic must match the f64 path bit-for-bit
+        // (f32 → f64 widening is exact and monotone).
+        let mut rng = Xoshiro256pp::new(9);
+        for _ in 0..20 {
+            let n = 2 + (rng.below(300) as usize);
+            let xs32: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let xs64: Vec<f64> = xs32.iter().map(|&x| x as f64).collect();
+            let m = rng.below(n as u64) as usize;
+            let mut b32 = xs32.clone();
+            let mut b64 = xs64.clone();
+            assert_eq!(select_kth(&mut b32, m) as f64, select_kth(&mut b64, m));
+        }
     }
 
     #[test]

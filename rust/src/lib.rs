@@ -17,12 +17,17 @@
 //! * [`numerics`], [`stable`] — numerical substrates (offline build: no
 //!   external math crates).
 //! * [`estimators`] — the paper core: estimators, tail bounds, sample
-//!   complexity, precomputed tables.
-//! * [`sketch`] — projection engine (native blocked + PJRT-offloaded) and
-//!   streaming turnstile updates.
-//! * [`runtime`] — PJRT artifact loading/execution (`xla` crate).
-//! * [`coordinator`] — the serving pipeline: sharding, batching,
-//!   backpressure, routing.
+//!   complexity, precomputed tables; `estimators::batch` holds the
+//!   fused abs-diff-select kernel (f32 selection, zero per-query
+//!   copies) every batched serving path runs on.
+//! * [`sketch`] — projection engine (native blocked + PJRT-offloaded),
+//!   streaming turnstile updates, and the batched row-vs-many /
+//!   block-pairwise estimation primitives over the store.
+//! * [`runtime`] — PJRT artifact loading/execution (`xla` crate behind
+//!   the `pjrt` feature; degrades to manifest validation without it).
+//! * [`coordinator`] — the serving pipeline: query plans
+//!   (`Pair`/`TopK`/`Block` with multi-value replies), sharding,
+//!   batching, backpressure, routing.
 //! * [`simul`] — Monte-Carlo drivers regenerating the paper's figures.
 
 pub mod bench_util;

@@ -37,6 +37,7 @@ USAGE: stablesketch <subcommand> [options]
   sketch      --n 1000 --dim 4096 --k 64 --alpha 1.0 [--out sketches.json]
   query       --i 0 --j 1 [--estimator oq|gm|fp|hm|median] (uses sketch run inline)
   serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
+              [--workload pair|topk|block|mixed] [--topk-m 10] [--block-side 8]
   experiment  fig1|fig2|fig3|fig4|fig5|fig6|fig7 [--fast]
   gen-tables  [--reps 200000] [--out rust/src/estimators/tables_data.rs]
   info        --alpha 1.5 [--k 100] [--eps 0.5] [--delta 0.05]

@@ -101,6 +101,10 @@ impl LatencyHistogram {
     }
 }
 
+/// Labels for the per-estimator-kind histograms, in the order of
+/// `coordinator::QueryKind::index()`.
+pub const KIND_LABELS: [&str; 4] = ["oq", "gm", "fp", "median"];
+
 /// Coordinator-wide metrics bundle.
 #[derive(Debug, Default)]
 pub struct PipelineMetrics {
@@ -112,12 +116,22 @@ pub struct PipelineMetrics {
     pub events_ingested: Counter,
     pub query_latency: LatencyHistogram,
     pub batch_latency: LatencyHistogram,
+    /// Per-*estimate* execution latency by estimator kind (indexed by
+    /// `QueryKind::index()`, labelled by [`KIND_LABELS`]): each sample
+    /// is one query's execution time divided by the fused estimates it
+    /// performed, so TopK/Block scans land in the same units as single
+    /// pairs and the fused kernel's win is directly observable.
+    /// Excludes queueing; count = queries executed, not estimates.
+    pub estimate_latency: [LatencyHistogram; 4],
+    /// Candidates scanned by `TopK` plans (one fused estimate each);
+    /// divides into the TopK estimate latency for per-candidate cost.
+    pub topk_candidates_scanned: Counter,
 }
 
 impl PipelineMetrics {
     pub fn report(&self) -> String {
         let batches = self.batches_formed.get().max(1);
-        format!(
+        let mut s = format!(
             "queries: {} submitted, {} done, {} rejected | batches: {} (avg fill {:.1}) | \
              ingest: {} | query latency: {} | batch latency: {}",
             self.queries_submitted.get(),
@@ -128,7 +142,17 @@ impl PipelineMetrics {
             self.events_ingested.get(),
             self.query_latency.summary(),
             self.batch_latency.summary(),
-        )
+        );
+        for (label, h) in KIND_LABELS.iter().zip(&self.estimate_latency) {
+            if h.count() > 0 {
+                s.push_str(&format!(" | est[{label}]: {}", h.summary()));
+            }
+        }
+        let scanned = self.topk_candidates_scanned.get();
+        if scanned > 0 {
+            s.push_str(&format!(" | topk candidates scanned: {scanned}"));
+        }
+        s
     }
 }
 
@@ -148,6 +172,19 @@ mod tests {
         let p99 = h.quantile_ns(0.99);
         assert!(p99 >= 51200, "p99 {p99}");
         assert!(h.mean_ns() > 5_000.0 && h.mean_ns() < 15_000.0);
+    }
+
+    #[test]
+    fn per_kind_histograms_show_up_in_report_only_when_used() {
+        let m = PipelineMetrics::default();
+        assert!(!m.report().contains("est["));
+        assert!(!m.report().contains("topk"));
+        m.estimate_latency[0].record_ns(1_000);
+        m.topk_candidates_scanned.add(42);
+        let r = m.report();
+        assert!(r.contains("est[oq]"), "{r}");
+        assert!(!r.contains("est[gm]"), "{r}");
+        assert!(r.contains("topk candidates scanned: 42"), "{r}");
     }
 
     #[test]

@@ -4,12 +4,24 @@
 //! name; the client itself is `Send` but not `Sync` by policy — the
 //! coordinator gives each PJRT-using worker its own `Runtime` (compiling
 //! per worker) rather than serializing the hot path through a lock.
+//!
+//! The `xla` crate (the PJRT backend) is not published on crates.io, so
+//! everything touching it is gated behind the **`pjrt`** cargo feature.
+//! Without the feature, `Runtime` still loads and validates manifests —
+//! all shape/arity errors fire exactly as with the real backend — and
+//! only the final execution step reports the backend as unavailable.
+//! That keeps every caller (`sketch_all_pjrt`, examples, failure tests)
+//! compiling and falling back to the native path unchanged.
 
 use super::artifacts::Manifest;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
 /// Execution counters (observability; surfaced by the CLI and benches).
@@ -23,8 +35,10 @@ pub struct RuntimeStats {
 
 /// A PJRT CPU runtime bound to one artifact directory.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<RuntimeStats>,
 }
@@ -33,10 +47,13 @@ impl Runtime {
     /// Create against an artifact directory (must contain manifest.json).
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
+            #[cfg(feature = "pjrt")]
             client,
             manifest,
+            #[cfg(feature = "pjrt")]
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
         })
@@ -50,11 +67,18 @@ impl Runtime {
         *self.stats.borrow()
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without the 'pjrt' feature)".to_string()
+    }
+
     /// Compile (or fetch cached) an artifact by name.
+    #[cfg(feature = "pjrt")]
     fn executable(&self, name: &str) -> Result<()> {
         if self.cache.borrow().contains_key(name) {
             return Ok(());
@@ -87,8 +111,9 @@ impl Runtime {
     /// pairs; scalars use shape `&[]`. Returns the flat f32 output (the
     /// graphs are lowered with return_tuple=True and single output).
     pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
-        self.executable(name)?;
-        let entry = self.manifest.by_name(name).unwrap();
+        let Some(entry) = self.manifest.by_name(name) else {
+            bail!("no artifact named '{name}'");
+        };
         if inputs.len() != entry.inputs.len() {
             bail!(
                 "artifact '{name}' expects {} inputs, got {}",
@@ -107,47 +132,58 @@ impl Runtime {
                 bail!("artifact '{name}' input {i}: {} elems != {want}", data.len());
             }
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                let lit = xla::Literal::vec1(data);
-                if shape.is_empty() {
-                    // scalar: reshape to rank-0
-                    lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))
-                } else {
-                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
-                }
-            })
-            .collect::<Result<_>>()?;
-
-        let t0 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| anyhow!("untupling result of '{name}': {e:?}"))?;
-        let values = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("reading result of '{name}': {e:?}"))?;
+        #[cfg(not(feature = "pjrt"))]
         {
-            let mut stats = self.stats.borrow_mut();
-            stats.executions += 1;
-            stats.execute_ns += t0.elapsed().as_nanos() as u64;
-        }
-        let want: usize = entry.output.iter().product::<usize>().max(1);
-        if values.len() != want {
             bail!(
-                "artifact '{name}': output has {} elems, manifest says {want}",
-                values.len()
+                "artifact '{name}': cannot execute — built without the 'pjrt' feature \
+                 (xla PJRT backend not compiled in)"
             );
         }
-        Ok(values)
+        #[cfg(feature = "pjrt")]
+        {
+            self.executable(name)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    let lit = xla::Literal::vec1(data);
+                    if shape.is_empty() {
+                        // scalar: reshape to rank-0
+                        lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))
+                    } else {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                    }
+                })
+                .collect::<Result<_>>()?;
+
+            let t0 = Instant::now();
+            let cache = self.cache.borrow();
+            let exe = cache.get(name).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+            let out = lit
+                .to_tuple1()
+                .map_err(|e| anyhow!("untupling result of '{name}': {e:?}"))?;
+            let values = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("reading result of '{name}': {e:?}"))?;
+            {
+                let mut stats = self.stats.borrow_mut();
+                stats.executions += 1;
+                stats.execute_ns += t0.elapsed().as_nanos() as u64;
+            }
+            let want: usize = entry.output.iter().product::<usize>().max(1);
+            if values.len() != want {
+                bail!(
+                    "artifact '{name}': output has {} elems, manifest says {want}",
+                    values.len()
+                );
+            }
+            Ok(values)
+        }
     }
 }

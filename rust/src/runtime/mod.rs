@@ -1,6 +1,11 @@
 //! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
 //! (HLO text + manifest.json) and executes them on the `xla` crate's CPU
 //! PJRT client from the L3 hot path. Python is never involved at runtime.
+//!
+//! The xla backend is optional (cargo feature `pjrt`; the crate is not
+//! on crates.io). Without it, manifest loading/validation still works
+//! and execution reports the backend as unavailable, so every caller
+//! falls back to the native projection path.
 
 mod artifacts;
 mod client;

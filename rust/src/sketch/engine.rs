@@ -1,7 +1,7 @@
 //! SketchEngine: corpus → sketches → distance estimates.
 
 use super::matrix::StableMatrix;
-use crate::estimators::{OptimalQuantile, ScaleEstimator};
+use crate::estimators::{BatchScratch, FusedDiffEstimator, OptimalQuantile, ScaleEstimator};
 use crate::runtime::Runtime;
 use anyhow::{bail, Result};
 
@@ -60,6 +60,68 @@ impl SketchStore {
     pub fn memory_bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
+
+    // ---- batched fused estimation over the store -------------------
+    //
+    // The shared scan loops under both the `SketchEngine` convenience
+    // APIs and the coordinator's `Block` execution (the coordinator's
+    // `TopK` streams a bounded selection instead of materializing all
+    // distances, so it has its own loop). Self-pairs are exactly zero.
+
+    /// Row-vs-many: distances from row `i` to each candidate, in
+    /// order, pushed onto `out` (cleared first).
+    pub fn estimate_row_vs_many<E, I>(
+        &self,
+        est: &E,
+        i: usize,
+        candidates: I,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<f64>,
+    ) where
+        E: FusedDiffEstimator + ?Sized,
+        I: IntoIterator<Item = usize>,
+    {
+        assert!(i < self.n, "row {i} out of range (n={})", self.n);
+        out.clear();
+        let anchor = self.row(i);
+        for j in candidates {
+            assert!(j < self.n, "candidate {j} out of range (n={})", self.n);
+            out.push(if i == j {
+                0.0
+            } else {
+                est.estimate_diff(anchor, self.row(j), scratch)
+            });
+        }
+    }
+
+    /// Block-pairwise: the `rows × cols` distance sub-matrix,
+    /// row-major, pushed onto `out` (cleared first).
+    pub fn estimate_block<E, IR, IC>(
+        &self,
+        est: &E,
+        rows: IR,
+        cols: IC,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<f64>,
+    ) where
+        E: FusedDiffEstimator + ?Sized,
+        IR: IntoIterator<Item = usize>,
+        IC: IntoIterator<Item = usize> + Clone,
+    {
+        out.clear();
+        for r in rows {
+            assert!(r < self.n, "row {r} out of range (n={})", self.n);
+            let anchor = self.row(r);
+            for c in cols.clone() {
+                assert!(c < self.n, "col {c} out of range (n={})", self.n);
+                out.push(if r == c {
+                    0.0
+                } else {
+                    est.estimate_diff(anchor, self.row(c), scratch)
+                });
+            }
+        }
+    }
 }
 
 /// Projection + estimation engine for one (α, k, D, seed) configuration.
@@ -91,6 +153,10 @@ impl SketchEngine {
 
     pub fn alpha(&self) -> f64 {
         self.matrix.alpha()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.matrix.seed()
     }
 
     pub fn k(&self) -> usize {
@@ -126,7 +192,7 @@ impl SketchEngine {
     /// Sketch a whole corpus natively.
     pub fn sketch_all(&self, rows: &[f32], n: usize) -> SketchStore {
         assert_eq!(rows.len(), n * self.dim());
-        let mut store = SketchStore::zeros(n, self.k(), self.alpha(), 0);
+        let mut store = SketchStore::zeros(n, self.k(), self.alpha(), self.seed());
         for i in 0..n {
             let u = &rows[i * self.dim()..(i + 1) * self.dim()];
             self.project_row(u, store.row_mut(i));
@@ -150,7 +216,7 @@ impl SketchEngine {
         };
         let n_block = entry.inputs[0][0];
         let name = entry.name.clone();
-        let mut store = SketchStore::zeros(n, k, self.alpha(), 0);
+        let mut store = SketchStore::zeros(n, k, self.alpha(), self.seed());
         let mut xbuf = vec![0.0f32; n_block * dim];
         let mut done = 0usize;
         while done < n {
@@ -191,6 +257,75 @@ impl SketchEngine {
     ) -> f64 {
         store.diff_into(i, j, buf);
         est.estimate(buf)
+    }
+
+    // ---- batched query-plan layer: fused abs-diff-select over f32 ----
+    //
+    // Embedded (in-process) counterparts of the coordinator's
+    // `Pair`/`TopK`/`Block` plans, bound to this engine's default (oq)
+    // estimator. The scan loops themselves live on `SketchStore` so
+    // the coordinator workers share the exact same implementation; use
+    // the store methods directly to run them with another estimator.
+
+    /// Fused single-pair estimate with the default (oq) estimator —
+    /// bit-identical to [`Self::estimate`] but with zero per-query
+    /// copies/allocations.
+    pub fn estimate_fused(
+        &self,
+        store: &SketchStore,
+        i: usize,
+        j: usize,
+        scratch: &mut BatchScratch,
+    ) -> f64 {
+        self.estimate_fused_with(&self.estimator, store, i, j, scratch)
+    }
+
+    /// Fused single-pair estimate with an arbitrary estimator kind.
+    pub fn estimate_fused_with<E: FusedDiffEstimator + ?Sized>(
+        &self,
+        est: &E,
+        store: &SketchStore,
+        i: usize,
+        j: usize,
+        scratch: &mut BatchScratch,
+    ) -> f64 {
+        assert!(i < store.n && j < store.n, "rows out of range (n={})", store.n);
+        if i == j {
+            return 0.0;
+        }
+        est.estimate_diff(store.row(i), store.row(j), scratch)
+    }
+
+    /// Row-vs-many with the default estimator (see
+    /// [`SketchStore::estimate_row_vs_many`]).
+    pub fn estimate_row_vs_many(
+        &self,
+        store: &SketchStore,
+        i: usize,
+        candidates: &[usize],
+        scratch: &mut BatchScratch,
+        out: &mut Vec<f64>,
+    ) {
+        store.estimate_row_vs_many(&self.estimator, i, candidates.iter().copied(), scratch, out)
+    }
+
+    /// Block-pairwise with the default estimator (see
+    /// [`SketchStore::estimate_block`]).
+    pub fn estimate_block(
+        &self,
+        store: &SketchStore,
+        rows: &[usize],
+        cols: &[usize],
+        scratch: &mut BatchScratch,
+        out: &mut Vec<f64>,
+    ) {
+        store.estimate_block(
+            &self.estimator,
+            rows.iter().copied(),
+            cols.iter().copied(),
+            scratch,
+            out,
+        )
     }
 }
 
@@ -250,6 +385,65 @@ mod tests {
                 (v[j] as f64 - expect).abs() < 1e-4 * (1.0 + expect.abs()),
                 "j={j}"
             );
+        }
+    }
+
+    #[test]
+    fn store_carries_the_matrix_seed() {
+        // Regression: sketch_all used to stamp seed 0 on every store,
+        // breaking provenance (streaming resume / epoch checks compare
+        // seeds).
+        let corpus = small_corpus();
+        let eng = SketchEngine::new(1.0, corpus.dim, 32, 12345);
+        let store = eng.sketch_all(corpus.as_slice(), corpus.n);
+        assert_eq!(store.seed, 12345);
+        assert_eq!(eng.seed(), 12345);
+    }
+
+    #[test]
+    fn fused_paths_match_scalar_estimates() {
+        let corpus = small_corpus();
+        let eng = SketchEngine::new(1.3, corpus.dim, 96, 7);
+        let store = eng.sketch_all(corpus.as_slice(), corpus.n);
+        let mut buf = vec![0.0; 96];
+        let mut scratch = crate::estimators::BatchScratch::new(96);
+
+        // single pair
+        for (i, j) in [(0usize, 1usize), (3, 9), (5, 5)] {
+            let scalar = if i == j {
+                0.0
+            } else {
+                eng.estimate(&store, i, j, &mut buf)
+            };
+            let fused = eng.estimate_fused(&store, i, j, &mut scratch);
+            assert_eq!(fused, scalar, "pair ({i},{j})");
+        }
+
+        // row-vs-many
+        let cands: Vec<usize> = (0..corpus.n).collect();
+        let mut out = Vec::new();
+        eng.estimate_row_vs_many(&store, 4, &cands, &mut scratch, &mut out);
+        assert_eq!(out.len(), corpus.n);
+        assert_eq!(out[4], 0.0);
+        for (j, &d) in out.iter().enumerate() {
+            if j != 4 {
+                assert_eq!(d, eng.estimate(&store, 4, j, &mut buf), "cand {j}");
+            }
+        }
+
+        // block
+        let (rows, cols) = (vec![0usize, 4, 7], vec![1usize, 4, 9]);
+        eng.estimate_block(&store, &rows, &cols, &mut scratch, &mut out);
+        assert_eq!(out.len(), 9);
+        for (ri, &r) in rows.iter().enumerate() {
+            for (ci, &c) in cols.iter().enumerate() {
+                let want = if r == c {
+                    0.0
+                } else {
+                    eng.estimate(&store, r, c, &mut buf)
+                };
+                assert_eq!(out[ri * 3 + ci], want, "cell ({r},{c})");
+            }
         }
     }
 

@@ -55,6 +55,12 @@ impl StableMatrix {
         self.alpha
     }
 
+    /// The seed every entry is derived from — the provenance a
+    /// `SketchStore` built from this matrix must carry.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     pub fn dim(&self) -> usize {
         self.dim
     }

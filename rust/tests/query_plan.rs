@@ -1,0 +1,243 @@
+//! The batched query-plan subsystem, end to end:
+//!
+//! * the fused abs-diff-select kernel must match the scalar
+//!   `diff_into` + `estimate` path for every `QueryKind` (property
+//!   test over pairs, α, and estimator kinds);
+//! * coordinator `TopK` and `Block` plans must agree with brute-force
+//!   pair queries over the same snapshot;
+//! * plan admission must reject malformed queries before they consume
+//!   queue slots.
+
+use stablesketch::coordinator::{Coordinator, PairQuery, Query, QueryKind, Reply};
+use stablesketch::estimators::{
+    estimate_many, BatchScratch, FractionalPower, FusedDiffEstimator, GeometricMean,
+    OptimalQuantile, QuantileEstimator, ScaleEstimator,
+};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+
+fn fused_estimators(alpha: f64, k: usize) -> Vec<(&'static str, Box<dyn FusedDiffEstimator>)> {
+    vec![
+        ("oq", Box::new(OptimalQuantile::new(alpha, k))),
+        ("gm", Box::new(GeometricMean::new(alpha, k))),
+        ("fp", Box::new(FractionalPower::new(alpha, k))),
+        ("median", Box::new(QuantileEstimator::median(alpha, k))),
+    ]
+}
+
+/// The tentpole contract: `estimate_many` over f32 sketch rows equals
+/// the scalar copy-then-estimate path, for all four estimator kinds.
+/// (The two paths subtract in f32 identically and f32→f64 widening is
+/// exact, so the tolerance is tight.)
+#[test]
+fn fused_path_matches_scalar_path_for_all_kinds() {
+    let k = 96;
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 12,
+        dim: 512,
+        density: 0.2,
+        ..Default::default()
+    });
+    for &alpha in &[0.8f64, 1.0, 1.5] {
+        let engine = SketchEngine::new(alpha, corpus.dim, k, 17);
+        let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+        let mut scratch = BatchScratch::new(k);
+        let mut buf = vec![0.0f64; k];
+        let mut out = Vec::new();
+        for (label, est) in fused_estimators(alpha, k) {
+            let anchor = 0usize;
+            estimate_many(
+                est.as_ref(),
+                store.row(anchor),
+                (1..corpus.n).map(|j| store.row(j)),
+                &mut scratch,
+                &mut out,
+            );
+            assert_eq!(out.len(), corpus.n - 1);
+            for j in 1..corpus.n {
+                store.diff_into(anchor, j, &mut buf);
+                let scalar = est.estimate(&mut buf);
+                let fused = out[j - 1];
+                assert!(
+                    (fused - scalar).abs() <= 1e-9 * (1.0 + scalar.abs()),
+                    "{label} alpha={alpha} pair (0,{j}): fused {fused} vs scalar {scalar}"
+                );
+            }
+        }
+    }
+}
+
+fn setup(n: usize, k: usize, alpha: f64, shards: usize) -> Coordinator {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 1024,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha,
+        k,
+        dim: corpus.dim,
+        shards,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    Coordinator::start(cfg, store).expect("coordinator start")
+}
+
+#[test]
+fn topk_plan_agrees_with_brute_force_pair_queries() {
+    let n = 30u32;
+    let coord = setup(n as usize, 128, 1.0, 2);
+    for &i in &[0u32, 7, 29] {
+        let m = 5usize;
+        let topk = coord.top_k(i, m, QueryKind::Oq).expect("topk");
+        assert_eq!(topk.len(), m);
+        // Ascending by distance.
+        for w in topk.windows(2) {
+            assert!(w[0].1 <= w[1].1, "unsorted topk: {topk:?}");
+        }
+        // Brute force over the same snapshot: every non-anchor pair.
+        let pairs: Vec<PairQuery> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| PairQuery {
+                i,
+                j,
+                kind: QueryKind::Oq,
+            })
+            .collect();
+        let ds = coord.query_batch(&pairs).expect("pairs");
+        let mut brute: Vec<(u32, f64)> = pairs.iter().map(|q| q.j).zip(ds).collect();
+        brute.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        brute.truncate(m);
+        for (t, (&(tj, td), &(bj, bd))) in topk.iter().zip(&brute).enumerate() {
+            assert_eq!(tj, bj, "rank {t}: topk {topk:?} vs brute {brute:?}");
+            assert!(
+                (td - bd).abs() <= 1e-12 * (1.0 + bd.abs()),
+                "rank {t}: {td} vs {bd}"
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn topk_m_clamps_to_candidate_count() {
+    let coord = setup(10, 64, 1.0, 1);
+    let topk = coord.top_k(3, 100, QueryKind::Oq).expect("topk");
+    assert_eq!(topk.len(), 9); // n − 1 candidates
+    assert!(topk.iter().all(|&(j, _)| j != 3));
+    coord.shutdown();
+}
+
+#[test]
+fn block_plan_agrees_with_pair_queries_and_zeroes_diagonal() {
+    let coord = setup(20, 64, 1.5, 2);
+    let (rows, cols) = (vec![0u32, 3, 7], vec![1u32, 3, 11]);
+    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Median] {
+        let block = coord.block(rows.clone(), cols.clone(), kind).expect("block");
+        assert_eq!(block.len(), rows.len() * cols.len());
+        for (ri, &r) in rows.iter().enumerate() {
+            for (ci, &c) in cols.iter().enumerate() {
+                let got = block[ri * cols.len() + ci];
+                if r == c {
+                    assert_eq!(got, 0.0, "diagonal ({r},{c})");
+                    continue;
+                }
+                let want = coord
+                    .query(PairQuery { i: r, j: c, kind })
+                    .expect("pair");
+                assert!(
+                    (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                    "{kind:?} cell ({r},{c}): block {got} vs pair {want}"
+                );
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_plans_return_shape_matched_replies_in_order() {
+    let coord = setup(16, 64, 1.0, 2);
+    let plan = vec![
+        Query::Pair {
+            i: 1,
+            j: 2,
+            kind: QueryKind::Oq,
+        },
+        Query::TopK {
+            i: 0,
+            m: 3,
+            kind: QueryKind::Oq,
+        },
+        Query::Block {
+            rows: vec![0, 1],
+            cols: vec![2, 3, 4],
+            kind: QueryKind::Gm,
+        },
+        Query::Pair {
+            i: 5,
+            j: 5,
+            kind: QueryKind::Fp,
+        },
+    ];
+    let replies = coord.query_plan(plan).expect("plan");
+    assert_eq!(replies.len(), 4);
+    assert!(matches!(replies[0], Reply::Pair(d) if d.is_finite()));
+    assert!(matches!(&replies[1], Reply::TopK(v) if v.len() == 3));
+    assert!(matches!(&replies[2], Reply::Block(v) if v.len() == 6));
+    assert!(matches!(replies[3], Reply::Pair(d) if d == 0.0));
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_plans_are_rejected_at_admission() {
+    let coord = setup(8, 32, 1.0, 1);
+    let err = coord.top_k(99, 3, QueryKind::Oq).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+    let err = coord.top_k(0, 0, QueryKind::Oq).unwrap_err();
+    assert!(err.to_string().contains("m must be"), "{err}");
+    let err = coord.block(vec![], vec![1], QueryKind::Oq).unwrap_err();
+    assert!(err.to_string().contains("at least one"), "{err}");
+    let err = coord.block(vec![0], vec![88], QueryKind::Oq).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+    // Oversized blocks are capped at admission: a single queue slot
+    // must not admit an unbounded scan/reply.
+    let side = 2048usize; // 2048² cells > MAX_BLOCK_CELLS (2²⁰)
+    let big: Vec<u32> = (0..side).map(|r| (r % 8) as u32).collect();
+    let err = coord.block(big.clone(), big, QueryKind::Oq).unwrap_err();
+    assert!(err.to_string().contains("exceeds the per-query limit"), "{err}");
+    // Nothing malformed ever reached a worker.
+    assert_eq!(coord.metrics().queries_completed.get(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn topk_metrics_account_for_scanned_candidates() {
+    let n = 25usize;
+    let coord = setup(n, 64, 1.0, 2);
+    let plans = 6usize;
+    let plan: Vec<Query> = (0..plans)
+        .map(|i| Query::TopK {
+            i: i as u32,
+            m: 4,
+            kind: QueryKind::Oq,
+        })
+        .collect();
+    coord.query_plan(plan).expect("plan");
+    let m = coord.metrics();
+    assert_eq!(
+        m.topk_candidates_scanned.get(),
+        (plans * (n - 1)) as u64,
+        "each TopK must scan exactly n−1 candidates"
+    );
+    assert_eq!(m.estimate_latency[QueryKind::Oq.index()].count(), plans as u64);
+    assert!(m.report().contains("topk candidates scanned"));
+    coord.shutdown();
+}

@@ -164,6 +164,71 @@ fn root_and_direct_forms_agree_end_to_end() {
     }
 }
 
+/// (Converted from the one-off `dbg_fisher*` probes.) Brute-force
+/// composite Simpson over the quantile-domain Fisher integrand must
+/// agree with the adaptive quadrature behind
+/// `cramer_rao_bound_factor` — the two integration routes share only
+/// the pdf/quantile substrate, so agreement pins both down.
+#[test]
+fn fisher_integrand_brute_force_matches_library() {
+    use stablesketch::estimators::cramer_rao_bound_factor;
+    use stablesketch::stable::StandardStable;
+    for &alpha in &[0.4f64, 0.8, 1.9] {
+        let s = StandardStable::new(alpha);
+        let n = 4000usize;
+        let mut acc = 0.0;
+        for i in 0..=n {
+            let u = (i as f64 / n as f64).clamp(1e-9, 1.0 - 1e-9);
+            let z = s.abs_quantile(u);
+            let sc = 1.0 + z * s.dlogpdf(z);
+            let w = if i == 0 || i == n {
+                1.0
+            } else if i % 2 == 1 {
+                4.0
+            } else {
+                2.0
+            };
+            acc += w * sc * sc;
+        }
+        let i1 = acc / (3.0 * n as f64) / (alpha * alpha);
+        let brute_cr = 1.0 / i1;
+        let lib_cr = cramer_rao_bound_factor(alpha);
+        // Simpson on a uniform clamped grid is crude near the u→1 tail;
+        // 10% brackets real disagreement without flaking on grid error.
+        assert!(
+            (brute_cr / lib_cr - 1.0).abs() < 0.10,
+            "alpha={alpha}: brute CR {brute_cr} vs library {lib_cr}"
+        );
+    }
+}
+
+/// (Converted from `dbg_fisher3`.) The score `s(z) = 1 + z·dlogf(z)`
+/// stays bounded over random quantiles: analytically s ∈ (−α, 1], so
+/// any large |s| is a numerical spike in the pdf/derivative evaluation
+/// (the failure mode the old probe hunted by hand).
+#[test]
+fn fisher_score_has_no_numerical_spikes() {
+    use stablesketch::stable::StandardStable;
+    for &alpha in &[0.4f64, 1.0, 1.9] {
+        let s = StandardStable::new(alpha);
+        let mut rng = Xoshiro256pp::new(1);
+        for _ in 0..20_000 {
+            let u = rng.uniform_open().clamp(1e-9, 1.0 - 1e-9);
+            let z = s.abs_quantile(u);
+            let sc = 1.0 + z * s.dlogpdf(z);
+            assert!(
+                sc.is_finite() && sc * sc < 25.0,
+                "alpha={alpha}: score spike s={sc} at u={u} z={z:e}"
+            );
+            let pdf = s.pdf(z);
+            assert!(
+                pdf.is_finite() && pdf > 0.0,
+                "alpha={alpha}: bad pdf {pdf} at z={z:e}"
+            );
+        }
+    }
+}
+
 /// Randomized agreement between the two R-derivation paths under heavy
 /// concurrent access (the streaming property that matters operationally).
 #[test]
