@@ -1,0 +1,100 @@
+//! The full network serving path on loopback, in one process:
+//! sketch a corpus, start the TCP server, talk to it with the blocking
+//! client, then push it with the load generator.
+//!
+//!     cargo run --release --example network_serving
+//!
+//! In production the three roles live in different processes (see the
+//! README quickstart: `serve --listen`, `query --connect`, `loadgen`);
+//! this example wires them in-process so it runs anywhere.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind};
+use stablesketch::server::loadgen::{self, LoadMode, LoadgenConfig, Workload};
+use stablesketch::server::{ServerConfig, SketchClient, SketchServer};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // Sketch once (the expensive projection), serve forever after.
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 400,
+        dim: 2048,
+        density: 0.05,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.0,
+        k: 64,
+        dim: corpus.dim,
+        shards: 2,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Arc::new(Coordinator::start(cfg, store)?);
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())?;
+    let addr = server.local_addr().to_string();
+    println!("serving {} sketched rows on {addr}", corpus.n);
+
+    // A remote caller's session: liveness, geometry, then a plan.
+    let mut client = SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rtt = client.ping().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("ping: {rtt:?}");
+    let n = client
+        .stat("store_n")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap_or(0);
+    println!("server reports store_n = {n}");
+    let d = client
+        .pair(0, 1, QueryKind::Oq)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("d_alpha(0, 1) ≈ {d:.6} (optimal quantile, over the wire)");
+    let near = client
+        .top_k(0, 5, QueryKind::Oq)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("nearest to row 0: {near:?}");
+    let replies = client
+        .query_plan(&[
+            Query::Pair {
+                i: 2,
+                j: 3,
+                kind: QueryKind::Gm,
+            },
+            Query::Block {
+                rows: vec![0, 1],
+                cols: vec![2, 3],
+                kind: QueryKind::Oq,
+            },
+        ])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("pipelined mixed plan returned {} shape-matched replies", replies.len());
+
+    // Load: closed loop (sustainable throughput), then open loop at a
+    // fixed arrival rate (tail latency under offered load).
+    for (label, mode) in [
+        ("closed loop", LoadMode::Closed),
+        ("open loop @ 2000 qps", LoadMode::Open { rate_qps: 2000.0 }),
+    ] {
+        let report = loadgen::run(&LoadgenConfig {
+            addr: addr.clone(),
+            threads: 4,
+            duration: Duration::from_secs(2),
+            mode,
+            workload: Workload::Mixed,
+            kind: QueryKind::Oq,
+            topk_m: 8,
+            block_side: 4,
+            seed: 42,
+        })
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("[{label}] {}", report.summary());
+    }
+
+    println!("server-side: {}", coord.metrics().report());
+    server.shutdown();
+    Ok(())
+}

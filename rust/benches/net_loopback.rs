@@ -1,0 +1,105 @@
+//! Network serving bench: what does the wire cost?
+//!
+//! Compares the same pair/TopK workloads (a) in-process through
+//! `Coordinator::query_plan` and (b) over loopback TCP through
+//! `SketchClient`, at several pipeline depths. The delta is the
+//! protocol + socket overhead; deeper pipelines amortize it, which is
+//! the case for batching remote plans.
+
+mod common;
+
+use stablesketch::bench_util::Table;
+use stablesketch::coordinator::{Coordinator, Query, QueryKind};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::server::{ServerConfig, SketchClient, SketchServer};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use stablesketch::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn make_plan(rng: &mut Xoshiro256pp, n: u64, depth: usize) -> Vec<Query> {
+    (0..depth)
+        .map(|t| {
+            if t % 8 == 7 {
+                Query::TopK {
+                    i: rng.below(n) as u32,
+                    m: 8,
+                    kind: QueryKind::Oq,
+                }
+            } else {
+                Query::Pair {
+                    i: rng.below(n) as u32,
+                    j: rng.below(n) as u32,
+                    kind: QueryKind::Oq,
+                }
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let n = 2_000usize;
+    let queries = common::reps(20_000);
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 1024,
+        density: 0.05,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.0,
+        k: 64,
+        dim: corpus.dim,
+        shards: 2,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Arc::new(Coordinator::start(cfg, store).expect("coordinator"));
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server");
+    let addr = server.local_addr().to_string();
+    let mut client =
+        SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20)).expect("connect");
+
+    let mut table = Table::new(&["path", "pipeline_depth", "qps", "us_per_query"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for depth in [1usize, 16, 256] {
+        for path in ["in_process", "loopback_tcp"] {
+            let mut rng = Xoshiro256pp::new(0xBE9C ^ depth as u64);
+            let t0 = Instant::now();
+            let mut done = 0usize;
+            while done < queries {
+                let plan = make_plan(&mut rng, n as u64, depth.min(queries - done));
+                let sent = plan.len();
+                match path {
+                    "in_process" => {
+                        coord.query_plan(plan).expect("plan");
+                    }
+                    _ => {
+                        client.query_plan(&plan).expect("remote plan");
+                    }
+                }
+                done += sent;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let qps = done as f64 / dt;
+            table.row(vec![
+                path.to_string(),
+                depth.to_string(),
+                format!("{qps:.0}"),
+                format!("{:.2}", 1e6 * dt / done as f64),
+            ]);
+            rows.push(Json::obj(vec![
+                ("path", Json::str(path.to_string())),
+                ("pipeline_depth", Json::num(depth as f64)),
+                ("qps", Json::num(qps)),
+            ]));
+        }
+    }
+    table.print();
+    common::dump("net_loopback.jsonl", &rows);
+    server.shutdown();
+}

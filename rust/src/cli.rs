@@ -5,12 +5,14 @@
 use crate::coordinator::{Coordinator, Query, QueryKind, Reply};
 use crate::estimators::{tables, BatchScratch, EstimatorKind};
 use crate::numerics::{Rng, Xoshiro256pp};
+use crate::server::{LoadMode, LoadgenConfig, ServerConfig, SketchClient, SketchServer, Workload};
 use crate::sketch::SketchEngine;
 use crate::simul::{Corpus, CorpusConfig};
 use crate::util::cli::Args;
 use crate::util::config::PipelineConfig;
-use anyhow::{bail, Result};
-use std::time::Instant;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn corpus_from_args(args: &Args) -> Result<(Corpus, PipelineConfig)> {
     let cfg = PipelineConfig::default().apply_args(args)?;
@@ -75,8 +77,13 @@ pub fn cmd_sketch(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `query`: one pair distance through every estimator.
+/// `query`: one pair distance through every estimator. With
+/// `--connect <addr>` the queries go over the wire to a running
+/// `serve --listen` process instead of an inline sketch run.
 pub fn cmd_query(args: &Args) -> Result<()> {
+    if args.get("connect").is_some() {
+        return cmd_query_remote(args);
+    }
     let (corpus, cfg) = corpus_from_args(args)?;
     let i = args.usize_or("i", 0)?;
     let j = args.usize_or("j", 1)?;
@@ -148,10 +155,15 @@ pub fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve`: run the coordinator on a synthetic query-plan workload
-/// (`--workload pair|topk|block|mixed`) and print throughput + latency
-/// metrics, including the per-kind estimate histograms.
+/// `serve`: run the coordinator. With `--listen <addr>` it serves the
+/// framed wire protocol over TCP (remote `query --connect` / `loadgen`
+/// clients); without, it drives a synthetic in-process query-plan
+/// workload (`--workload pair|topk|block|mixed`) and prints throughput
+/// + latency metrics.
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_network(args);
+    }
     let (corpus, cfg) = corpus_from_args(args)?;
     let queries = args.usize_or("queries", 20_000)?;
     let workload = args.str_or("workload", "pair");
@@ -216,6 +228,117 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("{}", coord.metrics().report());
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --listen <addr>`: sketch a synthetic corpus and serve it
+/// over TCP until `--duration` seconds elapse (0 = forever), printing
+/// a metrics report every `--stats-every` seconds.
+fn cmd_serve_network(args: &Args) -> Result<()> {
+    let (corpus, cfg) = corpus_from_args(args)?;
+    let listen = args.req("listen")?.to_string();
+    let duration = args.u64_or("duration", 0)?;
+    let stats_every = args.u64_or("stats-every", 10)?.max(1);
+    let max_connections = args.usize_or("max-conns", 64)?;
+    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Arc::new(Coordinator::start(cfg.clone(), store)?);
+    let server = SketchServer::start(coord.clone(), &listen, ServerConfig { max_connections })?;
+    println!(
+        "serving on {} (n={} k={} alpha={} shards={}, {} max conns); \
+         try: stablesketch loadgen --connect {}",
+        server.local_addr(),
+        corpus.n,
+        cfg.k,
+        cfg.alpha,
+        cfg.shards,
+        max_connections,
+        server.local_addr(),
+    );
+    let tick = if duration > 0 {
+        stats_every.min(duration)
+    } else {
+        stats_every
+    };
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_secs(tick));
+        println!("{}", coord.metrics().report());
+        if duration > 0 && t0.elapsed() >= Duration::from_secs(duration) {
+            break;
+        }
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// `query --connect <addr>`: issue remote queries against a running
+/// `serve --listen` process.
+fn cmd_query_remote(args: &Args) -> Result<()> {
+    let addr = args.req("connect")?;
+    let mut client =
+        SketchClient::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let rtt = client.ping().context("ping")?;
+    let n = client.stat("store_n").context("stats")?.unwrap_or(0);
+    println!("connected to {addr} (rtt {:.1?}, store_n {n})", rtt);
+    if n == 0 {
+        bail!("server reports an empty store");
+    }
+    let i = args.usize_or("i", 0)? as u32;
+    let j = args.usize_or("j", 1)? as u32;
+    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median] {
+        let d = client
+            .pair(i, j, kind)
+            .with_context(|| format!("pair query ({i},{j}) kind {kind:?}"))?;
+        println!("{:<6} d_(α)({i},{j}) = {d:.6}", kind.label());
+    }
+    let m = args.usize_or("topk-m", 5)?;
+    let near = client.top_k(i, m, QueryKind::Oq).context("topk query")?;
+    let pretty: Vec<String> = near.iter().map(|(j, d)| format!("{j} ({d:.4})")).collect();
+    println!("nearest to {i} by oq estimate: {}", pretty.join(", "));
+    Ok(())
+}
+
+/// `loadgen --connect <addr>`: drive a remote server with an open- or
+/// closed-loop multi-threaded workload and report throughput +
+/// latency quantiles.
+pub fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.req("connect")?.to_string();
+    let workload = args.str_or("workload", "pair");
+    let workload = Workload::parse(&workload)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}' (pair|topk|block|mixed)"))?;
+    let kind = args.str_or("kind", "oq");
+    let kind = QueryKind::parse(&kind)
+        .ok_or_else(|| anyhow::anyhow!("unknown kind '{kind}' (oq|gm|fp|median)"))?;
+    let rate = args.f64_or("rate", 0.0)?;
+    let cfg = LoadgenConfig {
+        addr,
+        threads: args.usize_or("threads", 4)?,
+        duration: Duration::from_secs_f64(args.f64_or("duration", 10.0)?),
+        mode: if rate > 0.0 {
+            LoadMode::Open { rate_qps: rate }
+        } else {
+            LoadMode::Closed
+        },
+        workload,
+        kind,
+        topk_m: args.usize_or("topk-m", 10)?,
+        block_side: args.usize_or("block-side", 8)?,
+        seed: args.u64_or("seed", 0x10AD)?,
+    };
+    println!(
+        "loadgen: {} threads, {} against {} ({:?}/{:?})",
+        cfg.threads,
+        match cfg.mode {
+            LoadMode::Closed => "closed loop".to_string(),
+            LoadMode::Open { rate_qps } => format!("open loop at {rate_qps:.0} qps"),
+        },
+        cfg.addr,
+        cfg.workload,
+        cfg.kind,
+    );
+    let report = crate::server::loadgen::run(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", report.summary());
     Ok(())
 }
 

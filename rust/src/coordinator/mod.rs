@@ -48,7 +48,7 @@ use crate::metrics::PipelineMetrics;
 use crate::sketch::{SketchStore, StreamEvent, StreamingSketcher};
 use crate::util::config::PipelineConfig;
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -77,6 +77,30 @@ impl QueryKind {
         }
     }
 
+    /// Inverse of [`Self::index`] — the wire protocol and CLI decode
+    /// kinds through this so the mapping stays in one place.
+    pub fn from_index(ix: usize) -> Option<QueryKind> {
+        match ix {
+            0 => Some(QueryKind::Oq),
+            1 => Some(QueryKind::Gm),
+            2 => Some(QueryKind::Fp),
+            3 => Some(QueryKind::Median),
+            _ => None,
+        }
+    }
+
+    /// Parse a kind label (`oq|gm|fp|median`), as printed by
+    /// [`Self::label`].
+    pub fn parse(s: &str) -> Option<QueryKind> {
+        match s {
+            "oq" => Some(QueryKind::Oq),
+            "gm" => Some(QueryKind::Gm),
+            "fp" => Some(QueryKind::Fp),
+            "median" | "med" => Some(QueryKind::Median),
+            _ => None,
+        }
+    }
+
     pub fn label(self) -> &'static str {
         crate::metrics::KIND_LABELS[self.index()]
     }
@@ -84,7 +108,7 @@ impl QueryKind {
 
 /// One unit of the query plan — what the router places and a worker
 /// executes under a single store snapshot with a single reused scratch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Query {
     /// One pairwise distance.
     Pair { i: u32, j: u32, kind: QueryKind },
@@ -138,7 +162,7 @@ impl From<PairQuery> for Query {
 }
 
 /// One query's answer, shape-matched to its [`Query`] variant.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
     Pair(f64),
     /// `(candidate row, distance)` sorted ascending by distance.
@@ -148,13 +172,59 @@ pub enum Reply {
 }
 
 impl Reply {
-    /// The pair distance, for plans known to be all-`Pair`.
-    pub fn pair(self) -> f64 {
+    /// The pair distance, or `None` on a shape mismatch. Library code
+    /// (and the network reply path, where a mismatch must become a
+    /// protocol error, not a crash) goes through this.
+    pub fn try_pair(&self) -> Option<f64> {
         match self {
-            Reply::Pair(d) => d,
-            other => panic!("expected a Pair reply, got {other:?}"),
+            Reply::Pair(d) => Some(*d),
+            _ => None,
         }
     }
+
+    /// The TopK candidate list, or `None` on a shape mismatch.
+    pub fn try_top_k(self) -> Option<Vec<(u32, f64)>> {
+        match self {
+            Reply::TopK(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The row-major block distances, or `None` on a shape mismatch.
+    pub fn try_block(self) -> Option<Vec<f64>> {
+        match self {
+            Reply::Block(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The pair distance, for plans known to be all-`Pair`.
+    ///
+    /// Panics on a shape mismatch — use [`Self::try_pair`] anywhere a
+    /// mismatch is reachable from input data.
+    pub fn pair(self) -> f64 {
+        match self.try_pair() {
+            Some(d) => d,
+            None => panic!("expected a Pair reply, got {self:?}"),
+        }
+    }
+}
+
+/// Why [`Coordinator::submit`] refused a query — typed so callers (the
+/// network listener in particular) can map each case to a distinct
+/// wire-level reply instead of parsing error strings.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    /// The query failed admission validation (out-of-range row,
+    /// oversized block, …).
+    #[error("invalid query: {0}")]
+    Invalid(String),
+    /// Every candidate shard queue is full — shed load or retry.
+    #[error("backpressure: shard queues full")]
+    Overloaded,
+    /// The pipeline has shut down.
+    #[error("pipeline is shut down")]
+    Shutdown,
 }
 
 pub(crate) struct Job {
@@ -167,6 +237,11 @@ pub(crate) struct Job {
 /// Everything a worker needs, shared.
 pub(crate) struct Shared {
     pub store: Mutex<Arc<SketchStore>>, // swapped by ingest epochs
+    /// Row count of the published snapshot, mirrored atomically so the
+    /// per-query admission check ([`Coordinator::submit`] — the
+    /// network hot path, one call per connection-reader query) does
+    /// not serialize on the store mutex.
+    pub store_n: AtomicUsize,
     pub oq: OptimalQuantile,
     pub gm: GeometricMean,
     pub fp: FractionalPower,
@@ -212,6 +287,7 @@ impl Coordinator {
         let n = store.n;
         let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, n);
         let shared = Arc::new(Shared {
+            store_n: AtomicUsize::new(n),
             store: Mutex::new(Arc::new(store)),
             oq: OptimalQuantile::new(alpha, k),
             gm: GeometricMean::new(alpha, k),
@@ -255,6 +331,13 @@ impl Coordinator {
         &self.shared.metrics
     }
 
+    /// The store snapshot currently serving new queries (the latest
+    /// published epoch). The network layer reads `n`/`k`/`alpha` off
+    /// this for its `Stats` frame.
+    pub fn store(&self) -> Arc<SketchStore> {
+        self.shared.snapshot()
+    }
+
     /// Synchronous single query (round-trips one batch slot).
     pub fn query(&self, q: PairQuery) -> Result<f64> {
         Ok(self.query_batch(&[q])?[0])
@@ -265,11 +348,13 @@ impl Coordinator {
     /// [`Self::query_plan`].)
     pub fn query_batch(&self, queries: &[PairQuery]) -> Result<Vec<f64>> {
         let plan: Vec<Query> = queries.iter().map(|&q| Query::from(q)).collect();
-        Ok(self
-            .query_plan(plan)?
+        self.query_plan(plan)?
             .into_iter()
-            .map(Reply::pair)
-            .collect())
+            .map(|r| {
+                r.try_pair()
+                    .ok_or_else(|| anyhow::anyhow!("pair plan produced a non-Pair reply"))
+            })
+            .collect()
     }
 
     /// The `m` nearest neighbours of row `i` (ascending distance).
@@ -298,10 +383,7 @@ impl Coordinator {
     /// worker under one snapshot, so its multi-value reply is
     /// epoch-consistent.
     pub fn query_plan(&self, queries: Vec<Query>) -> Result<Vec<Reply>> {
-        let n = {
-            let snap = self.shared.snapshot();
-            snap.n as u32
-        };
+        let n = self.shared.store_n.load(Ordering::Acquire) as u32;
         for q in &queries {
             validate_query(q, n)?;
         }
@@ -309,20 +391,13 @@ impl Coordinator {
         let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply)>();
         let mut pending = 0usize;
         for (seq, query) in queries.into_iter().enumerate() {
-            let job = Job {
-                query,
-                seq,
-                submitted: Instant::now(),
-                reply: tx.clone(),
-            };
-            self.shared.metrics.queries_submitted.inc();
-            match self.router.route(job) {
+            match self.submit_validated(query, seq, tx.clone()) {
                 Ok(()) => pending += 1,
-                Err(QueueError::Full(_)) => {
-                    self.shared.metrics.queries_rejected.inc();
+                Err(SubmitError::Overloaded) => {
                     bail!("backpressure: shard queues full after {pending} submissions");
                 }
-                Err(QueueError::Closed) => bail!("pipeline is shut down"),
+                Err(SubmitError::Shutdown) => bail!("pipeline is shut down"),
+                Err(SubmitError::Invalid(msg)) => bail!("{msg}"),
             }
         }
         drop(tx);
@@ -337,6 +412,50 @@ impl Coordinator {
             .collect())
     }
 
+    /// Pipelined submission: validate one query and route it, with a
+    /// caller-supplied reply tag and channel. The reply arrives on
+    /// `reply` as `(tag, Reply)` whenever its worker finishes — callers
+    /// that interleave submission and collection (the TCP listener's
+    /// per-connection pipeline) build on this; [`Self::query_plan`] is
+    /// the blocking all-at-once convenience over it.
+    pub fn submit(
+        &self,
+        query: Query,
+        tag: usize,
+        reply: std::sync::mpsc::Sender<(usize, Reply)>,
+    ) -> Result<(), SubmitError> {
+        let n = self.shared.store_n.load(Ordering::Acquire) as u32;
+        if let Err(e) = validate_query(&query, n) {
+            return Err(SubmitError::Invalid(e.to_string()));
+        }
+        self.submit_validated(query, tag, reply)
+    }
+
+    /// Route an already-validated query (shared tail of [`Self::submit`]
+    /// and [`Self::query_plan`]).
+    fn submit_validated(
+        &self,
+        query: Query,
+        tag: usize,
+        reply: std::sync::mpsc::Sender<(usize, Reply)>,
+    ) -> Result<(), SubmitError> {
+        let job = Job {
+            query,
+            seq: tag,
+            submitted: Instant::now(),
+            reply,
+        };
+        self.shared.metrics.queries_submitted.inc();
+        match self.router.route(job) {
+            Ok(()) => Ok(()),
+            Err(QueueError::Full(_)) => {
+                self.shared.metrics.queries_rejected.inc();
+                Err(SubmitError::Overloaded)
+            }
+            Err(QueueError::Closed) => Err(SubmitError::Shutdown),
+        }
+    }
+
     /// Apply turnstile events and publish a fresh snapshot (epoch).
     pub fn ingest(&self, events: &[StreamEvent]) -> Result<()> {
         let mut ingest = self.ingest.lock().unwrap();
@@ -345,7 +464,9 @@ impl Coordinator {
             self.shared.metrics.events_ingested.inc();
         }
         let snapshot = Arc::new(ingest.store().clone());
+        let n = snapshot.n;
         *self.shared.store.lock().unwrap() = snapshot;
+        self.shared.store_n.store(n, Ordering::Release);
         Ok(())
     }
 

@@ -28,6 +28,9 @@
 //! * [`coordinator`] — the serving pipeline: query plans
 //!   (`Pair`/`TopK`/`Block` with multi-value replies), sharding,
 //!   batching, backpressure, routing.
+//! * [`server`] — the network layer over the coordinator: framed wire
+//!   protocol, TCP listener with a bounded connection pool, blocking
+//!   pipelined client, and an open/closed-loop load generator.
 //! * [`simul`] — Monte-Carlo drivers regenerating the paper's figures.
 
 pub mod bench_util;
@@ -37,6 +40,7 @@ pub mod estimators;
 pub mod metrics;
 pub mod numerics;
 pub mod runtime;
+pub mod server;
 pub mod simul;
 pub mod sketch;
 pub mod stable;

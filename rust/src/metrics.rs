@@ -2,7 +2,7 @@
 //! histograms with p50/p95/p99 readout. Shared across coordinator
 //! workers via `Arc`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Monotonic counter.
 #[derive(Debug, Default)]
@@ -20,6 +20,26 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge (active connections, in-flight queries).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
 }
@@ -126,6 +146,28 @@ pub struct PipelineMetrics {
     /// Candidates scanned by `TopK` plans (one fused estimate each);
     /// divides into the TopK estimate latency for per-candidate cost.
     pub topk_candidates_scanned: Counter,
+
+    // ---- network serving layer (server::listener) ------------------
+    /// Connections admitted by the accept loop.
+    pub connections_opened: Counter,
+    /// Connections fully torn down (reader/writer joined).
+    pub connections_closed: Counter,
+    /// Connections refused because the pool was at capacity.
+    pub connections_rejected: Counter,
+    /// Currently admitted connections.
+    pub connections_active: Gauge,
+    /// Network queries routed into the pipeline whose reply frame has
+    /// not been handed to the writer yet.
+    pub net_queries_inflight: Gauge,
+    pub net_frames_in: Counter,
+    pub net_frames_out: Counter,
+    pub net_bytes_in: Counter,
+    pub net_bytes_out: Counter,
+    /// Frames that failed to decode (malformed, oversized, truncated).
+    pub net_decode_errors: Counter,
+    /// Queries answered with an explicit `Overloaded` error frame
+    /// (backpressure surfaced to the remote caller, connection kept).
+    pub net_overload_replies: Counter,
 }
 
 impl PipelineMetrics {
@@ -152,7 +194,53 @@ impl PipelineMetrics {
         if scanned > 0 {
             s.push_str(&format!(" | topk candidates scanned: {scanned}"));
         }
+        if self.connections_opened.get() > 0 || self.connections_rejected.get() > 0 {
+            s.push_str(&format!(
+                " | net: {} conns ({} active, {} rejected), {} inflight, frames {}/{} in/out, \
+                 bytes {}/{} in/out, {} decode errors, {} overloaded",
+                self.connections_opened.get(),
+                self.connections_active.get(),
+                self.connections_rejected.get(),
+                self.net_queries_inflight.get(),
+                self.net_frames_in.get(),
+                self.net_frames_out.get(),
+                self.net_bytes_in.get(),
+                self.net_bytes_out.get(),
+                self.net_decode_errors.get(),
+                self.net_overload_replies.get(),
+            ));
+        }
         s
+    }
+
+    /// Counter snapshot for the wire protocol's `Stats` frame: stable
+    /// label → value pairs (gauges clamp at zero). The server prepends
+    /// store geometry (`store_n`, `store_k`) before encoding.
+    pub fn stat_entries(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("queries_submitted", self.queries_submitted.get()),
+            ("queries_completed", self.queries_completed.get()),
+            ("queries_rejected", self.queries_rejected.get()),
+            ("batches_formed", self.batches_formed.get()),
+            ("events_ingested", self.events_ingested.get()),
+            ("query_latency_p50_ns", self.query_latency.quantile_ns(0.50)),
+            ("query_latency_p95_ns", self.query_latency.quantile_ns(0.95)),
+            ("query_latency_p99_ns", self.query_latency.quantile_ns(0.99)),
+            ("connections_opened", self.connections_opened.get()),
+            ("connections_closed", self.connections_closed.get()),
+            ("connections_rejected", self.connections_rejected.get()),
+            ("connections_active", self.connections_active.get().max(0) as u64),
+            (
+                "net_queries_inflight",
+                self.net_queries_inflight.get().max(0) as u64,
+            ),
+            ("net_frames_in", self.net_frames_in.get()),
+            ("net_frames_out", self.net_frames_out.get()),
+            ("net_bytes_in", self.net_bytes_in.get()),
+            ("net_bytes_out", self.net_bytes_out.get()),
+            ("net_decode_errors", self.net_decode_errors.get()),
+            ("net_overload_replies", self.net_overload_replies.get()),
+        ]
     }
 }
 
@@ -185,6 +273,35 @@ mod tests {
         assert!(r.contains("est[oq]"), "{r}");
         assert!(!r.contains("est[gm]"), "{r}");
         assert!(r.contains("topk candidates scanned: 42"), "{r}");
+    }
+
+    #[test]
+    fn gauge_tracks_up_and_down() {
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // below zero is representable (torn-down race), clamped in stats
+        assert_eq!(g.get(), -1);
+        let m = PipelineMetrics::default();
+        m.connections_active.dec();
+        let entries = m.stat_entries();
+        let active = entries
+            .iter()
+            .find(|(l, _)| *l == "connections_active")
+            .unwrap();
+        assert_eq!(active.1, 0, "negative gauge must clamp to 0 in stats");
+    }
+
+    #[test]
+    fn net_section_appears_in_report_only_when_used() {
+        let m = PipelineMetrics::default();
+        assert!(!m.report().contains("| net:"));
+        m.connections_opened.inc();
+        m.net_frames_in.add(3);
+        assert!(m.report().contains("| net:"), "{}", m.report());
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! `SketchClient` — a blocking client for the framed wire protocol.
+//!
+//! One client owns one TCP connection. Plans are **pipelined**: every
+//! query frame of a plan is written (one buffered flush) before any
+//! reply is read, and replies are matched back to their slot by
+//! correlation id, so out-of-order completion across server shards is
+//! fine. Errors are typed: transport ([`ClientError::Io`]), protocol
+//! ([`ClientError::Proto`]), and per-query server refusals, with
+//! backpressure ([`ClientError::Overloaded`]) split out so load
+//! generators and retry loops can treat it as a normal signal.
+
+use super::protocol::{read_frame, write_frame, ErrorCode, Frame, FrameReadError, ProtoError};
+use crate::coordinator::{Query, QueryKind, Reply};
+use std::io::{BufWriter, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+use thiserror::Error;
+
+/// Typed client-side failure.
+#[derive(Debug, Error)]
+pub enum ClientError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("protocol: {0}")]
+    Proto(#[from] ProtoError),
+    /// The server answered a query with an error frame.
+    #[error("server error ({code:?}): {message}")]
+    Server { code: ErrorCode, message: String },
+    /// The server shed this query under backpressure — retry with
+    /// jitter or reduce offered load.
+    #[error("server overloaded: {0}")]
+    Overloaded(String),
+    /// The server sent a frame that makes no sense here.
+    #[error("unexpected frame from server: {0}")]
+    Unexpected(&'static str),
+    /// A reply arrived whose shape does not match its query.
+    #[error("reply shape does not match query shape")]
+    ShapeMismatch,
+}
+
+impl From<FrameReadError> for ClientError {
+    fn from(e: FrameReadError) -> Self {
+        match e {
+            FrameReadError::Io(e) => ClientError::Io(e),
+            FrameReadError::Proto(e) => ClientError::Proto(e),
+        }
+    }
+}
+
+/// Default I/O timeout: a server that has produced no reply bytes for
+/// this long is treated as dead (the read errors with
+/// [`ClientError::Io`]; callers reconnect). Without it, a stalled
+/// server would hang `ping`/`stats`/`query_plan` — and any load
+/// generator built on them — forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Blocking connection to a [`super::SketchServer`].
+pub struct SketchClient {
+    addr: String,
+    stream: TcpStream,
+    next_id: u64,
+    timeout: Option<Duration>,
+}
+
+/// Shared dial path for `connect` and `reconnect`: one place for every
+/// socket option.
+fn dial(addr: &str, timeout: Option<Duration>) -> Result<TcpStream, ClientError> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    Ok(stream)
+}
+
+impl SketchClient {
+    /// Connect to `addr` (`host:port`) with [`DEFAULT_IO_TIMEOUT`].
+    pub fn connect(addr: &str) -> Result<SketchClient, ClientError> {
+        Ok(SketchClient {
+            stream: dial(addr, Some(DEFAULT_IO_TIMEOUT))?,
+            addr: addr.to_string(),
+            // Id 0 is reserved for connection-level server errors.
+            next_id: 1,
+            timeout: Some(DEFAULT_IO_TIMEOUT),
+        })
+    }
+
+    /// Override the per-read/write timeout (`None` blocks forever —
+    /// only sensible for debugging). After a timeout fires the stream
+    /// position is undefined; [`Self::reconnect`] before reusing.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<(), ClientError> {
+        self.stream.set_read_timeout(timeout)?;
+        self.stream.set_write_timeout(timeout)?;
+        self.timeout = timeout;
+        Ok(())
+    }
+
+    /// Connect, retrying with linear backoff — for racing a server
+    /// that is still binding, and for load-generator reconnects.
+    pub fn connect_with_retry(
+        addr: &str,
+        attempts: usize,
+        backoff: Duration,
+    ) -> Result<SketchClient, ClientError> {
+        let mut last = None;
+        for attempt in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(backoff * (attempt as u32 + 1));
+                }
+            }
+        }
+        Err(last.expect("at least one connect attempt"))
+    }
+
+    /// The address this client dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Drop the current connection and dial the same address again.
+    /// In-flight state is abandoned (ids are not reused across the new
+    /// connection — the counter keeps increasing).
+    pub fn reconnect(&mut self) -> Result<(), ClientError> {
+        self.stream = dial(&self.addr, self.timeout)?;
+        Ok(())
+    }
+
+    /// Round-trip a `Ping`; returns measured latency.
+    pub fn ping(&mut self) -> Result<Duration, ClientError> {
+        let token = self.next_id;
+        self.next_id += 1;
+        let t0 = Instant::now();
+        write_frame(&mut self.stream, &Frame::Ping { token })?;
+        match self.read()? {
+            Frame::Pong { token: t } if t == token => Ok(t0.elapsed()),
+            Frame::Pong { .. } => Err(ClientError::Unexpected("pong with wrong token")),
+            Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
+            _ => Err(ClientError::Unexpected("non-pong reply to ping")),
+        }
+    }
+
+    /// Fetch the server's counter snapshot (includes `store_n` /
+    /// `store_k` — how remote callers learn the corpus geometry).
+    pub fn stats(&mut self) -> Result<Vec<(String, u64)>, ClientError> {
+        write_frame(&mut self.stream, &Frame::StatsRequest)?;
+        match self.read()? {
+            Frame::Stats { entries } => Ok(entries),
+            Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
+            _ => Err(ClientError::Unexpected("non-stats reply to stats request")),
+        }
+    }
+
+    /// One stat by label, if the server reports it.
+    pub fn stat(&mut self, label: &str) -> Result<Option<u64>, ClientError> {
+        Ok(self
+            .stats()?
+            .into_iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, v)| v))
+    }
+
+    /// Execute a query plan remotely: pipeline every query onto the
+    /// wire, then collect the shape-matched replies in input order.
+    ///
+    /// If any query is refused, the remaining replies of the plan are
+    /// still drained off the wire (the connection stays usable) and
+    /// the first refusal is returned as the error.
+    pub fn query_plan(&mut self, queries: &[Query]) -> Result<Vec<Reply>, ClientError> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        let base = self.next_id;
+        self.next_id += queries.len() as u64;
+        {
+            let mut w = BufWriter::new(&self.stream);
+            for (off, query) in queries.iter().enumerate() {
+                write_frame(
+                    &mut w,
+                    &Frame::Query {
+                        id: base + off as u64,
+                        query: query.clone(),
+                    },
+                )?;
+            }
+            w.flush()?;
+        }
+        let mut out: Vec<Option<Reply>> = vec![None; queries.len()];
+        let mut answered = vec![false; queries.len()];
+        let mut first_err: Option<ClientError> = None;
+        for _ in 0..queries.len() {
+            let frame = self.read()?;
+            match frame {
+                Frame::Reply { id, reply } => {
+                    let slot = slot_of(id, base, queries.len(), &answered)?;
+                    answered[slot] = true;
+                    out[slot] = Some(reply);
+                }
+                Frame::Error { id, code, message } => {
+                    if id == 0 {
+                        // Connection-level error: the stream is not
+                        // carrying our replies any more.
+                        return Err(ClientError::Server { code, message });
+                    }
+                    let slot = slot_of(id, base, queries.len(), &answered)?;
+                    answered[slot] = true;
+                    if first_err.is_none() {
+                        first_err = Some(match code {
+                            ErrorCode::Overloaded => ClientError::Overloaded(message),
+                            _ => ClientError::Server { code, message },
+                        });
+                    }
+                }
+                _ => return Err(ClientError::Unexpected("non-reply frame during plan")),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(out
+            .into_iter()
+            .map(|r| r.expect("every slot answered"))
+            .collect())
+    }
+
+    /// One pairwise distance.
+    pub fn pair(&mut self, i: u32, j: u32, kind: QueryKind) -> Result<f64, ClientError> {
+        let replies = self.query_plan(&[Query::Pair { i, j, kind }])?;
+        replies[0].try_pair().ok_or(ClientError::ShapeMismatch)
+    }
+
+    /// The `m` nearest neighbours of row `i` (ascending distance).
+    pub fn top_k(
+        &mut self,
+        i: u32,
+        m: usize,
+        kind: QueryKind,
+    ) -> Result<Vec<(u32, f64)>, ClientError> {
+        let mut replies = self.query_plan(&[Query::TopK { i, m, kind }])?;
+        replies
+            .pop()
+            .and_then(Reply::try_top_k)
+            .ok_or(ClientError::ShapeMismatch)
+    }
+
+    /// The `rows × cols` distance sub-matrix, row-major.
+    pub fn block(
+        &mut self,
+        rows: Vec<u32>,
+        cols: Vec<u32>,
+        kind: QueryKind,
+    ) -> Result<Vec<f64>, ClientError> {
+        let mut replies = self.query_plan(&[Query::Block { rows, cols, kind }])?;
+        replies
+            .pop()
+            .and_then(Reply::try_block)
+            .ok_or(ClientError::ShapeMismatch)
+    }
+
+    fn read(&mut self) -> Result<Frame, ClientError> {
+        Ok(read_frame(&mut self.stream)?)
+    }
+}
+
+/// Map a reply id back to its plan slot, rejecting ids outside the
+/// plan's window and duplicate answers.
+fn slot_of(id: u64, base: u64, len: usize, answered: &[bool]) -> Result<usize, ClientError> {
+    let slot = id
+        .checked_sub(base)
+        .filter(|&s| (s as usize) < len)
+        .map(|s| s as usize)
+        .ok_or(ClientError::Unexpected("reply id outside current plan"))?;
+    if answered[slot] {
+        return Err(ClientError::Unexpected("duplicate reply id"));
+    }
+    Ok(slot)
+}

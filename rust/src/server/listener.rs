@@ -1,0 +1,569 @@
+//! The TCP serving front end: accept loop, bounded connection pool,
+//! and per-connection reader/forwarder/writer threads bridging decoded
+//! frames into the coordinator's pipelined [`Coordinator::submit`].
+//!
+//! Per-connection topology (all blocking std threads — the pool is
+//! bounded, so thread count is too):
+//!
+//! ```text
+//!   socket ──► reader ──(submit)──► coordinator shards
+//!                │  ▲                      │ (tag, Reply)
+//!                │  └── control frames     ▼
+//!                └─────► out_tx ◄──── forwarder
+//!                            │
+//!                            ▼
+//!                         writer ──► socket
+//! ```
+//!
+//! Only the writer thread touches the socket's write half, so reply
+//! and control frames never interleave mid-frame. Backpressure from
+//! the shard queues maps to an explicit [`ErrorCode::Overloaded`]
+//! reply on the same connection — the caller sheds load; the
+//! connection survives. Malformed *content* (a well-framed payload
+//! that fails to decode) gets an error frame and the connection
+//! continues; a broken *framing* layer (oversized length prefix)
+//! closes it, since byte alignment is unrecoverable.
+
+use super::protocol::{query_id_of, write_frame, ErrorCode, Frame, ProtoError, MAX_FRAME_BYTES};
+use crate::coordinator::{Coordinator, Reply, SubmitError};
+use crate::metrics::PipelineMetrics;
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Listener knobs. Everything else (queue depths, shard counts) is the
+/// coordinator's [`crate::util::config::PipelineConfig`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Hard cap on concurrently admitted connections; one over it is
+    /// answered with [`ErrorCode::TooManyConnections`] and closed.
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_connections: 64,
+        }
+    }
+}
+
+/// How often blocked reads wake up to check the stop flag.
+const READ_TICK: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval (the listener runs non-blocking so
+/// shutdown never hangs on `accept`).
+const ACCEPT_TICK: Duration = Duration::from_millis(10);
+/// A peer that has not drained its socket for this long is wedged;
+/// the write fails and the connection is torn down. Also bounds how
+/// long shutdown can wait on a blocked writer thread.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Outbound frame queue bound per connection. With the writer stalled
+/// (slow peer) the queue fills, control-frame sends start waiting
+/// stop-aware, and the reader stops consuming input — backpressure
+/// propagates to the peer's TCP stream instead of server memory.
+const OUTBOUND_QUEUE: usize = 1024;
+/// Max queries a single connection may have in flight (submitted,
+/// reply not yet handed to the writer). Bounds the reply-channel
+/// buffering a peer can pin by pipelining queries without reading.
+const MAX_CONN_INFLIGHT: usize = 4096;
+
+/// A running TCP server over a coordinator. Dropping it (or calling
+/// [`Self::shutdown`]) stops accepting, interrupts connection readers,
+/// and joins every thread it spawned.
+pub struct SketchServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SketchServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7878"`, port 0 for ephemeral) and
+    /// start serving `coordinator`. Returns as soon as the socket is
+    /// listening; the accept loop runs on its own thread.
+    pub fn start(
+        coordinator: Arc<Coordinator>,
+        addr: &str,
+        config: ServerConfig,
+    ) -> Result<SketchServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let local_addr = listener.local_addr().context("reading local addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("sketch-accept".to_string())
+            .spawn(move || accept_loop(listener, coordinator, config, stop2))
+            .context("spawning accept thread")?;
+        Ok(SketchServer {
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, interrupt live connections, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SketchServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    config: ServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let active = Arc::new(AtomicUsize::new(0));
+    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    while !stop.load(Ordering::SeqCst) {
+        // Reap finished connection threads every iteration (not just on
+        // idle ticks) so sustained connection churn cannot grow the
+        // handle list without bound.
+        conns.lock().unwrap().retain(|h| !h.is_finished());
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let metrics = coordinator.metrics();
+                if active.load(Ordering::SeqCst) >= config.max_connections {
+                    metrics.connections_rejected.inc();
+                    reject_over_capacity(stream, config.max_connections);
+                    continue;
+                }
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                metrics.connections_opened.inc();
+                metrics.connections_active.inc();
+                active.fetch_add(1, Ordering::SeqCst);
+                let coord = coordinator.clone();
+                let stop2 = stop.clone();
+                let active2 = active.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("sketch-conn".to_string())
+                    .spawn(move || {
+                        serve_connection(stream, &coord, &stop2);
+                        let m = coord.metrics();
+                        m.connections_active.dec();
+                        m.connections_closed.inc();
+                        active2.fetch_sub(1, Ordering::SeqCst);
+                    });
+                match spawned {
+                    Ok(h) => conns.lock().unwrap().push(h),
+                    Err(_) => {
+                        // Spawn failure: roll the admission back.
+                        metrics.connections_active.dec();
+                        metrics.connections_closed.inc();
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(ACCEPT_TICK);
+            }
+        }
+    }
+    // Readers observe the stop flag within READ_TICK and unwind.
+    let handles: Vec<_> = conns.lock().unwrap().drain(..).collect();
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Tell an over-capacity client why, then drop the socket. No writer
+/// thread exists yet, so writing directly is safe.
+fn reject_over_capacity(stream: TcpStream, cap: usize) {
+    let _ = stream.set_nonblocking(false);
+    let mut w = BufWriter::new(stream);
+    let _ = write_frame(
+        &mut w,
+        &Frame::Error {
+            id: 0,
+            code: ErrorCode::TooManyConnections,
+            message: format!("connection pool at capacity ({cap})"),
+        },
+    );
+    let _ = w.flush();
+}
+
+enum ReadEvent {
+    Frame(Frame, usize),
+    Malformed {
+        err: ProtoError,
+        /// Correlation id of the offending query when recoverable from
+        /// the payload; 0 marks a connection-level error.
+        id: u64,
+        fatal: bool,
+    },
+    Closed,
+}
+
+/// Stop-aware bounded send: waits while the outbound queue is full,
+/// gives up when the peer's lane is gone or the server is stopping.
+/// Returns `false` when the frame could not be handed off.
+fn send_outbound(tx: &mpsc::SyncSender<Frame>, mut frame: Frame, stop: &AtomicBool) -> bool {
+    loop {
+        match tx.try_send(frame) {
+            Ok(()) => return true,
+            Err(mpsc::TrySendError::Disconnected(_)) => return false,
+            Err(mpsc::TrySendError::Full(f)) => {
+                if stop.load(Ordering::SeqCst) {
+                    return false;
+                }
+                frame = f;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// One admitted connection, run to completion on the reader thread.
+fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    // A peer that stops draining for WRITE_TIMEOUT is wedged: the write
+    // errors out and the connection dies instead of blocking a thread
+    // (and shutdown) forever.
+    let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+    let metrics: &PipelineMetrics = coord.metrics();
+
+    // Outbound lane: every frame leaving this connection goes through
+    // out_tx so the writer thread is the socket's only writer. Bounded:
+    // a peer that pipelines queries without reading replies fills this,
+    // then the reader stops consuming its input (TCP backpressure) —
+    // server memory stays bounded.
+    let (out_tx, out_rx) = mpsc::sync_channel::<Frame>(OUTBOUND_QUEUE);
+    // Reply lane: the coordinator's workers send (tag, Reply) here.
+    // Unbounded, but at most `conn_inflight` replies can be pending.
+    let (reply_tx, reply_rx) = mpsc::channel::<(usize, Reply)>();
+    // Queries submitted on this connection whose reply frame has not
+    // been handed to the writer yet.
+    let conn_inflight = Arc::new(AtomicUsize::new(0));
+
+    let writer = {
+        let coord = coord.clone();
+        std::thread::Builder::new()
+            .name("sketch-conn-writer".to_string())
+            .spawn(move || {
+                let m = coord.metrics();
+                let mut w = BufWriter::new(write_half);
+                while let Ok(first) = out_rx.recv() {
+                    // Coalesce whatever is already queued into one
+                    // flush: pipelined reply bursts batch their
+                    // syscalls, a lone reply still leaves immediately.
+                    let mut next = Some(first);
+                    while let Some(frame) = next {
+                        match write_frame(&mut w, &frame) {
+                            Ok(nbytes) => {
+                                m.net_bytes_out.add(nbytes as u64);
+                                m.net_frames_out.inc();
+                            }
+                            Err(_) => return,
+                        }
+                        next = out_rx.try_recv().ok();
+                    }
+                    if w.flush().is_err() {
+                        return;
+                    }
+                }
+            })
+    };
+    let writer = match writer {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+
+    let forwarder = {
+        let coord = coord.clone();
+        let out_tx = out_tx.clone();
+        let stop = stop.clone();
+        let conn_inflight = conn_inflight.clone();
+        std::thread::Builder::new()
+            .name("sketch-conn-fwd".to_string())
+            .spawn(move || {
+                let m = coord.metrics();
+                while let Ok((tag, reply)) = reply_rx.recv() {
+                    m.net_queries_inflight.dec();
+                    conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                    let frame = Frame::Reply {
+                        id: tag as u64,
+                        reply,
+                    };
+                    if !send_outbound(&out_tx, frame, &stop) {
+                        return;
+                    }
+                }
+            })
+    };
+    let forwarder = match forwarder {
+        Ok(h) => h,
+        Err(_) => {
+            drop(out_tx);
+            let _ = writer.join();
+            return;
+        }
+    };
+
+    let mut stream = stream;
+    loop {
+        match read_event(&mut stream, stop) {
+            ReadEvent::Closed => break,
+            ReadEvent::Malformed { err, id, fatal } => {
+                metrics.net_decode_errors.inc();
+                let reply = Frame::Error {
+                    id,
+                    code: if id == 0 {
+                        ErrorCode::Malformed
+                    } else {
+                        // A well-framed query whose body failed decode
+                        // (oversized block, bad kind byte, …): answer
+                        // that query; the connection stays usable.
+                        ErrorCode::InvalidQuery
+                    },
+                    message: err.to_string(),
+                };
+                if !send_outbound(&out_tx, reply, stop) || fatal {
+                    break;
+                }
+            }
+            ReadEvent::Frame(frame, nbytes) => {
+                metrics.net_frames_in.inc();
+                metrics.net_bytes_in.add(nbytes as u64);
+                match frame {
+                    Frame::Ping { token } => {
+                        if !send_outbound(&out_tx, Frame::Pong { token }, stop) {
+                            break;
+                        }
+                    }
+                    Frame::StatsRequest => {
+                        let reply = Frame::Stats {
+                            entries: stats_snapshot(coord),
+                        };
+                        if !send_outbound(&out_tx, reply, stop) {
+                            break;
+                        }
+                    }
+                    Frame::Query { id, query } => {
+                        // Cap this connection's pipelined depth: a peer
+                        // that submits without reading replies parks
+                        // here (TCP backpressure) instead of pinning
+                        // unbounded reply buffering.
+                        let mut dead = false;
+                        while conn_inflight.load(Ordering::SeqCst) >= MAX_CONN_INFLIGHT {
+                            // Bail if the connection is going away: the
+                            // counter can never drain once the
+                            // forwarder or writer has exited.
+                            if stop.load(Ordering::SeqCst)
+                                || forwarder.is_finished()
+                                || writer.is_finished()
+                            {
+                                dead = true;
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        if dead {
+                            break;
+                        }
+                        match coord.submit(query, id as usize, reply_tx.clone()) {
+                            Ok(()) => {
+                                metrics.net_queries_inflight.inc();
+                                conn_inflight.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(SubmitError::Invalid(msg)) => {
+                                let reply = Frame::Error {
+                                    id,
+                                    code: ErrorCode::InvalidQuery,
+                                    message: msg,
+                                };
+                                if !send_outbound(&out_tx, reply, stop) {
+                                    break;
+                                }
+                            }
+                            Err(SubmitError::Overloaded) => {
+                                metrics.net_overload_replies.inc();
+                                let reply = Frame::Error {
+                                    id,
+                                    code: ErrorCode::Overloaded,
+                                    message: "shard queues full; retry with backoff".to_string(),
+                                };
+                                if !send_outbound(&out_tx, reply, stop) {
+                                    break;
+                                }
+                            }
+                            Err(SubmitError::Shutdown) => {
+                                let reply = Frame::Error {
+                                    id,
+                                    code: ErrorCode::ShuttingDown,
+                                    message: "pipeline is shut down".to_string(),
+                                };
+                                let _ = send_outbound(&out_tx, reply, stop);
+                                break;
+                            }
+                        }
+                    }
+                    // Server-to-client frames arriving at the server are
+                    // a protocol violation, but a recoverable one.
+                    Frame::Pong { .. }
+                    | Frame::Reply { .. }
+                    | Frame::Error { .. }
+                    | Frame::Stats { .. } => {
+                        metrics.net_decode_errors.inc();
+                        let reply = Frame::Error {
+                            id: 0,
+                            code: ErrorCode::Malformed,
+                            message: "unexpected server-to-client frame".to_string(),
+                        };
+                        if !send_outbound(&out_tx, reply, stop) {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Unwind: dropping our senders lets the forwarder drain any still
+    // in-flight replies (their job-held senders drop as workers finish)
+    // and then the writer flush what the forwarder produced.
+    drop(reply_tx);
+    drop(out_tx);
+    let _ = forwarder.join();
+    let _ = writer.join();
+    // If the forwarder exited early (writer lane gone), replies it
+    // never drained still count in the gauge: settle them here so
+    // Stats never reports phantom in-flight queries. Only the
+    // forwarder decrements `conn_inflight`, so after the join this
+    // value is exactly the undrained remainder.
+    for _ in 0..conn_inflight.load(Ordering::SeqCst) {
+        metrics.net_queries_inflight.dec();
+    }
+}
+
+/// Read one frame, tolerating read timeouts (used as stop-flag ticks)
+/// *without* losing partially-read bytes.
+fn read_event(stream: &mut TcpStream, stop: &AtomicBool) -> ReadEvent {
+    let mut len4 = [0u8; 4];
+    match read_exact_interruptible(stream, &mut len4, stop, true) {
+        Ok(true) => {}
+        Ok(false) => return ReadEvent::Closed, // clean EOF between frames
+        Err(_) => return ReadEvent::Closed,
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        // Cannot resync: the next `len` bytes are unbounded garbage.
+        return ReadEvent::Malformed {
+            err: ProtoError::FrameTooLarge(len),
+            id: 0,
+            fatal: true,
+        };
+    }
+    if len < 2 {
+        return ReadEvent::Malformed {
+            err: ProtoError::FrameTooSmall(len),
+            id: 0,
+            fatal: true,
+        };
+    }
+    let mut payload = vec![0u8; len];
+    match read_exact_interruptible(stream, &mut payload, stop, false) {
+        Ok(true) => {}
+        _ => return ReadEvent::Closed, // mid-frame EOF / stop
+    }
+    match Frame::decode(&payload) {
+        // Framing was consistent: survive content errors. A bad query
+        // still gets its id attributed so the error answers that query
+        // instead of reading as a connection-level failure.
+        Ok(frame) => ReadEvent::Frame(frame, 4 + len),
+        Err(err) => ReadEvent::Malformed {
+            err,
+            id: query_id_of(&payload).unwrap_or(0),
+            fatal: false,
+        },
+    }
+}
+
+/// `read_exact` that treats read timeouts as stop-flag checkpoints and
+/// keeps its position across them. `Ok(false)` is a clean EOF before
+/// any byte (only when `eof_ok`).
+fn read_exact_interruptible(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok: bool,
+) -> std::io::Result<bool> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionAborted,
+                "server shutting down",
+            ));
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && eof_ok {
+                    return Ok(false);
+                }
+                return Err(std::io::ErrorKind::UnexpectedEof.into());
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// The `Stats` frame payload: store geometry plus every pipeline and
+/// network counter.
+fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
+    let store = coord.store();
+    let mut entries = vec![
+        ("store_n".to_string(), store.n as u64),
+        ("store_k".to_string(), store.k as u64),
+    ];
+    entries.extend(
+        coord
+            .metrics()
+            .stat_entries()
+            .into_iter()
+            .map(|(label, value)| (label.to_string(), value)),
+    );
+    entries
+}

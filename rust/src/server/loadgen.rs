@@ -1,0 +1,311 @@
+//! Multi-threaded load generator over the wire protocol.
+//!
+//! Two driving disciplines:
+//!
+//! * **Closed loop** — each thread issues the next query the moment
+//!   the previous reply lands. Measures the server's sustainable
+//!   throughput; latency excludes client-side queueing by
+//!   construction.
+//! * **Open loop** — queries are launched on a fixed schedule
+//!   (`rate_qps` split across threads) regardless of completions, the
+//!   way independent remote users arrive. Latency is measured from
+//!   the *scheduled* send time, so coordinated omission is corrected:
+//!   if the server stalls, the stall shows up in the tail instead of
+//!   silently lowering the offered rate.
+//!
+//! All threads share one [`LatencyHistogram`] (atomic buckets) and the
+//! report prints throughput plus p50/p95/p99 from it. `Overloaded`
+//! replies and reconnects are counted, not fatal — shedding load is
+//! the backpressure design working.
+
+use super::client::{ClientError, SketchClient};
+use crate::coordinator::{Query, QueryKind};
+use crate::metrics::LatencyHistogram;
+use crate::numerics::{Rng, Xoshiro256pp};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Arrival discipline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// Issue-on-completion per thread.
+    Closed,
+    /// Fixed aggregate arrival rate (queries/second) across threads.
+    Open { rate_qps: f64 },
+}
+
+/// Query shape mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Pair,
+    TopK,
+    Block,
+    /// Round-robin over the three shapes.
+    Mixed,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "pair" => Some(Workload::Pair),
+            "topk" => Some(Workload::TopK),
+            "block" => Some(Workload::Block),
+            "mixed" => Some(Workload::Mixed),
+            _ => None,
+        }
+    }
+}
+
+/// Everything one run needs.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    pub threads: usize,
+    pub duration: Duration,
+    pub mode: LoadMode,
+    pub workload: Workload,
+    pub kind: QueryKind,
+    /// `m` for TopK queries.
+    pub topk_m: usize,
+    /// Side length of Block queries (`side × side` cells).
+    pub block_side: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            threads: 4,
+            duration: Duration::from_secs(10),
+            mode: LoadMode::Closed,
+            workload: Workload::Pair,
+            kind: QueryKind::Oq,
+            topk_m: 10,
+            block_side: 8,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Aggregated run result.
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub overloaded: u64,
+    pub errors: u64,
+    pub reconnects: u64,
+    pub elapsed: Duration,
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl LoadgenReport {
+    /// Human-readable one-run summary: throughput + latency quantiles.
+    pub fn summary(&self) -> String {
+        let secs = self.elapsed.as_secs_f64().max(1e-9);
+        format!(
+            "loadgen: {} sent ({:.0} qps), {} ok, {} overloaded, {} errors, {} reconnects \
+             in {:.2}s | latency: {}",
+            self.sent,
+            self.sent as f64 / secs,
+            self.ok,
+            self.overloaded,
+            self.errors,
+            self.reconnects,
+            secs,
+            self.latency.summary(),
+        )
+    }
+}
+
+/// Generates the per-thread query stream (deterministic per seed).
+struct QueryGen {
+    rng: Xoshiro256pp,
+    n: u64,
+    workload: Workload,
+    kind: QueryKind,
+    topk_m: usize,
+    block_side: usize,
+    tick: usize,
+}
+
+impl QueryGen {
+    fn next(&mut self) -> Query {
+        let shape = match self.workload {
+            Workload::Pair => 0,
+            Workload::TopK => 1,
+            Workload::Block => 2,
+            Workload::Mixed => {
+                self.tick += 1;
+                self.tick % 3
+            }
+        };
+        match shape {
+            0 => Query::Pair {
+                i: self.rng.below(self.n) as u32,
+                j: self.rng.below(self.n) as u32,
+                kind: self.kind,
+            },
+            1 => Query::TopK {
+                i: self.rng.below(self.n) as u32,
+                m: self.topk_m,
+                kind: self.kind,
+            },
+            _ => Query::Block {
+                rows: (0..self.block_side)
+                    .map(|_| self.rng.below(self.n) as u32)
+                    .collect(),
+                cols: (0..self.block_side)
+                    .map(|_| self.rng.below(self.n) as u32)
+                    .collect(),
+                kind: self.kind,
+            },
+        }
+    }
+}
+
+/// Run a load generation session against a live server.
+///
+/// Dials once up front to learn the store size from the `Stats` frame
+/// (queries need valid row indices), then spawns `threads` workers.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
+    let mut probe = SketchClient::connect_with_retry(&cfg.addr, 10, Duration::from_millis(50))?;
+    let n = probe.stat("store_n")?.unwrap_or(0);
+    if n == 0 {
+        return Err(ClientError::Unexpected(
+            "server reports an empty store (store_n = 0)",
+        ));
+    }
+    drop(probe);
+
+    let latency = Arc::new(LatencyHistogram::new());
+    let sent = Arc::new(AtomicU64::new(0));
+    let ok = Arc::new(AtomicU64::new(0));
+    let overloaded = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let reconnects = Arc::new(AtomicU64::new(0));
+
+    let threads = cfg.threads.max(1);
+    let t0 = Instant::now();
+    let deadline = t0 + cfg.duration;
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let cfg = cfg.clone();
+        let latency = latency.clone();
+        let sent = sent.clone();
+        let ok = ok.clone();
+        let overloaded = overloaded.clone();
+        let errors = errors.clone();
+        let reconnects = reconnects.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-{t}"))
+                .spawn(move || {
+                    let mut client = match SketchClient::connect_with_retry(
+                        &cfg.addr,
+                        5,
+                        Duration::from_millis(20),
+                    ) {
+                        Ok(c) => c,
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    };
+                    let mut qgen = QueryGen {
+                        rng: Xoshiro256pp::new(cfg.seed ^ (t as u64).wrapping_mul(0x9E37)),
+                        n,
+                        workload: cfg.workload,
+                        kind: cfg.kind,
+                        topk_m: cfg.topk_m,
+                        block_side: cfg.block_side,
+                        tick: t,
+                    };
+                    // Open-loop schedule: this thread owns arrivals
+                    // t, t+threads, t+2·threads, … of the aggregate
+                    // rate.
+                    let interval = match cfg.mode {
+                        LoadMode::Closed => None,
+                        LoadMode::Open { rate_qps } => Some(Duration::from_secs_f64(
+                            threads as f64 / rate_qps.max(1e-6),
+                        )),
+                    };
+                    let mut arrival = 0u64;
+                    loop {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            return;
+                        }
+                        // The latency clock starts at the *scheduled*
+                        // time under open loop (coordinated-omission
+                        // correction), at the actual send otherwise.
+                        let start = match interval {
+                            None => now,
+                            Some(iv) => {
+                                // This thread's arrivals are phase-
+                                // shifted by t/threads of an interval
+                                // so the aggregate stream is even.
+                                let scheduled = t0
+                                    + iv.mul_f64(arrival as f64)
+                                    + iv.mul_f64(t as f64 / threads as f64);
+                                arrival += 1;
+                                // Check before sleeping: at low rates
+                                // the interval can dwarf the remaining
+                                // run time, and sleeping first would
+                                // overshoot --duration by up to one
+                                // inter-arrival gap.
+                                if scheduled >= deadline {
+                                    return;
+                                }
+                                if scheduled > now {
+                                    std::thread::sleep(scheduled - now);
+                                }
+                                scheduled
+                            }
+                        };
+                        let query = qgen.next();
+                        sent.fetch_add(1, Ordering::Relaxed);
+                        match client.query_plan(std::slice::from_ref(&query)) {
+                            Ok(_) => {
+                                latency.record(start.elapsed());
+                                ok.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(ClientError::Overloaded(_)) => {
+                                // Backpressure working as designed:
+                                // count it and keep offering load.
+                                overloaded.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(ClientError::Io(_)) => {
+                                reconnects.fetch_add(1, Ordering::Relaxed);
+                                if client.reconnect().is_err() {
+                                    std::thread::sleep(Duration::from_millis(20));
+                                    if client.reconnect().is_err() {
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                        return;
+                                    }
+                                }
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                })
+                .expect("spawning loadgen thread"),
+        );
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(LoadgenReport {
+        sent: sent.load(Ordering::Relaxed),
+        ok: ok.load(Ordering::Relaxed),
+        overloaded: overloaded.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+        reconnects: reconnects.load(Ordering::Relaxed),
+        elapsed: t0.elapsed(),
+        latency,
+    })
+}

@@ -1,0 +1,30 @@
+//! The network serving layer (L4): the paper's "compute sketches once,
+//! estimate any distance on the fly" only pays off at production scale
+//! if remote callers can reach the estimator — this module puts the
+//! coordinator's query plans behind a TCP wire.
+//!
+//! Four pieces:
+//!
+//! * [`protocol`] — versioned length-framed binary encoding of every
+//!   [`crate::coordinator::Query`]/[`crate::coordinator::Reply`]
+//!   variant plus `Ping`/`Stats` control frames. Strictly
+//!   bounds-checked: malformed bytes decode to errors, never panics
+//!   or unbounded allocations.
+//! * [`listener`] — [`SketchServer`]: TCP accept loop, bounded
+//!   connection pool, per-connection reader/writer threads feeding the
+//!   coordinator's pipelined `submit`. Queue-full backpressure maps to
+//!   an explicit `Overloaded` reply frame, not a dropped connection.
+//! * [`client`] — [`SketchClient`]: blocking, reconnectable, pipelined
+//!   plan submission with typed errors.
+//! * [`loadgen`] — open- and closed-loop multi-threaded load generator
+//!   reporting throughput and p50/p95/p99 latency.
+
+pub mod client;
+pub mod listener;
+pub mod loadgen;
+pub mod protocol;
+
+pub use client::{ClientError, SketchClient};
+pub use listener::{ServerConfig, SketchServer};
+pub use loadgen::{LoadMode, LoadgenConfig, LoadgenReport, Workload};
+pub use protocol::{ErrorCode, Frame, ProtoError, PROTOCOL_VERSION};

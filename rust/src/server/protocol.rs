@@ -1,0 +1,623 @@
+//! The versioned, length-framed binary wire format.
+//!
+//! Every frame on the wire is
+//!
+//! ```text
+//!   u32 payload_len (LE) | payload
+//!   payload = u8 version | u8 tag | body
+//! ```
+//!
+//! Design rules, in priority order:
+//!
+//! 1. **Malformed input yields `Err`, never a panic or an oversized
+//!    allocation.** Every length field is checked against a hard cap
+//!    *and* against the bytes actually present before anything is
+//!    allocated, so a 6-byte frame claiming a 4-billion-entry vector
+//!    costs nothing.
+//! 2. **Bit-exact floats.** `f64`/`f32` travel as their LE byte
+//!    patterns, so a networked distance is bit-identical to the
+//!    in-process one (the loopback e2e test asserts this).
+//! 3. **Versioned.** Byte 0 of the payload is the protocol version; a
+//!    decoder seeing a version it does not speak fails with
+//!    [`ProtoError::BadVersion`] instead of misparsing.
+//!
+//! Request/reply correlation is by caller-chosen `id`: replies may come
+//! back out of submission order (different shards), so the client
+//! matches on `id`, which is what makes pipelining safe.
+
+use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
+use std::io::{Read, Write};
+use thiserror::Error;
+
+/// Protocol version spoken by this build.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard cap on one frame's payload. The largest legitimate frame is a
+/// `Block` reply of [`MAX_BLOCK_CELLS`] f64 cells (8 MiB) or a `TopK`
+/// reply of [`MAX_TOPK_M`] (u32, f64) entries (12 MiB); 16 MiB bounds
+/// both with headroom, and bounds what a hostile length prefix can make
+/// the receiver allocate.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Cap on `m` in a TopK query — bounds the reply frame like
+/// [`MAX_BLOCK_CELLS`] bounds block replies. (The coordinator further
+/// clamps `m` to `n − 1`.)
+pub const MAX_TOPK_M: usize = 1 << 20;
+
+/// Cap on an error message travelling in an [`Frame::Error`].
+pub const MAX_ERROR_MSG_BYTES: usize = 1024;
+
+/// Caps for [`Frame::Stats`] payloads.
+pub const MAX_STATS_ENTRIES: usize = 256;
+pub const MAX_STATS_LABEL_BYTES: usize = 64;
+
+/// Decode failure. Every variant is a clean, bounded error — the
+/// decoder holds no state, so after a *content* error the stream is
+/// still framed and the connection can continue; only a *framing*
+/// error ([`Self::FrameTooLarge`], [`Self::FrameTooSmall`]) poisons
+/// the byte stream.
+#[derive(Debug, Error)]
+pub enum ProtoError {
+    #[error("frame of {0} bytes exceeds the {MAX_FRAME_BYTES}-byte frame cap")]
+    FrameTooLarge(usize),
+    #[error("frame of {0} bytes is below the 2-byte minimum (version + tag)")]
+    FrameTooSmall(usize),
+    #[error("frame payload truncated")]
+    Truncated,
+    #[error("{0} trailing bytes after frame body")]
+    Trailing(usize),
+    #[error("unsupported protocol version {0} (this build speaks {PROTOCOL_VERSION})")]
+    BadVersion(u8),
+    #[error("unknown frame tag {0:#04x}")]
+    BadTag(u8),
+    #[error("unknown query shape {0}")]
+    BadShape(u8),
+    #[error("unknown estimator kind {0}")]
+    BadKind(u8),
+    #[error("unknown error code {0}")]
+    BadCode(u8),
+    #[error("declared {what} length {got} exceeds the limit of {cap}")]
+    LengthCap {
+        what: &'static str,
+        got: usize,
+        cap: usize,
+    },
+    #[error("invalid utf-8 in string field")]
+    BadUtf8,
+}
+
+/// Why the server refused a request — carried in [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame decoded but made no sense (or did not decode).
+    Malformed,
+    /// The query failed admission validation (out of range, oversized).
+    InvalidQuery,
+    /// Shard queues full — backpressure surfaced to the caller, who
+    /// should shed load or retry with jitter. The connection stays up.
+    Overloaded,
+    /// The pipeline is shutting down.
+    ShuttingDown,
+    /// The connection pool is at capacity.
+    TooManyConnections,
+    /// Server-side invariant failure (e.g. reply shape mismatch).
+    Internal,
+}
+
+impl ErrorCode {
+    fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::Malformed => 1,
+            ErrorCode::InvalidQuery => 2,
+            ErrorCode::Overloaded => 3,
+            ErrorCode::ShuttingDown => 4,
+            ErrorCode::TooManyConnections => 5,
+            ErrorCode::Internal => 6,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self, ProtoError> {
+        Ok(match b {
+            1 => ErrorCode::Malformed,
+            2 => ErrorCode::InvalidQuery,
+            3 => ErrorCode::Overloaded,
+            4 => ErrorCode::ShuttingDown,
+            5 => ErrorCode::TooManyConnections,
+            6 => ErrorCode::Internal,
+            other => return Err(ProtoError::BadCode(other)),
+        })
+    }
+}
+
+/// One protocol frame. `Ping`/`Query`/`StatsRequest` travel client →
+/// server; `Pong`/`Reply`/`Error`/`Stats` travel server → client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Liveness probe; the server echoes `token` back in a `Pong`.
+    Ping { token: u64 },
+    Pong { token: u64 },
+    /// One query with a caller-chosen correlation id.
+    Query { id: u64, query: Query },
+    /// The shape-matched answer to the query with the same `id`.
+    Reply { id: u64, reply: Reply },
+    /// A refusal. `id` names the query it answers, or 0 for
+    /// connection-level errors (malformed frame, pool full).
+    Error {
+        id: u64,
+        code: ErrorCode,
+        message: String,
+    },
+    /// Ask for a counter snapshot.
+    StatsRequest,
+    /// Counter snapshot: `(label, value)` pairs, including store
+    /// geometry (`store_n`, `store_k`).
+    Stats { entries: Vec<(String, u64)> },
+}
+
+const TAG_PING: u8 = 0x01;
+const TAG_PONG: u8 = 0x02;
+const TAG_QUERY: u8 = 0x03;
+const TAG_REPLY: u8 = 0x04;
+const TAG_ERROR: u8 = 0x05;
+const TAG_STATS_REQUEST: u8 = 0x06;
+const TAG_STATS: u8 = 0x07;
+
+const SHAPE_PAIR: u8 = 0;
+const SHAPE_TOPK: u8 = 1;
+const SHAPE_BLOCK: u8 = 2;
+
+// ---- encoding ------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str, cap: usize) {
+    // Truncate at a char boundary rather than fail: error messages are
+    // diagnostics, not data.
+    let mut end = s.len().min(cap);
+    while end > 0 && !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u32(out, end as u32);
+    out.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+fn encode_query(out: &mut Vec<u8>, q: &Query) {
+    match q {
+        Query::Pair { i, j, kind } => {
+            out.push(SHAPE_PAIR);
+            out.push(kind.index() as u8);
+            put_u32(out, *i);
+            put_u32(out, *j);
+        }
+        Query::TopK { i, m, kind } => {
+            out.push(SHAPE_TOPK);
+            out.push(kind.index() as u8);
+            put_u32(out, *i);
+            put_u64(out, *m as u64);
+        }
+        Query::Block { rows, cols, kind } => {
+            out.push(SHAPE_BLOCK);
+            out.push(kind.index() as u8);
+            put_u32(out, rows.len() as u32);
+            put_u32(out, cols.len() as u32);
+            for &r in rows {
+                put_u32(out, r);
+            }
+            for &c in cols {
+                put_u32(out, c);
+            }
+        }
+    }
+}
+
+fn encode_reply(out: &mut Vec<u8>, r: &Reply) {
+    match r {
+        Reply::Pair(d) => {
+            out.push(SHAPE_PAIR);
+            put_f64(out, *d);
+        }
+        Reply::TopK(v) => {
+            out.push(SHAPE_TOPK);
+            put_u32(out, v.len() as u32);
+            for &(j, d) in v {
+                put_u32(out, j);
+                put_f64(out, d);
+            }
+        }
+        Reply::Block(v) => {
+            out.push(SHAPE_BLOCK);
+            put_u32(out, v.len() as u32);
+            for &d in v {
+                put_f64(out, d);
+            }
+        }
+    }
+}
+
+impl Frame {
+    /// Encode to a complete wire frame, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(32);
+        body.push(PROTOCOL_VERSION);
+        match self {
+            Frame::Ping { token } => {
+                body.push(TAG_PING);
+                put_u64(&mut body, *token);
+            }
+            Frame::Pong { token } => {
+                body.push(TAG_PONG);
+                put_u64(&mut body, *token);
+            }
+            Frame::Query { id, query } => {
+                body.push(TAG_QUERY);
+                put_u64(&mut body, *id);
+                encode_query(&mut body, query);
+            }
+            Frame::Reply { id, reply } => {
+                body.push(TAG_REPLY);
+                put_u64(&mut body, *id);
+                encode_reply(&mut body, reply);
+            }
+            Frame::Error { id, code, message } => {
+                body.push(TAG_ERROR);
+                put_u64(&mut body, *id);
+                body.push(code.as_u8());
+                put_str(&mut body, message, MAX_ERROR_MSG_BYTES);
+            }
+            Frame::StatsRequest => {
+                body.push(TAG_STATS_REQUEST);
+            }
+            Frame::Stats { entries } => {
+                body.push(TAG_STATS);
+                let n = entries.len().min(MAX_STATS_ENTRIES);
+                put_u32(&mut body, n as u32);
+                for (label, value) in entries.iter().take(n) {
+                    put_str(&mut body, label, MAX_STATS_LABEL_BYTES);
+                    put_u64(&mut body, *value);
+                }
+            }
+        }
+        debug_assert!(body.len() <= MAX_FRAME_BYTES, "encoder produced an oversized frame");
+        let mut out = Vec::with_capacity(4 + body.len());
+        put_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode a frame payload (the bytes after the length prefix).
+    pub fn decode(payload: &[u8]) -> Result<Frame, ProtoError> {
+        if payload.len() < 2 {
+            return Err(ProtoError::FrameTooSmall(payload.len()));
+        }
+        if payload.len() > MAX_FRAME_BYTES {
+            return Err(ProtoError::FrameTooLarge(payload.len()));
+        }
+        let mut r = Cursor { b: payload, at: 0 };
+        let version = r.u8()?;
+        if version != PROTOCOL_VERSION {
+            return Err(ProtoError::BadVersion(version));
+        }
+        let tag = r.u8()?;
+        let frame = match tag {
+            TAG_PING => Frame::Ping { token: r.u64()? },
+            TAG_PONG => Frame::Pong { token: r.u64()? },
+            TAG_QUERY => {
+                let id = r.u64()?;
+                let query = decode_query(&mut r)?;
+                Frame::Query { id, query }
+            }
+            TAG_REPLY => {
+                let id = r.u64()?;
+                let reply = decode_reply(&mut r)?;
+                Frame::Reply { id, reply }
+            }
+            TAG_ERROR => {
+                let id = r.u64()?;
+                let code = ErrorCode::from_u8(r.u8()?)?;
+                let message = r.str(MAX_ERROR_MSG_BYTES)?;
+                Frame::Error { id, code, message }
+            }
+            TAG_STATS_REQUEST => Frame::StatsRequest,
+            TAG_STATS => {
+                let n = r.u32()? as usize;
+                if n > MAX_STATS_ENTRIES {
+                    return Err(ProtoError::LengthCap {
+                        what: "stats entries",
+                        got: n,
+                        cap: MAX_STATS_ENTRIES,
+                    });
+                }
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let label = r.str(MAX_STATS_LABEL_BYTES)?;
+                    let value = r.u64()?;
+                    entries.push((label, value));
+                }
+                Frame::Stats { entries }
+            }
+            other => return Err(ProtoError::BadTag(other)),
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Best-effort extraction of the correlation id from a `Query` frame
+/// payload that failed to decode, so the error reply can name the
+/// query it answers instead of poisoning the whole connection (an
+/// `Error` with id 0 tells clients the stream itself is broken).
+/// Returns `None` for non-query frames or payloads too short to carry
+/// an id.
+pub fn query_id_of(payload: &[u8]) -> Option<u64> {
+    if payload.len() < 10 || payload[0] != PROTOCOL_VERSION || payload[1] != TAG_QUERY {
+        return None;
+    }
+    Some(u64::from_le_bytes(payload[2..10].try_into().unwrap()))
+}
+
+fn decode_kind(b: u8) -> Result<QueryKind, ProtoError> {
+    QueryKind::from_index(b as usize).ok_or(ProtoError::BadKind(b))
+}
+
+fn decode_query(r: &mut Cursor<'_>) -> Result<Query, ProtoError> {
+    let shape = r.u8()?;
+    let kind = decode_kind(r.u8()?)?;
+    match shape {
+        SHAPE_PAIR => Ok(Query::Pair {
+            i: r.u32()?,
+            j: r.u32()?,
+            kind,
+        }),
+        SHAPE_TOPK => {
+            let i = r.u32()?;
+            let m = r.u64()? as usize;
+            if m > MAX_TOPK_M {
+                return Err(ProtoError::LengthCap {
+                    what: "topk m",
+                    got: m,
+                    cap: MAX_TOPK_M,
+                });
+            }
+            Ok(Query::TopK { i, m, kind })
+        }
+        SHAPE_BLOCK => {
+            let n_rows = r.u32()? as usize;
+            let n_cols = r.u32()? as usize;
+            // MAX_BLOCK_CELLS is enforced here, at decode: a hostile
+            // frame must not get a giant allocation or scan admitted
+            // just by declaring big lengths. (Admission validation in
+            // the coordinator re-checks, plus range-checks indices.)
+            let cells = n_rows.saturating_mul(n_cols);
+            if n_rows > MAX_BLOCK_CELLS || n_cols > MAX_BLOCK_CELLS || cells > MAX_BLOCK_CELLS {
+                return Err(ProtoError::LengthCap {
+                    what: "block cells",
+                    got: cells.max(n_rows).max(n_cols),
+                    cap: MAX_BLOCK_CELLS,
+                });
+            }
+            // Bytes must actually be present before allocating.
+            r.expect_remaining((n_rows + n_cols) * 4)?;
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                rows.push(r.u32()?);
+            }
+            let mut cols = Vec::with_capacity(n_cols);
+            for _ in 0..n_cols {
+                cols.push(r.u32()?);
+            }
+            Ok(Query::Block { rows, cols, kind })
+        }
+        other => Err(ProtoError::BadShape(other)),
+    }
+}
+
+fn decode_reply(r: &mut Cursor<'_>) -> Result<Reply, ProtoError> {
+    let shape = r.u8()?;
+    match shape {
+        SHAPE_PAIR => Ok(Reply::Pair(r.f64()?)),
+        SHAPE_TOPK => {
+            let n = r.u32()? as usize;
+            if n > MAX_TOPK_M {
+                return Err(ProtoError::LengthCap {
+                    what: "topk entries",
+                    got: n,
+                    cap: MAX_TOPK_M,
+                });
+            }
+            r.expect_remaining(n * 12)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let j = r.u32()?;
+                let d = r.f64()?;
+                v.push((j, d));
+            }
+            Ok(Reply::TopK(v))
+        }
+        SHAPE_BLOCK => {
+            let n = r.u32()? as usize;
+            if n > MAX_BLOCK_CELLS {
+                return Err(ProtoError::LengthCap {
+                    what: "block cells",
+                    got: n,
+                    cap: MAX_BLOCK_CELLS,
+                });
+            }
+            r.expect_remaining(n * 8)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.f64()?);
+            }
+            Ok(Reply::Block(v))
+        }
+        other => Err(ProtoError::BadShape(other)),
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.b.len() - self.at < n {
+            return Err(ProtoError::Truncated);
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn expect_remaining(&self, n: usize) -> Result<(), ProtoError> {
+        if self.b.len() - self.at < n {
+            return Err(ProtoError::Truncated);
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self, cap: usize) -> Result<String, ProtoError> {
+        let len = self.u32()? as usize;
+        if len > cap {
+            return Err(ProtoError::LengthCap {
+                what: "string",
+                got: len,
+                cap,
+            });
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| ProtoError::BadUtf8)
+    }
+
+    fn finish(self) -> Result<(), ProtoError> {
+        let left = self.b.len() - self.at;
+        if left > 0 {
+            return Err(ProtoError::Trailing(left));
+        }
+        Ok(())
+    }
+}
+
+// ---- blocking frame I/O --------------------------------------------
+
+/// Either half of a frame read can fail: the transport, or the bytes.
+#[derive(Debug, Error)]
+pub enum FrameReadError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("{0}")]
+    Proto(#[from] ProtoError),
+}
+
+/// Write one frame; returns the bytes put on the wire. Callers batching
+/// several frames should hand in a `BufWriter` and flush once.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<usize> {
+    let bytes = frame.encode();
+    w.write_all(&bytes)?;
+    Ok(bytes.len())
+}
+
+/// Read one length-prefixed frame from a blocking reader. The length
+/// prefix is validated against [`MAX_FRAME_BYTES`] *before* the payload
+/// buffer is allocated.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameReadError> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(ProtoError::FrameTooLarge(len).into());
+    }
+    if len < 2 {
+        return Err(ProtoError::FrameTooSmall(len).into());
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Frame::decode(&payload)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: &Frame) -> Frame {
+        let wire = f.encode();
+        let len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, wire.len() - 4, "length prefix covers the payload");
+        Frame::decode(&wire[4..]).expect("decode")
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        for f in [
+            Frame::Ping { token: 7 },
+            Frame::Pong { token: u64::MAX },
+            Frame::StatsRequest,
+            Frame::Stats {
+                entries: vec![("store_n".into(), 500), ("net_bytes_in".into(), 12345)],
+            },
+            Frame::Error {
+                id: 9,
+                code: ErrorCode::Overloaded,
+                message: "shard queues full".into(),
+            },
+        ] {
+            assert_eq!(round_trip(&f), f);
+        }
+    }
+
+    #[test]
+    fn error_message_truncates_at_cap_not_panics() {
+        let f = Frame::Error {
+            id: 1,
+            code: ErrorCode::Malformed,
+            message: "x".repeat(MAX_ERROR_MSG_BYTES * 2),
+        };
+        match round_trip(&f) {
+            Frame::Error { message, .. } => assert_eq!(message.len(), MAX_ERROR_MSG_BYTES),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_version_and_tag_are_rejected() {
+        let wire = Frame::Ping { token: 1 }.encode();
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 99; // version
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::BadVersion(99))
+        ));
+        let mut payload = wire[4..].to_vec();
+        payload[1] = 0xEE; // tag
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::BadTag(0xEE))
+        ));
+    }
+}

@@ -3,8 +3,13 @@
 //! and estimate any distance on the fly" — across process restarts).
 //!
 //! Format (little-endian):
-//!   magic "SSK1" | u32 n | u32 k | f64 alpha | u64 seed
-//!   | n·k f32 row-major | u64 xxh-style checksum of the payload
+//!   magic "SSK2" | u32 n | u32 k | f64 alpha | u64 seed
+//!   | n·k f32 row-major | u64 xxh-style checksum
+//!
+//! The v2 checksum covers the **header fields and the payload**: a
+//! corrupted header (n, k, alpha, seed) must fail to load, not load
+//! silently with wrong geometry. Legacy `SSK1` files (payload-only
+//! checksum) are still read; new files are always written as `SSK2`.
 
 use super::engine::SketchStore;
 use crate::numerics::SplitMix64;
@@ -12,12 +17,19 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"SSK1";
+const MAGIC_V1: &[u8; 4] = b"SSK1";
+const MAGIC_V2: &[u8; 4] = b"SSK2";
+/// Checksum seeds — the magic bytes as LE integers, so the two
+/// versions can never validate each other's files by accident.
+const CK_SEED_V1: u64 = 0x5353_4B31;
+const CK_SEED_V2: u64 = 0x5353_4B32;
 
-fn checksum(bytes: &[u8]) -> u64 {
-    // SplitMix over 8-byte windows: not cryptographic, catches
-    // truncation/corruption.
-    let mut acc = 0x5353_4B31u64;
+/// SplitMix over 8-byte windows: not cryptographic, catches
+/// truncation/corruption. Foldable: `fold(fold(seed, a), b)` checksums
+/// the concatenation `a ‖ b` as long as `a.len()` is a multiple of 8
+/// (true for the 24-byte header), so header and payload stream through
+/// without copying them into one buffer.
+fn fold(mut acc: u64, bytes: &[u8]) -> u64 {
     for chunk in bytes.chunks(8) {
         let mut w = [0u8; 8];
         w[..chunk.len()].copy_from_slice(chunk);
@@ -26,7 +38,17 @@ fn checksum(bytes: &[u8]) -> u64 {
     acc
 }
 
-/// Write a sketch store to `path`.
+/// The 24 header bytes after the magic, as written to disk.
+fn header_bytes(n: u32, k: u32, alpha: f64, seed: u64) -> [u8; 24] {
+    let mut h = [0u8; 24];
+    h[0..4].copy_from_slice(&n.to_le_bytes());
+    h[4..8].copy_from_slice(&k.to_le_bytes());
+    h[8..16].copy_from_slice(&alpha.to_le_bytes());
+    h[16..24].copy_from_slice(&seed.to_le_bytes());
+    h
+}
+
+/// Write a sketch store to `path` (always the current `SSK2` format).
 pub fn save(store: &SketchStore, path: &Path) -> Result<()> {
     let mut payload = Vec::with_capacity(store.n * store.k * 4);
     for i in 0..store.n {
@@ -34,27 +56,30 @@ pub fn save(store: &SketchStore, path: &Path) -> Result<()> {
             payload.extend_from_slice(&v.to_le_bytes());
         }
     }
+    let head = header_bytes(store.n as u32, store.k as u32, store.alpha, store.seed);
+    let ck = fold(fold(CK_SEED_V2, &head), &payload);
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(store.n as u32).to_le_bytes())?;
-    f.write_all(&(store.k as u32).to_le_bytes())?;
-    f.write_all(&store.alpha.to_le_bytes())?;
-    f.write_all(&store.seed.to_le_bytes())?;
+    f.write_all(MAGIC_V2)?;
+    f.write_all(&head)?;
     f.write_all(&payload)?;
-    f.write_all(&checksum(&payload).to_le_bytes())?;
+    f.write_all(&ck.to_le_bytes())?;
     Ok(())
 }
 
-/// Load a sketch store from `path`, verifying magic, sizes and checksum.
+/// Load a sketch store from `path`, verifying magic, sizes and
+/// checksum. Reads both `SSK2` (checksum over header + payload) and
+/// legacy `SSK1` (checksum over payload only).
 pub fn load(path: &Path) -> Result<SketchStore> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut head = [0u8; 4 + 4 + 4 + 8 + 8];
     f.read_exact(&mut head).context("reading header")?;
-    if &head[0..4] != MAGIC {
-        bail!("not a stablesketch store (bad magic)");
-    }
+    let v2 = match &head[0..4] {
+        m if m == MAGIC_V2 => true,
+        m if m == MAGIC_V1 => false,
+        _ => bail!("not a stablesketch store (bad magic)"),
+    };
     let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
     let k = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
     let alpha = f64::from_le_bytes(head[12..20].try_into().unwrap());
@@ -69,7 +94,12 @@ pub fn load(path: &Path) -> Result<SketchStore> {
     f.read_exact(&mut payload).context("reading payload")?;
     let mut ck = [0u8; 8];
     f.read_exact(&mut ck).context("reading checksum")?;
-    if u64::from_le_bytes(ck) != checksum(&payload) {
+    let want = if v2 {
+        fold(fold(CK_SEED_V2, &head[4..28]), &payload)
+    } else {
+        fold(CK_SEED_V1, &payload)
+    };
+    if u64::from_le_bytes(ck) != want {
         bail!("checksum mismatch (truncated or corrupted store)");
     }
     let mut store = SketchStore::zeros(n, k, alpha, seed);
@@ -132,6 +162,71 @@ mod tests {
         assert!(load(&path).is_err());
         // Garbage magic.
         std::fs::write(&path, b"NOPE").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn every_header_field_is_checksummed() {
+        let dir = std::env::temp_dir().join("ss_io_head");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("store.ssk");
+        save(&sample_store(), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        assert_eq!(&good[0..4], b"SSK2");
+        // Field spans within the file: n, k, alpha, seed (after magic).
+        for (field, span) in [
+            ("n", 4..8),
+            ("k", 8..12),
+            ("alpha", 12..20),
+            ("seed", 20..28),
+        ] {
+            for at in span {
+                let mut bytes = good.clone();
+                bytes[at] ^= 0x01;
+                std::fs::write(&path, &bytes).unwrap();
+                assert!(
+                    load(&path).is_err(),
+                    "flipping byte {at} of header field '{field}' must fail the load"
+                );
+            }
+        }
+        // Unchanged file still loads.
+        std::fs::write(&path, &good).unwrap();
+        assert!(load(&path).is_ok());
+    }
+
+    #[test]
+    fn legacy_ssk1_files_still_load() {
+        let dir = std::env::temp_dir().join("ss_io_v1");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("store.ssk");
+        let s = sample_store();
+        // Write the legacy layout by hand: payload-only checksum under
+        // the old seed constant.
+        let mut payload = Vec::new();
+        for i in 0..s.n {
+            for &v in s.row(i) {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&header_bytes(s.n as u32, s.k as u32, s.alpha, s.seed));
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fold(CK_SEED_V1, &payload).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.n, s.n);
+        assert_eq!(back.k, s.k);
+        assert_eq!(back.alpha, s.alpha);
+        assert_eq!(back.seed, s.seed);
+        for i in 0..s.n {
+            assert_eq!(back.row(i), s.row(i));
+        }
+        // An SSK1 checksum under an SSK2 magic must not validate.
+        let mut crossed = bytes.clone();
+        crossed[0..4].copy_from_slice(MAGIC_V2);
+        std::fs::write(&path, &crossed).unwrap();
         assert!(load(&path).is_err());
     }
 }

@@ -1,0 +1,365 @@
+//! Loopback end-to-end: the network serving layer against a live
+//! coordinator on 127.0.0.1.
+//!
+//! The acceptance contract: distances served over TCP are
+//! **bit-identical** to the in-process coordinator for mixed
+//! Pair/TopK/Block plans across all four estimator kinds, concurrent
+//! clients work, malformed frames never kill the server, backpressure
+//! maps to a typed `Overloaded` error, and the load generator reports
+//! throughput + latency quantiles.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, Reply};
+use stablesketch::server::loadgen::{self, LoadMode, LoadgenConfig, Workload};
+use stablesketch::server::protocol::{read_frame, write_frame, Frame};
+use stablesketch::server::{ClientError, ErrorCode, ServerConfig, SketchClient, SketchServer};
+use stablesketch::sketch::SketchEngine;
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ALL_KINDS: [QueryKind; 4] = [
+    QueryKind::Oq,
+    QueryKind::Gm,
+    QueryKind::Fp,
+    QueryKind::Median,
+];
+
+fn start_stack(
+    n: usize,
+    k: usize,
+    shards: usize,
+    server_cfg: ServerConfig,
+) -> (Arc<Coordinator>, SketchServer, String) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 512,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.2,
+        k,
+        dim: corpus.dim,
+        shards,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Arc::new(Coordinator::start(cfg, store).expect("coordinator"));
+    let server =
+        SketchServer::start(coord.clone(), "127.0.0.1:0", server_cfg).expect("server start");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+/// A mixed plan touching every shape and every estimator kind.
+fn mixed_plan(n: u32, salt: u32) -> Vec<Query> {
+    let mut plan = Vec::new();
+    for (t, &kind) in ALL_KINDS.iter().enumerate() {
+        let t = t as u32;
+        plan.push(Query::Pair {
+            i: (salt + t) % n,
+            j: (salt + 3 * t + 1) % n,
+            kind,
+        });
+        plan.push(Query::TopK {
+            i: (salt + 7 * t) % n,
+            m: 4,
+            kind,
+        });
+        plan.push(Query::Block {
+            rows: vec![salt % n, (salt + 2) % n],
+            cols: vec![(salt + 1) % n, (salt + 5) % n, (salt + 9) % n],
+            kind,
+        });
+    }
+    plan
+}
+
+#[test]
+fn networked_replies_are_bit_identical_to_in_process() {
+    let (coord, server, addr) = start_stack(40, 64, 2, ServerConfig::default());
+    // ≥ 4 concurrent clients, each with its own mixed plan.
+    let mut handles = Vec::new();
+    for c in 0..4u32 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client =
+                SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20))
+                    .expect("connect");
+            let plan = mixed_plan(40, 11 * c + 1);
+            let replies = client.query_plan(&plan).expect("remote plan");
+            (plan, replies)
+        }));
+    }
+    for h in handles {
+        let (plan, remote) = h.join().expect("client thread");
+        let local = coord.query_plan(plan).expect("local plan");
+        assert_eq!(local.len(), remote.len());
+        for (q, (l, r)) in local.iter().zip(&remote).enumerate() {
+            match (l, r) {
+                (Reply::Pair(a), Reply::Pair(b)) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "pair bits differ at {q}")
+                }
+                (Reply::TopK(a), Reply::TopK(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for ((ja, da), (jb, db)) in a.iter().zip(b) {
+                        assert_eq!(ja, jb, "topk neighbour differs at {q}");
+                        assert_eq!(da.to_bits(), db.to_bits(), "topk bits differ at {q}");
+                    }
+                }
+                (Reply::Block(a), Reply::Block(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (da, db) in a.iter().zip(b) {
+                        assert_eq!(da.to_bits(), db.to_bits(), "block bits differ at {q}");
+                    }
+                }
+                other => panic!("shape mismatch at {q}: {other:?}"),
+            }
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn ping_stats_and_remote_helpers_work() {
+    let (coord, server, addr) = start_stack(20, 32, 1, ServerConfig::default());
+    let mut client =
+        SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20)).expect("connect");
+    let rtt = client.ping().expect("ping");
+    assert!(rtt < Duration::from_secs(5));
+    assert_eq!(client.stat("store_n").expect("stats"), Some(20));
+    assert_eq!(client.stat("store_k").expect("stats"), Some(32));
+
+    let d = client.pair(1, 2, QueryKind::Oq).expect("pair");
+    assert!(d.is_finite() && d > 0.0);
+    assert_eq!(client.pair(3, 3, QueryKind::Oq).expect("self pair"), 0.0);
+    let near = client.top_k(0, 5, QueryKind::Gm).expect("topk");
+    assert_eq!(near.len(), 5);
+    assert!(near.windows(2).all(|w| w[0].1 <= w[1].1), "sorted: {near:?}");
+    let block = client
+        .block(vec![0, 1], vec![2, 3, 4], QueryKind::Fp)
+        .expect("block");
+    assert_eq!(block.len(), 6);
+
+    // Server-side validation surfaces as a typed error, connection
+    // survives and keeps answering.
+    match client.pair(0, 10_000, QueryKind::Oq) {
+        Err(ClientError::Server {
+            code: ErrorCode::InvalidQuery,
+            message,
+        }) => assert!(message.contains("out of range"), "{message}"),
+        other => panic!("expected InvalidQuery, got {other:?}"),
+    }
+    assert!(client.pair(1, 4, QueryKind::Oq).is_ok());
+
+    // Network counters made it into the shared metrics.
+    let m = coord.metrics();
+    assert!(m.connections_opened.get() >= 1);
+    assert!(m.net_frames_in.get() >= 5);
+    assert!(m.net_frames_out.get() >= 5);
+    assert!(m.net_bytes_in.get() > 0 && m.net_bytes_out.get() > 0);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_get_error_replies_and_never_kill_the_server() {
+    let (coord, server, addr) = start_stack(12, 32, 1, ServerConfig::default());
+
+    // 1. Well-framed garbage payload: error frame back, connection and
+    //    server both survive.
+    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    let junk = [1u8, 0xEE, 0xAD, 0xBE, 0xEF]; // version ok, tag unknown
+    let mut framed = (junk.len() as u32).to_le_bytes().to_vec();
+    framed.extend_from_slice(&junk);
+    raw.write_all(&framed).expect("write junk");
+    match read_frame(&mut raw).expect("error frame") {
+        Frame::Error { id, code, .. } => {
+            assert_eq!(id, 0);
+            assert_eq!(code, ErrorCode::Malformed);
+        }
+        other => panic!("{other:?}"),
+    }
+    // Same connection still answers a valid query.
+    write_frame(
+        &mut raw,
+        &Frame::Query {
+            id: 9,
+            query: Query::Pair {
+                i: 0,
+                j: 1,
+                kind: QueryKind::Oq,
+            },
+        },
+    )
+    .expect("write query");
+    match read_frame(&mut raw).expect("reply") {
+        Frame::Reply { id: 9, reply } => assert!(reply.try_pair().is_some()),
+        other => panic!("{other:?}"),
+    }
+
+    // 2. Hostile length prefix (4 GiB frame): error frame, then close —
+    //    but the *server* stays up.
+    let mut raw2 = std::net::TcpStream::connect(&addr).expect("raw connect 2");
+    raw2.write_all(&u32::MAX.to_le_bytes()).expect("write len");
+    match read_frame(&mut raw2) {
+        Ok(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Malformed),
+        other => panic!("expected malformed error frame, got {other:?}"),
+    }
+
+    // 3. Abruptly dropped connections don't hurt either.
+    for _ in 0..3 {
+        let s = std::net::TcpStream::connect(&addr).expect("connect-drop");
+        drop(s);
+    }
+
+    // Fresh client: everything still works.
+    let mut client =
+        SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20)).expect("connect");
+    assert!(client.pair(2, 5, QueryKind::Oq).expect("pair").is_finite());
+
+    // 4. A well-framed query whose body fails decode (block over the
+    //    cell cap) errs on its *own* id — not id 0 — so the plan fails
+    //    cleanly and the connection keeps serving.
+    let side: Vec<u32> = (0..2048).map(|r| r % 8).collect();
+    match client.block(side.clone(), side, QueryKind::Oq) {
+        Err(ClientError::Server {
+            code: ErrorCode::InvalidQuery,
+            message,
+        }) => assert!(message.contains("block cells"), "{message}"),
+        other => panic!("expected InvalidQuery for oversized block, got {other:?}"),
+    }
+    assert!(client.pair(1, 2, QueryKind::Oq).expect("pair after refusal").is_finite());
+    assert!(coord.metrics().net_decode_errors.get() >= 3);
+    server.shutdown();
+}
+
+#[test]
+fn connection_pool_is_bounded_with_typed_rejection() {
+    let (_coord, server, addr) = start_stack(10, 32, 1, ServerConfig { max_connections: 1 });
+    let mut first =
+        SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20)).expect("first");
+    assert!(first.ping().is_ok());
+    // Second connection is told why it is refused.
+    let mut raw = std::net::TcpStream::connect(&addr).expect("second connect");
+    match read_frame(&mut raw) {
+        Ok(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::TooManyConnections),
+        other => panic!("expected TooManyConnections, got {other:?}"),
+    }
+    drop(raw);
+    // Freeing the slot re-admits new clients (reader notices EOF within
+    // its read tick).
+    drop(first);
+    let try_once = || -> Result<(), ClientError> {
+        let mut c = SketchClient::connect_with_retry(&addr, 5, Duration::from_millis(50))?;
+        c.ping().map(|_| ())
+    };
+    let mut again = try_once();
+    for _ in 0..20 {
+        if again.is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        again = try_once();
+    }
+    assert!(again.is_ok(), "slot never freed: {:?}", again.err());
+    server.shutdown();
+}
+
+#[test]
+fn overload_maps_to_typed_backpressure_not_disconnect() {
+    // A pipeline this tiny (1 shard, depth 2, slow batches) must shed
+    // load from a flood of pipelined queries — as Overloaded errors on
+    // a live connection, never as a dropped one.
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 8,
+        dim: 256,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.0,
+        k: 16,
+        dim: corpus.dim,
+        shards: 1,
+        max_batch: 1,
+        batch_deadline_us: 2_000,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(1.0, corpus.dim, 16, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let coord = Arc::new(Coordinator::start(cfg, store).expect("coordinator"));
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server");
+    let addr = server.local_addr().to_string();
+    let mut client =
+        SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20)).expect("connect");
+    let plan: Vec<Query> = (0..2_000)
+        .map(|s| Query::Pair {
+            i: (s % 8) as u32,
+            j: ((s + 1) % 8) as u32,
+            kind: QueryKind::Oq,
+        })
+        .collect();
+    let mut saw_overload = false;
+    for _ in 0..20 {
+        match client.query_plan(&plan) {
+            Ok(replies) => assert_eq!(replies.len(), plan.len()),
+            Err(ClientError::Overloaded(_)) => {
+                saw_overload = true;
+                break;
+            }
+            Err(other) => panic!("expected Ok or Overloaded, got {other:?}"),
+        }
+    }
+    // Whether or not the flood outran the worker, the connection must
+    // still be serving.
+    assert!(client.ping().is_ok());
+    if saw_overload {
+        assert!(coord.metrics().net_overload_replies.get() >= 1);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn loadgen_reports_throughput_and_latency_quantiles() {
+    let (_coord, server, addr) = start_stack(30, 32, 2, ServerConfig::default());
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        threads: 2,
+        duration: Duration::from_millis(400),
+        mode: LoadMode::Closed,
+        workload: Workload::Mixed,
+        kind: QueryKind::Oq,
+        topk_m: 4,
+        block_side: 3,
+        seed: 7,
+    })
+    .expect("loadgen");
+    assert!(report.ok > 0, "no queries completed");
+    assert_eq!(report.errors, 0, "unexpected errors");
+    let s = report.summary();
+    assert!(s.contains("qps") && s.contains("p50") && s.contains("p95") && s.contains("p99"));
+
+    // Open loop also produces a sane report.
+    let open = loadgen::run(&LoadgenConfig {
+        addr,
+        threads: 2,
+        duration: Duration::from_millis(400),
+        mode: LoadMode::Open { rate_qps: 200.0 },
+        workload: Workload::Pair,
+        kind: QueryKind::Oq,
+        topk_m: 4,
+        block_side: 3,
+        seed: 8,
+    })
+    .expect("open loadgen");
+    assert!(open.ok > 0);
+    assert!(open.sent <= 200, "open loop must pace itself: {}", open.sent);
+    server.shutdown();
+}

@@ -1,0 +1,347 @@
+//! Wire-format contracts, adversarially:
+//!
+//! * round-trip property tests over randomized `Query`/`Reply` values
+//!   for every variant and estimator kind;
+//! * truncated, corrupted, and oversized frames must decode to a clean
+//!   `Err` — never a panic, never an allocation sized by attacker-
+//!   controlled length fields.
+
+use stablesketch::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::server::protocol::{
+    query_id_of, read_frame, FrameReadError, ProtoError, MAX_FRAME_BYTES, MAX_TOPK_M,
+};
+use stablesketch::server::{ErrorCode, Frame};
+
+fn rand_kind(rng: &mut Xoshiro256pp) -> QueryKind {
+    QueryKind::from_index(rng.below(4) as usize).unwrap()
+}
+
+fn rand_f64(rng: &mut Xoshiro256pp) -> f64 {
+    // Mix magnitudes and specials: bit-exactness must hold for all of
+    // them (NaN compares unequal, so map it to a signalling sentinel
+    // we compare by bits instead).
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f64::INFINITY,
+        3 => f64::MIN_POSITIVE,
+        _ => (rng.uniform() - 0.5) * 1e12,
+    }
+}
+
+fn rand_query(rng: &mut Xoshiro256pp) -> Query {
+    match rng.below(3) {
+        0 => Query::Pair {
+            i: rng.next_u64() as u32,
+            j: rng.next_u64() as u32,
+            kind: rand_kind(rng),
+        },
+        1 => Query::TopK {
+            i: rng.next_u64() as u32,
+            m: rng.below(MAX_TOPK_M as u64 + 1) as usize,
+            kind: rand_kind(rng),
+        },
+        _ => {
+            let rows = (0..rng.below(40) + 1)
+                .map(|_| rng.next_u64() as u32)
+                .collect();
+            let cols = (0..rng.below(40) + 1)
+                .map(|_| rng.next_u64() as u32)
+                .collect();
+            Query::Block {
+                rows,
+                cols,
+                kind: rand_kind(rng),
+            }
+        }
+    }
+}
+
+fn rand_reply(rng: &mut Xoshiro256pp) -> Reply {
+    match rng.below(3) {
+        0 => Reply::Pair(rand_f64(rng)),
+        1 => Reply::TopK(
+            (0..rng.below(50))
+                .map(|_| (rng.next_u64() as u32, rand_f64(rng)))
+                .collect(),
+        ),
+        _ => Reply::Block((0..rng.below(200)).map(|_| rand_f64(rng)).collect()),
+    }
+}
+
+fn round_trip(frame: &Frame) -> Frame {
+    let wire = frame.encode();
+    let len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+    assert_eq!(len, wire.len() - 4);
+    assert!(len <= MAX_FRAME_BYTES);
+    Frame::decode(&wire[4..]).expect("well-formed frame decodes")
+}
+
+#[test]
+fn randomized_query_frames_round_trip() {
+    let mut rng = Xoshiro256pp::new(0xF00D);
+    for _ in 0..500 {
+        let frame = Frame::Query {
+            id: rng.next_u64(),
+            query: rand_query(&mut rng),
+        };
+        assert_eq!(round_trip(&frame), frame);
+    }
+}
+
+#[test]
+fn randomized_reply_frames_round_trip_bit_exact() {
+    let mut rng = Xoshiro256pp::new(0xBEEF);
+    for _ in 0..500 {
+        let frame = Frame::Reply {
+            id: rng.next_u64(),
+            reply: rand_reply(&mut rng),
+        };
+        assert_eq!(round_trip(&frame), frame);
+    }
+    // NaN travels bit-exactly even though it compares unequal.
+    let frame = Frame::Reply {
+        id: 1,
+        reply: Reply::Pair(f64::NAN),
+    };
+    let wire = frame.encode();
+    match Frame::decode(&wire[4..]).unwrap() {
+        Frame::Reply {
+            reply: Reply::Pair(d),
+            ..
+        } => assert_eq!(d.to_bits(), f64::NAN.to_bits()),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn control_and_error_frames_round_trip() {
+    let mut rng = Xoshiro256pp::new(0xCAFE);
+    for code in [
+        ErrorCode::Malformed,
+        ErrorCode::InvalidQuery,
+        ErrorCode::Overloaded,
+        ErrorCode::ShuttingDown,
+        ErrorCode::TooManyConnections,
+        ErrorCode::Internal,
+    ] {
+        let frame = Frame::Error {
+            id: rng.next_u64(),
+            code,
+            message: format!("context for {code:?} — ünïcode ok"),
+        };
+        assert_eq!(round_trip(&frame), frame);
+    }
+    let stats = Frame::Stats {
+        entries: (0..20)
+            .map(|i| (format!("counter_{i}"), rng.next_u64()))
+            .collect(),
+    };
+    assert_eq!(round_trip(&stats), stats);
+    for f in [
+        Frame::Ping { token: 0 },
+        Frame::Pong { token: u64::MAX },
+        Frame::StatsRequest,
+    ] {
+        assert_eq!(round_trip(&f), f);
+    }
+}
+
+#[test]
+fn every_truncation_of_every_variant_errs_cleanly() {
+    let mut rng = Xoshiro256pp::new(0x7A11);
+    let mut frames = vec![
+        Frame::Ping { token: 99 },
+        Frame::StatsRequest,
+        Frame::Stats {
+            entries: vec![("a".into(), 1), ("b".into(), 2)],
+        },
+        Frame::Error {
+            id: 3,
+            code: ErrorCode::Overloaded,
+            message: "busy".into(),
+        },
+    ];
+    for _ in 0..30 {
+        frames.push(Frame::Query {
+            id: rng.next_u64(),
+            query: rand_query(&mut rng),
+        });
+        frames.push(Frame::Reply {
+            id: rng.next_u64(),
+            reply: rand_reply(&mut rng),
+        });
+    }
+    for frame in &frames {
+        let wire = frame.encode();
+        let payload = &wire[4..];
+        for cut in 0..payload.len() {
+            assert!(
+                Frame::decode(&payload[..cut]).is_err(),
+                "prefix of {cut}/{} bytes of {frame:?} decoded",
+                payload.len()
+            );
+        }
+        // Trailing garbage is rejected too (framing said N bytes).
+        let mut long = payload.to_vec();
+        long.push(0);
+        assert!(matches!(
+            Frame::decode(&long),
+            Err(ProtoError::Trailing(1))
+        ));
+    }
+}
+
+#[test]
+fn corrupted_discriminants_err_cleanly() {
+    let frame = Frame::Query {
+        id: 5,
+        query: Query::Pair {
+            i: 1,
+            j: 2,
+            kind: QueryKind::Oq,
+        },
+    };
+    let wire = frame.encode();
+    let payload = &wire[4..];
+    // version | tag | id(8) | shape | kind | ...
+    let mut bad = payload.to_vec();
+    bad[0] = 7;
+    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadVersion(7))));
+    let mut bad = payload.to_vec();
+    bad[1] = 0x77;
+    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadTag(0x77))));
+    let mut bad = payload.to_vec();
+    bad[10] = 9; // shape
+    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadShape(9))));
+    let mut bad = payload.to_vec();
+    bad[11] = 200; // estimator kind
+    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadKind(200))));
+    // Error frame with an unknown code byte.
+    let err = Frame::Error {
+        id: 1,
+        code: ErrorCode::Internal,
+        message: String::new(),
+    };
+    let wire = err.encode();
+    let mut bad = wire[4..].to_vec();
+    bad[10] = 0; // code byte (after version, tag, id)
+    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadCode(0))));
+}
+
+/// A tiny frame declaring enormous interior lengths must be refused by
+/// the caps (and by byte-availability checks) without any allocation
+/// sized by the declared value.
+#[test]
+fn oversized_declared_lengths_are_capped_not_allocated() {
+    // Block query claiming u32::MAX rows/cols in a few bytes.
+    let mut payload = vec![1u8, 0x03]; // version, TAG_QUERY
+    payload.extend_from_slice(&7u64.to_le_bytes()); // id
+    payload.push(2); // SHAPE_BLOCK
+    payload.push(0); // kind oq
+    payload.extend_from_slice(&u32::MAX.to_le_bytes()); // rows
+    payload.extend_from_slice(&u32::MAX.to_le_bytes()); // cols
+    assert!(matches!(
+        Frame::decode(&payload),
+        Err(ProtoError::LengthCap { .. })
+    ));
+
+    // Block just over the cell cap: 1025 × 1024 > 2^20.
+    let mut payload = vec![1u8, 0x03];
+    payload.extend_from_slice(&7u64.to_le_bytes());
+    payload.push(2);
+    payload.push(0);
+    payload.extend_from_slice(&1025u32.to_le_bytes());
+    payload.extend_from_slice(&1024u32.to_le_bytes());
+    assert!(matches!(
+        Frame::decode(&payload),
+        Err(ProtoError::LengthCap { got, cap, .. })
+            if got == 1025 * 1024 && cap == MAX_BLOCK_CELLS
+    ));
+
+    // TopK m over its cap.
+    let mut payload = vec![1u8, 0x03];
+    payload.extend_from_slice(&7u64.to_le_bytes());
+    payload.push(1); // SHAPE_TOPK
+    payload.push(0);
+    payload.extend_from_slice(&0u32.to_le_bytes()); // i
+    payload.extend_from_slice(&(MAX_TOPK_M as u64 + 1).to_le_bytes());
+    assert!(matches!(
+        Frame::decode(&payload),
+        Err(ProtoError::LengthCap { .. })
+    ));
+
+    // TopK reply declaring a huge entry count with no bytes behind it.
+    let mut payload = vec![1u8, 0x04]; // TAG_REPLY
+    payload.extend_from_slice(&7u64.to_le_bytes());
+    payload.push(1); // SHAPE_TOPK
+    payload.extend_from_slice(&(MAX_TOPK_M as u32).to_le_bytes());
+    assert!(matches!(
+        Frame::decode(&payload),
+        Err(ProtoError::Truncated)
+    ));
+
+    // Stats frame declaring many entries with none present.
+    let mut payload = vec![1u8, 0x07]; // TAG_STATS
+    payload.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        Frame::decode(&payload),
+        Err(ProtoError::LengthCap { .. })
+    ));
+}
+
+/// The server must answer a malformed *query* on the query's own id
+/// (an id-0 error means "connection broken" to clients), so the id has
+/// to be recoverable even when the body fails to decode.
+#[test]
+fn query_id_recovered_from_malformed_query_frames() {
+    // Over-cap block query: decode fails, id survives.
+    let mut payload = vec![1u8, 0x03]; // version, TAG_QUERY
+    payload.extend_from_slice(&42u64.to_le_bytes());
+    payload.push(2); // SHAPE_BLOCK
+    payload.push(0); // kind
+    payload.extend_from_slice(&1025u32.to_le_bytes());
+    payload.extend_from_slice(&1024u32.to_le_bytes());
+    assert!(Frame::decode(&payload).is_err());
+    assert_eq!(query_id_of(&payload), Some(42));
+    // Non-query frames and short payloads yield None.
+    let ping = Frame::Ping { token: 1 }.encode();
+    assert_eq!(query_id_of(&ping[4..]), None);
+    assert_eq!(query_id_of(&[1u8, 0x03]), None);
+    assert_eq!(query_id_of(&[]), None);
+}
+
+#[test]
+fn frame_reader_rejects_hostile_length_prefixes() {
+    use std::io::Cursor;
+    // Length prefix beyond the frame cap: refused before allocating.
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+    wire.extend_from_slice(&[0u8; 16]);
+    match read_frame(&mut Cursor::new(&wire)) {
+        Err(FrameReadError::Proto(ProtoError::FrameTooLarge(_))) => {}
+        other => panic!("{other:?}"),
+    }
+    // Sub-minimum length prefix.
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&1u32.to_le_bytes());
+    wire.push(1);
+    match read_frame(&mut Cursor::new(&wire)) {
+        Err(FrameReadError::Proto(ProtoError::FrameTooSmall(1))) => {}
+        other => panic!("{other:?}"),
+    }
+    // Truncated transport: io error, not panic.
+    let good = Frame::Ping { token: 3 }.encode();
+    match read_frame(&mut Cursor::new(&good[..good.len() - 2])) {
+        Err(FrameReadError::Io(_)) => {}
+        other => panic!("{other:?}"),
+    }
+    // And an intact stream of two frames reads both.
+    let mut stream = Vec::new();
+    stream.extend_from_slice(&Frame::Ping { token: 1 }.encode());
+    stream.extend_from_slice(&Frame::StatsRequest.encode());
+    let mut cur = Cursor::new(&stream);
+    assert_eq!(read_frame(&mut cur).unwrap(), Frame::Ping { token: 1 });
+    assert_eq!(read_frame(&mut cur).unwrap(), Frame::StatsRequest);
+}
