@@ -2,10 +2,12 @@
 //! (`sketch`, `query`, `serve`, `experiment`). Kept in the library so the
 //! integration tests can drive them directly.
 
-use crate::coordinator::{Coordinator, Query, QueryKind, Reply};
+use crate::coordinator::{Coordinator, Query, QueryKind, Reply, ShardSpec};
 use crate::estimators::{tables, BatchScratch, EstimatorKind};
 use crate::numerics::{Rng, Xoshiro256pp};
-use crate::server::{LoadMode, LoadgenConfig, ServerConfig, SketchClient, SketchServer, Workload};
+use crate::server::{
+    ClusterClient, LoadMode, LoadgenConfig, ServerConfig, SketchClient, SketchServer, Workload,
+};
 use crate::sketch::SketchEngine;
 use crate::simul::{Corpus, CorpusConfig};
 use crate::util::cli::Args;
@@ -233,19 +235,31 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 
 /// `serve --listen <addr>`: sketch a synthetic corpus and serve it
 /// over TCP until `--duration` seconds elapse (0 = forever), printing
-/// a metrics report every `--stats-every` seconds.
+/// a metrics report every `--stats-every` seconds. With `--shard i/of`
+/// this process becomes one node of an `of`-node cluster: it still
+/// sketches the full (deterministic) corpus but owns only its
+/// contiguous row slice for `TopK` scans, and advertises that slice
+/// through the v3 `ShardMap` frame so `ClusterClient`s can route.
 fn cmd_serve_network(args: &Args) -> Result<()> {
     let (corpus, cfg) = corpus_from_args(args)?;
     let listen = args.req("listen")?.to_string();
     let duration = args.u64_or("duration", 0)?;
     let stats_every = args.u64_or("stats-every", 10)?.max(1);
     let max_connections = args.usize_or("max-conns", 64)?;
+    let shard = match args.get("shard") {
+        Some(s) => Some(
+            ShardSpec::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("invalid --shard '{s}' (expected i/of, e.g. 0/3)"))?,
+        ),
+        None => None,
+    };
     let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
     let store = engine.sketch_all(corpus.as_slice(), corpus.n);
-    let coord = Arc::new(Coordinator::start(cfg.clone(), store)?);
+    let coord = Arc::new(Coordinator::start_sharded(cfg.clone(), store, shard)?);
+    let owned = coord.owned_range();
     let server = SketchServer::start(coord.clone(), &listen, ServerConfig { max_connections })?;
     println!(
-        "serving on {} (n={} k={} alpha={} shards={}, {} max conns); \
+        "serving on {} (n={} k={} alpha={} shards={}, {} max conns{}); \
          try: stablesketch loadgen --connect {}",
         server.local_addr(),
         corpus.n,
@@ -253,6 +267,10 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
         cfg.alpha,
         cfg.shards,
         max_connections,
+        match shard {
+            Some(s) => format!(", cluster shard {s} owning rows {}..{}", owned.start, owned.end),
+            None => String::new(),
+        },
         server.local_addr(),
     );
     let tick = if duration > 0 {
@@ -272,10 +290,18 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `query --connect <addr>`: issue remote queries against a running
-/// `serve --listen` process.
+/// `query --connect <addr>[,<addr>...]`: issue remote queries against
+/// a running `serve --listen` process, or — with several addresses —
+/// against a sharded cluster through the scatter-gather router.
 fn cmd_query_remote(args: &Args) -> Result<()> {
-    let addr = args.req("connect")?;
+    let addrs = crate::server::cluster::split_addrs(args.req("connect")?);
+    if addrs.is_empty() {
+        bail!("--connect needs at least one address");
+    }
+    if addrs.len() > 1 {
+        return cmd_query_cluster(args, &addrs);
+    }
+    let addr = addrs[0].as_str();
     let mut client =
         SketchClient::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     let rtt = client.ping().context("ping")?;
@@ -299,9 +325,35 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `loadgen --connect <addr>`: drive a remote server with an open- or
-/// closed-loop multi-threaded workload and report throughput +
-/// latency quantiles.
+/// Multi-address `query --connect`: shard-map exchange, then the same
+/// queries routed/scatter-gathered across the cluster.
+fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
+    let mut cluster = ClusterClient::connect(addrs).context("connecting to cluster")?;
+    println!("cluster of {} shards over {} rows:", cluster.shard_count(), cluster.rows());
+    let rtts = cluster.ping_all().context("pinging cluster nodes")?;
+    for ((addr, range), (_, rtt)) in cluster.node_ranges().into_iter().zip(rtts) {
+        println!("  {addr}: rows {}..{} (rtt {rtt:.1?})", range.start, range.end);
+    }
+    let i = args.usize_or("i", 0)? as u32;
+    let j = args.usize_or("j", 1)? as u32;
+    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median] {
+        let d = cluster
+            .pair(i, j, kind)
+            .with_context(|| format!("pair query ({i},{j}) kind {kind:?}"))?;
+        println!("{:<6} d_(α)({i},{j}) = {d:.6}", kind.label());
+    }
+    let m = args.usize_or("topk-m", 5)?;
+    let near = cluster.top_k(i, m, QueryKind::Oq).context("scatter-gather topk")?;
+    let pretty: Vec<String> = near.iter().map(|(j, d)| format!("{j} ({d:.4})")).collect();
+    println!("nearest to {i} by oq estimate (merged across shards): {}", pretty.join(", "));
+    println!("{}", cluster.metrics().report());
+    Ok(())
+}
+
+/// `loadgen --connect <addr>[,<addr>...]`: drive a remote server — or,
+/// with several addresses, a sharded cluster through per-thread
+/// scatter-gather routers — with an open- or closed-loop
+/// multi-threaded workload and report throughput + latency quantiles.
 pub fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.req("connect")?.to_string();
     let workload = args.str_or("workload", "pair");

@@ -50,7 +50,7 @@ use crate::util::config::PipelineConfig;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which estimator serves a query.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,6 +142,48 @@ impl Query {
     }
 }
 
+/// Which slice of the cluster's row space this process owns — `index`
+/// of `of` contiguous even shards (`serve --listen --shard i/of`).
+///
+/// A sharded node still holds the *full* replicated sketch store (the
+/// store is the cheap part — `n × k` f32; sketching is deterministic
+/// per row, so every node derives identical sketches from the shared
+/// seed). What the spec partitions is the *compute*: a `TopK` on a
+/// sharded node scans only the owned candidate range, and the cluster
+/// client routes `Pair`s to the owner and splits `Block` rows by
+/// ownership — so an N-node cluster does 1/N of the scan work per node
+/// while every served distance stays bit-identical to a single node's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// This node's shard index, `0 ≤ index < of`.
+    pub index: usize,
+    /// Total shards in the cluster.
+    pub of: usize,
+}
+
+impl ShardSpec {
+    /// Parse the CLI form `i/of` (e.g. `--shard 1/3`). `of ≥ 1` and
+    /// `index < of`.
+    pub fn parse(s: &str) -> Option<ShardSpec> {
+        let (i, of) = s.split_once('/')?;
+        let index: usize = i.trim().parse().ok()?;
+        let of: usize = of.trim().parse().ok()?;
+        (of >= 1 && index < of).then_some(ShardSpec { index, of })
+    }
+
+    /// The rows this shard owns out of `n` total (even contiguous
+    /// split — the map every node and the cluster client agree on).
+    pub fn owned_range(&self, n: usize) -> std::ops::Range<usize> {
+        ShardSet::even(n, self.of).range(self.index)
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.of)
+    }
+}
+
 /// The single-pair convenience form (the original query model); any
 /// `PairQuery` is just a `Query::Pair`.
 #[derive(Debug, Clone, Copy)]
@@ -227,6 +269,7 @@ pub enum SubmitError {
     Shutdown,
 }
 
+#[derive(Debug)]
 pub(crate) struct Job {
     pub query: Query,
     pub seq: usize,
@@ -237,6 +280,11 @@ pub(crate) struct Job {
 /// Everything a worker needs, shared.
 pub(crate) struct Shared {
     pub store: Mutex<Arc<SketchStore>>, // swapped by ingest epochs
+    /// The candidate-row range `TopK` scans (clamped to the live
+    /// store's n at scan time). `0..usize::MAX` on an unsharded node —
+    /// i.e. every row, including ones ingested after start; a sharded
+    /// node owns the fixed slice its `ShardSpec` carved at start.
+    pub owned: std::ops::Range<usize>,
     /// Row count of the published snapshot, mirrored atomically so the
     /// per-query admission check ([`Coordinator::submit`] — the
     /// network hot path, one call per connection-reader query) does
@@ -274,21 +322,47 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     ingest: Mutex<StreamingSketcher>,
     config: PipelineConfig,
+    shard: Option<ShardSpec>,
+    started: Instant,
 }
 
 impl Coordinator {
-    /// Start workers over an existing sketch store.
+    /// Start workers over an existing sketch store, serving every row
+    /// (a single-node deployment, or one not yet clustered).
     pub fn start(config: PipelineConfig, store: SketchStore) -> Result<Coordinator> {
+        Self::start_sharded(config, store, None)
+    }
+
+    /// Start workers owning only the row slice of `shard` (when given)
+    /// — one node of a multi-process cluster. The store passed in is
+    /// still the full replicated store (see [`ShardSpec`]); `shard`
+    /// restricts the `TopK` candidate scan and is advertised to
+    /// clients through the wire protocol's `ShardMap` frame.
+    pub fn start_sharded(
+        config: PipelineConfig,
+        store: SketchStore,
+        shard: Option<ShardSpec>,
+    ) -> Result<Coordinator> {
         if store.k != config.k {
             bail!("store k={} != config k={}", store.k, config.k);
+        }
+        if let Some(s) = shard {
+            if s.of == 0 || s.index >= s.of {
+                bail!("invalid shard spec {}/{}", s.index, s.of);
+            }
         }
         let alpha = config.alpha;
         let k = config.k;
         let n = store.n;
+        let owned = match shard {
+            Some(s) => s.owned_range(n),
+            None => 0..usize::MAX,
+        };
         let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, n);
         let shared = Arc::new(Shared {
             store_n: AtomicUsize::new(n),
             store: Mutex::new(Arc::new(store)),
+            owned,
             oq: OptimalQuantile::new(alpha, k),
             gm: GeometricMean::new(alpha, k),
             fp: FractionalPower::new(alpha, k),
@@ -320,6 +394,8 @@ impl Coordinator {
             workers,
             ingest: Mutex::new(ingest),
             config,
+            shard,
+            started: Instant::now(),
         })
     }
 
@@ -329,6 +405,29 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &PipelineMetrics {
         &self.shared.metrics
+    }
+
+    /// This node's slice of the cluster (None = owns everything).
+    pub fn shard_spec(&self) -> Option<ShardSpec> {
+        self.shard
+    }
+
+    /// The row range this node's `TopK` scans cover, clamped to the
+    /// current store — what the `ShardMap` wire frame advertises.
+    pub fn owned_range(&self) -> std::ops::Range<usize> {
+        let n = self.shared.store_n.load(Ordering::Acquire);
+        self.shared.owned.start.min(n)..self.shared.owned.end.min(n)
+    }
+
+    /// Per-shard-worker queue depths (the `Stats` frame's per-node
+    /// health section reports these for client-side balancing).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.router.depths()
+    }
+
+    /// Time since the pipeline started (per-node health).
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     /// The store snapshot currently serving new queries (the latest

@@ -43,7 +43,12 @@ impl Router {
         let c = self.counter.fetch_add(1, Ordering::Relaxed);
         let h = SplitMix64::hash(self.seed, c);
         let a = (h % n as u64) as usize;
-        let b = ((h >> 32) % n as u64) as usize;
+        // The second probe must be *distinct*: drawing it independently
+        // from the high half of the hash can collide with `a`, and then
+        // the Full-retry pushes the same full queue twice — reporting
+        // backpressure while another queue sits empty. Offsetting by
+        // 1 + (h_hi mod n−1) keeps b uniform over the other n−1 queues.
+        let b = (a + 1 + ((h >> 32) % (n as u64 - 1)) as usize) % n;
         let (first, second) = if self.queues[a].depth() <= self.queues[b].depth() {
             (a, b)
         } else {
@@ -64,6 +69,67 @@ impl Router {
     pub fn close_all(&self) {
         for q in &self.queues {
             q.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Query, QueryKind};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn job(reply: &mpsc::Sender<(usize, crate::coordinator::Reply)>) -> Job {
+        Job {
+            query: Query::Pair {
+                i: 0,
+                j: 1,
+                kind: QueryKind::Oq,
+            },
+            seq: 0,
+            submitted: Instant::now(),
+            reply: reply.clone(),
+        }
+    }
+
+    /// Regression for the probe-collision bug: with one full queue and
+    /// one empty queue, routing must never fail. Before forcing the
+    /// second probe distinct, both probes could land on the full queue
+    /// (low and high hash halves colliding), and the Full-retry pushed
+    /// the *same* full queue twice — spurious backpressure while the
+    /// other queue sat empty.
+    #[test]
+    fn one_full_one_empty_queue_never_fails_to_route() {
+        let full = Arc::new(BoundedQueue::new(4));
+        let empty = Arc::new(BoundedQueue::new(1024));
+        let (tx, _rx) = mpsc::channel();
+        for _ in 0..4 {
+            full.push(job(&tx)).expect("prefill");
+        }
+        let router = Router::new(vec![full.clone(), empty.clone()], 0xDECAF);
+        for r in 0..512 {
+            router.route(job(&tx)).unwrap_or_else(|_| {
+                panic!("route {r} failed with an empty queue available")
+            });
+        }
+        assert_eq!(full.depth(), 4, "full queue untouched");
+        assert_eq!(empty.depth(), 512, "all jobs landed on the empty queue");
+    }
+
+    /// The distinct-probe construction covers every queue pair, not
+    /// just adjacent ones: over many routes on idle equal-depth queues,
+    /// every queue receives traffic.
+    #[test]
+    fn probes_spread_over_all_queues() {
+        let queues: Vec<_> = (0..5).map(|_| Arc::new(BoundedQueue::new(4096))).collect();
+        let (tx, _rx) = mpsc::channel();
+        let router = Router::new(queues.clone(), 7);
+        for _ in 0..2_000 {
+            router.route(job(&tx)).expect("route");
+        }
+        for (i, q) in queues.iter().enumerate() {
+            assert!(q.depth() > 0, "queue {i} never chosen");
         }
     }
 }

@@ -1,6 +1,9 @@
 //! Row-range shard assignment with rebalancing — used by the *ingest*
-//! side to partition turnstile streams across ingest workers, and by
-//! bulk sketching to split a corpus into projection jobs.
+//! side to partition turnstile streams across ingest workers, by bulk
+//! sketching to split a corpus into projection jobs, and by the
+//! multi-node serving layer as the cluster's row → node ownership map
+//! (`server::cluster` builds a `ShardSet` from the per-node `ShardMap`
+//! frames and routes every query through [`ShardSet::owner`]).
 //!
 //! (Query-side load balancing is the router's power-of-two-choices; this
 //! module owns the data-partitioning maps.)
@@ -52,18 +55,38 @@ impl ShardSet {
         ShardSet { bounds }
     }
 
+    /// Reconstruct from explicit bounds (`bounds[s]..bounds[s+1]` is
+    /// shard s's range) — how the cluster client rebuilds the row map
+    /// from per-node `ShardMap` frames. Rejects anything that is not a
+    /// partition: fewer than two entries, a nonzero origin, or a
+    /// decreasing bound.
+    pub fn from_bounds(bounds: Vec<usize>) -> Option<ShardSet> {
+        if bounds.len() < 2 || bounds[0] != 0 || bounds.windows(2).any(|w| w[0] > w[1]) {
+            return None;
+        }
+        Some(ShardSet { bounds })
+    }
+
     pub fn shards(&self) -> usize {
         self.bounds.len() - 1
     }
 
+    /// Total rows covered (the exclusive upper bound of the last shard).
+    pub fn rows(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
     /// Which shard owns row i.
+    ///
+    /// `bounds` may contain duplicates: `weighted` under extreme skew
+    /// produces zero-width shards, and `binary_search` over duplicates
+    /// returns *any* matching index — which can be an empty shard whose
+    /// range does not contain the row. `partition_point` instead finds
+    /// the first bound strictly greater than `row`; the shard just
+    /// before it is the unique non-empty owner.
     pub fn owner(&self, row: usize) -> usize {
-        assert!(row < *self.bounds.last().unwrap(), "row {row} out of range");
-        // binary search over bounds
-        match self.bounds.binary_search(&row) {
-            Ok(exact) => exact.min(self.shards() - 1),
-            Err(ins) => ins - 1,
-        }
+        assert!(row < self.rows(), "row {row} out of range");
+        self.bounds.partition_point(|&b| b <= row) - 1
     }
 
     pub fn range(&self, shard: usize) -> std::ops::Range<usize> {
@@ -75,12 +98,9 @@ impl ShardSet {
     /// (row_start, row_end, from, to) move descriptors.
     pub fn rebalance(&self, costs: &[f64]) -> (ShardSet, Vec<(usize, usize, usize, usize)>) {
         assert_eq!(costs.len(), self.shards());
-        let n = *self.bounds.last().unwrap();
+        let n = self.rows();
         let new = ShardSet::weighted(n, costs);
         let mut moves = Vec::new();
-        for row_block in 0..self.shards().max(new.shards()) {
-            let _ = row_block;
-        }
         // Compute ownership diffs as maximal runs.
         let mut row = 0usize;
         while row < n {
@@ -135,6 +155,74 @@ mod tests {
         let slow = s.range(1).len();
         assert!(fast > 3 * slow, "fast {fast} slow {slow}");
         assert_eq!(fast + slow, 100);
+    }
+
+    /// Regression for the duplicate-bounds ownership bug: `weighted`
+    /// under extreme skew produces zero-width shards (duplicate
+    /// bounds), and the old `binary_search`-based `owner` could return
+    /// an *empty* shard whose range does not contain the row.
+    #[test]
+    fn owner_contains_row_under_extreme_weights() {
+        let s = ShardSet::weighted(10, &[1.0, 1000.0, 1.0]);
+        assert!(
+            (0..s.shards()).any(|i| s.range(i).is_empty()),
+            "expected a zero-width shard under 1000x skew"
+        );
+        for row in 0..10 {
+            let o = s.owner(row);
+            assert!(s.range(o).contains(&row), "row {row} -> shard {o} ({:?})", s.range(o));
+        }
+    }
+
+    /// Property test over skewed weighted splits (and over-sharded even
+    /// splits): for every row, the owning shard's range contains it,
+    /// and the ranges partition the row space.
+    #[test]
+    fn owner_is_inverse_of_range_for_all_rows_property() {
+        use crate::numerics::{Rng, Xoshiro256pp};
+        let mut cases: Vec<(usize, Vec<f64>)> = vec![
+            (10, vec![1.0, 1000.0, 1.0]),
+            (10, vec![1000.0, 1.0, 1000.0, 1.0]),
+            (1, vec![5.0, 5.0, 5.0]),
+            (103, vec![1.0, 1e6, 1e6, 1.0, 1e6]),
+            (7, vec![1e9, 1.0]),
+            (3, vec![1.0; 8]), // more shards than rows
+        ];
+        let mut rng = Xoshiro256pp::new(0x5AAD);
+        for _ in 0..200 {
+            let n = rng.below(120) as usize + 1;
+            let shards = rng.below(8) as usize + 1;
+            let weights: Vec<f64> = (0..shards)
+                .map(|_| 10f64.powf(rng.uniform() * 12.0 - 6.0))
+                .collect();
+            cases.push((n, weights));
+        }
+        for (n, weights) in cases {
+            for s in [ShardSet::weighted(n, &weights), ShardSet::even(n, weights.len())] {
+                let covered: usize = (0..s.shards()).map(|i| s.range(i).len()).sum();
+                assert_eq!(covered, n, "n={n} weights={weights:?}");
+                for row in 0..n {
+                    let o = s.owner(row);
+                    assert!(
+                        s.range(o).contains(&row),
+                        "row {row} -> shard {o} range {:?} (n={n} weights={weights:?})",
+                        s.range(o)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_bounds_validates_partitions() {
+        let s = ShardSet::from_bounds(vec![0, 5, 5, 10]).expect("valid bounds");
+        assert_eq!(s.shards(), 3);
+        assert_eq!(s.rows(), 10);
+        assert_eq!(s.owner(5), 2, "duplicate bound resolves to the non-empty shard");
+        assert!(ShardSet::from_bounds(vec![]).is_none());
+        assert!(ShardSet::from_bounds(vec![0]).is_none());
+        assert!(ShardSet::from_bounds(vec![1, 5]).is_none(), "nonzero origin");
+        assert!(ShardSet::from_bounds(vec![0, 5, 3]).is_none(), "decreasing");
     }
 
     #[test]

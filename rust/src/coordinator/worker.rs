@@ -70,7 +70,16 @@ fn execute(
         }
         Query::TopK { i, m, .. } => {
             let i = *i as usize;
-            let m = (*m).min(store.n.saturating_sub(1));
+            // Candidates are the *owned* row range (the whole store on
+            // an unsharded node): a sharded node contributes the
+            // partial top-m over its slice, and the cluster client
+            // merges partials by (distance, row) — the same order this
+            // scan produces — so the merged result is bit-identical to
+            // a single node scanning everything.
+            let lo = shared.owned.start.min(store.n);
+            let hi = shared.owned.end.min(store.n);
+            let candidates = (hi - lo).saturating_sub(usize::from(lo <= i && i < hi));
+            let m = (*m).min(candidates);
             let anchor = store.row(i);
             // Bounded sorted buffer (ascending): insertion beats a heap
             // for the small m of kNN serving, and the reply comes out
@@ -79,7 +88,7 @@ fn execute(
             // path streams instead so it never holds n distances.)
             let mut best: Vec<(u32, f64)> = Vec::with_capacity(m + 1);
             let mut scanned = 0u64;
-            for j in 0..store.n {
+            for j in lo..hi {
                 if j == i {
                     continue;
                 }

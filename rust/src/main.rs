@@ -37,12 +37,14 @@ USAGE: stablesketch <subcommand> [options]
 
   sketch      --n 1000 --dim 4096 --k 64 --alpha 1.0 [--out sketches.json]
   query       --i 0 --j 1 [--estimator oq|gm|fp|hm|median] (uses sketch run inline)
-              [--connect 127.0.0.1:7878]  (queries a serve --listen process instead)
+              [--connect 127.0.0.1:7878]  (queries a serve --listen process instead;
+              a comma-separated address list queries a sharded cluster)
   serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
               [--workload pair|topk|block|mixed] [--topk-m 10] [--block-side 8]
-              [--listen 127.0.0.1:7878 [--duration 0] [--stats-every 10] [--max-conns 64]]
-  loadgen     --connect 127.0.0.1:7878 [--threads 4] [--duration 10] [--rate 0]
-              [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median]
+              [--listen 127.0.0.1:7878 [--duration 0] [--stats-every 10] [--max-conns 64]
+               [--shard 0/3]]  (--shard i/of = one node of an of-node cluster)
+  loadgen     --connect 127.0.0.1:7878[,127.0.0.1:7879,...] [--threads 4] [--duration 10]
+              [--rate 0] [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median]
               [--topk-m 10] [--block-side 8]
   experiment  fig1|fig2|fig3|fig4|fig5|fig6|fig7 [--fast]
   gen-tables  [--reps 200000] [--out rust/src/estimators/tables_data.rs]

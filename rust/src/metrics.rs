@@ -244,9 +244,99 @@ impl PipelineMetrics {
     }
 }
 
+/// Client-side counters for one remote node of a sharded cluster —
+/// the peer of the per-node health the server reports in its `Stats`
+/// frame. Kept by the cluster router (`server::cluster::ClusterClient`)
+/// so callers can see where their queries went and which nodes are
+/// flapping.
+#[derive(Debug)]
+pub struct NodeMetrics {
+    pub addr: String,
+    /// Sub-queries routed to this node (scatter fan-out counts once
+    /// per node touched).
+    pub routed: Counter,
+    /// Sub-plans that failed on this node after its reconnect retry.
+    pub errors: Counter,
+    /// Reconnect attempts after an I/O failure.
+    pub reconnects: Counter,
+    /// Sub-plans currently in flight on this node.
+    pub inflight: Gauge,
+}
+
+/// Per-cluster metrics bundle: one [`NodeMetrics`] per node plus
+/// whole-plan counters.
+#[derive(Debug)]
+pub struct ClusterMetrics {
+    /// Query plans executed through the cluster router.
+    pub plans: Counter,
+    /// Sub-queries produced by routing/scatter (≥ queries in the plan:
+    /// a `TopK` fans out to every node).
+    pub subqueries: Counter,
+    nodes: Vec<NodeMetrics>,
+}
+
+impl ClusterMetrics {
+    pub fn new<I: IntoIterator<Item = String>>(addrs: I) -> Self {
+        Self {
+            plans: Counter::default(),
+            subqueries: Counter::default(),
+            nodes: addrs
+                .into_iter()
+                .map(|addr| NodeMetrics {
+                    addr,
+                    routed: Counter::default(),
+                    errors: Counter::default(),
+                    reconnects: Counter::default(),
+                    inflight: Gauge::default(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn node(&self, i: usize) -> &NodeMetrics {
+        &self.nodes[i]
+    }
+
+    pub fn nodes(&self) -> &[NodeMetrics] {
+        &self.nodes
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "cluster: {} plans, {} subqueries",
+            self.plans.get(),
+            self.subqueries.get()
+        );
+        for (i, n) in self.nodes.iter().enumerate() {
+            s.push_str(&format!(
+                " | node {i} ({}): {} routed, {} inflight, {} reconnects, {} errors",
+                n.addr,
+                n.routed.get(),
+                n.inflight.get().max(0),
+                n.reconnects.get(),
+                n.errors.get(),
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cluster_metrics_report_names_every_node() {
+        let m = ClusterMetrics::new(["a:1".to_string(), "b:2".to_string()]);
+        m.plans.inc();
+        m.node(0).routed.add(3);
+        m.node(1).reconnects.inc();
+        let r = m.report();
+        assert!(r.contains("node 0 (a:1): 3 routed"), "{r}");
+        assert!(r.contains("node 1 (b:2)"), "{r}");
+        assert!(r.contains("1 reconnects"), "{r}");
+        assert_eq!(m.nodes().len(), 2);
+    }
 
     #[test]
     fn histogram_quantiles_bracket_data() {

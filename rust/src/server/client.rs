@@ -9,7 +9,9 @@
 //! backpressure ([`ClientError::Overloaded`]) split out so load
 //! generators and retry loops can treat it as a normal signal.
 
-use super::protocol::{read_frame, write_frame, ErrorCode, Frame, FrameReadError, ProtoError};
+use super::protocol::{
+    read_frame, write_frame, ErrorCode, Frame, FrameReadError, ProtoError, ShardMapInfo,
+};
 use crate::coordinator::{Query, QueryKind, Reply};
 use std::io::{BufWriter, Write};
 use std::net::TcpStream;
@@ -149,6 +151,18 @@ impl SketchClient {
             Frame::Stats { entries } => Ok(entries),
             Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
             _ => Err(ClientError::Unexpected("non-stats reply to stats request")),
+        }
+    }
+
+    /// Ask the server which slice of the cluster row space it owns
+    /// (v3). A single-node server answers shard 0 of 1 owning
+    /// `0..store_n` — so every server is a valid one-node cluster.
+    pub fn shard_map(&mut self) -> Result<ShardMapInfo, ClientError> {
+        write_frame(&mut self.stream, &Frame::ShardMapRequest)?;
+        match self.read()? {
+            Frame::ShardMap(info) => Ok(info),
+            Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
+            _ => Err(ClientError::Unexpected("non-shard-map reply to shard map request")),
         }
     }
 

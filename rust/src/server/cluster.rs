@@ -1,0 +1,601 @@
+//! The client-side cluster router: scatter-gather over a set of
+//! `serve --listen --shard i/of` nodes.
+//!
+//! Topology (the ROADMAP's multi-node open item):
+//!
+//! ```text
+//!          ClusterClient
+//!     shard map: ShardSet (row → node), built from per-node
+//!     ShardMap frames at connect and validated to tile 0..rows
+//!          │
+//!          ├─ Pair{i,j}     ──► owner(i)                 (1 node)
+//!          ├─ TopK{i,m}     ──► every node: partial top-m over its
+//!          │                    owned rows; merged by (distance, row)
+//!          └─ Block{rows,·} ──► rows split by owner; sub-blocks
+//!                               reassembled in request order
+//! ```
+//!
+//! Every node holds the full replicated sketch store (sketching is
+//! deterministic per row), but *owns* one contiguous row slice for
+//! compute: its `TopK` scans only that slice, and block rows land on
+//! their owners — so an N-node cluster does ~1/N of the scan work per
+//! node while every gathered reply stays **bit-identical** to a
+//! single node serving the same corpus (`rust/tests/cluster_e2e.rs`
+//! enforces this).
+//!
+//! Failure semantics: each node gets one reconnect-and-retry per
+//! sub-plan; a node that stays down surfaces as a typed
+//! [`ClusterError::NodeFailed`] naming the node and shard — never a
+//! hang, and never a silently partial result.
+
+use super::client::{ClientError, SketchClient};
+use super::protocol::{ShardMapInfo, MAX_TOPK_M};
+use crate::coordinator::{Query, QueryKind, Reply, ShardSet, MAX_BLOCK_CELLS};
+use crate::metrics::{ClusterMetrics, NodeMetrics};
+use std::time::Duration;
+use thiserror::Error;
+
+/// Split a `--connect` style address list (`host:port[,host:port...]`)
+/// into trimmed, non-empty addresses — the one parser every caller
+/// (CLI, loadgen) shares, so separator handling cannot diverge.
+pub fn split_addrs(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect()
+}
+
+/// Typed cluster-level failure. Partial failures name the node so
+/// callers can retry, drop the node, or alert on it.
+#[derive(Debug, Error)]
+pub enum ClusterError {
+    #[error("no server addresses given")]
+    NoAddresses,
+    #[error("connecting to {addr}: {source}")]
+    Connect {
+        addr: String,
+        #[source]
+        source: ClientError,
+    },
+    /// The shard-map exchange produced an inconsistent or incomplete
+    /// cluster view (wrong shard count, duplicate index, ranges that
+    /// do not tile the row space, disagreeing totals).
+    #[error("shard map exchange with {addr}: {detail}")]
+    ShardMap { addr: String, detail: String },
+    /// A node failed mid-plan (after its one reconnect retry) — the
+    /// typed partial-failure error for scatter-gather plans.
+    #[error("node {addr} (shard {shard}) failed: {source}")]
+    NodeFailed {
+        addr: String,
+        shard: usize,
+        #[source]
+        source: ClientError,
+    },
+    /// A node shed this plan under backpressure — the cluster mirror
+    /// of [`ClientError::Overloaded`]: a normal signal (reduce offered
+    /// load or retry with jitter), not a node failure, and not counted
+    /// in the node's error metric.
+    #[error("node {addr} (shard {shard}) overloaded: {message}")]
+    Overloaded {
+        addr: String,
+        shard: usize,
+        message: String,
+    },
+    /// The plan failed client-side admission (row out of range,
+    /// oversized block) before touching any node.
+    #[error("invalid query: {0}")]
+    Invalid(String),
+    /// A node answered with a reply shape that does not match its
+    /// sub-query.
+    #[error("reply shape from {addr} does not match the sub-query shape")]
+    ShapeMismatch { addr: String },
+}
+
+struct Node {
+    addr: String,
+    client: SketchClient,
+}
+
+/// A connected view of a sharded cluster: one [`SketchClient`] per
+/// node plus the validated row → node map. All routing happens here;
+/// the server side stays a plain single-node protocol speaker.
+pub struct ClusterClient {
+    nodes: Vec<Node>,
+    map: ShardSet,
+    rows: usize,
+    metrics: ClusterMetrics,
+}
+
+/// How a plan slot's sub-replies are reassembled.
+enum Gather {
+    /// Pair: passthrough of the owning node's reply.
+    Pair,
+    /// TopK: merge per-node partial top-m lists by (distance, row).
+    TopK { m: usize },
+    /// Block: `positions[node]` holds the original row positions of
+    /// the rows sent to `node`; sub-blocks are scattered back into a
+    /// `rows × cols` row-major buffer.
+    Block {
+        positions: Vec<Vec<usize>>,
+        n_rows: usize,
+        n_cols: usize,
+    },
+}
+
+impl ClusterClient {
+    /// Dial every node, run the shard-map exchange, and validate that
+    /// the advertised shards tile the row space exactly: every index
+    /// `0..count` present once, every range contiguous from 0 to
+    /// `rows`, every node agreeing on `count` and `rows`. One address
+    /// per shard — a single address is a valid 1-shard cluster.
+    pub fn connect(addrs: &[String]) -> Result<ClusterClient, ClusterError> {
+        if addrs.is_empty() {
+            return Err(ClusterError::NoAddresses);
+        }
+        let mut dialed: Vec<(String, SketchClient, ShardMapInfo)> = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let mut client = SketchClient::connect_with_retry(addr, 10, Duration::from_millis(50))
+                .map_err(|source| ClusterError::Connect {
+                    addr: addr.clone(),
+                    source,
+                })?;
+            let info = client.shard_map().map_err(|e| ClusterError::ShardMap {
+                addr: addr.clone(),
+                detail: e.to_string(),
+            })?;
+            dialed.push((addr.clone(), client, info));
+        }
+        let count = dialed[0].2.count;
+        let rows = dialed[0].2.rows;
+        if count as usize != addrs.len() {
+            return Err(ClusterError::ShardMap {
+                addr: dialed[0].0.clone(),
+                detail: format!(
+                    "cluster has {count} shards but {} addresses were given",
+                    addrs.len()
+                ),
+            });
+        }
+        let mut slots: Vec<Option<(String, SketchClient, ShardMapInfo)>> =
+            (0..count).map(|_| None).collect();
+        for (addr, client, info) in dialed {
+            if info.count != count || info.rows != rows {
+                return Err(ClusterError::ShardMap {
+                    addr,
+                    detail: format!(
+                        "node disagrees on cluster geometry: count={} rows={} \
+                         (expected count={count} rows={rows})",
+                        info.count, info.rows
+                    ),
+                });
+            }
+            if info.index >= count {
+                return Err(ClusterError::ShardMap {
+                    addr,
+                    detail: format!("shard index {} out of range (count {count})", info.index),
+                });
+            }
+            let slot = &mut slots[info.index as usize];
+            if slot.is_some() {
+                return Err(ClusterError::ShardMap {
+                    addr,
+                    detail: format!("duplicate shard index {}", info.index),
+                });
+            }
+            *slot = Some((addr, client, info));
+        }
+        // All slots filled (count == addrs.len() and no duplicates).
+        let mut nodes = Vec::with_capacity(count as usize);
+        let mut bounds = vec![0usize];
+        for slot in slots {
+            let (addr, client, info) = slot.expect("every shard slot filled");
+            let expect_start = *bounds.last().unwrap() as u64;
+            if info.start != expect_start || info.end < info.start || info.end > rows {
+                return Err(ClusterError::ShardMap {
+                    addr,
+                    detail: format!(
+                        "shard {} owns rows {}..{} which does not continue the map at {expect_start}",
+                        info.index, info.start, info.end
+                    ),
+                });
+            }
+            bounds.push(info.end as usize);
+            nodes.push(Node { addr, client });
+        }
+        if *bounds.last().unwrap() != rows as usize {
+            return Err(ClusterError::ShardMap {
+                addr: nodes.last().expect("at least one node").addr.clone(),
+                detail: format!(
+                    "shard ranges cover {} of {rows} rows",
+                    bounds.last().unwrap()
+                ),
+            });
+        }
+        let map = ShardSet::from_bounds(bounds).expect("validated bounds form a partition");
+        let metrics = ClusterMetrics::new(nodes.iter().map(|n| n.addr.clone()));
+        Ok(ClusterClient {
+            nodes,
+            map,
+            rows: rows as usize,
+            metrics,
+        })
+    }
+
+    /// Total rows served by the cluster.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Which node (= shard index) owns a row.
+    pub fn owner_of(&self, row: usize) -> usize {
+        self.map.owner(row)
+    }
+
+    /// `(address, owned row range)` per node, in shard order.
+    pub fn node_ranges(&self) -> Vec<(String, std::ops::Range<usize>)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(s, n)| (n.addr.clone(), self.map.range(s)))
+            .collect()
+    }
+
+    /// Client-side per-node routing counters.
+    pub fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+
+    /// Round-trip a ping to every node; per-node latency in shard
+    /// order.
+    pub fn ping_all(&mut self) -> Result<Vec<(String, Duration)>, ClusterError> {
+        let mut out = Vec::with_capacity(self.nodes.len());
+        for (shard, node) in self.nodes.iter_mut().enumerate() {
+            let rtt = node.client.ping().map_err(|source| ClusterError::NodeFailed {
+                addr: node.addr.clone(),
+                shard,
+                source,
+            })?;
+            out.push((node.addr.clone(), rtt));
+        }
+        Ok(out)
+    }
+
+    /// One pairwise distance (routed to the owner of row `i`).
+    pub fn pair(&mut self, i: u32, j: u32, kind: QueryKind) -> Result<f64, ClusterError> {
+        let replies = self.query_plan(&[Query::Pair { i, j, kind }])?;
+        replies[0]
+            .try_pair()
+            .ok_or_else(|| ClusterError::Invalid("Pair plan produced a non-Pair reply".into()))
+    }
+
+    /// The `m` nearest neighbours of row `i`, merged across all shards
+    /// (ascending distance, ties by row index — the single-node order).
+    pub fn top_k(
+        &mut self,
+        i: u32,
+        m: usize,
+        kind: QueryKind,
+    ) -> Result<Vec<(u32, f64)>, ClusterError> {
+        let mut replies = self.query_plan(&[Query::TopK { i, m, kind }])?;
+        replies
+            .pop()
+            .and_then(Reply::try_top_k)
+            .ok_or_else(|| ClusterError::Invalid("TopK plan produced a non-TopK reply".into()))
+    }
+
+    /// The `rows × cols` distance sub-matrix, row-major, reassembled
+    /// from per-owner sub-blocks.
+    pub fn block(
+        &mut self,
+        rows: Vec<u32>,
+        cols: Vec<u32>,
+        kind: QueryKind,
+    ) -> Result<Vec<f64>, ClusterError> {
+        let mut replies = self.query_plan(&[Query::Block { rows, cols, kind }])?;
+        replies
+            .pop()
+            .and_then(Reply::try_block)
+            .ok_or_else(|| ClusterError::Invalid("Block plan produced a non-Block reply".into()))
+    }
+
+    /// Execute a query plan across the cluster: route/split every
+    /// query, pipeline each node's sub-plan on its own thread
+    /// (scatter), then merge per-node replies back into input order
+    /// (gather). Replies are shape-matched to their queries and
+    /// bit-identical to a single node serving the same corpus.
+    pub fn query_plan(&mut self, plan: &[Query]) -> Result<Vec<Reply>, ClusterError> {
+        if plan.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.validate(plan)?;
+        self.metrics.plans.inc();
+        let n_nodes = self.nodes.len();
+
+        // ---- route: per-node sub-plans + per-slot gather specs ------
+        let mut subs: Vec<Vec<Query>> = vec![Vec::new(); n_nodes];
+        let mut sub_slots: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+        let mut gathers: Vec<Gather> = Vec::with_capacity(plan.len());
+        for (slot, q) in plan.iter().enumerate() {
+            match q {
+                Query::Pair { i, .. } => {
+                    let node = self.map.owner(*i as usize);
+                    subs[node].push(q.clone());
+                    sub_slots[node].push(slot);
+                    gathers.push(Gather::Pair);
+                }
+                Query::TopK { m, .. } => {
+                    for node in 0..n_nodes {
+                        subs[node].push(q.clone());
+                        sub_slots[node].push(slot);
+                    }
+                    gathers.push(Gather::TopK { m: *m });
+                }
+                Query::Block { rows, cols, kind } => {
+                    let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+                    let mut node_rows: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+                    for (p, &r) in rows.iter().enumerate() {
+                        let o = self.map.owner(r as usize);
+                        positions[o].push(p);
+                        node_rows[o].push(r);
+                    }
+                    for (node, nrows) in node_rows.into_iter().enumerate() {
+                        if nrows.is_empty() {
+                            continue;
+                        }
+                        subs[node].push(Query::Block {
+                            rows: nrows,
+                            cols: cols.clone(),
+                            kind: *kind,
+                        });
+                        sub_slots[node].push(slot);
+                    }
+                    gathers.push(Gather::Block {
+                        positions,
+                        n_rows: rows.len(),
+                        n_cols: cols.len(),
+                    });
+                }
+            }
+        }
+        let fanout: u64 = subs.iter().map(|s| s.len() as u64).sum();
+        self.metrics.subqueries.add(fanout);
+
+        // ---- scatter: each contributing node's sub-plan pipelines on
+        // its own scoped thread; a plan touching a single node (the
+        // Pair hot path) runs inline, keeping thread create/join off
+        // its latency ---------------------------------------------
+        let mut results: Vec<Option<Result<Vec<Reply>, ClientError>>> =
+            (0..n_nodes).map(|_| None).collect();
+        let contributing = subs.iter().filter(|s| !s.is_empty()).count();
+        let metrics = &self.metrics;
+        if contributing <= 1 {
+            for (shard, ((node, sub), res)) in self
+                .nodes
+                .iter_mut()
+                .zip(&subs)
+                .zip(results.iter_mut())
+                .enumerate()
+            {
+                *res = Some(if sub.is_empty() {
+                    Ok(Vec::new())
+                } else {
+                    run_node_plan(node, sub, metrics.node(shard))
+                });
+            }
+        } else {
+            std::thread::scope(|s| {
+                for (shard, ((node, sub), res)) in self
+                    .nodes
+                    .iter_mut()
+                    .zip(&subs)
+                    .zip(results.iter_mut())
+                    .enumerate()
+                {
+                    if sub.is_empty() {
+                        *res = Some(Ok(Vec::new()));
+                        continue;
+                    }
+                    let nm = metrics.node(shard);
+                    s.spawn(move || {
+                        *res = Some(run_node_plan(node, sub, nm));
+                    });
+                }
+            });
+        }
+
+        // ---- typed partial failure: first failing shard wins --------
+        let mut node_replies: Vec<Vec<Reply>> = Vec::with_capacity(n_nodes);
+        for (shard, res) in results.into_iter().enumerate() {
+            match res.expect("every node slot written") {
+                Ok(replies) => node_replies.push(replies),
+                Err(ClientError::Overloaded(message)) => {
+                    return Err(ClusterError::Overloaded {
+                        addr: self.nodes[shard].addr.clone(),
+                        shard,
+                        message,
+                    })
+                }
+                Err(source) => {
+                    return Err(ClusterError::NodeFailed {
+                        addr: self.nodes[shard].addr.clone(),
+                        shard,
+                        source,
+                    })
+                }
+            }
+        }
+
+        // ---- gather: per-slot sub-replies in node order -------------
+        let mut per_slot: Vec<Vec<(usize, Reply)>> = (0..plan.len()).map(|_| Vec::new()).collect();
+        for (shard, replies) in node_replies.into_iter().enumerate() {
+            if replies.len() != sub_slots[shard].len() {
+                return Err(ClusterError::ShapeMismatch {
+                    addr: self.nodes[shard].addr.clone(),
+                });
+            }
+            for (&slot, reply) in sub_slots[shard].iter().zip(replies) {
+                per_slot[slot].push((shard, reply));
+            }
+        }
+        let mut out = Vec::with_capacity(plan.len());
+        for (gather, parts) in gathers.into_iter().zip(per_slot) {
+            out.push(self.gather_one(gather, parts)?);
+        }
+        Ok(out)
+    }
+
+    /// Reassemble one plan slot from its per-node sub-replies.
+    fn gather_one(
+        &self,
+        gather: Gather,
+        parts: Vec<(usize, Reply)>,
+    ) -> Result<Reply, ClusterError> {
+        let shape_err = |shard: usize| ClusterError::ShapeMismatch {
+            addr: self.nodes[shard].addr.clone(),
+        };
+        match gather {
+            Gather::Pair => match parts.into_iter().next() {
+                Some((_, r @ Reply::Pair(_))) => Ok(r),
+                Some((shard, _)) => Err(shape_err(shard)),
+                None => Err(ClusterError::Invalid("pair routed to no node".into())),
+            },
+            Gather::TopK { m } => {
+                // Each partial list is the node's exact top-m over its
+                // owned rows, sorted ascending by (distance, row); the
+                // global top-m is the m smallest of their union under
+                // the same order, so a sort-and-truncate merge
+                // reproduces the single-node scan bit for bit.
+                let mut merged: Vec<(u32, f64)> = Vec::new();
+                for (shard, reply) in parts {
+                    match reply {
+                        Reply::TopK(v) => merged.extend(v),
+                        _ => return Err(shape_err(shard)),
+                    }
+                }
+                merged.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+                merged.truncate(m);
+                Ok(Reply::TopK(merged))
+            }
+            Gather::Block {
+                positions,
+                n_rows,
+                n_cols,
+            } => {
+                let mut out = vec![0.0f64; n_rows * n_cols];
+                for (shard, reply) in parts {
+                    let v = match reply {
+                        Reply::Block(v) => v,
+                        _ => return Err(shape_err(shard)),
+                    };
+                    let pos = &positions[shard];
+                    if v.len() != pos.len() * n_cols {
+                        return Err(shape_err(shard));
+                    }
+                    for (chunk, &p) in v.chunks_exact(n_cols).zip(pos) {
+                        out[p * n_cols..(p + 1) * n_cols].copy_from_slice(chunk);
+                    }
+                }
+                Ok(Reply::Block(out))
+            }
+        }
+    }
+
+    /// Client-side admission against the cluster row count — mirrors
+    /// the server's validation so a bad plan fails with one typed
+    /// error instead of N partial refusals.
+    fn validate(&self, plan: &[Query]) -> Result<(), ClusterError> {
+        let n = self.rows;
+        let check = |row: u32| -> Result<(), ClusterError> {
+            if (row as usize) < n {
+                Ok(())
+            } else {
+                Err(ClusterError::Invalid(format!(
+                    "row {row} out of range (cluster rows={n})"
+                )))
+            }
+        };
+        for q in plan {
+            match q {
+                Query::Pair { i, j, .. } => {
+                    check(*i)?;
+                    check(*j)?;
+                }
+                Query::TopK { i, m, .. } => {
+                    check(*i)?;
+                    if *m == 0 {
+                        return Err(ClusterError::Invalid("topk m must be >= 1".into()));
+                    }
+                    if *m > MAX_TOPK_M {
+                        return Err(ClusterError::Invalid(format!(
+                            "topk m {m} exceeds the per-query limit of {MAX_TOPK_M}"
+                        )));
+                    }
+                }
+                Query::Block { rows, cols, .. } => {
+                    if rows.is_empty() || cols.is_empty() {
+                        return Err(ClusterError::Invalid(
+                            "block query must name at least one row and one column".into(),
+                        ));
+                    }
+                    if rows.len().saturating_mul(cols.len()) > MAX_BLOCK_CELLS {
+                        return Err(ClusterError::Invalid(format!(
+                            "block of {}x{} cells exceeds the per-query limit of {MAX_BLOCK_CELLS}",
+                            rows.len(),
+                            cols.len()
+                        )));
+                    }
+                    for &r in rows.iter().chain(cols) {
+                        check(r)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_addrs_trims_and_drops_empties() {
+        assert_eq!(split_addrs("a:1"), vec!["a:1"]);
+        assert_eq!(split_addrs(" a:1 , b:2,, "), vec!["a:1", "b:2"]);
+        assert!(split_addrs(" , ").is_empty());
+        assert!(split_addrs("").is_empty());
+    }
+}
+
+/// One node's share of a scatter: pipeline the sub-plan, with one
+/// reconnect-and-retry on I/O failure so a bounced node does not fail
+/// the whole gather.
+fn run_node_plan(
+    node: &mut Node,
+    queries: &[Query],
+    nm: &NodeMetrics,
+) -> Result<Vec<Reply>, ClientError> {
+    nm.routed.add(queries.len() as u64);
+    nm.inflight.inc();
+    let out = match node.client.query_plan(queries) {
+        Err(ClientError::Io(_)) => {
+            nm.reconnects.inc();
+            match node.client.reconnect() {
+                Ok(()) => node.client.query_plan(queries),
+                Err(e) => Err(e),
+            }
+        }
+        r => r,
+    };
+    nm.inflight.dec();
+    // Overloaded is backpressure working, not a node failure — it must
+    // not poison the per-node error metric callers balance on.
+    if !matches!(out, Ok(_) | Err(ClientError::Overloaded(_))) {
+        nm.errors.inc();
+    }
+    out
+}

@@ -24,7 +24,10 @@
 //! continues; a broken *framing* layer (oversized length prefix)
 //! closes it, since byte alignment is unrecoverable.
 
-use super::protocol::{query_id_of, write_frame, ErrorCode, Frame, ProtoError, MAX_FRAME_BYTES};
+use super::protocol::{
+    query_id_of, write_frame, ErrorCode, Frame, ProtoError, ShardMapInfo, MAX_FRAME_BYTES,
+    MAX_STATS_ENTRIES,
+};
 use crate::coordinator::{Coordinator, Reply, SubmitError};
 use crate::metrics::PipelineMetrics;
 use anyhow::{Context, Result};
@@ -373,6 +376,12 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                             break;
                         }
                     }
+                    Frame::ShardMapRequest => {
+                        let reply = Frame::ShardMap(shard_map_info(coord));
+                        if !send_outbound(&out_tx, reply, stop) {
+                            break;
+                        }
+                    }
                     Frame::Query { id, query } => {
                         // Cap this connection's pipelined depth: a peer
                         // that submits without reading replies parks
@@ -437,7 +446,8 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                     Frame::Pong { .. }
                     | Frame::Reply { .. }
                     | Frame::Error { .. }
-                    | Frame::Stats { .. } => {
+                    | Frame::Stats { .. }
+                    | Frame::ShardMap(_) => {
                         metrics.net_decode_errors.inc();
                         let reply = Frame::Error {
                             id: 0,
@@ -550,14 +560,42 @@ fn read_exact_interruptible(
     Ok(true)
 }
 
-/// The `Stats` frame payload: store geometry plus every pipeline and
-/// network counter.
+/// This node's `ShardMap` frame body: its shard identity and owned row
+/// range. An unsharded server is shard 0 of 1 owning everything, so
+/// single-node and clustered deployments answer uniformly.
+fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
+    let n = coord.store().n;
+    let (index, count, range) = match coord.shard_spec() {
+        Some(spec) => (spec.index, spec.of, coord.owned_range()),
+        None => (0, 1, 0..n),
+    };
+    ShardMapInfo {
+        index: index as u32,
+        count: count as u32,
+        start: range.start as u64,
+        end: range.end as u64,
+        rows: n as u64,
+    }
+}
+
+/// The `Stats` frame payload: store geometry, per-node health (shard
+/// identity, uptime, per-worker queue depths — what the cluster client
+/// balances on), plus every pipeline and network counter.
 fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
     let store = coord.store();
+    let shard = shard_map_info(coord);
     let mut entries = vec![
         ("store_n".to_string(), store.n as u64),
         ("store_k".to_string(), store.k as u64),
+        ("shard_index".to_string(), shard.index as u64),
+        ("shard_count".to_string(), shard.count as u64),
+        ("shard_row_start".to_string(), shard.start),
+        ("shard_row_end".to_string(), shard.end),
+        ("uptime_s".to_string(), coord.uptime().as_secs()),
     ];
+    let depths = coord.queue_depths();
+    let total_depth: u64 = depths.iter().map(|&d| d as u64).sum();
+    entries.push(("queue_depth_total".to_string(), total_depth));
     entries.extend(
         coord
             .metrics()
@@ -565,5 +603,11 @@ fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
             .into_iter()
             .map(|(label, value)| (label.to_string(), value)),
     );
+    // Per-worker depths last, bounded so a huge shard count can not
+    // push the fixed labels past the frame's entry cap.
+    let room = MAX_STATS_ENTRIES.saturating_sub(entries.len());
+    for (i, d) in depths.iter().enumerate().take(room) {
+        entries.push((format!("queue_depth_{i}"), *d as u64));
+    }
     entries
 }

@@ -19,6 +19,7 @@
 //! the backpressure design working.
 
 use super::client::{ClientError, SketchClient};
+use super::cluster::{ClusterClient, ClusterError};
 use crate::coordinator::{Query, QueryKind};
 use crate::metrics::LatencyHistogram;
 use crate::numerics::{Rng, Xoshiro256pp};
@@ -60,7 +61,9 @@ impl Workload {
 /// Everything one run needs.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
-    /// Server address (`host:port`).
+    /// Server address (`host:port`), or a comma-separated list of
+    /// shard-node addresses to drive a whole cluster — each worker
+    /// thread then routes through its own [`ClusterClient`].
     pub addr: String,
     pub threads: usize,
     pub duration: Duration,
@@ -120,6 +123,86 @@ impl LoadgenReport {
     }
 }
 
+/// Either connection layer can fail a run before it starts.
+#[derive(Debug, thiserror::Error)]
+pub enum LoadgenError {
+    #[error(transparent)]
+    Client(#[from] ClientError),
+    #[error(transparent)]
+    Cluster(#[from] ClusterError),
+}
+
+/// One worker thread's connection: a single node, or a cluster router
+/// scatter-gathering across shard nodes.
+enum Driver {
+    Single(Box<SketchClient>),
+    Cluster(Box<ClusterClient>),
+}
+
+/// What a failed plan means to the drive loop.
+enum DriveError {
+    /// Backpressure — count it and keep offering load.
+    Overloaded,
+    /// Transport bounce, successfully reconnected — count a reconnect
+    /// and continue.
+    Reconnected,
+    /// Per-plan failure — count an error and continue.
+    Error,
+    /// Unrecoverable (reconnect failed twice) — the thread gives up.
+    Dead,
+}
+
+impl Driver {
+    fn connect(addrs: &[String]) -> Result<Driver, LoadgenError> {
+        if addrs.len() == 1 {
+            let client = SketchClient::connect_with_retry(&addrs[0], 5, Duration::from_millis(20))?;
+            Ok(Driver::Single(Box::new(client)))
+        } else {
+            Ok(Driver::Cluster(Box::new(ClusterClient::connect(addrs)?)))
+        }
+    }
+
+    /// Reconnects performed *inside* the cluster router (its per-node
+    /// reconnect-and-retry) — flushed into the report at thread exit
+    /// so cluster runs report node flapping the way single-node runs
+    /// report their own reconnects. Always 0 for a single node (those
+    /// are counted live via [`DriveError::Reconnected`]).
+    fn internal_reconnects(&self) -> u64 {
+        match self {
+            Driver::Single(_) => 0,
+            Driver::Cluster(c) => c.metrics().nodes().iter().map(|n| n.reconnects.get()).sum(),
+        }
+    }
+
+    fn query_plan(&mut self, queries: &[Query]) -> Result<(), DriveError> {
+        match self {
+            Driver::Single(c) => match c.query_plan(queries) {
+                Ok(_) => Ok(()),
+                Err(ClientError::Overloaded(_)) => Err(DriveError::Overloaded),
+                Err(ClientError::Io(_)) => {
+                    if c.reconnect().is_err() {
+                        std::thread::sleep(Duration::from_millis(20));
+                        if c.reconnect().is_err() {
+                            return Err(DriveError::Dead);
+                        }
+                    }
+                    Err(DriveError::Reconnected)
+                }
+                Err(_) => Err(DriveError::Error),
+            },
+            Driver::Cluster(c) => match c.query_plan(queries) {
+                Ok(_) => Ok(()),
+                Err(ClusterError::Overloaded { .. }) => Err(DriveError::Overloaded),
+                // Everything else (NodeFailed means the router's
+                // internal reconnect-and-retry already failed) is an
+                // error; the consecutive-error bailout in the drive
+                // loop gives up on a cluster that stays dead.
+                Err(_) => Err(DriveError::Error),
+            },
+        }
+    }
+}
+
 /// Generates the per-thread query stream (deterministic per seed).
 struct QueryGen {
     rng: Xoshiro256pp,
@@ -166,19 +249,28 @@ impl QueryGen {
     }
 }
 
-/// Run a load generation session against a live server.
+/// Run a load generation session against a live server (or, with
+/// comma-separated addresses, a whole sharded cluster).
 ///
-/// Dials once up front to learn the store size from the `Stats` frame
-/// (queries need valid row indices), then spawns `threads` workers.
-pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
-    let mut probe = SketchClient::connect_with_retry(&cfg.addr, 10, Duration::from_millis(50))?;
-    let n = probe.stat("store_n")?.unwrap_or(0);
-    if n == 0 {
-        return Err(ClientError::Unexpected(
-            "server reports an empty store (store_n = 0)",
-        ));
+/// Dials once up front to learn the store size — from the `Stats`
+/// frame of a single node, or from the validated shard map of a
+/// cluster (queries need valid row indices) — then spawns `threads`
+/// workers.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
+    let addrs = super::cluster::split_addrs(&cfg.addr);
+    if addrs.is_empty() {
+        return Err(ClusterError::NoAddresses.into());
     }
-    drop(probe);
+    let n = if addrs.len() == 1 {
+        let mut probe = SketchClient::connect_with_retry(&addrs[0], 10, Duration::from_millis(50))
+            .map_err(LoadgenError::Client)?;
+        probe.stat("store_n").map_err(LoadgenError::Client)?.unwrap_or(0)
+    } else {
+        ClusterClient::connect(&addrs)?.rows() as u64
+    };
+    if n == 0 {
+        return Err(ClientError::Unexpected("server reports an empty store (store_n = 0)").into());
+    }
 
     let latency = Arc::new(LatencyHistogram::new());
     let sent = Arc::new(AtomicU64::new(0));
@@ -193,6 +285,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
     let mut handles = Vec::with_capacity(threads);
     for t in 0..threads {
         let cfg = cfg.clone();
+        let addrs = addrs.clone();
         let latency = latency.clone();
         let sent = sent.clone();
         let ok = ok.clone();
@@ -203,12 +296,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
             std::thread::Builder::new()
                 .name(format!("loadgen-{t}"))
                 .spawn(move || {
-                    let mut client = match SketchClient::connect_with_retry(
-                        &cfg.addr,
-                        5,
-                        Duration::from_millis(20),
-                    ) {
-                        Ok(c) => c,
+                    let mut driver = match Driver::connect(&addrs) {
+                        Ok(d) => d,
                         Err(_) => {
                             errors.fetch_add(1, Ordering::Relaxed);
                             return;
@@ -233,10 +322,16 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
                         )),
                     };
                     let mut arrival = 0u64;
-                    loop {
+                    // Bail after this many plans fail back to back: a
+                    // cluster with a dead node fails every scatter, and
+                    // spinning on connect-refused for the whole run
+                    // would report a degraded cluster as mere load.
+                    const MAX_CONSECUTIVE_ERRORS: u32 = 10;
+                    let mut consecutive_errors = 0u32;
+                    'drive: loop {
                         let now = Instant::now();
                         if now >= deadline {
-                            return;
+                            break 'drive;
                         }
                         // The latency clock starts at the *scheduled*
                         // time under open loop (coordinated-omission
@@ -257,7 +352,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
                                 // overshoot --duration by up to one
                                 // inter-arrival gap.
                                 if scheduled >= deadline {
-                                    return;
+                                    break 'drive;
                                 }
                                 if scheduled > now {
                                     std::thread::sleep(scheduled - now);
@@ -267,31 +362,35 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ClientError> {
                         };
                         let query = qgen.next();
                         sent.fetch_add(1, Ordering::Relaxed);
-                        match client.query_plan(std::slice::from_ref(&query)) {
-                            Ok(_) => {
+                        match driver.query_plan(std::slice::from_ref(&query)) {
+                            Ok(()) => {
                                 latency.record(start.elapsed());
                                 ok.fetch_add(1, Ordering::Relaxed);
+                                consecutive_errors = 0;
                             }
-                            Err(ClientError::Overloaded(_)) => {
+                            Err(DriveError::Overloaded) => {
                                 // Backpressure working as designed:
                                 // count it and keep offering load.
                                 overloaded.fetch_add(1, Ordering::Relaxed);
+                                consecutive_errors = 0;
                             }
-                            Err(ClientError::Io(_)) => {
+                            Err(DriveError::Reconnected) => {
                                 reconnects.fetch_add(1, Ordering::Relaxed);
-                                if client.reconnect().is_err() {
-                                    std::thread::sleep(Duration::from_millis(20));
-                                    if client.reconnect().is_err() {
-                                        errors.fetch_add(1, Ordering::Relaxed);
-                                        return;
-                                    }
+                            }
+                            Err(DriveError::Error) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                                consecutive_errors += 1;
+                                if consecutive_errors >= MAX_CONSECUTIVE_ERRORS {
+                                    break 'drive;
                                 }
                             }
-                            Err(_) => {
+                            Err(DriveError::Dead) => {
                                 errors.fetch_add(1, Ordering::Relaxed);
+                                break 'drive;
                             }
                         }
                     }
+                    reconnects.fetch_add(driver.internal_reconnects(), Ordering::Relaxed);
                 })
                 .expect("spawning loadgen thread"),
         );

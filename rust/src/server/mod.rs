@@ -16,15 +16,23 @@
 //!   an explicit `Overloaded` reply frame, not a dropped connection.
 //! * [`client`] — [`SketchClient`]: blocking, reconnectable, pipelined
 //!   plan submission with typed errors.
+//! * [`cluster`] — [`ClusterClient`]: the client-side router for a
+//!   multi-node sharded cluster — shard-map exchange at connect,
+//!   `Pair` routing to the owning node, scatter-gather for
+//!   `TopK`/`Block` plans, per-node reconnect, typed partial-failure
+//!   errors.
 //! * [`loadgen`] — open- and closed-loop multi-threaded load generator
-//!   reporting throughput and p50/p95/p99 latency.
+//!   reporting throughput and p50/p95/p99 latency, driving one node or
+//!   a whole cluster.
 
 pub mod client;
+pub mod cluster;
 pub mod listener;
 pub mod loadgen;
 pub mod protocol;
 
 pub use client::{ClientError, SketchClient};
+pub use cluster::{ClusterClient, ClusterError};
 pub use listener::{ServerConfig, SketchServer};
 pub use loadgen::{LoadMode, LoadgenConfig, LoadgenReport, Workload};
-pub use protocol::{ErrorCode, Frame, ProtoError, PROTOCOL_VERSION};
+pub use protocol::{ErrorCode, Frame, ProtoError, ShardMapInfo, PROTOCOL_VERSION};

@@ -24,13 +24,28 @@
 //! Request/reply correlation is by caller-chosen `id`: replies may come
 //! back out of submission order (different shards), so the client
 //! matches on `id`, which is what makes pipelining safe.
+//!
+//! Version history: **v1** shipped the frame set above; **v2** is
+//! reserved (the `SSK2` sketch-file revision bumped the on-disk format,
+//! not the wire); **v3** adds the `ShardMapRequest`/`ShardMap`
+//! exchange for multi-node sharded serving and per-node health entries
+//! in `Stats`. Encoders always stamp the current version; decoders
+//! accept [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`], with the
+//! v3-only tags refusing older version bytes.
 
 use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
 use std::io::{Read, Write};
 use thiserror::Error;
 
-/// Protocol version spoken by this build.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// Protocol version spoken (and stamped on every frame) by this build.
+pub const PROTOCOL_VERSION: u8 = 3;
+
+/// Oldest version this build still decodes (v1/v3 share every frame
+/// body layout; v3 only *adds* tags).
+pub const MIN_PROTOCOL_VERSION: u8 = 1;
+
+/// First version carrying the shard-map exchange frames.
+const SHARD_MAP_SINCE_VERSION: u8 = 3;
 
 /// Hard cap on one frame's payload. The largest legitimate frame is a
 /// `Block` reply of [`MAX_BLOCK_CELLS`] f64 cells (8 MiB) or a `TopK`
@@ -150,8 +165,29 @@ pub enum Frame {
     /// Ask for a counter snapshot.
     StatsRequest,
     /// Counter snapshot: `(label, value)` pairs, including store
-    /// geometry (`store_n`, `store_k`).
+    /// geometry (`store_n`, `store_k`) and — since v3 — per-node
+    /// health (`shard_index`/`shard_count`, owned row range,
+    /// `uptime_s`, per-worker queue depths, in-flight and decode-error
+    /// counters) for client-side balancing.
     Stats { entries: Vec<(String, u64)> },
+    /// v3: ask a node which slice of the cluster row space it owns.
+    ShardMapRequest,
+    /// v3: the responding node's entry in the cluster's row → node
+    /// map. The cluster client collects one of these per node and
+    /// validates that they tile `0..rows` exactly.
+    ShardMap(ShardMapInfo),
+}
+
+/// One node's slice of the cluster row space, as carried by
+/// [`Frame::ShardMap`]: shard `index` of `count` owns rows
+/// `start..end` out of `rows` total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMapInfo {
+    pub index: u32,
+    pub count: u32,
+    pub start: u64,
+    pub end: u64,
+    pub rows: u64,
 }
 
 const TAG_PING: u8 = 0x01;
@@ -161,6 +197,8 @@ const TAG_REPLY: u8 = 0x04;
 const TAG_ERROR: u8 = 0x05;
 const TAG_STATS_REQUEST: u8 = 0x06;
 const TAG_STATS: u8 = 0x07;
+const TAG_SHARD_MAP_REQUEST: u8 = 0x08;
+const TAG_SHARD_MAP: u8 = 0x09;
 
 const SHAPE_PAIR: u8 = 0;
 const SHAPE_TOPK: u8 = 1;
@@ -286,6 +324,17 @@ impl Frame {
                     put_u64(&mut body, *value);
                 }
             }
+            Frame::ShardMapRequest => {
+                body.push(TAG_SHARD_MAP_REQUEST);
+            }
+            Frame::ShardMap(info) => {
+                body.push(TAG_SHARD_MAP);
+                put_u32(&mut body, info.index);
+                put_u32(&mut body, info.count);
+                put_u64(&mut body, info.start);
+                put_u64(&mut body, info.end);
+                put_u64(&mut body, info.rows);
+            }
         }
         debug_assert!(body.len() <= MAX_FRAME_BYTES, "encoder produced an oversized frame");
         let mut out = Vec::with_capacity(4 + body.len());
@@ -304,7 +353,7 @@ impl Frame {
         }
         let mut r = Cursor { b: payload, at: 0 };
         let version = r.u8()?;
-        if version != PROTOCOL_VERSION {
+        if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
             return Err(ProtoError::BadVersion(version));
         }
         let tag = r.u8()?;
@@ -345,6 +394,19 @@ impl Frame {
                 }
                 Frame::Stats { entries }
             }
+            TAG_SHARD_MAP_REQUEST | TAG_SHARD_MAP if version < SHARD_MAP_SINCE_VERSION => {
+                // A frame claiming an old version but carrying a tag
+                // that version never defined is self-contradictory.
+                return Err(ProtoError::BadVersion(version));
+            }
+            TAG_SHARD_MAP_REQUEST => Frame::ShardMapRequest,
+            TAG_SHARD_MAP => Frame::ShardMap(ShardMapInfo {
+                index: r.u32()?,
+                count: r.u32()?,
+                start: r.u64()?,
+                end: r.u64()?,
+                rows: r.u64()?,
+            }),
             other => return Err(ProtoError::BadTag(other)),
         };
         r.finish()?;
@@ -359,7 +421,10 @@ impl Frame {
 /// Returns `None` for non-query frames or payloads too short to carry
 /// an id.
 pub fn query_id_of(payload: &[u8]) -> Option<u64> {
-    if payload.len() < 10 || payload[0] != PROTOCOL_VERSION || payload[1] != TAG_QUERY {
+    if payload.len() < 10
+        || !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&payload[0])
+        || payload[1] != TAG_QUERY
+    {
         return None;
     }
     Some(u64::from_le_bytes(payload[2..10].try_into().unwrap()))
@@ -614,10 +679,58 @@ mod tests {
             Err(ProtoError::BadVersion(99))
         ));
         let mut payload = wire[4..].to_vec();
+        payload[0] = 0; // below the minimum
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::BadVersion(0))
+        ));
+        let mut payload = wire[4..].to_vec();
         payload[1] = 0xEE; // tag
         assert!(matches!(
             Frame::decode(&payload),
             Err(ProtoError::BadTag(0xEE))
         ));
+    }
+
+    #[test]
+    fn v1_frames_still_decode_under_v3() {
+        // A v1 speaker's bytes stay valid: same body layout, older
+        // version stamp.
+        let wire = Frame::Ping { token: 42 }.encode();
+        let mut payload = wire[4..].to_vec();
+        assert_eq!(payload[0], PROTOCOL_VERSION);
+        payload[0] = 1;
+        assert_eq!(Frame::decode(&payload).unwrap(), Frame::Ping { token: 42 });
+    }
+
+    #[test]
+    fn shard_map_frames_round_trip_and_are_v3_only() {
+        let info = ShardMapInfo {
+            index: 1,
+            count: 3,
+            start: 34,
+            end: 67,
+            rows: 100,
+        };
+        for f in [Frame::ShardMapRequest, Frame::ShardMap(info)] {
+            assert_eq!(round_trip(&f), f);
+        }
+        // The same tags under a v1 stamp are self-contradictory: v1
+        // never defined them.
+        for f in [Frame::ShardMapRequest, Frame::ShardMap(info)] {
+            let wire = f.encode();
+            let mut payload = wire[4..].to_vec();
+            payload[0] = 1;
+            assert!(matches!(
+                Frame::decode(&payload),
+                Err(ProtoError::BadVersion(1))
+            ));
+        }
+        // Truncated ShardMap bodies err cleanly.
+        let wire = Frame::ShardMap(info).encode();
+        let payload = &wire[4..];
+        for cut in 2..payload.len() {
+            assert!(Frame::decode(&payload[..cut]).is_err(), "cut {cut}");
+        }
     }
 }

@@ -1,0 +1,300 @@
+//! Multi-node sharded serving, end to end on loopback.
+//!
+//! The acceptance contract: a 3-shard cluster — three `SketchServer`
+//! processes each owning one contiguous row slice of the same corpus —
+//! answers `Pair`/`TopK`/`Block` plans through the scatter-gather
+//! [`ClusterClient`] **bit-identically** to a single node serving
+//! everything; shard-map validation refuses inconsistent clusters; and
+//! a node going down surfaces as a typed partial-failure error, never
+//! a hang.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, Reply, ShardSpec};
+use stablesketch::server::{
+    ClientError, ClusterClient, ClusterError, ServerConfig, SketchClient, SketchServer,
+};
+use stablesketch::sketch::{SketchEngine, SketchStore};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ALL_KINDS: [QueryKind; 4] = [
+    QueryKind::Oq,
+    QueryKind::Gm,
+    QueryKind::Fp,
+    QueryKind::Median,
+];
+
+fn sketch_corpus(n: usize, k: usize) -> (SketchStore, PipelineConfig) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 512,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.2,
+        k,
+        dim: corpus.dim,
+        shards: 2,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    (store, cfg)
+}
+
+/// Start one shard node over (a clone of) the replicated store.
+fn start_node(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shard: Option<ShardSpec>,
+) -> (Arc<Coordinator>, SketchServer, String) {
+    let coord = Arc::new(
+        Coordinator::start_sharded(cfg.clone(), store.clone(), shard).expect("coordinator"),
+    );
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server start");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+fn start_cluster(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    of: usize,
+) -> (Vec<Arc<Coordinator>>, Vec<SketchServer>, Vec<String>) {
+    let mut coords = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..of {
+        let (c, s, a) = start_node(store, cfg, Some(ShardSpec { index, of }));
+        coords.push(c);
+        servers.push(s);
+        addrs.push(a);
+    }
+    (coords, servers, addrs)
+}
+
+/// A mixed plan: every shape, every kind, TopK both smaller and larger
+/// than one shard's slice (the latter forces a real cross-node merge),
+/// blocks whose rows span all shards.
+fn mixed_plan(n: u32, salt: u32) -> Vec<Query> {
+    let mut plan = Vec::new();
+    for (t, &kind) in ALL_KINDS.iter().enumerate() {
+        let t = t as u32;
+        plan.push(Query::Pair {
+            i: (salt + t) % n,
+            j: (salt + 3 * t + 1) % n,
+            kind,
+        });
+        plan.push(Query::TopK {
+            i: (salt + 7 * t) % n,
+            m: 4,
+            kind,
+        });
+        // m larger than a 3-shard slice of n rows: partials must merge.
+        plan.push(Query::TopK {
+            i: (salt + 5 * t) % n,
+            m: (n as usize / 3) + 2,
+            kind,
+        });
+        plan.push(Query::Block {
+            // Rows from the bottom, middle and top of the row space —
+            // guaranteed to split across 3 shards.
+            rows: vec![salt % n, (salt + n / 2) % n, n - 1 - (salt % n)],
+            cols: vec![(salt + 1) % n, (salt + 5) % n, (salt + 9) % n, (salt + 13) % n],
+            kind,
+        });
+    }
+    plan
+}
+
+fn assert_bit_identical(local: &[Reply], remote: &[Reply], tag: &str) {
+    assert_eq!(local.len(), remote.len(), "{tag}: reply count");
+    for (q, (l, r)) in local.iter().zip(remote).enumerate() {
+        match (l, r) {
+            (Reply::Pair(a), Reply::Pair(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: pair bits differ at {q}")
+            }
+            (Reply::TopK(a), Reply::TopK(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: topk length at {q}");
+                for ((ja, da), (jb, db)) in a.iter().zip(b) {
+                    assert_eq!(ja, jb, "{tag}: topk neighbour differs at {q}");
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: topk bits differ at {q}");
+                }
+            }
+            (Reply::Block(a), Reply::Block(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: block length at {q}");
+                for (da, db) in a.iter().zip(b) {
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: block bits differ at {q}");
+                }
+            }
+            other => panic!("{tag}: shape mismatch at {q}: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn three_shard_cluster_is_bit_identical_to_single_node() {
+    let (store, cfg) = sketch_corpus(40, 64);
+    let (_coords, servers, addrs) = start_cluster(&store, &cfg, 3);
+    // Reference: one unsharded server over the very same store.
+    let (_ref_coord, ref_server, ref_addr) = start_node(&store, &cfg, None);
+
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    assert_eq!(cluster.shard_count(), 3);
+    assert_eq!(cluster.rows(), 40);
+    // The shard map tiles the row space contiguously.
+    let ranges = cluster.node_ranges();
+    assert_eq!(ranges[0].1.start, 0);
+    assert_eq!(ranges[2].1.end, 40);
+    for w in ranges.windows(2) {
+        assert_eq!(w[0].1.end, w[1].1.start, "contiguous shard ranges");
+    }
+
+    let mut single = SketchClient::connect_with_retry(&ref_addr, 10, Duration::from_millis(20))
+        .expect("single connect");
+    for salt in [1u32, 13, 27] {
+        let plan = mixed_plan(40, salt);
+        let remote = cluster.query_plan(&plan).expect("cluster plan");
+        let local = single.query_plan(&plan).expect("single-node plan");
+        assert_bit_identical(&local, &remote, &format!("salt {salt}"));
+    }
+    // Every node actually participated in the scatter.
+    for (i, nm) in cluster.metrics().nodes().iter().enumerate() {
+        assert!(nm.routed.get() > 0, "node {i} never routed to");
+        assert_eq!(nm.errors.get(), 0, "node {i} errored");
+    }
+
+    for s in servers {
+        s.shutdown();
+    }
+    ref_server.shutdown();
+}
+
+#[test]
+fn per_node_health_shows_up_in_stats_and_shard_map() {
+    let (store, cfg) = sketch_corpus(30, 32);
+    let (_coords, servers, addrs) = start_cluster(&store, &cfg, 3);
+    let mut client = SketchClient::connect_with_retry(&addrs[1], 10, Duration::from_millis(20))
+        .expect("connect shard 1");
+    let info = client.shard_map().expect("shard map");
+    assert_eq!(info.index, 1);
+    assert_eq!(info.count, 3);
+    assert_eq!(info.rows, 30);
+    assert_eq!((info.start, info.end), (10, 20), "even 3-way split of 30 rows");
+    let stats = client.stats().expect("stats");
+    let get = |label: &str| -> u64 {
+        stats
+            .iter()
+            .find(|(l, _)| l == label)
+            .unwrap_or_else(|| panic!("missing stat {label}"))
+            .1
+    };
+    assert_eq!(get("shard_index"), 1);
+    assert_eq!(get("shard_count"), 3);
+    assert_eq!(get("shard_row_start"), 10);
+    assert_eq!(get("shard_row_end"), 20);
+    // Health fields exist (values are load-dependent).
+    let _ = get("uptime_s");
+    let _ = get("queue_depth_total");
+    let _ = get("queue_depth_0");
+    let _ = get("net_queries_inflight");
+    let _ = get("net_decode_errors");
+
+    // A sharded node still answers any Pair (replicated store), but its
+    // TopK covers only its owned rows — that is the cluster contract.
+    let d = client.pair(0, 29, QueryKind::Oq).expect("cross-shard pair");
+    assert!(d.is_finite() && d > 0.0);
+    let near = client.top_k(12, 30, QueryKind::Oq).expect("local topk");
+    assert_eq!(near.len(), 9, "10 owned rows minus the anchor");
+    assert!(near.iter().all(|&(j, _)| (10..20).contains(&(j as usize))));
+
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn shard_map_validation_rejects_incomplete_and_mismatched_clusters() {
+    let (store, cfg) = sketch_corpus(24, 32);
+    let (_coords, servers, addrs) = start_cluster(&store, &cfg, 3);
+
+    // Dialing only 2 of the 3 shards: typed shard-map error, not a
+    // silently wrong row map.
+    match ClusterClient::connect(&addrs[..2]) {
+        Err(ClusterError::ShardMap { detail, .. }) => {
+            assert!(detail.contains("3 shards"), "{detail}")
+        }
+        other => panic!("expected ShardMap error, got {:?}", other.map(|_| ())),
+    }
+
+    // The same address twice: duplicate shard index.
+    let dup = vec![addrs[0].clone(), addrs[0].clone(), addrs[1].clone()];
+    match ClusterClient::connect(&dup) {
+        Err(ClusterError::ShardMap { detail, .. }) => {
+            assert!(detail.contains("duplicate"), "{detail}")
+        }
+        other => panic!("expected duplicate-index error, got {:?}", other.map(|_| ())),
+    }
+
+    // No addresses at all.
+    assert!(matches!(
+        ClusterClient::connect(&[]),
+        Err(ClusterError::NoAddresses)
+    ));
+
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn node_down_is_a_typed_partial_failure_not_a_hang() {
+    let (store, cfg) = sketch_corpus(30, 32);
+    let (_coords, mut servers, addrs) = start_cluster(&store, &cfg, 3);
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+
+    // Take shard 1 (rows 10..20) down.
+    servers.remove(1).shutdown();
+
+    let t0 = Instant::now();
+    // A pair owned by the dead shard: typed NodeFailed naming it.
+    match cluster.pair(12, 3, QueryKind::Oq) {
+        Err(ClusterError::NodeFailed { shard, addr, source }) => {
+            assert_eq!(shard, 1);
+            assert_eq!(addr, addrs[1]);
+            assert!(matches!(source, ClientError::Io(_)), "expected I/O failure: {source:?}");
+        }
+        other => panic!("expected NodeFailed, got {:?}", other.map(|_| ())),
+    }
+    // A TopK scatter touches every node — same typed failure.
+    match cluster.top_k(0, 5, QueryKind::Oq) {
+        Err(ClusterError::NodeFailed { shard, .. }) => assert_eq!(shard, 1),
+        other => panic!("expected NodeFailed, got {:?}", other.map(|_| ())),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "partial failure must be prompt, not a timeout-length hang"
+    );
+    // Reconnect attempts were counted against the dead node.
+    assert!(cluster.metrics().node(1).reconnects.get() >= 1);
+    assert!(cluster.metrics().node(1).errors.get() >= 2);
+
+    // Queries fully owned by live shards still work: a pair on shard 0
+    // rows and a block confined to live shards' rows.
+    let d = cluster.pair(2, 5, QueryKind::Oq).expect("live-shard pair");
+    assert!(d.is_finite());
+    let block = cluster
+        .block(vec![0, 25], vec![3, 28], QueryKind::Gm)
+        .expect("block on live shards");
+    assert_eq!(block.len(), 4);
+
+    for s in servers {
+        s.shutdown();
+    }
+}

@@ -11,7 +11,7 @@ use stablesketch::numerics::{Rng, Xoshiro256pp};
 use stablesketch::server::protocol::{
     query_id_of, read_frame, FrameReadError, ProtoError, MAX_FRAME_BYTES, MAX_TOPK_M,
 };
-use stablesketch::server::{ErrorCode, Frame};
+use stablesketch::server::{ErrorCode, Frame, ShardMapInfo};
 
 fn rand_kind(rng: &mut Xoshiro256pp) -> QueryKind {
     QueryKind::from_index(rng.below(4) as usize).unwrap()
@@ -143,6 +143,14 @@ fn control_and_error_frames_round_trip() {
         Frame::Ping { token: 0 },
         Frame::Pong { token: u64::MAX },
         Frame::StatsRequest,
+        Frame::ShardMapRequest,
+        Frame::ShardMap(ShardMapInfo {
+            index: 2,
+            count: 3,
+            start: 67,
+            end: 100,
+            rows: 100,
+        }),
     ] {
         assert_eq!(round_trip(&f), f);
     }
@@ -162,6 +170,14 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             code: ErrorCode::Overloaded,
             message: "busy".into(),
         },
+        Frame::ShardMapRequest,
+        Frame::ShardMap(ShardMapInfo {
+            index: 0,
+            count: 4,
+            start: 0,
+            end: 25,
+            rows: 100,
+        }),
     ];
     for _ in 0..30 {
         frames.push(Frame::Query {
