@@ -215,6 +215,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 Reply::Pair(_) => 1,
                 Reply::TopK(v) => v.len() as u64,
                 Reply::Block(v) => v.len() as u64,
+                // In-process plans are unstamped (epoch 0), so a
+                // worker epoch refusal cannot reach this loop.
+                Reply::WrongEpoch { .. } => 0,
             };
         }
         done += burst;
@@ -326,13 +329,47 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
 }
 
 /// Multi-address `query --connect`: shard-map exchange, then the same
-/// queries routed/scatter-gathered across the cluster.
+/// queries routed/scatter-gathered across the cluster. With
+/// `--rebalance c0,c1,...` it acts as the membership admin instead:
+/// recompute row ownership from the given per-shard costs and push the
+/// new map to every node under the next epoch.
 fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
     let mut cluster = ClusterClient::connect(addrs).context("connecting to cluster")?;
-    println!("cluster of {} shards over {} rows:", cluster.shard_count(), cluster.rows());
-    let rtts = cluster.ping_all().context("pinging cluster nodes")?;
+    println!(
+        "cluster of {} shards over {} rows (map epoch {}):",
+        cluster.shard_count(),
+        cluster.rows(),
+        cluster.epoch()
+    );
+    // Per-node health probe: every node gets a verdict — a dead node
+    // shows as down without hiding the nodes after it.
+    let rtts = cluster.ping_all();
     for ((addr, range), (_, rtt)) in cluster.node_ranges().into_iter().zip(rtts) {
-        println!("  {addr}: rows {}..{} (rtt {rtt:.1?})", range.start, range.end);
+        match rtt {
+            Ok(rtt) => println!("  {addr}: rows {}..{} (rtt {rtt:.1?})", range.start, range.end),
+            Err(e) => println!("  {addr}: rows {}..{} (DOWN: {e})", range.start, range.end),
+        }
+    }
+    if let Some(costs) = args.get("rebalance") {
+        let costs: Vec<f64> = costs
+            .split(',')
+            .map(|c| c.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("invalid --rebalance cost list: {e}"))?;
+        let (epoch, moves) = cluster
+            .rebalance(&costs)
+            .map_err(|e| anyhow::anyhow!("rebalance failed: {e}"))?;
+        println!(
+            "rebalanced to epoch {epoch}: {} row run(s) changed owner",
+            moves.len()
+        );
+        for (start, end, from, to) in moves {
+            println!("  rows {start}..{end}: shard {from} -> shard {to}");
+        }
+        for (addr, range) in cluster.node_ranges() {
+            println!("  {addr}: now owns rows {}..{}", range.start, range.end);
+        }
+        return Ok(());
     }
     let i = args.usize_or("i", 0)? as u32;
     let j = args.usize_or("j", 1)? as u32;

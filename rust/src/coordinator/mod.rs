@@ -211,6 +211,15 @@ pub enum Reply {
     TopK(Vec<(u32, f64)>),
     /// Row-major `rows × cols` distances.
     Block(Vec<f64>),
+    /// Refusal, not an answer: the query's shard-map epoch stamp
+    /// became unresolvable while it sat in a worker queue (two
+    /// adoptions landed inside its residence — the one-level history
+    /// in [`Ownership`] no longer covers it). Answering under the
+    /// current range would silently change coverage, so the worker
+    /// refuses; the network layer forwards this as a `WrongEpoch`
+    /// error frame and the cluster client refreshes and retries.
+    /// Unstamped (epoch 0) queries can never produce it.
+    WrongEpoch { current: u64 },
 }
 
 impl Reply {
@@ -264,6 +273,11 @@ pub enum SubmitError {
     /// Every candidate shard queue is full — shed load or retry.
     #[error("backpressure: shard queues full")]
     Overloaded,
+    /// The query was stamped with a shard-map epoch that is not this
+    /// node's current one — the caller's map is stale; it should
+    /// re-run the shard-map exchange and retry.
+    #[error("wrong shard-map epoch (node is at {current})")]
+    WrongEpoch { current: u64 },
     /// The pipeline has shut down.
     #[error("pipeline is shut down")]
     Shutdown,
@@ -273,18 +287,81 @@ pub enum SubmitError {
 pub(crate) struct Job {
     pub query: Query,
     pub seq: usize,
+    /// Shard-map epoch the submitter routed under (0 = unstamped,
+    /// never checked). Workers resolve the candidate range for this
+    /// epoch, so queries admitted just before an adoption still finish
+    /// under the map they were routed with.
+    pub epoch: u64,
     pub submitted: Instant,
     pub reply: std::sync::mpsc::Sender<(usize, Reply)>,
+}
+
+/// This node's live shard ownership: the map epoch, the shard identity
+/// advertised to clients, and the candidate-row range `TopK` scans.
+/// Swapped atomically (under its mutex) by [`Coordinator::adopt_shard`];
+/// workers snapshot it once per batch, so a batch never sees a torn
+/// range.
+#[derive(Debug, Clone)]
+pub(crate) struct Ownership {
+    /// Monotonically increasing shard-map epoch. 0 = static (an
+    /// unclustered node, or a pre-v4 peer's view).
+    pub epoch: u64,
+    /// Shard identity (None = unsharded, owns everything).
+    pub spec: Option<ShardSpec>,
+    /// The candidate-row range `TopK` scans (clamped to the live
+    /// store's n at scan time). `0..usize::MAX` on an unsharded node —
+    /// i.e. every row, including ones ingested after start.
+    pub owned: std::ops::Range<usize>,
+    /// The immediately previous `(epoch, range)`: queries stamped with
+    /// it that were admitted before an adoption swap still execute
+    /// under it, so an in-flight plan finishes under the old epoch
+    /// instead of silently changing coverage mid-plan. One level of
+    /// history only — a query that outlives *two* adoptions resolves
+    /// to no range at all and is refused with [`Reply::WrongEpoch`]
+    /// (never silently answered under a map it was not routed with).
+    pub prev: Option<(u64, std::ops::Range<usize>)>,
+}
+
+impl Ownership {
+    /// The candidate range for a query stamped with `epoch`: 0 and the
+    /// current epoch resolve to the live range, the retained previous
+    /// epoch to its range. `None` for anything else — the map that
+    /// query was routed with is gone (two adoptions landed inside its
+    /// queue residence), and answering under a *different* range would
+    /// silently change coverage; the caller must refuse instead.
+    pub fn range_for(&self, epoch: u64) -> Option<std::ops::Range<usize>> {
+        if epoch == 0 || epoch == self.epoch {
+            return Some(self.owned.clone());
+        }
+        match &self.prev {
+            Some((e, r)) if *e == epoch => Some(r.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Why [`Coordinator::adopt_shard`] refused a new shard identity.
+#[derive(Debug, thiserror::Error)]
+pub enum AdoptError {
+    /// The adoption's epoch is not strictly newer than the node's
+    /// current one — a stale admin raced a fresher reconfiguration.
+    #[error("stale shard adoption: node is already at epoch {current}")]
+    Stale { current: u64 },
+    /// The proposed geometry makes no sense for this node's store.
+    #[error("invalid shard adoption: {0}")]
+    Invalid(String),
 }
 
 /// Everything a worker needs, shared.
 pub(crate) struct Shared {
     pub store: Mutex<Arc<SketchStore>>, // swapped by ingest epochs
-    /// The candidate-row range `TopK` scans (clamped to the live
-    /// store's n at scan time). `0..usize::MAX` on an unsharded node —
-    /// i.e. every row, including ones ingested after start; a sharded
-    /// node owns the fixed slice its `ShardSpec` carved at start.
-    pub owned: std::ops::Range<usize>,
+    /// Live shard ownership (epoch + owned range), swapped by
+    /// [`Coordinator::adopt_shard`] and snapshotted per worker batch.
+    pub ownership: Mutex<Ownership>,
+    /// The current shard-map epoch, mirrored atomically so per-query
+    /// admission (the network hot path) does not serialize on the
+    /// ownership mutex.
+    pub epoch: std::sync::atomic::AtomicU64,
     /// Row count of the published snapshot, mirrored atomically so the
     /// per-query admission check ([`Coordinator::submit`] — the
     /// network hot path, one call per connection-reader query) does
@@ -322,7 +399,6 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     ingest: Mutex<StreamingSketcher>,
     config: PipelineConfig,
-    shard: Option<ShardSpec>,
     started: Instant,
 }
 
@@ -358,11 +434,21 @@ impl Coordinator {
             Some(s) => s.owned_range(n),
             None => 0..usize::MAX,
         };
+        // A clustered node starts at epoch 1 so clients' epoch stamps
+        // engage; an unsharded node's map is static (epoch 0, never
+        // checked) until an adoption pulls it into a cluster.
+        let epoch = u64::from(shard.is_some());
         let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, n);
         let shared = Arc::new(Shared {
             store_n: AtomicUsize::new(n),
             store: Mutex::new(Arc::new(store)),
-            owned,
+            ownership: Mutex::new(Ownership {
+                epoch,
+                spec: shard,
+                owned,
+                prev: None,
+            }),
+            epoch: std::sync::atomic::AtomicU64::new(epoch),
             oq: OptimalQuantile::new(alpha, k),
             gm: GeometricMean::new(alpha, k),
             fp: FractionalPower::new(alpha, k),
@@ -394,7 +480,6 @@ impl Coordinator {
             workers,
             ingest: Mutex::new(ingest),
             config,
-            shard,
             started: Instant::now(),
         })
     }
@@ -409,14 +494,79 @@ impl Coordinator {
 
     /// This node's slice of the cluster (None = owns everything).
     pub fn shard_spec(&self) -> Option<ShardSpec> {
-        self.shard
+        self.shared.ownership.lock().unwrap().spec
+    }
+
+    /// The current shard-map epoch (0 = static, unclustered map).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
     }
 
     /// The row range this node's `TopK` scans cover, clamped to the
     /// current store — what the `ShardMap` wire frame advertises.
     pub fn owned_range(&self) -> std::ops::Range<usize> {
+        self.membership().2
+    }
+
+    /// One consistent `(epoch, shard spec, owned range)` snapshot,
+    /// read under a single lock acquisition — a `ShardMap` frame must
+    /// never mix fields from two different adoptions.
+    pub fn membership(&self) -> (u64, Option<ShardSpec>, std::ops::Range<usize>) {
         let n = self.shared.store_n.load(Ordering::Acquire);
-        self.shared.owned.start.min(n)..self.shared.owned.end.min(n)
+        let own = self.shared.ownership.lock().unwrap();
+        (
+            own.epoch,
+            own.spec,
+            own.owned.start.min(n)..own.owned.end.min(n),
+        )
+    }
+
+    /// Adopt a new shard identity and owned row range under a strictly
+    /// newer epoch — the runtime half of a cluster rebalance or
+    /// join/leave reconfiguration. The swap happens atomically under
+    /// the ownership mutex; workers pick it up at their next batch,
+    /// and queries stamped with the outgoing epoch still execute under
+    /// the outgoing range (one level of history), so in-flight plans
+    /// finish under the map they were routed with.
+    pub fn adopt_shard(
+        &self,
+        epoch: u64,
+        index: usize,
+        count: usize,
+        range: std::ops::Range<usize>,
+        rows: usize,
+    ) -> Result<(), AdoptError> {
+        let n = self.shared.store_n.load(Ordering::Acquire);
+        if rows != n {
+            return Err(AdoptError::Invalid(format!(
+                "adoption covers {rows} rows but this node's store has {n}"
+            )));
+        }
+        if count == 0 || index >= count {
+            return Err(AdoptError::Invalid(format!(
+                "shard index {index} out of range (count {count})"
+            )));
+        }
+        if range.start > range.end || range.end > n {
+            return Err(AdoptError::Invalid(format!(
+                "owned range {}..{} does not fit 0..{n}",
+                range.start, range.end
+            )));
+        }
+        let mut own = self.shared.ownership.lock().unwrap();
+        if epoch <= own.epoch {
+            return Err(AdoptError::Stale { current: own.epoch });
+        }
+        own.prev = Some((own.epoch, own.owned.clone()));
+        own.epoch = epoch;
+        own.spec = Some(ShardSpec { index, of: count });
+        own.owned = range;
+        // Mirror for lock-free admission checks; published while still
+        // holding the ownership lock so the two can never disagree for
+        // a reader that takes the lock.
+        self.shared.epoch.store(epoch, Ordering::Release);
+        self.shared.metrics.shard_adoptions.inc();
+        Ok(())
     }
 
     /// Per-shard-worker queue depths (the `Stats` frame's per-node
@@ -490,12 +640,15 @@ impl Coordinator {
         let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply)>();
         let mut pending = 0usize;
         for (seq, query) in queries.into_iter().enumerate() {
-            match self.submit_validated(query, seq, tx.clone()) {
+            match self.submit_validated(query, 0, seq, tx.clone()) {
                 Ok(()) => pending += 1,
                 Err(SubmitError::Overloaded) => {
                     bail!("backpressure: shard queues full after {pending} submissions");
                 }
                 Err(SubmitError::Shutdown) => bail!("pipeline is shut down"),
+                Err(SubmitError::WrongEpoch { current }) => {
+                    bail!("wrong shard-map epoch (node is at {current})")
+                }
                 Err(SubmitError::Invalid(msg)) => bail!("{msg}"),
             }
         }
@@ -523,11 +676,33 @@ impl Coordinator {
         tag: usize,
         reply: std::sync::mpsc::Sender<(usize, Reply)>,
     ) -> Result<(), SubmitError> {
+        self.submit_stamped(query, 0, tag, reply)
+    }
+
+    /// [`Self::submit`] with a shard-map epoch stamp (the v4 network
+    /// path). A nonzero `epoch` that does not match this node's
+    /// current one is refused with [`SubmitError::WrongEpoch`] so the
+    /// caller refreshes its map instead of getting an answer routed
+    /// under a map that no longer exists; `epoch == 0` (in-process
+    /// callers, pre-v4 clients) is never checked.
+    pub fn submit_stamped(
+        &self,
+        query: Query,
+        epoch: u64,
+        tag: usize,
+        reply: std::sync::mpsc::Sender<(usize, Reply)>,
+    ) -> Result<(), SubmitError> {
+        if epoch != 0 {
+            let current = self.shared.epoch.load(Ordering::Acquire);
+            if epoch != current {
+                return Err(SubmitError::WrongEpoch { current });
+            }
+        }
         let n = self.shared.store_n.load(Ordering::Acquire) as u32;
         if let Err(e) = validate_query(&query, n) {
             return Err(SubmitError::Invalid(e.to_string()));
         }
-        self.submit_validated(query, tag, reply)
+        self.submit_validated(query, epoch, tag, reply)
     }
 
     /// Route an already-validated query (shared tail of [`Self::submit`]
@@ -535,12 +710,14 @@ impl Coordinator {
     fn submit_validated(
         &self,
         query: Query,
+        epoch: u64,
         tag: usize,
         reply: std::sync::mpsc::Sender<(usize, Reply)>,
     ) -> Result<(), SubmitError> {
         let job = Job {
             query,
             seq: tag,
+            epoch,
             submitted: Instant::now(),
             reply,
         };
@@ -625,5 +802,40 @@ impl Drop for Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The one-level ownership history: unstamped and current-epoch
+    /// queries resolve to the live range, the retained previous epoch
+    /// to its old range, and anything older resolves to *nothing* —
+    /// the worker refuses rather than answering under a range the
+    /// query was never routed with.
+    #[test]
+    fn ownership_range_resolution_honours_one_level_of_history() {
+        let own = Ownership {
+            epoch: 5,
+            spec: Some(ShardSpec { index: 1, of: 3 }),
+            owned: 20..40,
+            prev: Some((4, 10..30)),
+        };
+        assert_eq!(own.range_for(0), Some(20..40), "unstamped is never checked");
+        assert_eq!(own.range_for(5), Some(20..40), "current epoch, current range");
+        assert_eq!(own.range_for(4), Some(10..30), "previous epoch, retained range");
+        assert_eq!(own.range_for(3), None, "older than the history: refuse");
+        assert_eq!(own.range_for(6), None, "from the future: refuse");
+
+        let fresh = Ownership {
+            epoch: 1,
+            spec: None,
+            owned: 0..usize::MAX,
+            prev: None,
+        };
+        assert_eq!(fresh.range_for(0), Some(0..usize::MAX));
+        assert_eq!(fresh.range_for(1), Some(0..usize::MAX));
+        assert_eq!(fresh.range_for(2), None);
     }
 }

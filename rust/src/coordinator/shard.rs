@@ -241,4 +241,68 @@ mod tests {
         let (_, no_moves) = s.rebalance(&[1.0, 1.0]);
         assert!(no_moves.is_empty());
     }
+
+    /// Property: over random starting maps and random cost vectors,
+    /// the returned moves are *exactly* the ownership diff — applying
+    /// them to the old map reproduces the new map row for row, and
+    /// every row not covered by a move keeps its old owner. (The live
+    /// membership machinery hands these descriptors to `AdoptShard`
+    /// sweeps, so "exact diff" is a correctness contract, not a nice-
+    /// to-have.)
+    #[test]
+    fn rebalance_moves_are_exactly_the_ownership_diff_property() {
+        use crate::numerics::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::new(0xB417);
+        let mut cases: Vec<(ShardSet, Vec<f64>)> = vec![
+            (ShardSet::even(100, 2), vec![1.0, 3.0]),
+            (ShardSet::even(1, 4), vec![1.0, 2.0, 3.0, 4.0]),
+            (ShardSet::weighted(64, &[1.0, 1000.0, 1.0]), vec![1.0, 1.0, 1.0]),
+        ];
+        for _ in 0..200 {
+            let n = rng.below(150) as usize + 1;
+            let shards = rng.below(6) as usize + 1;
+            let start_weights: Vec<f64> = (0..shards)
+                .map(|_| 10f64.powf(rng.uniform() * 8.0 - 4.0))
+                .collect();
+            let costs: Vec<f64> = (0..shards)
+                .map(|_| 10f64.powf(rng.uniform() * 8.0 - 4.0))
+                .collect();
+            cases.push((ShardSet::weighted(n, &start_weights), costs));
+        }
+        for (old, costs) in cases {
+            let n = old.rows();
+            let (new, moves) = old.rebalance(&costs);
+            assert_eq!(new.rows(), n, "rebalance must keep total coverage");
+            assert_eq!(new.shards(), old.shards(), "rebalance must keep the shard count");
+            // Moves are well-formed: nonempty, in-range, sorted,
+            // non-overlapping runs whose endpoints really are the old
+            // and new owners — and never a no-op.
+            let mut prev_end = 0usize;
+            for &(start, end, from, to) in &moves {
+                assert!(start < end && end <= n, "degenerate move {start}..{end}");
+                assert!(start >= prev_end, "moves overlap or are unsorted");
+                assert_ne!(from, to, "a move must change the owner");
+                prev_end = end;
+                for row in start..end {
+                    assert_eq!(old.owner(row), from, "move 'from' mismatch at {row}");
+                    assert_eq!(new.owner(row), to, "move 'to' mismatch at {row}");
+                }
+            }
+            // Applying the moves to the old map reproduces the new map
+            // exactly; rows outside every move keep their old owner.
+            for row in 0..n {
+                let moved_to = moves
+                    .iter()
+                    .find(|&&(s, e, _, _)| (s..e).contains(&row))
+                    .map(|&(_, _, _, to)| to);
+                let expect = moved_to.unwrap_or_else(|| old.owner(row));
+                assert_eq!(
+                    new.owner(row),
+                    expect,
+                    "row {row}: applying moves to the old map must reproduce the new map \
+                     (costs {costs:?})"
+                );
+            }
+        }
+    }
 }

@@ -22,14 +22,33 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
         }
         let t_batch = Instant::now();
         // One snapshot per batch: queries in a batch see a consistent
-        // epoch, and the Arc clone cost is amortized.
+        // epoch, and the Arc clone cost is amortized. Ownership is
+        // snapshotted the same way — an `adopt_shard` swap lands
+        // *between* batches, never inside one.
         let store = shared.snapshot();
+        let ownership = shared.ownership.lock().unwrap().clone();
         shared.metrics.batches_formed.inc();
         shared.metrics.batch_fill.add(batch.len() as u64);
         for job in batch.drain(..) {
             let kind = job.query.kind();
+            // Queries stamped with the previous epoch (admitted just
+            // before an adoption) still scan the range they were
+            // routed under. A stamp that no longer resolves (two
+            // adoptions inside one queue residence) is refused — never
+            // silently answered under a range the client did not route
+            // with.
+            let Some(owned) = ownership.range_for(job.epoch) else {
+                shared.metrics.queries_completed.inc();
+                let _ = job.reply.send((
+                    job.seq,
+                    Reply::WrongEpoch {
+                        current: ownership.epoch,
+                    },
+                ));
+                continue;
+            };
             let t_est = Instant::now();
-            let (reply, estimates) = execute(&shared, &store, &job.query, &mut scratch);
+            let (reply, estimates) = execute(&shared, &store, &job.query, &owned, &mut scratch);
             // One clock read per query; the histogram tracks cost *per
             // fused estimate* so TopK/Block scans land in the same
             // units as single pairs (see metrics::PipelineMetrics).
@@ -55,6 +74,7 @@ fn execute(
     shared: &Shared,
     store: &SketchStore,
     query: &Query,
+    owned: &std::ops::Range<usize>,
     scratch: &mut BatchScratch,
 ) -> (Reply, u64) {
     let est = shared.fused(query.kind());
@@ -76,8 +96,8 @@ fn execute(
             // merges partials by (distance, row) — the same order this
             // scan produces — so the merged result is bit-identical to
             // a single node scanning everything.
-            let lo = shared.owned.start.min(store.n);
-            let hi = shared.owned.end.min(store.n);
+            let lo = owned.start.min(store.n);
+            let hi = owned.end.min(store.n);
             let candidates = (hi - lo).saturating_sub(usize::from(lo <= i && i < hi));
             let m = (*m).min(candidates);
             let anchor = store.row(i);

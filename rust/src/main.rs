@@ -39,6 +39,9 @@ USAGE: stablesketch <subcommand> [options]
   query       --i 0 --j 1 [--estimator oq|gm|fp|hm|median] (uses sketch run inline)
               [--connect 127.0.0.1:7878]  (queries a serve --listen process instead;
               a comma-separated address list queries a sharded cluster)
+              [--rebalance 1.0,2.0,1.5]  (admin: recompute row ownership from
+              per-shard costs and push the new shard map to every node
+              under the next epoch instead of querying)
   serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
               [--workload pair|topk|block|mixed] [--topk-m 10] [--block-side 8]
               [--listen 127.0.0.1:7878 [--duration 0] [--stats-every 10] [--max-conns 64]

@@ -168,6 +168,12 @@ pub struct PipelineMetrics {
     /// Queries answered with an explicit `Overloaded` error frame
     /// (backpressure surfaced to the remote caller, connection kept).
     pub net_overload_replies: Counter,
+    /// `AdoptShard` reconfigurations this node accepted (each bumps
+    /// the shard-map epoch).
+    pub shard_adoptions: Counter,
+    /// Queries refused with `WrongEpoch` because their shard-map stamp
+    /// was stale — each one tells a client to refresh its map.
+    pub net_wrong_epoch_replies: Counter,
 }
 
 impl PipelineMetrics {
@@ -240,6 +246,8 @@ impl PipelineMetrics {
             ("net_bytes_out", self.net_bytes_out.get()),
             ("net_decode_errors", self.net_decode_errors.get()),
             ("net_overload_replies", self.net_overload_replies.get()),
+            ("shard_adoptions", self.shard_adoptions.get()),
+            ("net_wrong_epoch_replies", self.net_wrong_epoch_replies.get()),
         ]
     }
 }
@@ -272,7 +280,32 @@ pub struct ClusterMetrics {
     /// Sub-queries produced by routing/scatter (≥ queries in the plan:
     /// a `TopK` fans out to every node).
     pub subqueries: Counter,
+    /// Shard-map refreshes: re-runs of the map exchange after a
+    /// `WrongEpoch` refusal or a node failure.
+    pub refreshes: Counter,
+    /// Plans transparently retried after a successful refresh (each
+    /// one is a node join/leave/rebalance routed around instead of a
+    /// surfaced error).
+    pub retried_plans: Counter,
+    /// Reconnects/errors accumulated by node slots that were retired
+    /// by a refresh (per-node counters reset when the node set is
+    /// rebuilt; totals must not).
+    retired_reconnects: Counter,
+    retired_errors: Counter,
     nodes: Vec<NodeMetrics>,
+}
+
+fn node_metrics(addrs: impl IntoIterator<Item = String>) -> Vec<NodeMetrics> {
+    addrs
+        .into_iter()
+        .map(|addr| NodeMetrics {
+            addr,
+            routed: Counter::default(),
+            errors: Counter::default(),
+            reconnects: Counter::default(),
+            inflight: Gauge::default(),
+        })
+        .collect()
 }
 
 impl ClusterMetrics {
@@ -280,17 +313,24 @@ impl ClusterMetrics {
         Self {
             plans: Counter::default(),
             subqueries: Counter::default(),
-            nodes: addrs
-                .into_iter()
-                .map(|addr| NodeMetrics {
-                    addr,
-                    routed: Counter::default(),
-                    errors: Counter::default(),
-                    reconnects: Counter::default(),
-                    inflight: Gauge::default(),
-                })
-                .collect(),
+            refreshes: Counter::default(),
+            retried_plans: Counter::default(),
+            retired_reconnects: Counter::default(),
+            retired_errors: Counter::default(),
+            nodes: node_metrics(addrs),
         }
+    }
+
+    /// Rebuild the per-node slots after a shard-map refresh changed
+    /// the node set. Whole-cluster counters (plans, refreshes, …)
+    /// carry over; the retiring nodes' reconnect/error counts fold
+    /// into the cluster totals so they survive the reset.
+    pub fn reset_nodes<I: IntoIterator<Item = String>>(&mut self, addrs: I) {
+        for n in &self.nodes {
+            self.retired_reconnects.add(n.reconnects.get());
+            self.retired_errors.add(n.errors.get());
+        }
+        self.nodes = node_metrics(addrs);
     }
 
     pub fn node(&self, i: usize) -> &NodeMetrics {
@@ -301,11 +341,31 @@ impl ClusterMetrics {
         &self.nodes
     }
 
+    /// Reconnects across the cluster's whole lifetime, including node
+    /// slots retired by refreshes.
+    pub fn total_reconnects(&self) -> u64 {
+        self.retired_reconnects.get() + self.nodes.iter().map(|n| n.reconnects.get()).sum::<u64>()
+    }
+
+    /// Errors across the cluster's whole lifetime, including node
+    /// slots retired by refreshes.
+    pub fn total_errors(&self) -> u64 {
+        self.retired_errors.get() + self.nodes.iter().map(|n| n.errors.get()).sum::<u64>()
+    }
+
     pub fn report(&self) -> String {
+        // Lifetime totals, not the live slots' counters: a refresh
+        // resets per-node slots, and a report printed right after a
+        // bounce must still show the flap.
         let mut s = format!(
-            "cluster: {} plans, {} subqueries",
+            "cluster: {} plans, {} subqueries, {} refreshes, {} retried, \
+             {} reconnects total, {} errors total",
             self.plans.get(),
-            self.subqueries.get()
+            self.subqueries.get(),
+            self.refreshes.get(),
+            self.retried_plans.get(),
+            self.total_reconnects(),
+            self.total_errors(),
         );
         for (i, n) in self.nodes.iter().enumerate() {
             s.push_str(&format!(
@@ -336,6 +396,20 @@ mod tests {
         assert!(r.contains("node 1 (b:2)"), "{r}");
         assert!(r.contains("1 reconnects"), "{r}");
         assert_eq!(m.nodes().len(), 2);
+    }
+
+    #[test]
+    fn reset_nodes_preserves_cluster_totals() {
+        let mut m = ClusterMetrics::new(["a:1".to_string(), "b:2".to_string()]);
+        m.node(0).reconnects.add(2);
+        m.node(1).errors.inc();
+        m.refreshes.inc();
+        m.reset_nodes(["a:1".to_string(), "c:3".to_string(), "d:4".to_string()]);
+        assert_eq!(m.nodes().len(), 3);
+        assert_eq!(m.node(0).reconnects.get(), 0, "per-node counters reset");
+        assert_eq!(m.total_reconnects(), 2, "retired reconnects fold into the total");
+        assert_eq!(m.total_errors(), 1, "retired errors fold into the total");
+        assert_eq!(m.refreshes.get(), 1, "whole-cluster counters carry over");
     }
 
     #[test]

@@ -56,12 +56,26 @@ impl From<FrameReadError> for ClientError {
 /// generator built on them — forever.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// The one dial policy for "the server should be up (or still
+/// binding)" connects: the cluster shard-map exchange and every
+/// loadgen connection (setup probe *and* worker threads) share these,
+/// so the policies cannot silently diverge again (they once did —
+/// probe 10×50 ms vs workers 5×20 ms — and a slow-binding cluster
+/// passed the probe while every worker died on connect).
+pub const CONNECT_RETRY_ATTEMPTS: usize = 10;
+pub const CONNECT_RETRY_BACKOFF: Duration = Duration::from_millis(50);
+
 /// Blocking connection to a [`super::SketchServer`].
 pub struct SketchClient {
     addr: String,
     stream: TcpStream,
     next_id: u64,
     timeout: Option<Duration>,
+    /// Shard-map epoch stamped on outgoing query frames (0 = never
+    /// stamped — the single-node default). Set by the cluster router
+    /// after each shard-map exchange so a node whose map moved on
+    /// answers `WrongEpoch` instead of a silently mis-routed reply.
+    epoch: u64,
 }
 
 /// Shared dial path for `connect` and `reconnect`: one place for every
@@ -83,7 +97,19 @@ impl SketchClient {
             // Id 0 is reserved for connection-level server errors.
             next_id: 1,
             timeout: Some(DEFAULT_IO_TIMEOUT),
+            epoch: 0,
         })
+    }
+
+    /// Stamp subsequent query frames with a shard-map epoch (0 stops
+    /// stamping). Survives [`Self::reconnect`].
+    pub fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+    }
+
+    /// The shard-map epoch currently stamped on query frames.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Override the per-read/write timeout (`None` blocks forever —
@@ -97,19 +123,26 @@ impl SketchClient {
     }
 
     /// Connect, retrying with linear backoff — for racing a server
-    /// that is still binding, and for load-generator reconnects.
+    /// that is still binding, and for load-generator reconnects. The
+    /// backoff sleeps *between* attempts only: once the last attempt
+    /// has failed there is nothing left to wait for, so a dead address
+    /// surfaces its error immediately instead of burning one more
+    /// backoff interval first.
     pub fn connect_with_retry(
         addr: &str,
         attempts: usize,
         backoff: Duration,
     ) -> Result<SketchClient, ClientError> {
+        let attempts = attempts.max(1);
         let mut last = None;
-        for attempt in 0..attempts.max(1) {
+        for attempt in 0..attempts {
             match Self::connect(addr) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(backoff * (attempt as u32 + 1));
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(backoff * (attempt as u32 + 1));
+                    }
                 }
             }
         }
@@ -166,6 +199,18 @@ impl SketchClient {
         }
     }
 
+    /// v4 admin call: tell the server to adopt a new shard identity
+    /// and owned row range under a strictly newer epoch. Returns the
+    /// node's post-adoption shard map.
+    pub fn adopt_shard(&mut self, info: ShardMapInfo) -> Result<ShardMapInfo, ClientError> {
+        write_frame(&mut self.stream, &Frame::AdoptShard(info))?;
+        match self.read()? {
+            Frame::ShardMap(now) => Ok(now),
+            Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
+            _ => Err(ClientError::Unexpected("non-shard-map reply to shard adoption")),
+        }
+    }
+
     /// One stat by label, if the server reports it.
     pub fn stat(&mut self, label: &str) -> Result<Option<u64>, ClientError> {
         Ok(self
@@ -195,6 +240,7 @@ impl SketchClient {
                     &Frame::Query {
                         id: base + off as u64,
                         query: query.clone(),
+                        epoch: self.epoch,
                     },
                 )?;
             }
@@ -274,6 +320,60 @@ impl SketchClient {
 
     fn read(&mut self) -> Result<Frame, ClientError> {
         Ok(read_frame(&mut self.stream)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression: `connect_with_retry` used to sleep *after* the final
+    /// failed attempt too, so a dead address burned a full extra
+    /// backoff interval before its error surfaced. With 2 attempts at
+    /// 200 ms linear backoff the one inter-attempt sleep is 200 ms; the
+    /// buggy version added a pointless 400 ms more (2×backoff after the
+    /// last attempt), for ~600 ms total. Loopback connection-refused is
+    /// effectively instant, so the 300 ms of slack below is pure
+    /// scheduling headroom — only the returned final sleep can push the
+    /// elapsed time past the bound.
+    #[test]
+    fn connect_with_retry_does_not_sleep_after_the_last_attempt() {
+        // A port that was just bound and released refuses connections
+        // immediately (never accepted anything, so no TIME_WAIT).
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind probe port");
+            l.local_addr().expect("local addr").to_string()
+        };
+        let backoff = Duration::from_millis(200);
+        let t0 = Instant::now();
+        let err = SketchClient::connect_with_retry(&dead_addr, 2, backoff);
+        let elapsed = t0.elapsed();
+        assert!(matches!(err, Err(ClientError::Io(_))), "dead address must error");
+        assert!(
+            elapsed >= Duration::from_millis(200),
+            "inter-attempt backoff still applies ({elapsed:?})"
+        );
+        assert!(
+            elapsed < Duration::from_millis(500),
+            "no sleep after the final attempt ({elapsed:?} — the buggy total was ~600ms)"
+        );
+    }
+
+    /// A single attempt against a dead address fails with no sleep at
+    /// all, however large the backoff.
+    #[test]
+    fn single_attempt_fails_without_any_backoff() {
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind probe port");
+            l.local_addr().expect("local addr").to_string()
+        };
+        let t0 = Instant::now();
+        let err = SketchClient::connect_with_retry(&dead_addr, 1, Duration::from_secs(5));
+        assert!(err.is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "one attempt must not invoke the backoff sleep"
+        );
     }
 }
 

@@ -27,13 +27,46 @@
 //! sub-plan; a node that stays down surfaces as a typed
 //! [`ClusterError::NodeFailed`] naming the node and shard — never a
 //! hang, and never a silently partial result.
+//!
+//! Membership is **live** (v4): the map carries an epoch, queries are
+//! stamped with it, and on a `WrongEpoch` refusal or a node failure
+//! the router refreshes its map (re-running the exchange against its
+//! current dial list) and retries the plan once — a rebalance or a
+//! node bounce costs one extra round trip instead of failing the
+//! plan. [`ClusterClient::rebalance`] is the admin half: it computes
+//! new ranges from per-shard costs and pushes `AdoptShard` frames to
+//! every node under the next epoch.
 
-use super::client::{ClientError, SketchClient};
-use super::protocol::{ShardMapInfo, MAX_TOPK_M};
+use super::client::{ClientError, SketchClient, CONNECT_RETRY_ATTEMPTS, CONNECT_RETRY_BACKOFF};
+use super::protocol::{ErrorCode, ShardMapInfo, MAX_TOPK_M};
 use crate::coordinator::{Query, QueryKind, Reply, ShardSet, MAX_BLOCK_CELLS};
 use crate::metrics::{ClusterMetrics, NodeMetrics};
 use std::time::Duration;
 use thiserror::Error;
+
+/// Dial policy during a shard-map refresh (tight — unlike the initial
+/// connect's shared [`CONNECT_RETRY_ATTEMPTS`] policy, the nodes are
+/// expected to be up: a dead one should fail the refresh fast so the
+/// original plan error surfaces promptly).
+const REFRESH_DIAL_ATTEMPTS: usize = 2;
+
+/// How many times a convergence loop re-runs the map exchange when
+/// nodes disagree (an adoption sweeping across the cluster leaves a
+/// short window of mixed epochs), and how long it waits between tries.
+const REFRESH_EXCHANGE_ATTEMPTS: usize = 40;
+const REFRESH_EXCHANGE_BACKOFF: Duration = Duration::from_millis(25);
+
+/// After this many failed exchange attempts the convergence loop
+/// suspects the disagreement is not a sweep in flight but a cluster
+/// that cannot converge on its own (a restarted node whose epoch reset
+/// to 1, an admin that died mid-sweep, two admins that raced) and
+/// tries one guarded [`heal`] before spending the rest of its budget.
+/// The heal itself re-probes twice ([`HEAL_STABILITY_GAP`] apart) and
+/// refuses unless the per-node epochs are *unchanged* — a live admin
+/// sweep moves at least one node per gap, a wedged cluster moves none
+/// — so a merely-slow sweep is waited out, not clobbered.
+const HEAL_AFTER_ATTEMPTS: usize = 16;
+const HEAL_STABILITY_GAP: Duration = Duration::from_millis(100);
 
 /// Split a `--connect` style address list (`host:port[,host:port...]`)
 /// into trimmed, non-empty addresses — the one parser every caller
@@ -81,6 +114,17 @@ pub enum ClusterError {
         shard: usize,
         message: String,
     },
+    /// A node refused a sub-plan with `WrongEpoch`: the cluster's
+    /// shard map changed under this client (rebalance, join/leave).
+    /// [`ClusterClient::query_plan`] handles it internally by
+    /// refreshing the map and retrying once; it only surfaces when the
+    /// retry itself hits yet another reconfiguration.
+    #[error("shard map changed under the plan (node {addr}, shard {shard}): {message}")]
+    MapChanged {
+        addr: String,
+        shard: usize,
+        message: String,
+    },
     /// The plan failed client-side admission (row out of range,
     /// oversized block) before touching any node.
     #[error("invalid query: {0}")]
@@ -99,10 +143,22 @@ struct Node {
 /// A connected view of a sharded cluster: one [`SketchClient`] per
 /// node plus the validated row → node map. All routing happens here;
 /// the server side stays a plain single-node protocol speaker.
+///
+/// The view is **live**: the map carries the cluster's epoch, every
+/// query is stamped with it, and an epoch-mismatch refusal or a node
+/// failure triggers a transparent map refresh (re-dialing the current
+/// address list) and one plan retry — node join/leave and rebalances
+/// are routed-around events, not plan errors.
 pub struct ClusterClient {
+    /// The dial list for refreshes. Starts as the connect-time list;
+    /// [`Self::set_addresses`] swaps it when the membership changes
+    /// (a bounced node coming back elsewhere, a join/leave).
+    addrs: Vec<String>,
     nodes: Vec<Node>,
     map: ShardSet,
     rows: usize,
+    /// The shard-map epoch every node agreed on at the last exchange.
+    epoch: u64,
     metrics: ClusterMetrics,
 }
 
@@ -126,99 +182,68 @@ impl ClusterClient {
     /// Dial every node, run the shard-map exchange, and validate that
     /// the advertised shards tile the row space exactly: every index
     /// `0..count` present once, every range contiguous from 0 to
-    /// `rows`, every node agreeing on `count` and `rows`. One address
-    /// per shard — a single address is a valid 1-shard cluster.
+    /// `rows`, every node agreeing on `count`, `rows`, and (since v4)
+    /// the map `epoch`. One address per shard — a single address is a
+    /// valid 1-shard cluster.
     pub fn connect(addrs: &[String]) -> Result<ClusterClient, ClusterError> {
         if addrs.is_empty() {
             return Err(ClusterError::NoAddresses);
         }
-        let mut dialed: Vec<(String, SketchClient, ShardMapInfo)> = Vec::with_capacity(addrs.len());
-        for addr in addrs {
-            let mut client = SketchClient::connect_with_retry(addr, 10, Duration::from_millis(50))
-                .map_err(|source| ClusterError::Connect {
-                    addr: addr.clone(),
-                    source,
-                })?;
-            let info = client.shard_map().map_err(|e| ClusterError::ShardMap {
-                addr: addr.clone(),
-                detail: e.to_string(),
-            })?;
-            dialed.push((addr.clone(), client, info));
-        }
-        let count = dialed[0].2.count;
-        let rows = dialed[0].2.rows;
-        if count as usize != addrs.len() {
-            return Err(ClusterError::ShardMap {
-                addr: dialed[0].0.clone(),
-                detail: format!(
-                    "cluster has {count} shards but {} addresses were given",
-                    addrs.len()
-                ),
-            });
-        }
-        let mut slots: Vec<Option<(String, SketchClient, ShardMapInfo)>> =
-            (0..count).map(|_| None).collect();
-        for (addr, client, info) in dialed {
-            if info.count != count || info.rows != rows {
-                return Err(ClusterError::ShardMap {
-                    addr,
-                    detail: format!(
-                        "node disagrees on cluster geometry: count={} rows={} \
-                         (expected count={count} rows={rows})",
-                        info.count, info.rows
-                    ),
-                });
-            }
-            if info.index >= count {
-                return Err(ClusterError::ShardMap {
-                    addr,
-                    detail: format!("shard index {} out of range (count {count})", info.index),
-                });
-            }
-            let slot = &mut slots[info.index as usize];
-            if slot.is_some() {
-                return Err(ClusterError::ShardMap {
-                    addr,
-                    detail: format!("duplicate shard index {}", info.index),
-                });
-            }
-            *slot = Some((addr, client, info));
-        }
-        // All slots filled (count == addrs.len() and no duplicates).
-        let mut nodes = Vec::with_capacity(count as usize);
-        let mut bounds = vec![0usize];
-        for slot in slots {
-            let (addr, client, info) = slot.expect("every shard slot filled");
-            let expect_start = *bounds.last().unwrap() as u64;
-            if info.start != expect_start || info.end < info.start || info.end > rows {
-                return Err(ClusterError::ShardMap {
-                    addr,
-                    detail: format!(
-                        "shard {} owns rows {}..{} which does not continue the map at {expect_start}",
-                        info.index, info.start, info.end
-                    ),
-                });
-            }
-            bounds.push(info.end as usize);
-            nodes.push(Node { addr, client });
-        }
-        if *bounds.last().unwrap() != rows as usize {
-            return Err(ClusterError::ShardMap {
-                addr: nodes.last().expect("at least one node").addr.clone(),
-                detail: format!(
-                    "shard ranges cover {} of {rows} rows",
-                    bounds.last().unwrap()
-                ),
-            });
-        }
-        let map = ShardSet::from_bounds(bounds).expect("validated bounds form a partition");
+        let (nodes, map, rows, epoch) = match exchange(addrs, CONNECT_RETRY_ATTEMPTS) {
+            Ok(view) => view,
+            // An inconsistent map at connect time may just be an
+            // adoption sweep in flight — or a cluster that needs the
+            // guarded heal (a node restarted with a reset epoch).
+            // Converge before giving up; genuine operator errors
+            // (wrong address count, duplicate addresses) still fail
+            // with the same typed detail after the budget.
+            Err(ClusterError::ShardMap { .. }) => converge(addrs)?,
+            Err(e) => return Err(e),
+        };
         let metrics = ClusterMetrics::new(nodes.iter().map(|n| n.addr.clone()));
         Ok(ClusterClient {
+            addrs: addrs.to_vec(),
             nodes,
             map,
-            rows: rows as usize,
+            rows,
+            epoch,
             metrics,
         })
+    }
+
+    /// The shard-map epoch of the current view (0 = a static,
+    /// pre-epoch map).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Swap the dial list used by the next refresh — how a caller
+    /// tells the router about membership changes it learned out of
+    /// band (a replacement node on a new port, a join/leave). Takes
+    /// effect at the next refresh (triggered automatically by the next
+    /// epoch mismatch or node failure, or explicitly via
+    /// [`Self::refresh`]); current connections keep serving until
+    /// then.
+    pub fn set_addresses(&mut self, addrs: &[String]) {
+        self.addrs = addrs.to_vec();
+    }
+
+    /// Re-run the shard-map exchange against the current address list
+    /// and swap in the fresh view (new clients, new map, new epoch).
+    /// Nodes caught mid-adoption (disagreeing epochs) are retried
+    /// briefly — and a cluster that cannot converge on its own gets
+    /// one guarded [`heal`]; a node that cannot be dialed fails the
+    /// refresh fast. Per-node metrics slots are rebuilt; cluster
+    /// totals carry over.
+    pub fn refresh(&mut self) -> Result<(), ClusterError> {
+        self.metrics.refreshes.inc();
+        let (nodes, map, rows, epoch) = converge(&self.addrs)?;
+        self.metrics.reset_nodes(nodes.iter().map(|n| n.addr.clone()));
+        self.nodes = nodes;
+        self.map = map;
+        self.rows = rows;
+        self.epoch = epoch;
+        Ok(())
     }
 
     /// Total rows served by the cluster.
@@ -249,19 +274,87 @@ impl ClusterClient {
         &self.metrics
     }
 
-    /// Round-trip a ping to every node; per-node latency in shard
-    /// order.
-    pub fn ping_all(&mut self) -> Result<Vec<(String, Duration)>, ClusterError> {
-        let mut out = Vec::with_capacity(self.nodes.len());
-        for (shard, node) in self.nodes.iter_mut().enumerate() {
-            let rtt = node.client.ping().map_err(|source| ClusterError::NodeFailed {
-                addr: node.addr.clone(),
-                shard,
-                source,
-            })?;
-            out.push((node.addr.clone(), rtt));
+    /// Admin: rebalance row ownership by observed per-shard costs and
+    /// push the new map to every node under the next epoch. The new
+    /// ranges come from [`ShardSet::rebalance`]; its move descriptors
+    /// (`(row_start, row_end, from, to)` runs that changed owner) are
+    /// returned for logging/audit, and other clients pick the new map
+    /// up through their next epoch-mismatch refresh. Nodes are swept
+    /// in shard order; a node that refuses with a *newer* epoch lost a
+    /// race to a concurrent admin — this client then refreshes to the
+    /// winner's map and reports `MapChanged`.
+    #[allow(clippy::type_complexity)]
+    pub fn rebalance(
+        &mut self,
+        costs: &[f64],
+    ) -> Result<(u64, Vec<(usize, usize, usize, usize)>), ClusterError> {
+        if costs.len() != self.nodes.len() {
+            return Err(ClusterError::Invalid(format!(
+                "{} costs given for {} shards",
+                costs.len(),
+                self.nodes.len()
+            )));
         }
-        Ok(out)
+        if costs.iter().any(|&c| !c.is_finite() || c <= 0.0) {
+            return Err(ClusterError::Invalid(
+                "per-shard costs must be finite and > 0".into(),
+            ));
+        }
+        let (new_map, moves) = self.map.rebalance(costs);
+        let epoch = self.epoch + 1;
+        let count = self.nodes.len() as u32;
+        let rows = self.rows as u64;
+        for shard in 0..self.nodes.len() {
+            let range = new_map.range(shard);
+            let info = ShardMapInfo {
+                index: shard as u32,
+                count,
+                start: range.start as u64,
+                end: range.end as u64,
+                rows,
+                epoch,
+            };
+            let node = &mut self.nodes[shard];
+            if let Err(source) = node.client.adopt_shard(info) {
+                let addr = node.addr.clone();
+                return Err(match source {
+                    ClientError::Server { code: ErrorCode::WrongEpoch, message } => {
+                        // A concurrent reconfiguration won: converge on
+                        // it instead of leaving a half-adopted sweep.
+                        let _ = self.refresh();
+                        ClusterError::MapChanged {
+                            addr,
+                            shard,
+                            message,
+                        }
+                    }
+                    source => ClusterError::NodeFailed {
+                        addr,
+                        shard,
+                        source,
+                    },
+                });
+            }
+        }
+        self.map = new_map;
+        self.epoch = epoch;
+        for node in &mut self.nodes {
+            node.client.set_epoch(epoch);
+        }
+        Ok((epoch, moves))
+    }
+
+    /// Round-trip a ping to every node; per-node results in shard
+    /// order. A dead node is an `Err` *entry*, not an early return —
+    /// a health probe of an N-node cluster reports all N verdicts, so
+    /// callers (and the membership machinery deciding what to
+    /// rebalance around) see every node's state, not just the first
+    /// failure.
+    pub fn ping_all(&mut self) -> Vec<(String, Result<Duration, ClientError>)> {
+        self.nodes
+            .iter_mut()
+            .map(|node| (node.addr.clone(), node.client.ping()))
+            .collect()
     }
 
     /// One pairwise distance (routed to the owner of row `i`).
@@ -307,7 +400,34 @@ impl ClusterClient {
     /// (scatter), then merge per-node replies back into input order
     /// (gather). Replies are shape-matched to their queries and
     /// bit-identical to a single node serving the same corpus.
+    ///
+    /// **Refresh instead of fail:** if the plan hits an epoch-mismatch
+    /// refusal (the cluster rebalanced or changed membership under
+    /// this client) or a node failure (a bounce), the router re-runs
+    /// the shard-map exchange against its current address list,
+    /// rebuilds its routing state, and transparently retries the plan
+    /// once — so a reconfiguration costs one round trip, not a
+    /// surfaced error. If the refresh itself cannot complete (a node
+    /// stays down), the *original* error is returned so callers see
+    /// what actually broke.
     pub fn query_plan(&mut self, plan: &[Query]) -> Result<Vec<Reply>, ClusterError> {
+        match self.query_plan_once(plan) {
+            Err(first @ (ClusterError::MapChanged { .. } | ClusterError::NodeFailed { .. })) => {
+                if self.refresh().is_err() {
+                    // The refresh failing (node unreachable, map that
+                    // never converges) means the cluster is actually
+                    // degraded — report the plan's own failure.
+                    return Err(first);
+                }
+                self.metrics.retried_plans.inc();
+                self.query_plan_once(plan)
+            }
+            r => r,
+        }
+    }
+
+    /// One attempt of [`Self::query_plan`] under the current map.
+    fn query_plan_once(&mut self, plan: &[Query]) -> Result<Vec<Reply>, ClusterError> {
         if plan.is_empty() {
             return Ok(Vec::new());
         }
@@ -418,6 +538,15 @@ impl ClusterClient {
                         shard,
                         message,
                     })
+                }
+                Err(ClientError::Server { code: ErrorCode::WrongEpoch, message }) => {
+                    // The node's map moved on under us — the signal
+                    // `query_plan` turns into a refresh-and-retry.
+                    return Err(ClusterError::MapChanged {
+                        addr: self.nodes[shard].addr.clone(),
+                        shard,
+                        message,
+                    });
                 }
                 Err(source) => {
                     return Err(ClusterError::NodeFailed {
@@ -571,6 +700,234 @@ mod tests {
     }
 }
 
+/// Dial every address and collect each node's [`ShardMapInfo`] — the
+/// common first stage of [`exchange`] and [`heal`].
+#[allow(clippy::type_complexity)]
+fn probe(
+    addrs: &[String],
+    dial_attempts: usize,
+) -> Result<Vec<(String, SketchClient, ShardMapInfo)>, ClusterError> {
+    if addrs.is_empty() {
+        return Err(ClusterError::NoAddresses);
+    }
+    let mut dialed: Vec<(String, SketchClient, ShardMapInfo)> = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        let mut client =
+            SketchClient::connect_with_retry(addr, dial_attempts, CONNECT_RETRY_BACKOFF).map_err(
+                |source| ClusterError::Connect {
+                    addr: addr.clone(),
+                    source,
+                },
+            )?;
+        let info = client.shard_map().map_err(|e| ClusterError::ShardMap {
+            addr: addr.clone(),
+            detail: e.to_string(),
+        })?;
+        dialed.push((addr.clone(), client, info));
+    }
+    Ok(dialed)
+}
+
+/// Exchange-with-convergence: retry [`exchange`] while nodes disagree
+/// (an adoption sweep in flight heals itself within a round trip or
+/// two), and after [`HEAL_AFTER_ATTEMPTS`] failures try one guarded
+/// [`heal`] so a cluster that *cannot* converge on its own — a node
+/// restarted with its epoch reset to 1, an admin that died mid-sweep,
+/// two admins that raced — is repaired instead of wedged. Dial
+/// failures abort immediately: a dead node should surface promptly,
+/// not after the retry budget.
+#[allow(clippy::type_complexity)]
+fn converge(addrs: &[String]) -> Result<(Vec<Node>, ShardSet, usize, u64), ClusterError> {
+    let mut last: Option<ClusterError> = None;
+    for attempt in 0..REFRESH_EXCHANGE_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(REFRESH_EXCHANGE_BACKOFF);
+        }
+        match exchange(addrs, REFRESH_DIAL_ATTEMPTS) {
+            Ok(view) => return Ok(view),
+            Err(e @ ClusterError::ShardMap { .. }) => {
+                last = Some(e);
+                if attempt + 1 == HEAL_AFTER_ATTEMPTS {
+                    // Best effort: if the heal is refused (gates below)
+                    // or loses an epoch race, the remaining exchange
+                    // attempts decide the outcome either way.
+                    let _ = heal(addrs);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("at least one exchange attempt"))
+}
+
+/// Last-resort convergence: push an even row split to every node under
+/// `max observed epoch + 1`, so nodes stuck on divergent epochs or
+/// non-tiling ranges agree again. **Guarded** so it can never fire on
+/// operator errors or a live reconfiguration and corrupt a healthy
+/// cluster: every node must be dialable, agree on shard count (== the
+/// address count) and row total, the claimed shard indices must form a
+/// permutation of `0..count` (a duplicated address shows up as a
+/// duplicated index and is refused), and a second probe
+/// [`HEAL_STABILITY_GAP`] later must observe the *same* per-node
+/// epochs — an admin sweep still in flight keeps moving and is
+/// deferred to. The healed map is the even split — a deliberate
+/// weighted rebalance flattened by a heal is re-applied with
+/// [`ClusterClient::rebalance`] once the cluster is consistent again.
+fn heal(addrs: &[String]) -> Result<(), ClusterError> {
+    let first = probe(addrs, REFRESH_DIAL_ATTEMPTS)?;
+    let first_epochs: Vec<u64> = first.iter().map(|(_, _, info)| info.epoch).collect();
+    drop(first);
+    std::thread::sleep(HEAL_STABILITY_GAP);
+    let dialed = probe(addrs, REFRESH_DIAL_ATTEMPTS)?;
+    let epochs: Vec<u64> = dialed.iter().map(|(_, _, info)| info.epoch).collect();
+    if epochs != first_epochs {
+        return Err(ClusterError::ShardMap {
+            addr: addrs[0].clone(),
+            detail: "refusing to heal: node epochs still moving (a sweep is in flight)".into(),
+        });
+    }
+    let count = addrs.len();
+    let rows = dialed[0].2.rows;
+    let mut seen = vec![false; count];
+    let mut max_epoch = 0u64;
+    for (addr, _, info) in &dialed {
+        if info.count as usize != count || info.rows != rows {
+            return Err(ClusterError::ShardMap {
+                addr: addr.clone(),
+                detail: "refusing to heal: nodes disagree on shard count or row total".into(),
+            });
+        }
+        let ix = info.index as usize;
+        if ix >= count || seen[ix] {
+            return Err(ClusterError::ShardMap {
+                addr: addr.clone(),
+                detail: format!("refusing to heal: shard index {ix} duplicated or out of range"),
+            });
+        }
+        seen[ix] = true;
+        max_epoch = max_epoch.max(info.epoch);
+    }
+    let epoch = max_epoch + 1;
+    let even = ShardSet::even(rows as usize, count);
+    for (addr, mut client, info) in dialed {
+        let r = even.range(info.index as usize);
+        let adopt = ShardMapInfo {
+            index: info.index,
+            count: count as u32,
+            start: r.start as u64,
+            end: r.end as u64,
+            rows,
+            epoch,
+        };
+        match client.adopt_shard(adopt) {
+            Ok(_) => {}
+            // A stale refusal means another healer or admin won the
+            // epoch race — their sweep is converging the cluster;
+            // defer to it.
+            Err(ClientError::Server { code: ErrorCode::WrongEpoch, .. }) => {}
+            // An answered refusal is the node speaking, not the dial
+            // failing — keep it a node-level error so the operator
+            // debugs the adoption, not the network.
+            Err(source) => {
+                return Err(ClusterError::NodeFailed {
+                    addr,
+                    shard: info.index as usize,
+                    source,
+                })
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The shard-map exchange proper: [`probe`], then validate that the
+/// per-node views describe one consistent cluster — every index
+/// `0..count` present exactly once, ranges tiling `0..rows`
+/// contiguously, and every node agreeing on `count`, `rows`, and the
+/// map `epoch`. Returns the connected nodes in shard order (each
+/// client stamped with the agreed epoch), the row → node map, the row
+/// count, and the epoch.
+#[allow(clippy::type_complexity)]
+fn exchange(
+    addrs: &[String],
+    dial_attempts: usize,
+) -> Result<(Vec<Node>, ShardSet, usize, u64), ClusterError> {
+    let dialed = probe(addrs, dial_attempts)?;
+    let count = dialed[0].2.count;
+    let rows = dialed[0].2.rows;
+    let epoch = dialed[0].2.epoch;
+    if count as usize != addrs.len() {
+        return Err(ClusterError::ShardMap {
+            addr: dialed[0].0.clone(),
+            detail: format!(
+                "cluster has {count} shards but {} addresses were given",
+                addrs.len()
+            ),
+        });
+    }
+    let mut slots: Vec<Option<(String, SketchClient, ShardMapInfo)>> =
+        (0..count).map(|_| None).collect();
+    for (addr, client, info) in dialed {
+        if info.count != count || info.rows != rows || info.epoch != epoch {
+            return Err(ClusterError::ShardMap {
+                addr,
+                detail: format!(
+                    "node disagrees on cluster geometry: count={} rows={} epoch={} \
+                     (expected count={count} rows={rows} epoch={epoch})",
+                    info.count, info.rows, info.epoch
+                ),
+            });
+        }
+        if info.index >= count {
+            return Err(ClusterError::ShardMap {
+                addr,
+                detail: format!("shard index {} out of range (count {count})", info.index),
+            });
+        }
+        let slot = &mut slots[info.index as usize];
+        if slot.is_some() {
+            return Err(ClusterError::ShardMap {
+                addr,
+                detail: format!("duplicate shard index {}", info.index),
+            });
+        }
+        *slot = Some((addr, client, info));
+    }
+    // All slots filled (count == addrs.len() and no duplicates).
+    let mut nodes = Vec::with_capacity(count as usize);
+    let mut bounds = vec![0usize];
+    for slot in slots {
+        let (addr, mut client, info) = slot.expect("every shard slot filled");
+        let expect_start = *bounds.last().unwrap() as u64;
+        if info.start != expect_start || info.end < info.start || info.end > rows {
+            return Err(ClusterError::ShardMap {
+                addr,
+                detail: format!(
+                    "shard {} owns rows {}..{} which does not continue the map at {expect_start}",
+                    info.index, info.start, info.end
+                ),
+            });
+        }
+        bounds.push(info.end as usize);
+        // Every query through this connection now carries the agreed
+        // epoch, so a node whose map moves on refuses instead of
+        // answering under a different coverage.
+        client.set_epoch(epoch);
+        nodes.push(Node { addr, client });
+    }
+    if *bounds.last().unwrap() != rows as usize {
+        return Err(ClusterError::ShardMap {
+            addr: nodes.last().expect("at least one node").addr.clone(),
+            detail: format!(
+                "shard ranges cover {} of {rows} rows",
+                bounds.last().unwrap()
+            ),
+        });
+    }
+    let map = ShardSet::from_bounds(bounds).expect("validated bounds form a partition");
+    Ok((nodes, map, rows as usize, epoch))
+}
+
 /// One node's share of a scatter: pipeline the sub-plan, with one
 /// reconnect-and-retry on I/O failure so a bounced node does not fail
 /// the whole gather.
@@ -592,9 +949,16 @@ fn run_node_plan(
         r => r,
     };
     nm.inflight.dec();
-    // Overloaded is backpressure working, not a node failure — it must
-    // not poison the per-node error metric callers balance on.
-    if !matches!(out, Ok(_) | Err(ClientError::Overloaded(_))) {
+    // Overloaded is backpressure working, not a node failure, and
+    // WrongEpoch is a reconfiguration signal the router handles by
+    // refreshing — neither may poison the per-node error metric
+    // callers balance on.
+    if !matches!(
+        out,
+        Ok(_)
+            | Err(ClientError::Overloaded(_))
+            | Err(ClientError::Server { code: ErrorCode::WrongEpoch, .. })
+    ) {
         nm.errors.inc();
     }
     out

@@ -28,7 +28,7 @@ use super::protocol::{
     query_id_of, write_frame, ErrorCode, Frame, ProtoError, ShardMapInfo, MAX_FRAME_BYTES,
     MAX_STATS_ENTRIES,
 };
-use crate::coordinator::{Coordinator, Reply, SubmitError};
+use crate::coordinator::{AdoptError, Coordinator, Reply, SubmitError};
 use crate::metrics::PipelineMetrics;
 use anyhow::{Context, Result};
 use std::io::{BufWriter, Read, Write};
@@ -318,9 +318,27 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                 while let Ok((tag, reply)) = reply_rx.recv() {
                     m.net_queries_inflight.dec();
                     conn_inflight.fetch_sub(1, Ordering::SeqCst);
-                    let frame = Frame::Reply {
-                        id: tag as u64,
-                        reply,
+                    let frame = match reply {
+                        // A worker-side epoch refusal (the query's map
+                        // stamp became unresolvable while queued) goes
+                        // out as the same WrongEpoch error frame the
+                        // admission check uses — one client-visible
+                        // signal for "refresh your map and retry".
+                        Reply::WrongEpoch { current } => {
+                            m.net_wrong_epoch_replies.inc();
+                            Frame::Error {
+                                id: tag as u64,
+                                code: ErrorCode::WrongEpoch,
+                                message: format!(
+                                    "map changed while the query was queued; \
+                                     node is now at epoch {current}"
+                                ),
+                            }
+                        }
+                        reply => Frame::Reply {
+                            id: tag as u64,
+                            reply,
+                        },
                     };
                     if !send_outbound(&out_tx, frame, &stop) {
                         return;
@@ -382,7 +400,39 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                             break;
                         }
                     }
-                    Frame::Query { id, query } => {
+                    Frame::AdoptShard(info) => {
+                        // The v4 admin path: swap this node's shard
+                        // identity/owned range at runtime. Success
+                        // answers with the post-adoption map (the
+                        // admin's confirmation); refusals are typed so
+                        // a stale admin can tell "lost the race" from
+                        // "sent nonsense".
+                        let reply = match coord.adopt_shard(
+                            info.epoch,
+                            info.index as usize,
+                            info.count as usize,
+                            info.start as usize..info.end as usize,
+                            info.rows as usize,
+                        ) {
+                            Ok(()) => Frame::ShardMap(shard_map_info(coord)),
+                            Err(AdoptError::Stale { current }) => Frame::Error {
+                                id: 0,
+                                code: ErrorCode::WrongEpoch,
+                                message: format!(
+                                    "stale adoption: node is already at epoch {current}"
+                                ),
+                            },
+                            Err(AdoptError::Invalid(msg)) => Frame::Error {
+                                id: 0,
+                                code: ErrorCode::InvalidQuery,
+                                message: msg,
+                            },
+                        };
+                        if !send_outbound(&out_tx, reply, stop) {
+                            break;
+                        }
+                    }
+                    Frame::Query { id, query, epoch } => {
                         // Cap this connection's pipelined depth: a peer
                         // that submits without reading replies parks
                         // here (TCP backpressure) instead of pinning
@@ -404,10 +454,24 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                         if dead {
                             break;
                         }
-                        match coord.submit(query, id as usize, reply_tx.clone()) {
+                        match coord.submit_stamped(query, epoch, id as usize, reply_tx.clone()) {
                             Ok(()) => {
                                 metrics.net_queries_inflight.inc();
                                 conn_inflight.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(SubmitError::WrongEpoch { current }) => {
+                                metrics.net_wrong_epoch_replies.inc();
+                                let reply = Frame::Error {
+                                    id,
+                                    code: ErrorCode::WrongEpoch,
+                                    message: format!(
+                                        "query stamped epoch {epoch} but node is at {current}; \
+                                         refresh the shard map and retry"
+                                    ),
+                                };
+                                if !send_outbound(&out_tx, reply, stop) {
+                                    break;
+                                }
                             }
                             Err(SubmitError::Invalid(msg)) => {
                                 let reply = Frame::Error {
@@ -560,13 +624,17 @@ fn read_exact_interruptible(
     Ok(true)
 }
 
-/// This node's `ShardMap` frame body: its shard identity and owned row
-/// range. An unsharded server is shard 0 of 1 owning everything, so
-/// single-node and clustered deployments answer uniformly.
+/// This node's `ShardMap` frame body: its shard identity, owned row
+/// range, and the live map epoch. An unsharded server is shard 0 of 1
+/// owning everything at epoch 0 (a static map), so single-node and
+/// clustered deployments answer uniformly.
 fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
     let n = coord.store().n;
-    let (index, count, range) = match coord.shard_spec() {
-        Some(spec) => (spec.index, spec.of, coord.owned_range()),
+    // One consistent snapshot: a frame must not mix the epoch of one
+    // adoption with the range of another.
+    let (epoch, spec, owned) = coord.membership();
+    let (index, count, range) = match spec {
+        Some(spec) => (spec.index, spec.of, owned),
         None => (0, 1, 0..n),
     };
     ShardMapInfo {
@@ -575,6 +643,7 @@ fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
         start: range.start as u64,
         end: range.end as u64,
         rows: n as u64,
+        epoch,
     }
 }
 
@@ -591,6 +660,7 @@ fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
         ("shard_count".to_string(), shard.count as u64),
         ("shard_row_start".to_string(), shard.start),
         ("shard_row_end".to_string(), shard.end),
+        ("shard_epoch".to_string(), shard.epoch),
         ("uptime_s".to_string(), coord.uptime().as_secs()),
     ];
     let depths = coord.queue_depths();

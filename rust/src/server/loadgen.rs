@@ -130,6 +130,22 @@ pub enum LoadgenError {
     Client(#[from] ClientError),
     #[error(transparent)]
     Cluster(#[from] ClusterError),
+    /// The server's `Stats` frame is missing a stat this run needs —
+    /// an older or foreign server, *not* an empty store; the two must
+    /// not be conflated.
+    #[error("server does not report the '{0}' stat (older or foreign server?)")]
+    MissingStat(&'static str),
+}
+
+/// Dial one node under the crate-wide shared policy
+/// ([`super::client::CONNECT_RETRY_ATTEMPTS`]) — the setup probe *and*
+/// the worker threads. They used to differ (probe 10×50ms, workers
+/// 5×20ms), so a slow-binding cluster could pass the probe and then
+/// have every worker die on connect with nothing but an error count to
+/// show for it.
+fn dial(addr: &str) -> Result<SketchClient, ClientError> {
+    use super::client::{CONNECT_RETRY_ATTEMPTS, CONNECT_RETRY_BACKOFF};
+    SketchClient::connect_with_retry(addr, CONNECT_RETRY_ATTEMPTS, CONNECT_RETRY_BACKOFF)
 }
 
 /// One worker thread's connection: a single node, or a cluster router
@@ -155,7 +171,9 @@ enum DriveError {
 impl Driver {
     fn connect(addrs: &[String]) -> Result<Driver, LoadgenError> {
         if addrs.len() == 1 {
-            let client = SketchClient::connect_with_retry(&addrs[0], 5, Duration::from_millis(20))?;
+            // Same dial policy as the setup probe (see `dial`): if the
+            // probe got through, the workers will too.
+            let client = dial(&addrs[0])?;
             Ok(Driver::Single(Box::new(client)))
         } else {
             Ok(Driver::Cluster(Box::new(ClusterClient::connect(addrs)?)))
@@ -166,11 +184,13 @@ impl Driver {
     /// reconnect-and-retry) — flushed into the report at thread exit
     /// so cluster runs report node flapping the way single-node runs
     /// report their own reconnects. Always 0 for a single node (those
-    /// are counted live via [`DriveError::Reconnected`]).
+    /// are counted live via [`DriveError::Reconnected`]). Counted via
+    /// the cluster totals so reconnects on node slots retired by a
+    /// shard-map refresh are not lost.
     fn internal_reconnects(&self) -> u64 {
         match self {
             Driver::Single(_) => 0,
-            Driver::Cluster(c) => c.metrics().nodes().iter().map(|n| n.reconnects.get()).sum(),
+            Driver::Cluster(c) => c.metrics().total_reconnects(),
         }
     }
 
@@ -193,10 +213,11 @@ impl Driver {
             Driver::Cluster(c) => match c.query_plan(queries) {
                 Ok(_) => Ok(()),
                 Err(ClusterError::Overloaded { .. }) => Err(DriveError::Overloaded),
-                // Everything else (NodeFailed means the router's
-                // internal reconnect-and-retry already failed) is an
-                // error; the consecutive-error bailout in the drive
-                // loop gives up on a cluster that stays dead.
+                // Everything else is an error: a NodeFailed here means
+                // the router's internal reconnect *and* its shard-map
+                // refresh-and-retry already failed. The consecutive-
+                // error bailout in the drive loop gives up on a
+                // cluster that stays dead.
                 Err(_) => Err(DriveError::Error),
             },
         }
@@ -262,9 +283,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
         return Err(ClusterError::NoAddresses.into());
     }
     let n = if addrs.len() == 1 {
-        let mut probe = SketchClient::connect_with_retry(&addrs[0], 10, Duration::from_millis(50))
-            .map_err(LoadgenError::Client)?;
-        probe.stat("store_n").map_err(LoadgenError::Client)?.unwrap_or(0)
+        let mut probe = dial(&addrs[0]).map_err(LoadgenError::Client)?;
+        // A missing stat is a protocol-level mismatch (older/foreign
+        // server) and must not read as "the store is empty".
+        match probe.stat("store_n").map_err(LoadgenError::Client)? {
+            Some(n) => n,
+            None => return Err(LoadgenError::MissingStat("store_n")),
+        }
     } else {
         ClusterClient::connect(&addrs)?.rows() as u64
     };

@@ -20,7 +20,10 @@
 //!   multi-node sharded cluster — shard-map exchange at connect,
 //!   `Pair` routing to the owning node, scatter-gather for
 //!   `TopK`/`Block` plans, per-node reconnect, typed partial-failure
-//!   errors.
+//!   errors. Membership is live (protocol v4): the map carries an
+//!   epoch, stale clients refresh-and-retry instead of failing, and
+//!   `ClusterClient::rebalance` pushes new row ownership to running
+//!   nodes via `AdoptShard` frames.
 //! * [`loadgen`] — open- and closed-loop multi-threaded load generator
 //!   reporting throughput and p50/p95/p99 latency, driving one node or
 //!   a whole cluster.

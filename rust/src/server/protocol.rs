@@ -29,23 +29,34 @@
 //! reserved (the `SSK2` sketch-file revision bumped the on-disk format,
 //! not the wire); **v3** adds the `ShardMapRequest`/`ShardMap`
 //! exchange for multi-node sharded serving and per-node health entries
-//! in `Stats`. Encoders always stamp the current version; decoders
-//! accept [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`], with the
-//! v3-only tags refusing older version bytes.
+//! in `Stats`; **v4** makes cluster topology live — `ShardMapInfo`
+//! and `Query` frames carry a monotonically increasing map **epoch**
+//! (trailing fields, so v1..v3 bodies stay exact prefixes), the
+//! `AdoptShard` admin frame swaps a node's owned range at runtime, and
+//! the [`ErrorCode::WrongEpoch`] refusal tells a client its shard map
+//! is stale (refresh and retry, don't fail). Encoders always stamp the
+//! current version; decoders accept
+//! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`], with the v3-only
+//! tags (and the v4-only tag/code) refusing older version bytes.
 
 use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
 use std::io::{Read, Write};
 use thiserror::Error;
 
 /// Protocol version spoken (and stamped on every frame) by this build.
-pub const PROTOCOL_VERSION: u8 = 3;
+pub const PROTOCOL_VERSION: u8 = 4;
 
-/// Oldest version this build still decodes (v1/v3 share every frame
-/// body layout; v3 only *adds* tags).
+/// Oldest version this build still decodes (v1..v4 share every frame
+/// body layout as prefixes; v3/v4 only *add* tags and trailing fields).
 pub const MIN_PROTOCOL_VERSION: u8 = 1;
 
 /// First version carrying the shard-map exchange frames.
 const SHARD_MAP_SINCE_VERSION: u8 = 3;
+
+/// First version carrying map epochs (`ShardMapInfo::epoch`, the
+/// trailing epoch stamp on `Query` frames), the `AdoptShard` admin
+/// frame, and the `WrongEpoch` error code.
+const EPOCH_SINCE_VERSION: u8 = 4;
 
 /// Hard cap on one frame's payload. The largest legitimate frame is a
 /// `Block` reply of [`MAX_BLOCK_CELLS`] f64 cells (8 MiB) or a `TopK`
@@ -117,6 +128,11 @@ pub enum ErrorCode {
     TooManyConnections,
     /// Server-side invariant failure (e.g. reply shape mismatch).
     Internal,
+    /// v4: the query (or shard adoption) was stamped with a map epoch
+    /// that does not match the node's current one — the caller's shard
+    /// map changed under it. Not a failure: re-run the shard-map
+    /// exchange and retry.
+    WrongEpoch,
 }
 
 impl ErrorCode {
@@ -128,6 +144,7 @@ impl ErrorCode {
             ErrorCode::ShuttingDown => 4,
             ErrorCode::TooManyConnections => 5,
             ErrorCode::Internal => 6,
+            ErrorCode::WrongEpoch => 7,
         }
     }
 
@@ -139,6 +156,7 @@ impl ErrorCode {
             4 => ErrorCode::ShuttingDown,
             5 => ErrorCode::TooManyConnections,
             6 => ErrorCode::Internal,
+            7 => ErrorCode::WrongEpoch,
             other => return Err(ProtoError::BadCode(other)),
         })
     }
@@ -151,8 +169,14 @@ pub enum Frame {
     /// Liveness probe; the server echoes `token` back in a `Pong`.
     Ping { token: u64 },
     Pong { token: u64 },
-    /// One query with a caller-chosen correlation id.
-    Query { id: u64, query: Query },
+    /// One query with a caller-chosen correlation id. `epoch` (v4,
+    /// trailing on the wire) is the shard-map epoch the caller routed
+    /// under — 0 means "unstamped" (single-node clients, v1..v3
+    /// speakers) and is never checked; a nonzero stamp that does not
+    /// match the serving node's epoch earns a
+    /// [`ErrorCode::WrongEpoch`] refusal instead of a silently
+    /// mis-routed answer.
+    Query { id: u64, query: Query, epoch: u64 },
     /// The shape-matched answer to the query with the same `id`.
     Reply { id: u64, reply: Reply },
     /// A refusal. `id` names the query it answers, or 0 for
@@ -174,13 +198,24 @@ pub enum Frame {
     ShardMapRequest,
     /// v3: the responding node's entry in the cluster's row → node
     /// map. The cluster client collects one of these per node and
-    /// validates that they tile `0..rows` exactly.
+    /// validates that they tile `0..rows` exactly (and, since v4, that
+    /// every node agrees on the map epoch).
     ShardMap(ShardMapInfo),
+    /// v4 admin frame: tell a node to adopt a new shard identity and
+    /// owned row range under a new (strictly larger) epoch — how a
+    /// rebalance or a join/leave reconfiguration reaches running
+    /// nodes. The server answers with its post-adoption
+    /// [`Frame::ShardMap`], or an `Error` (`WrongEpoch` for a stale
+    /// epoch, `InvalidQuery` for a range/geometry that makes no
+    /// sense).
+    AdoptShard(ShardMapInfo),
 }
 
 /// One node's slice of the cluster row space, as carried by
-/// [`Frame::ShardMap`]: shard `index` of `count` owns rows
-/// `start..end` out of `rows` total.
+/// [`Frame::ShardMap`] and [`Frame::AdoptShard`]: shard `index` of
+/// `count` owns rows `start..end` out of `rows` total, under shard-map
+/// `epoch` (v4; 0 = a static map that never changes — decoded from
+/// v3 frames, and what an unclustered node advertises).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardMapInfo {
     pub index: u32,
@@ -188,6 +223,7 @@ pub struct ShardMapInfo {
     pub start: u64,
     pub end: u64,
     pub rows: u64,
+    pub epoch: u64,
 }
 
 const TAG_PING: u8 = 0x01;
@@ -199,10 +235,16 @@ const TAG_STATS_REQUEST: u8 = 0x06;
 const TAG_STATS: u8 = 0x07;
 const TAG_SHARD_MAP_REQUEST: u8 = 0x08;
 const TAG_SHARD_MAP: u8 = 0x09;
+const TAG_ADOPT_SHARD: u8 = 0x0A;
 
 const SHAPE_PAIR: u8 = 0;
 const SHAPE_TOPK: u8 = 1;
 const SHAPE_BLOCK: u8 = 2;
+/// Reply-only shape (v4): a worker's epoch refusal. The listener
+/// normally converts it to a `WrongEpoch` error frame before it
+/// reaches the wire, but the encoding is total so any `Reply` value
+/// round-trips.
+const SHAPE_WRONG_EPOCH: u8 = 3;
 
 // ---- encoding ------------------------------------------------------
 
@@ -279,6 +321,10 @@ fn encode_reply(out: &mut Vec<u8>, r: &Reply) {
                 put_f64(out, d);
             }
         }
+        Reply::WrongEpoch { current } => {
+            out.push(SHAPE_WRONG_EPOCH);
+            put_u64(out, *current);
+        }
     }
 }
 
@@ -296,10 +342,13 @@ impl Frame {
                 body.push(TAG_PONG);
                 put_u64(&mut body, *token);
             }
-            Frame::Query { id, query } => {
+            Frame::Query { id, query, epoch } => {
                 body.push(TAG_QUERY);
                 put_u64(&mut body, *id);
                 encode_query(&mut body, query);
+                // Trailing so the v1..v3 body layout stays an exact
+                // prefix of the v4 one.
+                put_u64(&mut body, *epoch);
             }
             Frame::Reply { id, reply } => {
                 body.push(TAG_REPLY);
@@ -329,11 +378,11 @@ impl Frame {
             }
             Frame::ShardMap(info) => {
                 body.push(TAG_SHARD_MAP);
-                put_u32(&mut body, info.index);
-                put_u32(&mut body, info.count);
-                put_u64(&mut body, info.start);
-                put_u64(&mut body, info.end);
-                put_u64(&mut body, info.rows);
+                encode_shard_info(&mut body, info);
+            }
+            Frame::AdoptShard(info) => {
+                body.push(TAG_ADOPT_SHARD);
+                encode_shard_info(&mut body, info);
             }
         }
         debug_assert!(body.len() <= MAX_FRAME_BYTES, "encoder produced an oversized frame");
@@ -363,16 +412,27 @@ impl Frame {
             TAG_QUERY => {
                 let id = r.u64()?;
                 let query = decode_query(&mut r)?;
-                Frame::Query { id, query }
+                // v1..v3 queries carry no epoch stamp; 0 = unchecked.
+                let epoch = if version >= EPOCH_SINCE_VERSION {
+                    r.u64()?
+                } else {
+                    0
+                };
+                Frame::Query { id, query, epoch }
             }
             TAG_REPLY => {
                 let id = r.u64()?;
-                let reply = decode_reply(&mut r)?;
+                let reply = decode_reply(&mut r, version)?;
                 Frame::Reply { id, reply }
             }
             TAG_ERROR => {
                 let id = r.u64()?;
                 let code = ErrorCode::from_u8(r.u8()?)?;
+                if code == ErrorCode::WrongEpoch && version < EPOCH_SINCE_VERSION {
+                    // A code no pre-v4 speaker ever defined under a
+                    // pre-v4 stamp is self-contradictory.
+                    return Err(ProtoError::BadVersion(version));
+                }
                 let message = r.str(MAX_ERROR_MSG_BYTES)?;
                 Frame::Error { id, code, message }
             }
@@ -399,14 +459,12 @@ impl Frame {
                 // that version never defined is self-contradictory.
                 return Err(ProtoError::BadVersion(version));
             }
+            TAG_ADOPT_SHARD if version < EPOCH_SINCE_VERSION => {
+                return Err(ProtoError::BadVersion(version));
+            }
             TAG_SHARD_MAP_REQUEST => Frame::ShardMapRequest,
-            TAG_SHARD_MAP => Frame::ShardMap(ShardMapInfo {
-                index: r.u32()?,
-                count: r.u32()?,
-                start: r.u64()?,
-                end: r.u64()?,
-                rows: r.u64()?,
-            }),
+            TAG_SHARD_MAP => Frame::ShardMap(decode_shard_info(&mut r, version)?),
+            TAG_ADOPT_SHARD => Frame::AdoptShard(decode_shard_info(&mut r, version)?),
             other => return Err(ProtoError::BadTag(other)),
         };
         r.finish()?;
@@ -428,6 +486,32 @@ pub fn query_id_of(payload: &[u8]) -> Option<u64> {
         return None;
     }
     Some(u64::from_le_bytes(payload[2..10].try_into().unwrap()))
+}
+
+fn encode_shard_info(out: &mut Vec<u8>, info: &ShardMapInfo) {
+    put_u32(out, info.index);
+    put_u32(out, info.count);
+    put_u64(out, info.start);
+    put_u64(out, info.end);
+    put_u64(out, info.rows);
+    // Trailing: v3 `ShardMap` bodies are an exact prefix.
+    put_u64(out, info.epoch);
+}
+
+fn decode_shard_info(r: &mut Cursor<'_>, version: u8) -> Result<ShardMapInfo, ProtoError> {
+    Ok(ShardMapInfo {
+        index: r.u32()?,
+        count: r.u32()?,
+        start: r.u64()?,
+        end: r.u64()?,
+        rows: r.u64()?,
+        // v3 maps are static: epoch 0.
+        epoch: if version >= EPOCH_SINCE_VERSION {
+            r.u64()?
+        } else {
+            0
+        },
+    })
 }
 
 fn decode_kind(b: u8) -> Result<QueryKind, ProtoError> {
@@ -486,9 +570,14 @@ fn decode_query(r: &mut Cursor<'_>) -> Result<Query, ProtoError> {
     }
 }
 
-fn decode_reply(r: &mut Cursor<'_>) -> Result<Reply, ProtoError> {
+fn decode_reply(r: &mut Cursor<'_>, version: u8) -> Result<Reply, ProtoError> {
     let shape = r.u8()?;
     match shape {
+        SHAPE_WRONG_EPOCH if version < EPOCH_SINCE_VERSION => {
+            // A reply shape no pre-v4 speaker ever defined.
+            Err(ProtoError::BadVersion(version))
+        }
+        SHAPE_WRONG_EPOCH => Ok(Reply::WrongEpoch { current: r.u64()? }),
         SHAPE_PAIR => Ok(Reply::Pair(r.f64()?)),
         SHAPE_TOPK => {
             let n = r.u32()? as usize;
@@ -693,7 +782,7 @@ mod tests {
     }
 
     #[test]
-    fn v1_frames_still_decode_under_v3() {
+    fn v1_frames_still_decode_under_v4() {
         // A v1 speaker's bytes stay valid: same body layout, older
         // version stamp.
         let wire = Frame::Ping { token: 42 }.encode();
@@ -711,6 +800,7 @@ mod tests {
             start: 34,
             end: 67,
             rows: 100,
+            epoch: 9,
         };
         for f in [Frame::ShardMapRequest, Frame::ShardMap(info)] {
             assert_eq!(round_trip(&f), f);
@@ -732,5 +822,103 @@ mod tests {
         for cut in 2..payload.len() {
             assert!(Frame::decode(&payload[..cut]).is_err(), "cut {cut}");
         }
+    }
+
+    #[test]
+    fn v3_shard_map_without_epoch_decodes_as_epoch_zero() {
+        // A v3 speaker's ShardMap body is the v4 body minus the
+        // trailing epoch — it must still decode, as a static map.
+        let info = ShardMapInfo {
+            index: 2,
+            count: 3,
+            start: 67,
+            end: 100,
+            rows: 100,
+            epoch: 7,
+        };
+        let wire = Frame::ShardMap(info).encode();
+        let mut payload = wire[4..wire.len() - 8].to_vec(); // drop epoch
+        payload[0] = 3;
+        match Frame::decode(&payload).expect("v3 body decodes") {
+            Frame::ShardMap(got) => {
+                assert_eq!(got.epoch, 0);
+                let fields = (got.index, got.count, got.start, got.end, got.rows);
+                assert_eq!(fields, (2, 3, 67, 100, 100));
+            }
+            other => panic!("{other:?}"),
+        }
+        // Conversely a full v4 body under a v3 stamp has 8 trailing
+        // bytes v3 never defined.
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 3;
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::Trailing(8))
+        ));
+    }
+
+    #[test]
+    fn adopt_shard_and_wrong_epoch_are_v4_only() {
+        let info = ShardMapInfo {
+            index: 0,
+            count: 2,
+            start: 0,
+            end: 50,
+            rows: 100,
+            epoch: 3,
+        };
+        let f = Frame::AdoptShard(info);
+        assert_eq!(round_trip(&f), f);
+        for stamp in 1..EPOCH_SINCE_VERSION {
+            let wire = f.encode();
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(
+                matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+                "AdoptShard under v{stamp} stamp must be refused"
+            );
+        }
+        // WrongEpoch round-trips under v4 but is refused under v1..v3.
+        let err = Frame::Error {
+            id: 4,
+            code: ErrorCode::WrongEpoch,
+            message: "node is at epoch 5".into(),
+        };
+        assert_eq!(round_trip(&err), err);
+        for stamp in 1..EPOCH_SINCE_VERSION {
+            let wire = err.encode();
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(
+                matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+                "WrongEpoch under v{stamp} stamp must be refused"
+            );
+        }
+    }
+
+    #[test]
+    fn v3_query_without_epoch_stamp_decodes_as_unchecked() {
+        let f = Frame::Query {
+            id: 11,
+            query: Query::Pair {
+                i: 1,
+                j: 2,
+                kind: QueryKind::Oq,
+            },
+            epoch: 6,
+        };
+        let wire = f.encode();
+        // Drop the trailing epoch and stamp v3: decodes with epoch 0.
+        let mut payload = wire[4..wire.len() - 8].to_vec();
+        payload[0] = 3;
+        match Frame::decode(&payload).expect("v3 query decodes") {
+            Frame::Query { id, epoch, .. } => {
+                assert_eq!(id, 11);
+                assert_eq!(epoch, 0, "unstamped queries are never epoch-checked");
+            }
+            other => panic!("{other:?}"),
+        }
+        // The full v4 body round-trips its stamp.
+        assert_eq!(round_trip(&f), f);
     }
 }

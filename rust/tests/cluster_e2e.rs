@@ -187,6 +187,7 @@ fn per_node_health_shows_up_in_stats_and_shard_map() {
     assert_eq!(info.count, 3);
     assert_eq!(info.rows, 30);
     assert_eq!((info.start, info.end), (10, 20), "even 3-way split of 30 rows");
+    assert_eq!(info.epoch, 1, "a clustered node starts at map epoch 1");
     let stats = client.stats().expect("stats");
     let get = |label: &str| -> u64 {
         stats
@@ -199,6 +200,7 @@ fn per_node_health_shows_up_in_stats_and_shard_map() {
     assert_eq!(get("shard_count"), 3);
     assert_eq!(get("shard_row_start"), 10);
     assert_eq!(get("shard_row_end"), 20);
+    assert_eq!(get("shard_epoch"), 1);
     // Health fields exist (values are load-dependent).
     let _ = get("uptime_s");
     let _ = get("queue_depth_total");

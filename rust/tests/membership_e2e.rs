@@ -1,0 +1,444 @@
+//! Dynamic cluster membership, end to end on loopback.
+//!
+//! The acceptance contract: against a 3-node cluster under a
+//! continuous plan stream, a **rebalance** (epoch-stamped `AdoptShard`
+//! sweep driven by `ShardSet::rebalance` move descriptors) and a
+//! **node bounce** (kill a node, bring a replacement up on a new
+//! address) are *routed around*: the `ClusterClient` refreshes its
+//! shard map after at most one epoch-mismatch round trip, no plan in
+//! the stream surfaces a `ShardMap`/`NodeFailed`/`MapChanged` error,
+//! and every gathered reply stays bit-identical to a single-node
+//! server on the same corpus.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, Reply, ShardSpec};
+use stablesketch::server::{
+    ClientError, ClusterClient, ErrorCode, ServerConfig, ShardMapInfo, SketchClient, SketchServer,
+};
+use stablesketch::sketch::{SketchEngine, SketchStore};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ALL_KINDS: [QueryKind; 4] = [
+    QueryKind::Oq,
+    QueryKind::Gm,
+    QueryKind::Fp,
+    QueryKind::Median,
+];
+
+const N: usize = 40;
+
+fn sketch_corpus(n: usize, k: usize) -> (SketchStore, PipelineConfig) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 512,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.2,
+        k,
+        dim: corpus.dim,
+        shards: 2,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    (store, cfg)
+}
+
+fn start_node(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shard: Option<ShardSpec>,
+) -> (Arc<Coordinator>, SketchServer, String) {
+    let coord = Arc::new(
+        Coordinator::start_sharded(cfg.clone(), store.clone(), shard).expect("coordinator"),
+    );
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server start");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+/// A mixed plan covering every shape/kind, with TopKs big enough to
+/// force cross-shard merges and blocks spanning the row space.
+fn mixed_plan(n: u32, salt: u32) -> Vec<Query> {
+    let mut plan = Vec::new();
+    for (t, &kind) in ALL_KINDS.iter().enumerate() {
+        let t = t as u32;
+        plan.push(Query::Pair {
+            i: (salt + t) % n,
+            j: (salt + 3 * t + 1) % n,
+            kind,
+        });
+        plan.push(Query::TopK {
+            i: (salt + 7 * t) % n,
+            m: (n as usize / 3) + 2,
+            kind,
+        });
+        plan.push(Query::Block {
+            rows: vec![salt % n, (salt + n / 2) % n, n - 1 - (salt % n)],
+            cols: vec![(salt + 1) % n, (salt + 5) % n, (salt + 9) % n],
+            kind,
+        });
+    }
+    plan
+}
+
+fn assert_bit_identical(local: &[Reply], remote: &[Reply], tag: &str) {
+    assert_eq!(local.len(), remote.len(), "{tag}: reply count");
+    for (q, (l, r)) in local.iter().zip(remote).enumerate() {
+        match (l, r) {
+            (Reply::Pair(a), Reply::Pair(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: pair bits differ at {q}")
+            }
+            (Reply::TopK(a), Reply::TopK(b)) => {
+                assert_eq!(a, b, "{tag}: topk differs at {q}");
+                for ((ja, da), (jb, db)) in a.iter().zip(b) {
+                    assert_eq!(ja, jb);
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: topk bits differ at {q}");
+                }
+            }
+            (Reply::Block(a), Reply::Block(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: block length at {q}");
+                for (da, db) in a.iter().zip(b) {
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: block bits differ at {q}");
+                }
+            }
+            other => panic!("{tag}: shape mismatch at {q}: {other:?}"),
+        }
+    }
+}
+
+/// Drive one plan through the cluster and the single-node reference;
+/// the cluster must answer (refreshing internally if the map moved)
+/// and the gathered replies must match the reference bit for bit.
+fn drive_and_check(cluster: &mut ClusterClient, reference: &mut SketchClient, salt: u32) {
+    let plan = mixed_plan(N as u32, salt);
+    let remote = cluster
+        .query_plan(&plan)
+        .unwrap_or_else(|e| panic!("plan (salt {salt}) must be routed around, got: {e}"));
+    let local = reference.query_plan(&plan).expect("single-node plan");
+    assert_bit_identical(&local, &remote, &format!("salt {salt}"));
+}
+
+/// The headline scenario: plan stream → rebalance mid-stream → more
+/// plans → node bounce (replacement on a new address) mid-stream →
+/// more plans. Zero surfaced plan errors, bit-identical throughout.
+#[test]
+fn rebalance_and_node_bounce_mid_stream_are_routed_around() {
+    let (store, cfg) = sketch_corpus(N, 64);
+    let mut coords = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..3 {
+        let (c, s, a) = start_node(&store, &cfg, Some(ShardSpec { index, of: 3 }));
+        coords.push(c);
+        servers.push(s);
+        addrs.push(a);
+    }
+    let (_ref_coord, ref_server, ref_addr) = start_node(&store, &cfg, None);
+    let mut reference = SketchClient::connect_with_retry(&ref_addr, 10, Duration::from_millis(20))
+        .expect("reference connect");
+
+    // The streaming client under test, and a separate admin client
+    // driving reconfigurations (so the streamer's map genuinely goes
+    // stale underneath it).
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    let mut admin = ClusterClient::connect(&addrs).expect("admin connect");
+    assert_eq!(cluster.epoch(), 1, "a fresh 3-shard cluster starts at epoch 1");
+
+    // ---- phase 1: steady state -------------------------------------
+    for salt in 0..4u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(cluster.metrics().refreshes.get(), 0, "steady state needs no refresh");
+
+    // ---- phase 2: rebalance mid-stream -----------------------------
+    // Shard 1 reports 3x the cost → it should shed rows. The move
+    // descriptors drive the AdoptShard sweep inside `rebalance`.
+    let (epoch, moves) = admin.rebalance(&[1.0, 3.0, 1.0]).expect("rebalance");
+    assert_eq!(epoch, 2);
+    assert!(!moves.is_empty(), "a 3x cost skew must move rows");
+    // Nodes adopted the new map: their advertised ranges changed and
+    // their epoch advanced.
+    let mut probe = SketchClient::connect_with_retry(&addrs[1], 10, Duration::from_millis(20))
+        .expect("probe connect");
+    let info = probe.shard_map().expect("shard map");
+    assert_eq!(info.epoch, 2);
+    let admin_range = admin.node_ranges()[1].1.clone();
+    assert_eq!(
+        (info.start as usize, info.end as usize),
+        (admin_range.start, admin_range.end),
+        "the node's advertised range matches the admin's post-rebalance map"
+    );
+
+    // The streamer still stamps epoch 1 — its next plans must refresh
+    // transparently and stay bit-identical under the new map.
+    for salt in 4..8u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(cluster.epoch(), 2, "streamer converged on the new epoch");
+    assert!(
+        cluster.metrics().refreshes.get() >= 1,
+        "the rebalance must have forced a refresh"
+    );
+    assert!(
+        cluster.metrics().retried_plans.get() >= 1,
+        "the stale plan must have been retried, not failed"
+    );
+    let refreshes_after_rebalance = cluster.metrics().refreshes.get();
+
+    // ---- phase 3: node bounce mid-stream ---------------------------
+    // Bring shard 1's replacement up on a fresh address, tell the
+    // streamer about the new dial list (as an orchestrator would),
+    // adopt all three nodes into epoch 3, then kill the old node.
+    let (repl_coord, repl_server, repl_addr) =
+        start_node(&store, &cfg, Some(ShardSpec { index: 1, of: 3 }));
+    let new_addrs = vec![addrs[0].clone(), repl_addr.clone(), addrs[2].clone()];
+    cluster.set_addresses(&new_addrs);
+    let even = stablesketch::coordinator::ShardSet::even(N, 3);
+    for (shard, addr) in new_addrs.iter().enumerate() {
+        let mut c = SketchClient::connect_with_retry(addr, 10, Duration::from_millis(20))
+            .expect("adopt dial");
+        let r = even.range(shard);
+        c.adopt_shard(ShardMapInfo {
+            index: shard as u32,
+            count: 3,
+            start: r.start as u64,
+            end: r.end as u64,
+            rows: N as u64,
+            epoch: 3,
+        })
+        .expect("adopt");
+    }
+    servers.remove(1).shutdown();
+    drop(coords.remove(1));
+
+    // The stream keeps going: the first plan hits either a WrongEpoch
+    // refusal (from a surviving node) or a dead connection (the killed
+    // node) — both must be absorbed by one refresh against the new
+    // address list.
+    for salt in 8..12u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(cluster.epoch(), 3, "streamer converged on the bounce epoch");
+    assert!(
+        cluster.metrics().refreshes.get() > refreshes_after_rebalance,
+        "the bounce must have forced another refresh"
+    );
+    // The replacement actually serves its slice.
+    assert_eq!(
+        cluster.node_ranges()[1].0,
+        repl_addr,
+        "shard 1 is now the replacement node"
+    );
+    assert!(repl_coord.metrics().queries_submitted.get() > 0, "replacement served queries");
+
+    for s in servers {
+        s.shutdown();
+    }
+    repl_server.shutdown();
+    ref_server.shutdown();
+}
+
+/// A node that is simply restarted (same `--shard i/of` command, no
+/// orchestrated adoption sweep) comes back at epoch 1 while the
+/// survivors are on a later epoch — a cluster that can never agree on
+/// its own. The refresh path must *heal* it (guarded even-split
+/// adoption under max-epoch+1) instead of wedging every client, and
+/// the stream must stay bit-identical throughout.
+#[test]
+fn plainly_restarted_node_is_healed_not_wedged() {
+    let (store, cfg) = sketch_corpus(N, 64);
+    let mut coords = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..3 {
+        let (c, s, a) = start_node(&store, &cfg, Some(ShardSpec { index, of: 3 }));
+        coords.push(c);
+        servers.push(s);
+        addrs.push(a);
+    }
+    let (_ref_coord, ref_server, ref_addr) = start_node(&store, &cfg, None);
+    let mut reference = SketchClient::connect_with_retry(&ref_addr, 10, Duration::from_millis(20))
+        .expect("reference connect");
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    let mut admin = ClusterClient::connect(&addrs).expect("admin connect");
+
+    // Move the survivors past epoch 1 so the restarted node genuinely
+    // disagrees.
+    let (epoch, _moves) = admin.rebalance(&[1.0, 3.0, 1.0]).expect("rebalance");
+    assert_eq!(epoch, 2);
+    drive_and_check(&mut cluster, &mut reference, 0);
+    assert_eq!(cluster.epoch(), 2);
+
+    // "Restart" shard 1: kill it and start a replacement with the same
+    // shard spec and nothing else — it boots at epoch 1, the survivors
+    // stay at 2. No admin sweeps it in; the client only learns the new
+    // address.
+    servers.remove(1).shutdown();
+    drop(coords.remove(1));
+    let (_repl_coord, repl_server, repl_addr) =
+        start_node(&store, &cfg, Some(ShardSpec { index: 1, of: 3 }));
+    let new_addrs = vec![addrs[0].clone(), repl_addr.clone(), addrs[2].clone()];
+    cluster.set_addresses(&new_addrs);
+
+    // The next plans hit the dead connection, refresh, find epochs
+    // {2, 1, 2}, and must converge via the guarded heal — not error.
+    for salt in 1..4u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(
+        cluster.epoch(),
+        3,
+        "heal adopts everyone into max-epoch+1 (2 + 1)"
+    );
+    assert!(cluster.metrics().refreshes.get() >= 1);
+    // The healed map is the even split.
+    let even = stablesketch::coordinator::ShardSet::even(N, 3);
+    for (shard, (_, range)) in cluster.node_ranges().into_iter().enumerate() {
+        assert_eq!(range, even.range(shard), "healed map is the even split");
+    }
+    // A fresh client (no prior view at all) can also connect to the
+    // now-consistent cluster.
+    let fresh = ClusterClient::connect(&new_addrs).expect("fresh connect after heal");
+    assert_eq!(fresh.epoch(), 3);
+
+    for s in servers {
+        s.shutdown();
+    }
+    repl_server.shutdown();
+    ref_server.shutdown();
+}
+
+/// Adoption semantics on one node: epochs are strictly monotonic,
+/// garbage geometry is refused as `InvalidQuery`, queries stamped with
+/// a stale epoch get `WrongEpoch` (not a silently re-routed answer),
+/// and the adopted range really is what `TopK` scans.
+#[test]
+fn adoption_is_monotonic_and_stale_stamps_are_refused() {
+    let (store, cfg) = sketch_corpus(20, 32);
+    let (_coord, server, addr) = start_node(&store, &cfg, Some(ShardSpec { index: 0, of: 2 }));
+    let mut client = SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20))
+        .expect("connect");
+
+    let info = client.shard_map().expect("shard map");
+    assert_eq!(info.epoch, 1);
+
+    let adopt = |client: &mut SketchClient, epoch: u64, start: u64, end: u64| {
+        client.adopt_shard(ShardMapInfo {
+            index: 0,
+            count: 2,
+            start,
+            end,
+            rows: 20,
+            epoch,
+        })
+    };
+
+    // Same epoch: stale, typed WrongEpoch.
+    match adopt(&mut client, 1, 0, 10) {
+        Err(ClientError::Server { code, .. }) => assert_eq!(code, ErrorCode::WrongEpoch),
+        other => panic!("expected WrongEpoch, got {other:?}"),
+    }
+    // Nonsense geometry: InvalidQuery, epoch does not advance.
+    match adopt(&mut client, 2, 15, 10) {
+        Err(ClientError::Server { code, .. }) => assert_eq!(code, ErrorCode::InvalidQuery),
+        other => panic!("expected InvalidQuery, got {other:?}"),
+    }
+    let wrong_rows = client.adopt_shard(ShardMapInfo {
+        index: 0,
+        count: 2,
+        start: 0,
+        end: 10,
+        rows: 99,
+        epoch: 2,
+    });
+    assert!(
+        matches!(wrong_rows, Err(ClientError::Server { code: ErrorCode::InvalidQuery, .. })),
+        "row-count mismatch must be refused: {wrong_rows:?}"
+    );
+    assert_eq!(client.shard_map().expect("map").epoch, 1, "failed adoptions change nothing");
+
+    // A valid adoption: epoch 5 (jumps are fine, only monotonicity is
+    // required), owning rows 5..15.
+    let now = adopt(&mut client, 5, 5, 15).expect("valid adoption");
+    assert_eq!((now.epoch, now.start, now.end), (5, 5, 15));
+
+    // Queries stamped with the dead epoch are refused...
+    client.set_epoch(1);
+    match client.top_k(6, 20, QueryKind::Oq) {
+        Err(ClientError::Server { code, .. }) => assert_eq!(code, ErrorCode::WrongEpoch),
+        other => panic!("expected WrongEpoch for a stale stamp, got {other:?}"),
+    }
+    // ...unstamped and current-epoch queries are served, and TopK
+    // coverage follows the *adopted* range, not the boot-time one.
+    client.set_epoch(5);
+    let near = client.top_k(6, 20, QueryKind::Oq).expect("topk under adopted range");
+    assert_eq!(near.len(), 9, "10 owned rows minus the anchor");
+    assert!(near.iter().all(|&(j, _)| (5..15).contains(&(j as usize))));
+    client.set_epoch(0);
+    assert!(client.pair(0, 19, QueryKind::Oq).expect("unstamped pair").is_finite());
+
+    // Stats expose the membership state.
+    let stats = client.stats().expect("stats");
+    let get = |label: &str| -> u64 {
+        stats
+            .iter()
+            .find(|(l, _)| l == label)
+            .unwrap_or_else(|| panic!("missing stat {label}"))
+            .1
+    };
+    assert_eq!(get("shard_epoch"), 5);
+    assert_eq!(get("shard_adoptions"), 1);
+    assert!(get("net_wrong_epoch_replies") >= 1);
+    assert_eq!((get("shard_row_start"), get("shard_row_end")), (5, 15));
+
+    server.shutdown();
+}
+
+/// `ping_all` reports every node in shard order even when an early
+/// node is dead — the probe the membership machinery (and operators)
+/// need to decide what to rebalance around.
+#[test]
+fn ping_all_reports_every_node_past_a_dead_one() {
+    let (store, cfg) = sketch_corpus(24, 32);
+    let mut coords = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..3 {
+        let (c, s, a) = start_node(&store, &cfg, Some(ShardSpec { index, of: 3 }));
+        coords.push(c);
+        servers.push(s);
+        addrs.push(a);
+    }
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+
+    // All up: three Ok verdicts in shard order.
+    let up = cluster.ping_all();
+    assert_eq!(up.len(), 3);
+    for (i, (addr, rtt)) in up.iter().enumerate() {
+        assert_eq!(*addr, addrs[i], "shard order");
+        assert!(rtt.is_ok(), "node {i} should be up: {rtt:?}");
+    }
+
+    // Kill the *first* node: the regression was an early return that
+    // reported nothing about the nodes after the first failure.
+    servers.remove(0).shutdown();
+    drop(coords.remove(0));
+    let verdicts = cluster.ping_all();
+    assert_eq!(verdicts.len(), 3, "every node gets a verdict");
+    assert!(verdicts[0].1.is_err(), "dead node reported as down");
+    assert!(verdicts[1].1.is_ok(), "live node after the dead one still probed");
+    assert!(verdicts[2].1.is_ok(), "last node still probed");
+
+    for s in servers {
+        s.shutdown();
+    }
+}

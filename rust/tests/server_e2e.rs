@@ -195,6 +195,7 @@ fn malformed_frames_get_error_replies_and_never_kill_the_server() {
                 j: 1,
                 kind: QueryKind::Oq,
             },
+            epoch: 0,
         },
     )
     .expect("write query");

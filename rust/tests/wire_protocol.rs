@@ -85,6 +85,7 @@ fn randomized_query_frames_round_trip() {
         let frame = Frame::Query {
             id: rng.next_u64(),
             query: rand_query(&mut rng),
+            epoch: rng.next_u64(),
         };
         assert_eq!(round_trip(&frame), frame);
     }
@@ -150,7 +151,21 @@ fn control_and_error_frames_round_trip() {
             start: 67,
             end: 100,
             rows: 100,
+            epoch: 5,
         }),
+        Frame::AdoptShard(ShardMapInfo {
+            index: 1,
+            count: 4,
+            start: 25,
+            end: 50,
+            rows: 100,
+            epoch: 6,
+        }),
+        Frame::Error {
+            id: 8,
+            code: ErrorCode::WrongEpoch,
+            message: "query stamped epoch 2 but node is at 3".into(),
+        },
     ] {
         assert_eq!(round_trip(&f), f);
     }
@@ -177,12 +192,22 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             start: 0,
             end: 25,
             rows: 100,
+            epoch: 2,
+        }),
+        Frame::AdoptShard(ShardMapInfo {
+            index: 3,
+            count: 4,
+            start: 75,
+            end: 100,
+            rows: 100,
+            epoch: 3,
         }),
     ];
     for _ in 0..30 {
         frames.push(Frame::Query {
             id: rng.next_u64(),
             query: rand_query(&mut rng),
+            epoch: rng.next_u64(),
         });
         frames.push(Frame::Reply {
             id: rng.next_u64(),
@@ -218,6 +243,7 @@ fn corrupted_discriminants_err_cleanly() {
             j: 2,
             kind: QueryKind::Oq,
         },
+        epoch: 0,
     };
     let wire = frame.encode();
     let payload = &wire[4..];
@@ -326,6 +352,134 @@ fn query_id_recovered_from_malformed_query_frames() {
     assert_eq!(query_id_of(&ping[4..]), None);
     assert_eq!(query_id_of(&[1u8, 0x03]), None);
     assert_eq!(query_id_of(&[]), None);
+}
+
+/// v4 compatibility contract: everything a v1..v3 speaker can say
+/// still decodes (their bodies are exact prefixes of the v4 layouts),
+/// while v4-only tags and codes under an older version stamp are
+/// refused as self-contradictory.
+#[test]
+fn v4_decoders_accept_v1_to_v3_frames_and_refuse_version_contradictions() {
+    let mut rng = Xoshiro256pp::new(0x0E0C);
+    // Query frames: strip the trailing epoch (v4-only) and restamp as
+    // each older version — every one must decode, unchecked (epoch 0).
+    for _ in 0..100 {
+        let query = rand_query(&mut rng);
+        let frame = Frame::Query {
+            id: rng.next_u64(),
+            query: query.clone(),
+            epoch: rng.next_u64() | 1,
+        };
+        let wire = frame.encode();
+        let v3_body = &wire[4..wire.len() - 8]; // minus the epoch stamp
+        for stamp in 1u8..=3 {
+            let mut payload = v3_body.to_vec();
+            payload[0] = stamp;
+            match Frame::decode(&payload).expect("older query frame decodes") {
+                Frame::Query { query: q, epoch, .. } => {
+                    assert_eq!(q, query);
+                    assert_eq!(epoch, 0, "pre-v4 queries are never epoch-checked");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+    // ShardMap: a v3 body (no epoch) decodes as a static (epoch 0) map.
+    let info = ShardMapInfo {
+        index: 1,
+        count: 3,
+        start: 34,
+        end: 67,
+        rows: 100,
+        epoch: 12,
+    };
+    let wire = Frame::ShardMap(info).encode();
+    let mut payload = wire[4..wire.len() - 8].to_vec();
+    payload[0] = 3;
+    match Frame::decode(&payload).expect("v3 shard map decodes") {
+        Frame::ShardMap(got) => {
+            assert_eq!(got.epoch, 0);
+            assert_eq!((got.index, got.count, got.start, got.end, got.rows), (1, 3, 34, 67, 100));
+        }
+        other => panic!("{other:?}"),
+    }
+    // Control/reply frames are version-stable: restamp as v1..v3.
+    for f in [
+        Frame::Ping { token: 17 },
+        Frame::Pong { token: 18 },
+        Frame::StatsRequest,
+        Frame::Stats {
+            entries: vec![("store_n".into(), 7)],
+        },
+        Frame::Reply {
+            id: 2,
+            reply: Reply::Pair(1.5),
+        },
+        Frame::Error {
+            id: 3,
+            code: ErrorCode::Overloaded,
+            message: "busy".into(),
+        },
+    ] {
+        for stamp in 1u8..=3 {
+            let wire = f.encode();
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert_eq!(Frame::decode(&payload).expect("older frame decodes"), f);
+        }
+    }
+    // The worker-side epoch refusal reply round-trips under v4 and is
+    // refused under older stamps (no pre-v4 speaker defined shape 3).
+    let stale = Frame::Reply {
+        id: 6,
+        reply: Reply::WrongEpoch { current: 9 },
+    };
+    let wire = stale.encode();
+    assert_eq!(Frame::decode(&wire[4..]).expect("v4 stale reply decodes"), stale);
+    for stamp in 1u8..=3 {
+        let mut payload = wire[4..].to_vec();
+        payload[0] = stamp;
+        assert!(
+            matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+            "WrongEpoch reply shape under a v{stamp} stamp must be refused"
+        );
+    }
+
+    // v4-only content under an older stamp is refused: the AdoptShard
+    // tag, and the WrongEpoch error code.
+    for stamp in 1u8..=3 {
+        let wire = Frame::AdoptShard(info).encode();
+        let mut payload = wire[4..].to_vec();
+        payload[0] = stamp;
+        assert!(
+            matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+            "AdoptShard under a v{stamp} stamp must be refused"
+        );
+        let wire = Frame::Error {
+            id: 1,
+            code: ErrorCode::WrongEpoch,
+            message: "stale".into(),
+        }
+        .encode();
+        // Keep the body a valid older-version Error body (drop nothing:
+        // the message field layout is version-stable) but restamp it.
+        let mut payload = wire[4..].to_vec();
+        payload[0] = stamp;
+        assert!(
+            matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+            "WrongEpoch under a v{stamp} stamp must be refused"
+        );
+    }
+    // And the ShardMap tags still refuse v1/v2 stamps (pre-v3).
+    for stamp in [1u8, 2] {
+        let wire = Frame::ShardMapRequest.encode();
+        let mut payload = wire[4..].to_vec();
+        payload[0] = stamp;
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::BadVersion(v)) if v == stamp
+        ));
+    }
 }
 
 #[test]
