@@ -2,7 +2,7 @@
 //! (`sketch`, `query`, `serve`, `experiment`). Kept in the library so the
 //! integration tests can drive them directly.
 
-use crate::coordinator::{Coordinator, Query, QueryKind, Reply, ShardSpec};
+use crate::coordinator::{Coordinator, Query, QueryKind, ReplicaSpec, Reply, ShardSpec};
 use crate::estimators::{tables, BatchScratch, EstimatorKind};
 use crate::numerics::{Rng, Xoshiro256pp};
 use crate::server::{
@@ -243,6 +243,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 /// sketches the full (deterministic) corpus but owns only its
 /// contiguous row slice for `TopK` scans, and advertises that slice
 /// through the v3 `ShardMap` frame so `ClusterClient`s can route.
+/// With `--replica r/R` it is one of R siblings owning the *same*
+/// slice (a replicated cluster is `S × R` processes), advertised
+/// through the v5 replica fields so clients can fail over between
+/// siblings when a node dies.
 fn cmd_serve_network(args: &Args) -> Result<()> {
     let (corpus, cfg) = corpus_from_args(args)?;
     let listen = args.req("listen")?.to_string();
@@ -256,13 +260,18 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
         ),
         None => None,
     };
+    let replica = match args.get("replica") {
+        Some(s) => ReplicaSpec::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("invalid --replica '{s}' (expected r/R, e.g. 0/2)"))?,
+        None => ReplicaSpec::solo(),
+    };
     let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
     let store = engine.sketch_all(corpus.as_slice(), corpus.n);
-    let coord = Arc::new(Coordinator::start_sharded(cfg.clone(), store, shard)?);
+    let coord = Arc::new(Coordinator::start_replicated(cfg.clone(), store, shard, replica)?);
     let owned = coord.owned_range();
     let server = SketchServer::start(coord.clone(), &listen, ServerConfig { max_connections })?;
     println!(
-        "serving on {} (n={} k={} alpha={} shards={}, {} max conns{}); \
+        "serving on {} (n={} k={} alpha={} shards={}, {} max conns{}{}); \
          try: stablesketch loadgen --connect {}",
         server.local_addr(),
         corpus.n,
@@ -273,6 +282,11 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
         match shard {
             Some(s) => format!(", cluster shard {s} owning rows {}..{}", owned.start, owned.end),
             None => String::new(),
+        },
+        if replica.of > 1 {
+            format!(", replica {replica}")
+        } else {
+            String::new()
         },
         server.local_addr(),
     );
@@ -335,19 +349,24 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
 /// new map to every node under the next epoch.
 fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
     let mut cluster = ClusterClient::connect(addrs).context("connecting to cluster")?;
+    let replicas = cluster.replica_count();
     println!(
-        "cluster of {} shards over {} rows (map epoch {}):",
+        "cluster of {} shards x {} replicas over {} rows (map epoch {}):",
         cluster.shard_count(),
+        replicas,
         cluster.rows(),
         cluster.epoch()
     );
-    // Per-node health probe: every node gets a verdict — a dead node
-    // shows as down without hiding the nodes after it.
+    // Per-node health probe: every replica gets a verdict — a dead
+    // node shows as down without hiding the nodes after it.
     let rtts = cluster.ping_all();
-    for ((addr, range), (_, rtt)) in cluster.node_ranges().into_iter().zip(rtts) {
+    let ranges = cluster.node_ranges();
+    for (i, ((addr, range), (_, rtt))) in ranges.into_iter().zip(rtts).enumerate() {
+        let (s, r) = (i / replicas, i % replicas);
+        let who = format!("shard {s} replica {r}, rows {}..{}", range.start, range.end);
         match rtt {
-            Ok(rtt) => println!("  {addr}: rows {}..{} (rtt {rtt:.1?})", range.start, range.end),
-            Err(e) => println!("  {addr}: rows {}..{} (DOWN: {e})", range.start, range.end),
+            Ok(rtt) => println!("  {addr}: {who} (rtt {rtt:.1?})"),
+            Err(e) => println!("  {addr}: {who} (DOWN: {e})"),
         }
     }
     if let Some(costs) = args.get("rebalance") {
@@ -360,11 +379,14 @@ fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
             .rebalance(&costs)
             .map_err(|e| anyhow::anyhow!("rebalance failed: {e}"))?;
         println!(
-            "rebalanced to epoch {epoch}: {} row run(s) changed owner",
+            "rebalanced to epoch {epoch}: {} per-replica row run(s) changed owner",
             moves.len()
         );
-        for (start, end, from, to) in moves {
-            println!("  rows {start}..{end}: shard {from} -> shard {to}");
+        for m in moves {
+            println!(
+                "  rows {}..{}: shard {} -> shard {} (replica {})",
+                m.start, m.end, m.from, m.to, m.replica
+            );
         }
         for (addr, range) in cluster.node_ranges() {
             println!("  {addr}: now owns rows {}..{}", range.start, range.end);

@@ -39,7 +39,7 @@ mod worker;
 pub use backpressure::{BoundedQueue, QueueError};
 pub use batcher::{BatchPolicy, Batcher};
 pub use router::Router;
-pub use shard::ShardSet;
+pub use shard::{ReplicaMove, ReplicaSet, ShardSet};
 
 use crate::estimators::{
     FractionalPower, FusedDiffEstimator, GeometricMean, OptimalQuantile, QuantileEstimator,
@@ -161,14 +161,23 @@ pub struct ShardSpec {
     pub of: usize,
 }
 
+/// Shared parser for the `i/of` CLI slot syntax behind
+/// [`ShardSpec::parse`] and [`ReplicaSpec::parse`] — one place for the
+/// separator and the `of ≥ 1 && index < of` validity rule, so the two
+/// spec types cannot drift apart.
+fn parse_slot(s: &str) -> Option<(usize, usize)> {
+    let (i, of) = s.split_once('/')?;
+    let index: usize = i.trim().parse().ok()?;
+    let of: usize = of.trim().parse().ok()?;
+    (of >= 1 && index < of).then_some((index, of))
+}
+
 impl ShardSpec {
     /// Parse the CLI form `i/of` (e.g. `--shard 1/3`). `of ≥ 1` and
     /// `index < of`.
     pub fn parse(s: &str) -> Option<ShardSpec> {
-        let (i, of) = s.split_once('/')?;
-        let index: usize = i.trim().parse().ok()?;
-        let of: usize = of.trim().parse().ok()?;
-        (of >= 1 && index < of).then_some(ShardSpec { index, of })
+        let (index, of) = parse_slot(s)?;
+        Some(ShardSpec { index, of })
     }
 
     /// The rows this shard owns out of `n` total (even contiguous
@@ -179,6 +188,46 @@ impl ShardSpec {
 }
 
 impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.of)
+    }
+}
+
+/// Which replica of its row range this process is — `index` of `of`
+/// siblings serving the *same* rows (`serve --listen --shard i/S
+/// --replica r/R`). Replication multiplies the node count: an S-shard
+/// R-replica cluster is `S × R` processes, and the cluster client
+/// routes each sub-plan to one live sibling per range, failing over to
+/// another when a node dies mid-stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    /// This node's replica index, `0 ≤ index < of`.
+    pub index: usize,
+    /// Replication factor: how many nodes serve this row range.
+    pub of: usize,
+}
+
+impl ReplicaSpec {
+    /// The unreplicated default: the only copy of its range.
+    pub fn solo() -> ReplicaSpec {
+        ReplicaSpec { index: 0, of: 1 }
+    }
+
+    /// Parse the CLI form `r/R` (e.g. `--replica 1/2`). `R ≥ 1` and
+    /// `index < R`.
+    pub fn parse(s: &str) -> Option<ReplicaSpec> {
+        let (index, of) = parse_slot(s)?;
+        Some(ReplicaSpec { index, of })
+    }
+}
+
+impl Default for ReplicaSpec {
+    fn default() -> Self {
+        Self::solo()
+    }
+}
+
+impl std::fmt::Display for ReplicaSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{}/{}", self.index, self.of)
     }
@@ -308,6 +357,12 @@ pub(crate) struct Ownership {
     pub epoch: u64,
     /// Shard identity (None = unsharded, owns everything).
     pub spec: Option<ShardSpec>,
+    /// Replica identity within the shard's replica set (`solo()` on an
+    /// unreplicated node). Advertised through `ShardMap` frames so the
+    /// cluster client can place this node in its `(shard, replica)`
+    /// grid; it does not affect what the workers scan — siblings serve
+    /// identical ranges by construction.
+    pub replica: ReplicaSpec,
     /// The candidate-row range `TopK` scans (clamped to the live
     /// store's n at scan time). `0..usize::MAX` on an unsharded node —
     /// i.e. every row, including ones ingested after start.
@@ -419,6 +474,24 @@ impl Coordinator {
         store: SketchStore,
         shard: Option<ShardSpec>,
     ) -> Result<Coordinator> {
+        Self::start_replicated(config, store, shard, ReplicaSpec::solo())
+    }
+
+    /// [`Self::start_sharded`] with a replica identity: this process is
+    /// replica `replica.index` of `replica.of` siblings all owning the
+    /// same row range (`serve --listen --shard i/S --replica r/R`).
+    /// Replication changes nothing about what the workers scan — it is
+    /// advertised through the v5 `ShardMap` frame so the cluster
+    /// client can fail over between siblings. A replicated node always
+    /// participates in the epoch machinery (a replicated-but-unsharded
+    /// deployment is one shard of 1), so sweeps can reconfigure the
+    /// whole replica set.
+    pub fn start_replicated(
+        config: PipelineConfig,
+        store: SketchStore,
+        shard: Option<ShardSpec>,
+        replica: ReplicaSpec,
+    ) -> Result<Coordinator> {
         if store.k != config.k {
             bail!("store k={} != config k={}", store.k, config.k);
         }
@@ -427,12 +500,22 @@ impl Coordinator {
                 bail!("invalid shard spec {}/{}", s.index, s.of);
             }
         }
+        if replica.of == 0 || replica.index >= replica.of {
+            bail!("invalid replica spec {}/{}", replica.index, replica.of);
+        }
         let alpha = config.alpha;
         let k = config.k;
         let n = store.n;
-        let owned = match shard {
-            Some(s) => s.owned_range(n),
-            None => 0..usize::MAX,
+        // R > 1 without --shard: one shard of 1, replicated — the
+        // epoch stamps must engage so the siblings can be swept. The
+        // scan range stays open-ended (0..usize::MAX) like the solo
+        // node this generalizes: the node owns *everything*, including
+        // rows ingested after start — only an explicit shard spec pins
+        // the range to the start-time split.
+        let (shard, owned) = match (shard, replica.of) {
+            (Some(s), _) => (Some(s), s.owned_range(n)),
+            (None, of) if of > 1 => (Some(ShardSpec { index: 0, of: 1 }), 0..usize::MAX),
+            (None, _) => (None, 0..usize::MAX),
         };
         // A clustered node starts at epoch 1 so clients' epoch stamps
         // engage; an unsharded node's map is static (epoch 0, never
@@ -445,6 +528,7 @@ impl Coordinator {
             ownership: Mutex::new(Ownership {
                 epoch,
                 spec: shard,
+                replica,
                 owned,
                 prev: None,
             }),
@@ -505,34 +589,40 @@ impl Coordinator {
     /// The row range this node's `TopK` scans cover, clamped to the
     /// current store — what the `ShardMap` wire frame advertises.
     pub fn owned_range(&self) -> std::ops::Range<usize> {
-        self.membership().2
+        self.membership().3
     }
 
-    /// One consistent `(epoch, shard spec, owned range)` snapshot,
-    /// read under a single lock acquisition — a `ShardMap` frame must
-    /// never mix fields from two different adoptions.
-    pub fn membership(&self) -> (u64, Option<ShardSpec>, std::ops::Range<usize>) {
+    /// One consistent `(epoch, shard spec, replica spec, owned range)`
+    /// snapshot, read under a single lock acquisition — a `ShardMap`
+    /// frame must never mix fields from two different adoptions.
+    pub fn membership(&self) -> (u64, Option<ShardSpec>, ReplicaSpec, std::ops::Range<usize>) {
         let n = self.shared.store_n.load(Ordering::Acquire);
         let own = self.shared.ownership.lock().unwrap();
         (
             own.epoch,
             own.spec,
+            own.replica,
             own.owned.start.min(n)..own.owned.end.min(n),
         )
     }
 
-    /// Adopt a new shard identity and owned row range under a strictly
-    /// newer epoch — the runtime half of a cluster rebalance or
-    /// join/leave reconfiguration. The swap happens atomically under
+    /// Adopt a new shard identity, replica identity, and owned row
+    /// range under a strictly newer epoch — the runtime half of a
+    /// cluster rebalance, join/leave reconfiguration, or replica
+    /// promotion (a sweep that re-slots the survivors of a shrunken
+    /// replica set is just adoptions with new replica specs). The swap
+    /// happens atomically under
     /// the ownership mutex; workers pick it up at their next batch,
     /// and queries stamped with the outgoing epoch still execute under
     /// the outgoing range (one level of history), so in-flight plans
     /// finish under the map they were routed with.
+    #[allow(clippy::too_many_arguments)]
     pub fn adopt_shard(
         &self,
         epoch: u64,
         index: usize,
         count: usize,
+        replica: ReplicaSpec,
         range: std::ops::Range<usize>,
         rows: usize,
     ) -> Result<(), AdoptError> {
@@ -545,6 +635,12 @@ impl Coordinator {
         if count == 0 || index >= count {
             return Err(AdoptError::Invalid(format!(
                 "shard index {index} out of range (count {count})"
+            )));
+        }
+        if replica.of == 0 || replica.index >= replica.of {
+            return Err(AdoptError::Invalid(format!(
+                "replica index {} out of range (factor {})",
+                replica.index, replica.of
             )));
         }
         if range.start > range.end || range.end > n {
@@ -560,6 +656,7 @@ impl Coordinator {
         own.prev = Some((own.epoch, own.owned.clone()));
         own.epoch = epoch;
         own.spec = Some(ShardSpec { index, of: count });
+        own.replica = replica;
         own.owned = range;
         // Mirror for lock-free admission checks; published while still
         // holding the ownership lock so the two can never disagree for
@@ -819,6 +916,7 @@ mod tests {
         let own = Ownership {
             epoch: 5,
             spec: Some(ShardSpec { index: 1, of: 3 }),
+            replica: ReplicaSpec { index: 1, of: 2 },
             owned: 20..40,
             prev: Some((4, 10..30)),
         };
@@ -831,11 +929,24 @@ mod tests {
         let fresh = Ownership {
             epoch: 1,
             spec: None,
+            replica: ReplicaSpec::solo(),
             owned: 0..usize::MAX,
             prev: None,
         };
         assert_eq!(fresh.range_for(0), Some(0..usize::MAX));
         assert_eq!(fresh.range_for(1), Some(0..usize::MAX));
         assert_eq!(fresh.range_for(2), None);
+    }
+
+    #[test]
+    fn replica_spec_parses_like_shard_spec() {
+        assert_eq!(ReplicaSpec::parse("0/1"), Some(ReplicaSpec { index: 0, of: 1 }));
+        assert_eq!(ReplicaSpec::parse(" 1 / 2 "), Some(ReplicaSpec { index: 1, of: 2 }));
+        assert_eq!(ReplicaSpec::parse("2/2"), None, "index must be < of");
+        assert_eq!(ReplicaSpec::parse("0/0"), None, "factor must be >= 1");
+        assert_eq!(ReplicaSpec::parse("1"), None);
+        assert_eq!(ReplicaSpec::parse("a/b"), None);
+        assert_eq!(ReplicaSpec::solo(), ReplicaSpec::default());
+        assert_eq!(format!("{}", ReplicaSpec { index: 1, of: 3 }), "1/3");
     }
 }

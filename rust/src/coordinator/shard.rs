@@ -4,9 +4,36 @@
 //! multi-node serving layer as the cluster's row → node ownership map
 //! (`server::cluster` builds a `ShardSet` from the per-node `ShardMap`
 //! frames and routes every query through [`ShardSet::owner`]).
+//! [`ReplicaSet`] is the replica-aware form: the same row → shard map
+//! served by R nodes per shard, so the cluster can fail over between
+//! siblings when one dies.
 //!
 //! (Query-side load balancing is the router's power-of-two-choices; this
 //! module owns the data-partitioning maps.)
+
+/// Smallest per-shard weight [`ShardSet::weighted`] honours: anything
+/// at or below it (including 0, negatives, and NaN) clamps here. Small
+/// enough that a genuinely cheap shard dominates the split, large
+/// enough that `1/w` and the capacity sum stay finite.
+pub const MIN_WEIGHT: f64 = 1e-9;
+
+/// Largest per-shard weight [`ShardSet::weighted`] honours: `+inf`
+/// (and anything above) clamps here, so a "infinitely slow" shard gets
+/// a zero-width range instead of poisoning the capacity sum with
+/// `1/inf` / `inf − inf` arithmetic.
+pub const MAX_WEIGHT: f64 = 1e12;
+
+/// Clamp one observed cost into `[MIN_WEIGHT, MAX_WEIGHT]`; NaN — an
+/// undefined observation — is treated as "no load observed".
+fn sanitize_weight(w: f64) -> f64 {
+    if w.is_nan() || w < MIN_WEIGHT {
+        MIN_WEIGHT
+    } else if w > MAX_WEIGHT {
+        MAX_WEIGHT
+    } else {
+        w
+    }
+}
 
 /// Contiguous row-range shards over n rows.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -33,12 +60,21 @@ impl ShardSet {
     }
 
     /// Split by explicit per-shard load weights (e.g. observed ingest
-    /// rates): shard s gets a row span proportional to 1/weight[s].
+    /// rates or queue depths): shard s gets a row span proportional to
+    /// 1/weight[s].
+    ///
+    /// Weights are **sanitized, not asserted**: an idle node reports a
+    /// cost of exactly 0 (`queue_depth_total = 0`), so zero, negative,
+    /// NaN, and sub-epsilon weights clamp to [`MIN_WEIGHT`] ("as cheap
+    /// as expressible" — the shard gets the most rows), and infinite
+    /// or huge weights clamp to [`MAX_WEIGHT`] ("as expensive as
+    /// expressible" — the shard gets the fewest). Stats-driven
+    /// rebalancing can therefore feed raw observed costs straight in
+    /// without a panic path.
     pub fn weighted(n: usize, weights: &[f64]) -> ShardSet {
         assert!(!weights.is_empty());
-        assert!(weights.iter().all(|&w| w > 0.0));
         // Capacity ∝ 1/weight (a slow shard gets fewer rows).
-        let caps: Vec<f64> = weights.iter().map(|w| 1.0 / w).collect();
+        let caps: Vec<f64> = weights.iter().map(|&w| 1.0 / sanitize_weight(w)).collect();
         let total: f64 = caps.iter().sum();
         let mut bounds = Vec::with_capacity(weights.len() + 1);
         bounds.push(0usize);
@@ -116,6 +152,97 @@ impl ShardSet {
             row = end;
         }
         (new, moves)
+    }
+}
+
+/// One rebalance move for one replica: rows `start..end` change owner
+/// from `(from, replica)` to `(to, replica)` — the per-replica form of
+/// [`ShardSet::rebalance`]'s `(start, end, from, to)` descriptors,
+/// which is what an `AdoptShard` sweep over a replicated cluster
+/// executes (every replica of a range moves in lockstep, each under
+/// its own node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaMove {
+    pub start: usize,
+    pub end: usize,
+    pub from: usize,
+    pub to: usize,
+    pub replica: usize,
+}
+
+/// Replica-aware placement: a [`ShardSet`] row → shard map served by
+/// `replicas` nodes per shard, so every row is covered by exactly
+/// `replicas` distinct nodes. Nodes are addressed as
+/// `(shard, replica)` pairs with a flat shard-major [`Self::slot`]
+/// order — the order the cluster client keeps its connections and
+/// per-node metrics in.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSet {
+    map: ShardSet,
+    replicas: usize,
+}
+
+impl ReplicaSet {
+    pub fn new(map: ShardSet, replicas: usize) -> ReplicaSet {
+        assert!(replicas > 0);
+        ReplicaSet { map, replicas }
+    }
+
+    /// The underlying row → shard map (shared by every replica).
+    pub fn map(&self) -> &ShardSet {
+        &self.map
+    }
+
+    pub fn shards(&self) -> usize {
+        self.map.shards()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Total nodes in the placement (`shards × replicas`).
+    pub fn nodes(&self) -> usize {
+        self.map.shards() * self.replicas
+    }
+
+    pub fn rows(&self) -> usize {
+        self.map.rows()
+    }
+
+    /// Flat node slot of `(shard, replica)` — shard-major, so a
+    /// shard's replica group is contiguous.
+    pub fn slot(&self, shard: usize, replica: usize) -> usize {
+        assert!(shard < self.shards() && replica < self.replicas);
+        shard * self.replicas + replica
+    }
+
+    /// The `replicas` distinct nodes serving `row`, as
+    /// `(shard, replica)` pairs in replica order.
+    pub fn owners(&self, row: usize) -> Vec<(usize, usize)> {
+        let shard = self.map.owner(row);
+        (0..self.replicas).map(|r| (shard, r)).collect()
+    }
+
+    /// Rebalance the shared row map by per-shard costs; the returned
+    /// moves are the per-replica ownership diff — exactly
+    /// [`ShardSet::rebalance`]'s moves, once per replica index, so an
+    /// `AdoptShard` sweep has one descriptor per node that must move.
+    pub fn rebalance(&self, costs: &[f64]) -> (ReplicaSet, Vec<ReplicaMove>) {
+        let (new_map, shard_moves) = self.map.rebalance(costs);
+        let mut moves = Vec::with_capacity(shard_moves.len() * self.replicas);
+        for &(start, end, from, to) in &shard_moves {
+            for replica in 0..self.replicas {
+                moves.push(ReplicaMove {
+                    start,
+                    end,
+                    from,
+                    to,
+                    replica,
+                });
+            }
+        }
+        (ReplicaSet::new(new_map, self.replicas), moves)
     }
 }
 
@@ -209,6 +336,119 @@ mod tests {
                         s.range(o)
                     );
                 }
+            }
+        }
+    }
+
+    /// Regression for the zero-cost rebalance panic: `weighted` used
+    /// to assert `w > 0.0`, so `ClusterClient::rebalance` panicked on
+    /// the most common stats-driven input — an idle node reporting
+    /// `queue_depth_total = 0`. Zero, NaN, and infinite costs must now
+    /// clamp, keep full coverage, and keep `owner`/`range` consistent.
+    #[test]
+    fn weighted_and_rebalance_accept_zero_nan_and_infinite_costs() {
+        let hostile: Vec<(usize, Vec<f64>)> = vec![
+            (100, vec![0.0, 1.0, 1.0]),              // idle node
+            (100, vec![0.0, 0.0, 0.0]),              // wholly idle cluster
+            (100, vec![f64::NAN, 1.0]),              // undefined observation
+            (100, vec![f64::INFINITY, 1.0]),         // wedged node
+            (100, vec![f64::INFINITY, f64::INFINITY]),
+            (100, vec![-3.0, 1.0]),                  // garbage negative
+            (7, vec![0.0, f64::NAN, f64::INFINITY, 1.0]),
+            (1, vec![0.0, 0.0]),
+        ];
+        for (n, costs) in hostile {
+            let s = ShardSet::weighted(n, &costs);
+            assert_eq!(s.shards(), costs.len(), "costs {costs:?}");
+            let covered: usize = (0..s.shards()).map(|i| s.range(i).len()).sum();
+            assert_eq!(covered, n, "coverage lost under costs {costs:?}");
+            for row in 0..n {
+                let o = s.owner(row);
+                assert!(s.range(o).contains(&row), "row {row} costs {costs:?}");
+            }
+            // rebalance (which feeds weighted) must not panic either,
+            // and its moves must stay the exact ownership diff.
+            let start = ShardSet::even(n, costs.len());
+            let (new, moves) = start.rebalance(&costs);
+            assert_eq!(new.rows(), n);
+            for &(ms, me, from, to) in &moves {
+                assert!(ms < me && me <= n);
+                for row in ms..me {
+                    assert_eq!(start.owner(row), from);
+                    assert_eq!(new.owner(row), to);
+                }
+            }
+        }
+        // The semantics, not just the absence of a panic: an idle
+        // (zero-cost) shard absorbs rows from a loaded one, and an
+        // infinitely slow shard sheds everything it can.
+        let s = ShardSet::weighted(100, &[0.0, 1.0]);
+        assert!(s.range(0).len() > 95, "idle shard must absorb rows: {:?}", s.range(0));
+        let s = ShardSet::weighted(100, &[f64::INFINITY, 1.0]);
+        assert!(s.range(0).len() < 5, "wedged shard must shed rows: {:?}", s.range(0));
+    }
+
+    /// Property: a replica placement covers every row exactly R times,
+    /// on R distinct nodes, and its rebalance moves are exactly the
+    /// per-replica ownership diff (the [`ShardSet`] diff repeated once
+    /// per replica index, nothing more, nothing less).
+    #[test]
+    fn replica_placement_covers_every_row_r_times_and_moves_are_the_diff_property() {
+        use crate::numerics::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::new(0x9E91);
+        let mut cases: Vec<(usize, usize, usize, Vec<f64>)> = vec![
+            (40, 3, 2, vec![1.0, 3.0, 1.0]),
+            (10, 1, 4, vec![2.0]),
+            (64, 4, 1, vec![1.0, 0.0, f64::INFINITY, 1.0]),
+        ];
+        for _ in 0..100 {
+            let n = rng.below(120) as usize + 1;
+            let shards = rng.below(5) as usize + 1;
+            let replicas = rng.below(4) as usize + 1;
+            let costs: Vec<f64> = (0..shards)
+                .map(|_| 10f64.powf(rng.uniform() * 8.0 - 4.0))
+                .collect();
+            cases.push((n, shards, replicas, costs));
+        }
+        for (n, shards, replicas, costs) in cases {
+            let placement = ReplicaSet::new(ShardSet::even(n, shards), replicas);
+            assert_eq!(placement.nodes(), shards * replicas);
+            // Coverage: every row on exactly R distinct node slots,
+            // and total coverage over all rows is n × R.
+            let mut covered = vec![0usize; placement.nodes()];
+            for row in 0..n {
+                let owners = placement.owners(row);
+                assert_eq!(owners.len(), replicas, "row {row} covered {} times", owners.len());
+                let mut slots: Vec<usize> =
+                    owners.iter().map(|&(s, r)| placement.slot(s, r)).collect();
+                slots.sort_unstable();
+                slots.dedup();
+                assert_eq!(slots.len(), replicas, "row {row} replicas not distinct");
+                for slot in slots {
+                    covered[slot] += 1;
+                }
+                // Every replica of a row serves the same range.
+                for &(s, _) in &owners {
+                    assert!(placement.map().range(s).contains(&row));
+                }
+            }
+            assert_eq!(covered.iter().sum::<usize>(), n * replicas);
+            // Moves are exactly the per-replica diff of the shard map.
+            let (new, moves) = placement.rebalance(&costs);
+            assert_eq!(new.replicas(), replicas);
+            let (expect_map, shard_moves) = placement.map().rebalance(&costs);
+            assert_eq!(new.map(), &expect_map, "replica rebalance shares the shard map");
+            assert_eq!(moves.len(), shard_moves.len() * replicas);
+            for replica in 0..replicas {
+                let per_replica: Vec<(usize, usize, usize, usize)> = moves
+                    .iter()
+                    .filter(|m| m.replica == replica)
+                    .map(|m| (m.start, m.end, m.from, m.to))
+                    .collect();
+                assert_eq!(
+                    per_replica, shard_moves,
+                    "replica {replica} moves must be the shard diff (n={n} costs={costs:?})"
+                );
             }
         }
     }

@@ -45,7 +45,9 @@ USAGE: stablesketch <subcommand> [options]
   serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
               [--workload pair|topk|block|mixed] [--topk-m 10] [--block-side 8]
               [--listen 127.0.0.1:7878 [--duration 0] [--stats-every 10] [--max-conns 64]
-               [--shard 0/3]]  (--shard i/of = one node of an of-node cluster)
+               [--shard 0/3] [--replica 0/2]]
+              (--shard i/of = one node of an of-shard cluster; --replica r/R = one of
+              R siblings owning the same rows — clients fail over between siblings)
   loadgen     --connect 127.0.0.1:7878[,127.0.0.1:7879,...] [--threads 4] [--duration 10]
               [--rate 0] [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median]
               [--topk-m 10] [--block-side 8]

@@ -267,6 +267,11 @@ pub struct NodeMetrics {
     pub errors: Counter,
     /// Reconnect attempts after an I/O failure.
     pub reconnects: Counter,
+    /// Sub-plans that failed over *away* from this node to a sibling
+    /// replica (node down, or a `WrongEpoch` refusal mid-sweep) — the
+    /// per-replica health signal for "this replica is flapping even
+    /// though plans keep succeeding".
+    pub failovers: Counter,
     /// Sub-plans currently in flight on this node.
     pub inflight: Gauge,
 }
@@ -287,11 +292,19 @@ pub struct ClusterMetrics {
     /// one is a node join/leave/rebalance routed around instead of a
     /// surfaced error).
     pub retried_plans: Counter,
+    /// Sub-plans served by a sibling replica after their first-choice
+    /// replica failed or refused — transparent failovers, each one a
+    /// node-down (or mid-sweep) event that cost zero surfaced errors
+    /// and zero refreshes.
+    pub failovers: Counter,
     /// Reconnects/errors accumulated by node slots that were retired
     /// by a refresh (per-node counters reset when the node set is
     /// rebuilt; totals must not).
     retired_reconnects: Counter,
     retired_errors: Counter,
+    /// Replication factor of the current node set — node slot `i` is
+    /// shard `i / replicas`, replica `i % replicas` (shard-major).
+    replicas: usize,
     nodes: Vec<NodeMetrics>,
 }
 
@@ -303,33 +316,39 @@ fn node_metrics(addrs: impl IntoIterator<Item = String>) -> Vec<NodeMetrics> {
             routed: Counter::default(),
             errors: Counter::default(),
             reconnects: Counter::default(),
+            failovers: Counter::default(),
             inflight: Gauge::default(),
         })
         .collect()
 }
 
 impl ClusterMetrics {
-    pub fn new<I: IntoIterator<Item = String>>(addrs: I) -> Self {
+    /// One slot per node, in shard-major `(shard, replica)` order;
+    /// `replicas` is the replication factor (1 = unreplicated).
+    pub fn new<I: IntoIterator<Item = String>>(addrs: I, replicas: usize) -> Self {
         Self {
             plans: Counter::default(),
             subqueries: Counter::default(),
             refreshes: Counter::default(),
             retried_plans: Counter::default(),
+            failovers: Counter::default(),
             retired_reconnects: Counter::default(),
             retired_errors: Counter::default(),
+            replicas: replicas.max(1),
             nodes: node_metrics(addrs),
         }
     }
 
     /// Rebuild the per-node slots after a shard-map refresh changed
-    /// the node set. Whole-cluster counters (plans, refreshes, …)
-    /// carry over; the retiring nodes' reconnect/error counts fold
-    /// into the cluster totals so they survive the reset.
-    pub fn reset_nodes<I: IntoIterator<Item = String>>(&mut self, addrs: I) {
+    /// the node set. Whole-cluster counters (plans, refreshes,
+    /// failovers, …) carry over; the retiring nodes' reconnect/error
+    /// counts fold into the cluster totals so they survive the reset.
+    pub fn reset_nodes<I: IntoIterator<Item = String>>(&mut self, addrs: I, replicas: usize) {
         for n in &self.nodes {
             self.retired_reconnects.add(n.reconnects.get());
             self.retired_errors.add(n.errors.get());
         }
+        self.replicas = replicas.max(1);
         self.nodes = node_metrics(addrs);
     }
 
@@ -358,22 +377,30 @@ impl ClusterMetrics {
         // resets per-node slots, and a report printed right after a
         // bounce must still show the flap.
         let mut s = format!(
-            "cluster: {} plans, {} subqueries, {} refreshes, {} retried, \
+            "cluster: {} plans, {} subqueries, {} refreshes, {} retried, {} failovers, \
              {} reconnects total, {} errors total",
             self.plans.get(),
             self.subqueries.get(),
             self.refreshes.get(),
             self.retried_plans.get(),
+            self.failovers.get(),
             self.total_reconnects(),
             self.total_errors(),
         );
         for (i, n) in self.nodes.iter().enumerate() {
+            // Per-replica labelling: slot i is shard i/R, replica i%R.
+            let label = if self.replicas > 1 {
+                format!("shard {} replica {}", i / self.replicas, i % self.replicas)
+            } else {
+                format!("node {i}")
+            };
             s.push_str(&format!(
-                " | node {i} ({}): {} routed, {} inflight, {} reconnects, {} errors",
+                " | {label} ({}): {} routed, {} inflight, {} reconnects, {} failovers, {} errors",
                 n.addr,
                 n.routed.get(),
                 n.inflight.get().max(0),
                 n.reconnects.get(),
+                n.failovers.get(),
                 n.errors.get(),
             ));
         }
@@ -387,7 +414,7 @@ mod tests {
 
     #[test]
     fn cluster_metrics_report_names_every_node() {
-        let m = ClusterMetrics::new(["a:1".to_string(), "b:2".to_string()]);
+        let m = ClusterMetrics::new(["a:1".to_string(), "b:2".to_string()], 1);
         m.plans.inc();
         m.node(0).routed.add(3);
         m.node(1).reconnects.inc();
@@ -398,18 +425,39 @@ mod tests {
         assert_eq!(m.nodes().len(), 2);
     }
 
+    /// Replicated clusters label slots by shard/replica (shard-major)
+    /// and surface failover counts at both levels.
+    #[test]
+    fn cluster_metrics_report_labels_replicas_and_failovers() {
+        let addrs: Vec<String> = ["a:1", "a:2", "b:1", "b:2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let m = ClusterMetrics::new(addrs, 2);
+        m.failovers.inc();
+        m.node(1).failovers.inc(); // shard 0, replica 1
+        let r = m.report();
+        assert!(r.contains("1 failovers,"), "{r}");
+        assert!(r.contains("shard 0 replica 0 (a:1)"), "{r}");
+        assert!(r.contains("shard 0 replica 1 (a:2)"), "{r}");
+        assert!(r.contains("shard 1 replica 0 (b:1)"), "{r}");
+        assert!(r.contains("shard 1 replica 1 (b:2)"), "{r}");
+    }
+
     #[test]
     fn reset_nodes_preserves_cluster_totals() {
-        let mut m = ClusterMetrics::new(["a:1".to_string(), "b:2".to_string()]);
+        let mut m = ClusterMetrics::new(["a:1".to_string(), "b:2".to_string()], 1);
         m.node(0).reconnects.add(2);
         m.node(1).errors.inc();
         m.refreshes.inc();
-        m.reset_nodes(["a:1".to_string(), "c:3".to_string(), "d:4".to_string()]);
+        m.failovers.inc();
+        m.reset_nodes(["a:1".to_string(), "c:3".to_string(), "d:4".to_string()], 1);
         assert_eq!(m.nodes().len(), 3);
         assert_eq!(m.node(0).reconnects.get(), 0, "per-node counters reset");
         assert_eq!(m.total_reconnects(), 2, "retired reconnects fold into the total");
         assert_eq!(m.total_errors(), 1, "retired errors fold into the total");
         assert_eq!(m.refreshes.get(), 1, "whole-cluster counters carry over");
+        assert_eq!(m.failovers.get(), 1, "failover totals carry over");
     }
 
     #[test]

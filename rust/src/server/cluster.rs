@@ -1,45 +1,66 @@
 //! The client-side cluster router: scatter-gather over a set of
-//! `serve --listen --shard i/of` nodes.
+//! `serve --listen --shard i/of [--replica r/R]` nodes.
 //!
-//! Topology (the ROADMAP's multi-node open item):
+//! Topology (the ROADMAP's multi-node + replication open items):
 //!
 //! ```text
 //!          ClusterClient
-//!     shard map: ShardSet (row → node), built from per-node
-//!     ShardMap frames at connect and validated to tile 0..rows
+//!     shard map: ShardSet (row → shard), built from per-node
+//!     ShardMap frames at connect and validated to tile 0..rows;
+//!     every shard served by R sibling replicas (same rows each)
 //!          │
-//!          ├─ Pair{i,j}     ──► owner(i)                 (1 node)
-//!          ├─ TopK{i,m}     ──► every node: partial top-m over its
-//!          │                    owned rows; merged by (distance, row)
-//!          └─ Block{rows,·} ──► rows split by owner; sub-blocks
-//!                               reassembled in request order
+//!          ├─ Pair{i,j}     ──► one replica of owner(i)     (1 node)
+//!          ├─ TopK{i,m}     ──► one replica per shard: partial top-m
+//!          │                    over the shard's rows; merged by
+//!          │                    (distance, row)
+//!          └─ Block{rows,·} ──► rows split by owning shard; each
+//!                               sub-block to one replica; reassembled
+//!                               in request order
 //! ```
 //!
 //! Every node holds the full replicated sketch store (sketching is
 //! deterministic per row), but *owns* one contiguous row slice for
-//! compute: its `TopK` scans only that slice, and block rows land on
-//! their owners — so an N-node cluster does ~1/N of the scan work per
-//! node while every gathered reply stays **bit-identical** to a
-//! single node serving the same corpus (`rust/tests/cluster_e2e.rs`
-//! enforces this).
+//! compute; with replication factor R, R sibling nodes own the **same**
+//! slice, so any one of them can serve a sub-plan and the answers are
+//! bit-identical no matter which sibling answered
+//! (`rust/tests/replication_e2e.rs` enforces this). Replicas are
+//! chosen round-robin per shard, so read load spreads across siblings.
 //!
-//! Failure semantics: each node gets one reconnect-and-retry per
-//! sub-plan; a node that stays down surfaces as a typed
-//! [`ClusterError::NodeFailed`] naming the node and shard — never a
-//! hang, and never a silently partial result.
+//! Failure semantics, in escalation order:
 //!
-//! Membership is **live** (v4): the map carries an epoch, queries are
-//! stamped with it, and on a `WrongEpoch` refusal or a node failure
-//! the router refreshes its map (re-running the exchange against its
-//! current dial list) and retries the plan once — a rebalance or a
-//! node bounce costs one extra round trip instead of failing the
-//! plan. [`ClusterClient::rebalance`] is the admin half: it computes
-//! new ranges from per-shard costs and pushes `AdoptShard` frames to
-//! every node under the next epoch.
+//! 1. **Reconnect** — each node gets one reconnect-and-retry per
+//!    sub-plan (a blip, not a failure).
+//! 2. **Failover** — if the node stays down (or refuses with
+//!    `WrongEpoch` mid-sweep), the sub-plan moves to a sibling replica
+//!    of the same shard. A node bounce in an R ≥ 2 cluster costs zero
+//!    surfaced errors and zero refreshes.
+//! 3. **Refresh-and-retry** — only when *every* replica of a shard
+//!    failed does the router re-run the shard-map exchange against its
+//!    current dial list and retry the plan once (the PR 4 path: a
+//!    rebalance or full replica-set change costs one extra round
+//!    trip).
+//! 4. **Typed error** — a shard whose whole replica set is gone and
+//!    whose refresh cannot complete surfaces as
+//!    [`ClusterError::NodeFailed`] naming the address, shard, and
+//!    replica — never a hang, never a silently partial result.
+//!
+//! Membership is **live** (v4) and **replicated** (v5): the map
+//! carries an epoch, queries are stamped with it, and
+//! [`ClusterClient::rebalance`] is the admin half — it computes new
+//! ranges from per-shard costs (raw observed costs are fine: zero /
+//! NaN / infinite costs are clamped by `ShardSet::weighted`, an idle
+//! node's `queue_depth_total = 0` is the common case, not an error)
+//! and sweeps `AdoptShard` frames to every replica of every shard
+//! under the next epoch. The same sweep machinery doubles as
+//! **promotion**: re-slotting the survivors (or a fresh replacement)
+//! of a replica set that lost a member is just adoptions with new
+//! replica identities.
 
 use super::client::{ClientError, SketchClient, CONNECT_RETRY_ATTEMPTS, CONNECT_RETRY_BACKOFF};
 use super::protocol::{ErrorCode, ShardMapInfo, MAX_TOPK_M};
-use crate::coordinator::{Query, QueryKind, Reply, ShardSet, MAX_BLOCK_CELLS};
+use crate::coordinator::{
+    Query, QueryKind, ReplicaMove, ReplicaSet, Reply, ShardSet, MAX_BLOCK_CELLS,
+};
 use crate::metrics::{ClusterMetrics, NodeMetrics};
 use std::time::Duration;
 use thiserror::Error;
@@ -71,6 +92,9 @@ const HEAL_STABILITY_GAP: Duration = Duration::from_millis(100);
 /// Split a `--connect` style address list (`host:port[,host:port...]`)
 /// into trimmed, non-empty addresses — the one parser every caller
 /// (CLI, loadgen) shares, so separator handling cannot diverge.
+/// (Duplicates are *detected*, not silently dropped, at connect /
+/// [`ClusterClient::set_addresses`] time — see
+/// [`ClusterError::DuplicateAddress`].)
 pub fn split_addrs(s: &str) -> Vec<String> {
     s.split(',')
         .map(|a| a.trim().to_string())
@@ -78,12 +102,39 @@ pub fn split_addrs(s: &str) -> Vec<String> {
         .collect()
 }
 
-/// Typed cluster-level failure. Partial failures name the node so
-/// callers can retry, drop the node, or alert on it.
+/// The first address that appears more than once in a dial list, if
+/// any. A duplicated `--connect a,a,b` used to surface deep in the
+/// exchange as a misleading `duplicate shard index` error (the same
+/// node answered twice, so of course its index repeated); naming the
+/// repeated *address* up front tells the operator what they actually
+/// typed wrong.
+fn find_duplicate(addrs: &[String]) -> Option<&String> {
+    addrs
+        .iter()
+        .enumerate()
+        .find(|(i, a)| addrs[..*i].contains(a))
+        .map(|(_, a)| a)
+}
+
+fn check_duplicates(addrs: &[String]) -> Result<(), ClusterError> {
+    match find_duplicate(addrs) {
+        Some(addr) => Err(ClusterError::DuplicateAddress { addr: addr.clone() }),
+        None => Ok(()),
+    }
+}
+
+/// Typed cluster-level failure. Partial failures name the node (down
+/// to the replica) so callers can retry, drop the node, or alert on
+/// it.
 #[derive(Debug, Error)]
 pub enum ClusterError {
     #[error("no server addresses given")]
     NoAddresses,
+    /// The dial list names the same address twice — an operator typo,
+    /// caught at connect/`set_addresses` time instead of surfacing as
+    /// a confusing `duplicate shard index` exchange error.
+    #[error("duplicate address in dial list: {addr} appears more than once")]
+    DuplicateAddress { addr: String },
     #[error("connecting to {addr}: {source}")]
     Connect {
         addr: String,
@@ -91,38 +142,47 @@ pub enum ClusterError {
         source: ClientError,
     },
     /// The shard-map exchange produced an inconsistent or incomplete
-    /// cluster view (wrong shard count, duplicate index, ranges that
-    /// do not tile the row space, disagreeing totals).
+    /// cluster view (wrong shard/replica count, duplicate identity,
+    /// ranges that do not tile the row space, disagreeing totals).
     #[error("shard map exchange with {addr}: {detail}")]
     ShardMap { addr: String, detail: String },
-    /// A node failed mid-plan (after its one reconnect retry) — the
-    /// typed partial-failure error for scatter-gather plans.
-    #[error("node {addr} (shard {shard}) failed: {source}")]
+    /// Every replica of a shard failed mid-plan (each after its one
+    /// reconnect retry) — the typed partial-failure error for
+    /// scatter-gather plans. Names the *first* replica that failed.
+    #[error("node {addr} (shard {shard} replica {replica}) failed: {source}")]
     NodeFailed {
         addr: String,
         shard: usize,
+        replica: usize,
         #[source]
         source: ClientError,
     },
     /// A node shed this plan under backpressure — the cluster mirror
     /// of [`ClientError::Overloaded`]: a normal signal (reduce offered
-    /// load or retry with jitter), not a node failure, and not counted
-    /// in the node's error metric.
-    #[error("node {addr} (shard {shard}) overloaded: {message}")]
+    /// load or retry with jitter), not a node failure, not counted in
+    /// the node's error metric, and deliberately **not** failed over —
+    /// moving the plan to a sibling would double the offered load
+    /// exactly when the cluster is asking for less.
+    #[error("node {addr} (shard {shard} replica {replica}) overloaded: {message}")]
     Overloaded {
         addr: String,
         shard: usize,
+        replica: usize,
         message: String,
     },
-    /// A node refused a sub-plan with `WrongEpoch`: the cluster's
-    /// shard map changed under this client (rebalance, join/leave).
-    /// [`ClusterClient::query_plan`] handles it internally by
-    /// refreshing the map and retrying once; it only surfaces when the
-    /// retry itself hits yet another reconfiguration.
-    #[error("shard map changed under the plan (node {addr}, shard {shard}): {message}")]
+    /// Every replica of a shard refused a sub-plan with `WrongEpoch`:
+    /// the cluster's shard map changed under this client (rebalance,
+    /// join/leave). [`ClusterClient::query_plan`] handles it
+    /// internally by refreshing the map and retrying once; it only
+    /// surfaces when the retry itself hits yet another
+    /// reconfiguration.
+    #[error(
+        "shard map changed under the plan (node {addr}, shard {shard} replica {replica}): {message}"
+    )]
     MapChanged {
         addr: String,
         shard: usize,
+        replica: usize,
         message: String,
     },
     /// The plan failed client-side admission (row out of range,
@@ -140,36 +200,67 @@ struct Node {
     client: SketchClient,
 }
 
-/// A connected view of a sharded cluster: one [`SketchClient`] per
-/// node plus the validated row → node map. All routing happens here;
-/// the server side stays a plain single-node protocol speaker.
+/// A validated, connected view of the cluster — what [`exchange`] /
+/// [`converge`] hand back and [`ClusterClient`] swaps in on refresh.
+struct ClusterView {
+    /// `nodes[shard][replica]`, every replica of shard `s` serving
+    /// `map.range(s)`.
+    nodes: Vec<Vec<Node>>,
+    map: ShardSet,
+    replicas: usize,
+    rows: usize,
+    epoch: u64,
+}
+
+impl ClusterView {
+    /// Node addresses flat in shard-major `(shard, replica)` order —
+    /// the slot order [`ClusterMetrics`] keeps.
+    fn node_addrs(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .flat_map(|group| group.iter().map(|n| n.addr.clone()))
+            .collect()
+    }
+}
+
+/// A connected view of a sharded, replicated cluster: one
+/// [`SketchClient`] per node (grouped `nodes[shard][replica]`) plus
+/// the validated row → shard map. All routing happens here; the
+/// server side stays a plain single-node protocol speaker.
 ///
 /// The view is **live**: the map carries the cluster's epoch, every
-/// query is stamped with it, and an epoch-mismatch refusal or a node
-/// failure triggers a transparent map refresh (re-dialing the current
-/// address list) and one plan retry — node join/leave and rebalances
-/// are routed-around events, not plan errors.
+/// query is stamped with it, a dead or mid-sweep replica is failed
+/// over to a sibling, and only a whole replica set failing triggers a
+/// transparent map refresh (re-dialing the current address list) and
+/// one plan retry — node join/leave, bounces, and rebalances are
+/// routed-around events, not plan errors.
 pub struct ClusterClient {
     /// The dial list for refreshes. Starts as the connect-time list;
     /// [`Self::set_addresses`] swaps it when the membership changes
     /// (a bounced node coming back elsewhere, a join/leave).
     addrs: Vec<String>,
-    nodes: Vec<Node>,
+    /// `nodes[shard][replica]` — shard-major, matching the metrics
+    /// slot order `shard * replicas + replica`.
+    nodes: Vec<Vec<Node>>,
     map: ShardSet,
+    replicas: usize,
     rows: usize,
     /// The shard-map epoch every node agreed on at the last exchange.
     epoch: u64,
+    /// Per-shard round-robin cursor: which replica the next sub-plan
+    /// for that shard is offered to first.
+    cursor: Vec<usize>,
     metrics: ClusterMetrics,
 }
 
 /// How a plan slot's sub-replies are reassembled.
 enum Gather {
-    /// Pair: passthrough of the owning node's reply.
+    /// Pair: passthrough of the owning shard's reply.
     Pair,
-    /// TopK: merge per-node partial top-m lists by (distance, row).
+    /// TopK: merge per-shard partial top-m lists by (distance, row).
     TopK { m: usize },
-    /// Block: `positions[node]` holds the original row positions of
-    /// the rows sent to `node`; sub-blocks are scattered back into a
+    /// Block: `positions[shard]` holds the original row positions of
+    /// the rows sent to `shard`; sub-blocks are scattered back into a
     /// `rows × cols` row-major buffer.
     Block {
         positions: Vec<Vec<usize>>,
@@ -180,33 +271,39 @@ enum Gather {
 
 impl ClusterClient {
     /// Dial every node, run the shard-map exchange, and validate that
-    /// the advertised shards tile the row space exactly: every index
-    /// `0..count` present once, every range contiguous from 0 to
-    /// `rows`, every node agreeing on `count`, `rows`, and (since v4)
-    /// the map `epoch`. One address per shard — a single address is a
-    /// valid 1-shard cluster.
+    /// the advertised identities form a complete `shards × replicas`
+    /// grid: every `(index, replica)` pair present once, every replica
+    /// of a shard advertising the *same* row range, shard ranges
+    /// contiguous from 0 to `rows`, every node agreeing on `count`,
+    /// `replicas`, `rows`, and (since v4) the map `epoch`. One address
+    /// per node — a single address is a valid 1-shard, 1-replica
+    /// cluster.
     pub fn connect(addrs: &[String]) -> Result<ClusterClient, ClusterError> {
         if addrs.is_empty() {
             return Err(ClusterError::NoAddresses);
         }
-        let (nodes, map, rows, epoch) = match exchange(addrs, CONNECT_RETRY_ATTEMPTS) {
+        check_duplicates(addrs)?;
+        let view = match exchange(addrs, CONNECT_RETRY_ATTEMPTS) {
             Ok(view) => view,
             // An inconsistent map at connect time may just be an
             // adoption sweep in flight — or a cluster that needs the
             // guarded heal (a node restarted with a reset epoch).
             // Converge before giving up; genuine operator errors
-            // (wrong address count, duplicate addresses) still fail
-            // with the same typed detail after the budget.
+            // (wrong address count) still fail with the same typed
+            // detail after the budget.
             Err(ClusterError::ShardMap { .. }) => converge(addrs)?,
             Err(e) => return Err(e),
         };
-        let metrics = ClusterMetrics::new(nodes.iter().map(|n| n.addr.clone()));
+        let metrics = ClusterMetrics::new(view.node_addrs(), view.replicas);
+        let cursor = vec![0usize; view.nodes.len()];
         Ok(ClusterClient {
             addrs: addrs.to_vec(),
-            nodes,
-            map,
-            rows,
-            epoch,
+            nodes: view.nodes,
+            map: view.map,
+            replicas: view.replicas,
+            rows: view.rows,
+            epoch: view.epoch,
+            cursor,
             metrics,
         })
     }
@@ -221,11 +318,15 @@ impl ClusterClient {
     /// tells the router about membership changes it learned out of
     /// band (a replacement node on a new port, a join/leave). Takes
     /// effect at the next refresh (triggered automatically by the next
-    /// epoch mismatch or node failure, or explicitly via
+    /// epoch mismatch or whole-replica-set failure, or explicitly via
     /// [`Self::refresh`]); current connections keep serving until
-    /// then.
-    pub fn set_addresses(&mut self, addrs: &[String]) {
+    /// then. A list naming the same address twice is refused (typed
+    /// [`ClusterError::DuplicateAddress`]) and the current dial list
+    /// is kept.
+    pub fn set_addresses(&mut self, addrs: &[String]) -> Result<(), ClusterError> {
+        check_duplicates(addrs)?;
         self.addrs = addrs.to_vec();
+        Ok(())
     }
 
     /// Re-run the shard-map exchange against the current address list
@@ -237,12 +338,14 @@ impl ClusterClient {
     /// totals carry over.
     pub fn refresh(&mut self) -> Result<(), ClusterError> {
         self.metrics.refreshes.inc();
-        let (nodes, map, rows, epoch) = converge(&self.addrs)?;
-        self.metrics.reset_nodes(nodes.iter().map(|n| n.addr.clone()));
-        self.nodes = nodes;
-        self.map = map;
-        self.rows = rows;
-        self.epoch = epoch;
+        let view = converge(&self.addrs)?;
+        self.metrics.reset_nodes(view.node_addrs(), view.replicas);
+        self.cursor = vec![0usize; view.nodes.len()];
+        self.nodes = view.nodes;
+        self.map = view.map;
+        self.replicas = view.replicas;
+        self.rows = view.rows;
+        self.epoch = view.epoch;
         Ok(())
     }
 
@@ -251,43 +354,54 @@ impl ClusterClient {
         self.rows
     }
 
+    /// Row-range shards in the cluster (not nodes: with replication
+    /// the cluster has `shard_count() × replica_count()` nodes).
     pub fn shard_count(&self) -> usize {
         self.nodes.len()
     }
 
-    /// Which node (= shard index) owns a row.
+    /// Replication factor R: how many sibling nodes serve each shard.
+    pub fn replica_count(&self) -> usize {
+        self.replicas
+    }
+
+    /// Which shard owns a row (every replica of it serves the row).
     pub fn owner_of(&self, row: usize) -> usize {
         self.map.owner(row)
     }
 
-    /// `(address, owned row range)` per node, in shard order.
+    /// `(address, owned row range)` per node, flat in shard-major
+    /// `(shard, replica)` order — siblings repeat their shard's range.
     pub fn node_ranges(&self) -> Vec<(String, std::ops::Range<usize>)> {
         self.nodes
             .iter()
             .enumerate()
-            .map(|(s, n)| (n.addr.clone(), self.map.range(s)))
+            .flat_map(|(s, group)| {
+                let range = self.map.range(s);
+                group.iter().map(move |n| (n.addr.clone(), range.clone()))
+            })
             .collect()
     }
 
-    /// Client-side per-node routing counters.
+    /// Client-side per-node routing counters (slots in the same
+    /// shard-major order as [`Self::node_ranges`]).
     pub fn metrics(&self) -> &ClusterMetrics {
         &self.metrics
     }
 
     /// Admin: rebalance row ownership by observed per-shard costs and
-    /// push the new map to every node under the next epoch. The new
-    /// ranges come from [`ShardSet::rebalance`]; its move descriptors
-    /// (`(row_start, row_end, from, to)` runs that changed owner) are
-    /// returned for logging/audit, and other clients pick the new map
-    /// up through their next epoch-mismatch refresh. Nodes are swept
-    /// in shard order; a node that refuses with a *newer* epoch lost a
-    /// race to a concurrent admin — this client then refreshes to the
-    /// winner's map and reports `MapChanged`.
-    #[allow(clippy::type_complexity)]
-    pub fn rebalance(
-        &mut self,
-        costs: &[f64],
-    ) -> Result<(u64, Vec<(usize, usize, usize, usize)>), ClusterError> {
+    /// push the new map to **every replica of every shard** under the
+    /// next epoch. Costs are raw observations — zero (an idle node's
+    /// `queue_depth_total`), NaN, and infinite values are clamped by
+    /// `ShardSet::weighted`, not refused, so stats-driven rebalance
+    /// triggers can feed queue depths straight in. The new ranges come
+    /// from [`ReplicaSet::rebalance`]; its per-replica move
+    /// descriptors are returned for logging/audit, and other clients
+    /// pick the new map up through their next epoch-mismatch refresh.
+    /// Nodes are swept shard-major; a node that refuses with a *newer*
+    /// epoch lost a race to a concurrent admin — this client then
+    /// refreshes to the winner's map and reports `MapChanged`.
+    pub fn rebalance(&mut self, costs: &[f64]) -> Result<(u64, Vec<ReplicaMove>), ClusterError> {
         if costs.len() != self.nodes.len() {
             return Err(ClusterError::Invalid(format!(
                 "{} costs given for {} shards",
@@ -295,69 +409,77 @@ impl ClusterClient {
                 self.nodes.len()
             )));
         }
-        if costs.iter().any(|&c| !c.is_finite() || c <= 0.0) {
-            return Err(ClusterError::Invalid(
-                "per-shard costs must be finite and > 0".into(),
-            ));
-        }
-        let (new_map, moves) = self.map.rebalance(costs);
+        let placement = ReplicaSet::new(self.map.clone(), self.replicas);
+        let (new_placement, moves) = placement.rebalance(costs);
+        let new_map = new_placement.map().clone();
         let epoch = self.epoch + 1;
         let count = self.nodes.len() as u32;
         let rows = self.rows as u64;
         for shard in 0..self.nodes.len() {
             let range = new_map.range(shard);
-            let info = ShardMapInfo {
-                index: shard as u32,
-                count,
-                start: range.start as u64,
-                end: range.end as u64,
-                rows,
-                epoch,
-            };
-            let node = &mut self.nodes[shard];
-            if let Err(source) = node.client.adopt_shard(info) {
-                let addr = node.addr.clone();
-                return Err(match source {
-                    ClientError::Server { code: ErrorCode::WrongEpoch, message } => {
-                        // A concurrent reconfiguration won: converge on
-                        // it instead of leaving a half-adopted sweep.
-                        let _ = self.refresh();
-                        ClusterError::MapChanged {
+            for replica in 0..self.replicas {
+                let info = ShardMapInfo {
+                    index: shard as u32,
+                    count,
+                    start: range.start as u64,
+                    end: range.end as u64,
+                    rows,
+                    epoch,
+                    replica: replica as u32,
+                    replicas: self.replicas as u32,
+                };
+                let node = &mut self.nodes[shard][replica];
+                if let Err(source) = node.client.adopt_shard(info) {
+                    let addr = node.addr.clone();
+                    return Err(match source {
+                        ClientError::Server { code: ErrorCode::WrongEpoch, message } => {
+                            // A concurrent reconfiguration won:
+                            // converge on it instead of leaving a
+                            // half-adopted sweep.
+                            let _ = self.refresh();
+                            ClusterError::MapChanged {
+                                addr,
+                                shard,
+                                replica,
+                                message,
+                            }
+                        }
+                        source => ClusterError::NodeFailed {
                             addr,
                             shard,
-                            message,
-                        }
-                    }
-                    source => ClusterError::NodeFailed {
-                        addr,
-                        shard,
-                        source,
-                    },
-                });
+                            replica,
+                            source,
+                        },
+                    });
+                }
             }
         }
         self.map = new_map;
         self.epoch = epoch;
-        for node in &mut self.nodes {
-            node.client.set_epoch(epoch);
+        for group in &mut self.nodes {
+            for node in group {
+                node.client.set_epoch(epoch);
+            }
         }
         Ok((epoch, moves))
     }
 
-    /// Round-trip a ping to every node; per-node results in shard
-    /// order. A dead node is an `Err` *entry*, not an early return —
-    /// a health probe of an N-node cluster reports all N verdicts, so
-    /// callers (and the membership machinery deciding what to
-    /// rebalance around) see every node's state, not just the first
-    /// failure.
+    /// Round-trip a ping to every node; per-node results flat in
+    /// shard-major `(shard, replica)` order. A dead node is an `Err`
+    /// *entry*, not an early return — a health probe of an N-node
+    /// cluster reports all N verdicts, so callers (and the membership
+    /// machinery deciding what to rebalance around or promote) see
+    /// every replica's state, not just the first failure.
     pub fn ping_all(&mut self) -> Vec<(String, Result<Duration, ClientError>)> {
         self.nodes
             .iter_mut()
+            .flat_map(|group| group.iter_mut())
             .map(|node| (node.addr.clone(), node.client.ping()))
             .collect()
     }
 
-    /// One pairwise distance (routed to the owner of row `i`).
+    /// One pairwise distance (routed to a live replica of the shard
+    /// owning row `i`).
     pub fn pair(&mut self, i: u32, j: u32, kind: QueryKind) -> Result<f64, ClusterError> {
         let replies = self.query_plan(&[Query::Pair { i, j, kind }])?;
         replies[0]
@@ -381,7 +503,7 @@ impl ClusterClient {
     }
 
     /// The `rows × cols` distance sub-matrix, row-major, reassembled
-    /// from per-owner sub-blocks.
+    /// from per-shard sub-blocks.
     pub fn block(
         &mut self,
         rows: Vec<u32>,
@@ -396,23 +518,25 @@ impl ClusterClient {
     }
 
     /// Execute a query plan across the cluster: route/split every
-    /// query, pipeline each node's sub-plan on its own thread
-    /// (scatter), then merge per-node replies back into input order
-    /// (gather). Replies are shape-matched to their queries and
-    /// bit-identical to a single node serving the same corpus.
+    /// query by owning shard, pipeline each shard's sub-plan on its
+    /// own thread against one chosen replica — failing over to
+    /// siblings if it dies or refuses — then merge per-shard replies
+    /// back into input order (gather). Replies are shape-matched to
+    /// their queries and bit-identical to a single node serving the
+    /// same corpus, whichever replica answered.
     ///
-    /// **Refresh instead of fail:** if the plan hits an epoch-mismatch
-    /// refusal (the cluster rebalanced or changed membership under
-    /// this client) or a node failure (a bounce), the router re-runs
-    /// the shard-map exchange against its current address list,
-    /// rebuilds its routing state, and transparently retries the plan
-    /// once — so a reconfiguration costs one round trip, not a
-    /// surfaced error. If the refresh itself cannot complete (a node
-    /// stays down), the *original* error is returned so callers see
-    /// what actually broke.
+    /// **Fail over, then refresh, then fail:** a dead or mid-sweep
+    /// replica is routed around inside the plan (zero surfaced
+    /// errors). Only when a shard's *whole* replica set fails (or
+    /// refuses with `WrongEpoch`) does the router re-run the shard-map
+    /// exchange against its current address list, rebuild its routing
+    /// state, and transparently retry the plan once. If the refresh
+    /// itself cannot complete (a full replica set stays down), the
+    /// *original* error is returned so callers see what actually
+    /// broke.
     pub fn query_plan(&mut self, plan: &[Query]) -> Result<Vec<Reply>, ClusterError> {
         match self.query_plan_once(plan) {
-            Err(first @ (ClusterError::MapChanged { .. } | ClusterError::NodeFailed { .. })) => {
+            Err(first) if refresh_worthy(&first) => {
                 if self.refresh().is_err() {
                     // The refresh failing (node unreachable, map that
                     // never converges) means the cluster is actually
@@ -433,45 +557,46 @@ impl ClusterClient {
         }
         self.validate(plan)?;
         self.metrics.plans.inc();
-        let n_nodes = self.nodes.len();
+        let n_shards = self.nodes.len();
+        let replicas = self.replicas;
 
-        // ---- route: per-node sub-plans + per-slot gather specs ------
-        let mut subs: Vec<Vec<Query>> = vec![Vec::new(); n_nodes];
-        let mut sub_slots: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+        // ---- route: per-shard sub-plans + per-slot gather specs -----
+        let mut subs: Vec<Vec<Query>> = vec![Vec::new(); n_shards];
+        let mut sub_slots: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
         let mut gathers: Vec<Gather> = Vec::with_capacity(plan.len());
         for (slot, q) in plan.iter().enumerate() {
             match q {
                 Query::Pair { i, .. } => {
-                    let node = self.map.owner(*i as usize);
-                    subs[node].push(q.clone());
-                    sub_slots[node].push(slot);
+                    let shard = self.map.owner(*i as usize);
+                    subs[shard].push(q.clone());
+                    sub_slots[shard].push(slot);
                     gathers.push(Gather::Pair);
                 }
                 Query::TopK { m, .. } => {
-                    for node in 0..n_nodes {
-                        subs[node].push(q.clone());
-                        sub_slots[node].push(slot);
+                    for shard in 0..n_shards {
+                        subs[shard].push(q.clone());
+                        sub_slots[shard].push(slot);
                     }
                     gathers.push(Gather::TopK { m: *m });
                 }
                 Query::Block { rows, cols, kind } => {
-                    let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
-                    let mut node_rows: Vec<Vec<u32>> = vec![Vec::new(); n_nodes];
+                    let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+                    let mut shard_rows: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
                     for (p, &r) in rows.iter().enumerate() {
                         let o = self.map.owner(r as usize);
                         positions[o].push(p);
-                        node_rows[o].push(r);
+                        shard_rows[o].push(r);
                     }
-                    for (node, nrows) in node_rows.into_iter().enumerate() {
-                        if nrows.is_empty() {
+                    for (shard, srows) in shard_rows.into_iter().enumerate() {
+                        if srows.is_empty() {
                             continue;
                         }
-                        subs[node].push(Query::Block {
-                            rows: nrows,
+                        subs[shard].push(Query::Block {
+                            rows: srows,
                             cols: cols.clone(),
                             kind: *kind,
                         });
-                        sub_slots[node].push(slot);
+                        sub_slots[shard].push(slot);
                     }
                     gathers.push(Gather::Block {
                         positions,
@@ -484,16 +609,29 @@ impl ClusterClient {
         let fanout: u64 = subs.iter().map(|s| s.len() as u64).sum();
         self.metrics.subqueries.add(fanout);
 
-        // ---- scatter: each contributing node's sub-plan pipelines on
-        // its own scoped thread; a plan touching a single node (the
-        // Pair hot path) runs inline, keeping thread create/join off
-        // its latency ---------------------------------------------
-        let mut results: Vec<Option<Result<Vec<Reply>, ClientError>>> =
-            (0..n_nodes).map(|_| None).collect();
+        // Per-shard replica choice: round-robin across plans so read
+        // load spreads over siblings; failover tries the rest of the
+        // ring from there.
+        let starts: Vec<usize> = (0..n_shards)
+            .map(|shard| {
+                let start = self.cursor[shard] % replicas;
+                if !subs[shard].is_empty() {
+                    self.cursor[shard] = self.cursor[shard].wrapping_add(1);
+                }
+                start
+            })
+            .collect();
+
+        // ---- scatter: each contributing shard's sub-plan pipelines
+        // on its own scoped thread; a plan touching a single shard
+        // (the Pair hot path) runs inline, keeping thread create/join
+        // off its latency ---------------------------------------------
+        type ShardResult = Result<(usize, Vec<Reply>), (usize, ClientError)>;
+        let mut results: Vec<Option<ShardResult>> = (0..n_shards).map(|_| None).collect();
         let contributing = subs.iter().filter(|s| !s.is_empty()).count();
         let metrics = &self.metrics;
         if contributing <= 1 {
-            for (shard, ((node, sub), res)) in self
+            for (shard, ((group, sub), res)) in self
                 .nodes
                 .iter_mut()
                 .zip(&subs)
@@ -501,14 +639,14 @@ impl ClusterClient {
                 .enumerate()
             {
                 *res = Some(if sub.is_empty() {
-                    Ok(Vec::new())
+                    Ok((starts[shard], Vec::new()))
                 } else {
-                    run_node_plan(node, sub, metrics.node(shard))
+                    run_shard_plan(shard, group, sub, starts[shard], metrics)
                 });
             }
         } else {
             std::thread::scope(|s| {
-                for (shard, ((node, sub), res)) in self
+                for (shard, ((group, sub), res)) in self
                     .nodes
                     .iter_mut()
                     .zip(&subs)
@@ -516,54 +654,63 @@ impl ClusterClient {
                     .enumerate()
                 {
                     if sub.is_empty() {
-                        *res = Some(Ok(Vec::new()));
+                        *res = Some(Ok((starts[shard], Vec::new())));
                         continue;
                     }
-                    let nm = metrics.node(shard);
+                    let start = starts[shard];
                     s.spawn(move || {
-                        *res = Some(run_node_plan(node, sub, nm));
+                        *res = Some(run_shard_plan(shard, group, sub, start, metrics));
                     });
                 }
             });
         }
 
         // ---- typed partial failure: first failing shard wins --------
-        let mut node_replies: Vec<Vec<Reply>> = Vec::with_capacity(n_nodes);
+        // `served[shard]` is the replica whose replies we gathered.
+        let mut served: Vec<usize> = Vec::with_capacity(n_shards);
+        let mut shard_replies: Vec<Vec<Reply>> = Vec::with_capacity(n_shards);
         for (shard, res) in results.into_iter().enumerate() {
-            match res.expect("every node slot written") {
-                Ok(replies) => node_replies.push(replies),
-                Err(ClientError::Overloaded(message)) => {
+            match res.expect("every shard slot written") {
+                Ok((replica, replies)) => {
+                    served.push(replica);
+                    shard_replies.push(replies);
+                }
+                Err((replica, ClientError::Overloaded(message))) => {
                     return Err(ClusterError::Overloaded {
-                        addr: self.nodes[shard].addr.clone(),
+                        addr: self.nodes[shard][replica].addr.clone(),
                         shard,
+                        replica,
                         message,
                     })
                 }
-                Err(ClientError::Server { code: ErrorCode::WrongEpoch, message }) => {
-                    // The node's map moved on under us — the signal
-                    // `query_plan` turns into a refresh-and-retry.
+                Err((replica, ClientError::Server { code: ErrorCode::WrongEpoch, message })) => {
+                    // Every replica's map moved on under us — the
+                    // signal `query_plan` turns into a
+                    // refresh-and-retry.
                     return Err(ClusterError::MapChanged {
-                        addr: self.nodes[shard].addr.clone(),
+                        addr: self.nodes[shard][replica].addr.clone(),
                         shard,
+                        replica,
                         message,
                     });
                 }
-                Err(source) => {
+                Err((replica, source)) => {
                     return Err(ClusterError::NodeFailed {
-                        addr: self.nodes[shard].addr.clone(),
+                        addr: self.nodes[shard][replica].addr.clone(),
                         shard,
+                        replica,
                         source,
                     })
                 }
             }
         }
 
-        // ---- gather: per-slot sub-replies in node order -------------
+        // ---- gather: per-slot sub-replies in shard order ------------
         let mut per_slot: Vec<Vec<(usize, Reply)>> = (0..plan.len()).map(|_| Vec::new()).collect();
-        for (shard, replies) in node_replies.into_iter().enumerate() {
+        for (shard, replies) in shard_replies.into_iter().enumerate() {
             if replies.len() != sub_slots[shard].len() {
                 return Err(ClusterError::ShapeMismatch {
-                    addr: self.nodes[shard].addr.clone(),
+                    addr: self.nodes[shard][served[shard]].addr.clone(),
                 });
             }
             for (&slot, reply) in sub_slots[shard].iter().zip(replies) {
@@ -572,29 +719,34 @@ impl ClusterClient {
         }
         let mut out = Vec::with_capacity(plan.len());
         for (gather, parts) in gathers.into_iter().zip(per_slot) {
-            out.push(self.gather_one(gather, parts)?);
+            out.push(self.gather_one(gather, parts, &served)?);
         }
         Ok(out)
     }
 
-    /// Reassemble one plan slot from its per-node sub-replies.
+    /// Reassemble one plan slot from its per-shard sub-replies.
+    /// `served[shard]` names the replica whose reply is being
+    /// gathered, for error attribution.
     fn gather_one(
         &self,
         gather: Gather,
         parts: Vec<(usize, Reply)>,
+        served: &[usize],
     ) -> Result<Reply, ClusterError> {
         let shape_err = |shard: usize| ClusterError::ShapeMismatch {
-            addr: self.nodes[shard].addr.clone(),
+            addr: self.nodes[shard][served[shard]].addr.clone(),
         };
         match gather {
             Gather::Pair => match parts.into_iter().next() {
                 Some((_, r @ Reply::Pair(_))) => Ok(r),
                 Some((shard, _)) => Err(shape_err(shard)),
-                None => Err(ClusterError::Invalid("pair routed to no node".into())),
+                None => Err(ClusterError::Invalid("pair routed to no shard".into())),
             },
             Gather::TopK { m } => {
-                // Each partial list is the node's exact top-m over its
-                // owned rows, sorted ascending by (distance, row); the
+                // Each partial list is its shard's exact top-m over the
+                // shard's rows, sorted ascending by (distance, row) —
+                // identical from any replica, since siblings own the
+                // same range over the same deterministic store. The
                 // global top-m is the m smallest of their union under
                 // the same order, so a sort-and-truncate merge
                 // reproduces the single-node scan bit for bit.
@@ -698,6 +850,50 @@ mod tests {
         assert!(split_addrs(" , ").is_empty());
         assert!(split_addrs("").is_empty());
     }
+
+    /// Regression: `--connect a,a,b` used to dial the same node twice
+    /// and fail deep in the exchange as `duplicate shard index` — the
+    /// operator's typo must be named as the *address* it is.
+    #[test]
+    fn duplicate_addresses_are_detected_by_name() {
+        let dup = |list: &[&str]| -> Vec<String> { list.iter().map(|s| s.to_string()).collect() };
+        assert_eq!(find_duplicate(&dup(&["a:1", "b:2", "c:3"])), None);
+        assert_eq!(
+            find_duplicate(&dup(&["a:1", "a:1", "b:2"])),
+            Some(&"a:1".to_string())
+        );
+        assert_eq!(
+            find_duplicate(&dup(&["a:1", "b:2", "b:2"])),
+            Some(&"b:2".to_string())
+        );
+        match check_duplicates(&dup(&["x:9", "y:8", "x:9"])) {
+            Err(ClusterError::DuplicateAddress { addr }) => {
+                assert_eq!(addr, "x:9");
+            }
+            other => panic!("expected DuplicateAddress, got {other:?}"),
+        }
+        // And the error text names the address for the operator.
+        let err = ClusterError::DuplicateAddress { addr: "x:9".into() };
+        assert!(err.to_string().contains("x:9"), "{err}");
+    }
+}
+
+/// Whether a failed plan should trigger the refresh-and-retry path: a
+/// map change or a transport-level node failure is (potentially) a
+/// topology event the refresh can route around. A *deterministic*
+/// server refusal (`NodeFailed` whose source is a non-epoch `Server`
+/// error — e.g. a limits/version skew the client-side validation did
+/// not catch) is not: refreshing and replaying the whole plan would
+/// double the offered load only to earn the same refusal again, so it
+/// surfaces directly. (`WrongEpoch` refusals never reach the
+/// `NodeFailed` arm — they become `MapChanged` — so matching any
+/// `Server` source here is exact.)
+fn refresh_worthy(e: &ClusterError) -> bool {
+    match e {
+        ClusterError::MapChanged { .. } => true,
+        ClusterError::NodeFailed { source, .. } => !matches!(source, ClientError::Server { .. }),
+        _ => false,
+    }
 }
 
 /// Dial every address and collect each node's [`ShardMapInfo`] — the
@@ -736,8 +932,7 @@ fn probe(
 /// two admins that raced — is repaired instead of wedged. Dial
 /// failures abort immediately: a dead node should surface promptly,
 /// not after the retry budget.
-#[allow(clippy::type_complexity)]
-fn converge(addrs: &[String]) -> Result<(Vec<Node>, ShardSet, usize, u64), ClusterError> {
+fn converge(addrs: &[String]) -> Result<ClusterView, ClusterError> {
     let mut last: Option<ClusterError> = None;
     for attempt in 0..REFRESH_EXCHANGE_ATTEMPTS {
         if attempt > 0 {
@@ -761,18 +956,19 @@ fn converge(addrs: &[String]) -> Result<(Vec<Node>, ShardSet, usize, u64), Clust
 }
 
 /// Last-resort convergence: push an even row split to every node under
-/// `max observed epoch + 1`, so nodes stuck on divergent epochs or
-/// non-tiling ranges agree again. **Guarded** so it can never fire on
-/// operator errors or a live reconfiguration and corrupt a healthy
-/// cluster: every node must be dialable, agree on shard count (== the
-/// address count) and row total, the claimed shard indices must form a
-/// permutation of `0..count` (a duplicated address shows up as a
-/// duplicated index and is refused), and a second probe
-/// [`HEAL_STABILITY_GAP`] later must observe the *same* per-node
-/// epochs — an admin sweep still in flight keeps moving and is
-/// deferred to. The healed map is the even split — a deliberate
-/// weighted rebalance flattened by a heal is re-applied with
-/// [`ClusterClient::rebalance`] once the cluster is consistent again.
+/// `max observed epoch + 1` (each node keeping its shard and replica
+/// identity), so nodes stuck on divergent epochs or non-tiling ranges
+/// agree again. **Guarded** so it can never fire on operator errors or
+/// a live reconfiguration and corrupt a healthy cluster: every node
+/// must be dialable, agree on shard count, replication factor, and row
+/// total (with `shards × replicas` equal to the address count), the
+/// claimed `(shard, replica)` identities must form the complete grid
+/// exactly once, and a second probe [`HEAL_STABILITY_GAP`] later must
+/// observe the *same* per-node epochs — an admin sweep still in flight
+/// keeps moving and is deferred to. The healed map is the even split —
+/// a deliberate weighted rebalance flattened by a heal is re-applied
+/// with [`ClusterClient::rebalance`] once the cluster is consistent
+/// again.
 fn heal(addrs: &[String]) -> Result<(), ClusterError> {
     let first = probe(addrs, REFRESH_DIAL_ATTEMPTS)?;
     let first_epochs: Vec<u64> = first.iter().map(|(_, _, info)| info.epoch).collect();
@@ -786,25 +982,42 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
             detail: "refusing to heal: node epochs still moving (a sweep is in flight)".into(),
         });
     }
-    let count = addrs.len();
+    let total = addrs.len();
     let rows = dialed[0].2.rows;
-    let mut seen = vec![false; count];
+    let replicas = (dialed[0].2.replicas.max(1)) as usize;
+    if total % replicas != 0 {
+        return Err(ClusterError::ShardMap {
+            addr: addrs[0].clone(),
+            detail: format!(
+                "refusing to heal: {total} addresses do not divide into {replicas} replicas"
+            ),
+        });
+    }
+    let count = total / replicas;
+    let mut seen = vec![false; total];
     let mut max_epoch = 0u64;
     for (addr, _, info) in &dialed {
-        if info.count as usize != count || info.rows != rows {
+        if info.count as usize != count
+            || info.rows != rows
+            || (info.replicas.max(1)) as usize != replicas
+        {
             return Err(ClusterError::ShardMap {
                 addr: addr.clone(),
-                detail: "refusing to heal: nodes disagree on shard count or row total".into(),
+                detail: "refusing to heal: nodes disagree on shard count, replication factor, \
+                         or row total"
+                    .into(),
             });
         }
-        let ix = info.index as usize;
-        if ix >= count || seen[ix] {
+        let (ix, r) = (info.index as usize, info.replica as usize);
+        if ix >= count || r >= replicas || seen[ix * replicas + r] {
             return Err(ClusterError::ShardMap {
                 addr: addr.clone(),
-                detail: format!("refusing to heal: shard index {ix} duplicated or out of range"),
+                detail: format!(
+                    "refusing to heal: shard identity {ix}.{r} duplicated or out of range"
+                ),
             });
         }
-        seen[ix] = true;
+        seen[ix * replicas + r] = true;
         max_epoch = max_epoch.max(info.epoch);
     }
     let epoch = max_epoch + 1;
@@ -818,6 +1031,8 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
             end: r.end as u64,
             rows,
             epoch,
+            replica: info.replica,
+            replicas: replicas as u32,
         };
         match client.adopt_shard(adopt) {
             Ok(_) => {}
@@ -832,6 +1047,7 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
                 return Err(ClusterError::NodeFailed {
                     addr,
                     shard: info.index as usize,
+                    replica: info.replica as usize,
                     source,
                 })
             }
@@ -841,83 +1057,122 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
 }
 
 /// The shard-map exchange proper: [`probe`], then validate that the
-/// per-node views describe one consistent cluster — every index
-/// `0..count` present exactly once, ranges tiling `0..rows`
-/// contiguously, and every node agreeing on `count`, `rows`, and the
-/// map `epoch`. Returns the connected nodes in shard order (each
-/// client stamped with the agreed epoch), the row → node map, the row
-/// count, and the epoch.
-#[allow(clippy::type_complexity)]
-fn exchange(
-    addrs: &[String],
-    dial_attempts: usize,
-) -> Result<(Vec<Node>, ShardSet, usize, u64), ClusterError> {
+/// per-node views describe one consistent cluster — every
+/// `(shard, replica)` identity present exactly once in a complete
+/// `count × replicas` grid, every replica of a shard advertising the
+/// same row range, shard ranges tiling `0..rows` contiguously, and
+/// every node agreeing on `count`, `replicas`, `rows`, and the map
+/// `epoch`. Returns the connected view with nodes grouped
+/// `nodes[shard][replica]`, each client stamped with the agreed
+/// epoch.
+fn exchange(addrs: &[String], dial_attempts: usize) -> Result<ClusterView, ClusterError> {
     let dialed = probe(addrs, dial_attempts)?;
     let count = dialed[0].2.count;
     let rows = dialed[0].2.rows;
     let epoch = dialed[0].2.epoch;
-    if count as usize != addrs.len() {
+    let replicas = dialed[0].2.replicas.max(1);
+    if (count as usize) * (replicas as usize) != addrs.len() {
         return Err(ClusterError::ShardMap {
             addr: dialed[0].0.clone(),
             detail: format!(
-                "cluster has {count} shards but {} addresses were given",
+                "cluster has {count} shards x {replicas} replicas but {} addresses were given",
                 addrs.len()
             ),
         });
     }
     let mut slots: Vec<Option<(String, SketchClient, ShardMapInfo)>> =
-        (0..count).map(|_| None).collect();
+        (0..count * replicas).map(|_| None).collect();
     for (addr, client, info) in dialed {
-        if info.count != count || info.rows != rows || info.epoch != epoch {
+        if info.count != count
+            || info.rows != rows
+            || info.epoch != epoch
+            || info.replicas.max(1) != replicas
+        {
             return Err(ClusterError::ShardMap {
                 addr,
                 detail: format!(
-                    "node disagrees on cluster geometry: count={} rows={} epoch={} \
-                     (expected count={count} rows={rows} epoch={epoch})",
-                    info.count, info.rows, info.epoch
+                    "node disagrees on cluster geometry: count={} replicas={} rows={} epoch={} \
+                     (expected count={count} replicas={replicas} rows={rows} epoch={epoch})",
+                    info.count,
+                    info.replicas.max(1),
+                    info.rows,
+                    info.epoch
                 ),
             });
         }
-        if info.index >= count {
+        if info.index >= count || info.replica >= replicas {
             return Err(ClusterError::ShardMap {
                 addr,
-                detail: format!("shard index {} out of range (count {count})", info.index),
+                detail: format!(
+                    "shard identity {}.{} out of range (count {count}, replicas {replicas})",
+                    info.index, info.replica
+                ),
             });
         }
-        let slot = &mut slots[info.index as usize];
+        let slot = &mut slots[(info.index * replicas + info.replica) as usize];
         if slot.is_some() {
             return Err(ClusterError::ShardMap {
                 addr,
-                detail: format!("duplicate shard index {}", info.index),
+                detail: format!(
+                    "duplicate shard identity: shard {} replica {} claimed twice",
+                    info.index, info.replica
+                ),
             });
         }
         *slot = Some((addr, client, info));
     }
-    // All slots filled (count == addrs.len() and no duplicates).
-    let mut nodes = Vec::with_capacity(count as usize);
+    // All slots filled (count × replicas == addrs.len(), no duplicate
+    // identities, none out of range).
+    let mut slots = slots.into_iter();
+    let mut nodes: Vec<Vec<Node>> = Vec::with_capacity(count as usize);
     let mut bounds = vec![0usize];
-    for slot in slots {
-        let (addr, mut client, info) = slot.expect("every shard slot filled");
+    for shard in 0..count as usize {
+        let mut group = Vec::with_capacity(replicas as usize);
+        let mut shard_range: Option<(u64, u64)> = None;
+        for replica in 0..replicas as usize {
+            let (addr, mut client, info) = slots.next().flatten().expect("grid slot filled");
+            match shard_range {
+                None => shard_range = Some((info.start, info.end)),
+                Some((s, e)) if (info.start, info.end) != (s, e) => {
+                    return Err(ClusterError::ShardMap {
+                        addr,
+                        detail: format!(
+                            "replica {replica} of shard {shard} owns rows {}..{} but its \
+                             siblings own {s}..{e}",
+                            info.start, info.end
+                        ),
+                    });
+                }
+                Some(_) => {}
+            }
+            // Every query through this connection now carries the
+            // agreed epoch, so a node whose map moves on refuses
+            // instead of answering under a different coverage.
+            client.set_epoch(epoch);
+            group.push(Node { addr, client });
+        }
+        let (start, end) = shard_range.expect("replicas >= 1");
         let expect_start = *bounds.last().unwrap() as u64;
-        if info.start != expect_start || info.end < info.start || info.end > rows {
+        if start != expect_start || end < start || end > rows {
             return Err(ClusterError::ShardMap {
-                addr,
+                addr: group[0].addr.clone(),
                 detail: format!(
-                    "shard {} owns rows {}..{} which does not continue the map at {expect_start}",
-                    info.index, info.start, info.end
+                    "shard {shard} owns rows {start}..{end} which does not continue the map \
+                     at {expect_start}"
                 ),
             });
         }
-        bounds.push(info.end as usize);
-        // Every query through this connection now carries the agreed
-        // epoch, so a node whose map moves on refuses instead of
-        // answering under a different coverage.
-        client.set_epoch(epoch);
-        nodes.push(Node { addr, client });
+        bounds.push(end as usize);
+        nodes.push(group);
     }
     if *bounds.last().unwrap() != rows as usize {
         return Err(ClusterError::ShardMap {
-            addr: nodes.last().expect("at least one node").addr.clone(),
+            addr: nodes
+                .last()
+                .and_then(|g| g.first())
+                .expect("at least one node")
+                .addr
+                .clone(),
             detail: format!(
                 "shard ranges cover {} of {rows} rows",
                 bounds.last().unwrap()
@@ -925,12 +1180,74 @@ fn exchange(
         });
     }
     let map = ShardSet::from_bounds(bounds).expect("validated bounds form a partition");
-    Ok((nodes, map, rows as usize, epoch))
+    Ok(ClusterView {
+        nodes,
+        map,
+        replicas: replicas as usize,
+        rows: rows as usize,
+        epoch,
+    })
 }
 
-/// One node's share of a scatter: pipeline the sub-plan, with one
-/// reconnect-and-retry on I/O failure so a bounced node does not fail
-/// the whole gather.
+/// One shard's share of a scatter: offer the sub-plan to the replica
+/// ring starting at `start`, failing over to the next sibling when a
+/// replica is unusable — an I/O failure that survives its one
+/// reconnect retry (node down), a broken stream, or a `WrongEpoch`
+/// refusal (an adoption sweep caught this replica first; a sibling may
+/// still serve the stamped epoch). Two things deliberately do NOT fail
+/// over, and surface **immediately** — never masked by an earlier
+/// sibling's transport failure: `Overloaded` (backpressure — a sibling
+/// would just get double the load the cluster asked to shed, and a
+/// caller who sees `NodeFailed` instead of `Overloaded` re-offers load
+/// instead of backing off) and non-epoch server refusals
+/// (deterministic: every sibling would refuse identically, so the
+/// refusal is the informative error). Returns the serving replica's
+/// index with the replies, or — once the ring is exhausted — the
+/// *first* failover-worthy failure with its replica.
+fn run_shard_plan(
+    shard: usize,
+    group: &mut [Node],
+    queries: &[Query],
+    start: usize,
+    metrics: &ClusterMetrics,
+) -> Result<(usize, Vec<Reply>), (usize, ClientError)> {
+    let replicas = group.len();
+    let mut first: Option<(usize, ClientError)> = None;
+    for attempt in 0..replicas {
+        let replica = (start + attempt) % replicas;
+        let nm = metrics.node(shard * replicas + replica);
+        match run_node_plan(&mut group[replica], queries, nm) {
+            Ok(replies) => return Ok((replica, replies)),
+            Err(e) => {
+                let fail_over = match &e {
+                    ClientError::Overloaded(_) => false,
+                    ClientError::Server { code, .. } => *code == ErrorCode::WrongEpoch,
+                    // Io / Proto / Unexpected / ShapeMismatch: this
+                    // replica (or its stream) is unusable; a sibling
+                    // serves the same rows.
+                    _ => true,
+                };
+                if !fail_over {
+                    // Deterministic signal: report it as-is, even if an
+                    // earlier sibling failed on transport first.
+                    return Err((replica, e));
+                }
+                if first.is_none() {
+                    first = Some((replica, e));
+                }
+                if attempt + 1 < replicas {
+                    metrics.failovers.inc();
+                    nm.failovers.inc();
+                }
+            }
+        }
+    }
+    Err(first.expect("at least one replica attempted"))
+}
+
+/// One node's attempt at a shard sub-plan: pipeline it, with one
+/// reconnect-and-retry on I/O failure so a transient bounce does not
+/// even cost a failover.
 fn run_node_plan(
     node: &mut Node,
     queries: &[Query],
@@ -951,8 +1268,8 @@ fn run_node_plan(
     nm.inflight.dec();
     // Overloaded is backpressure working, not a node failure, and
     // WrongEpoch is a reconfiguration signal the router handles by
-    // refreshing — neither may poison the per-node error metric
-    // callers balance on.
+    // failing over / refreshing — neither may poison the per-node
+    // error metric callers balance on.
     if !matches!(
         out,
         Ok(_)

@@ -26,9 +26,9 @@
 
 use super::protocol::{
     query_id_of, write_frame, ErrorCode, Frame, ProtoError, ShardMapInfo, MAX_FRAME_BYTES,
-    MAX_STATS_ENTRIES,
+    MAX_STATS_ENTRIES, REPLICA_SINCE_VERSION,
 };
-use crate::coordinator::{AdoptError, Coordinator, Reply, SubmitError};
+use crate::coordinator::{AdoptError, Coordinator, ReplicaSpec, Reply, SubmitError};
 use crate::metrics::PipelineMetrics;
 use anyhow::{Context, Result};
 use std::io::{BufWriter, Read, Write};
@@ -217,7 +217,11 @@ fn reject_over_capacity(stream: TcpStream, cap: usize) {
 }
 
 enum ReadEvent {
-    Frame(Frame, usize),
+    /// A decoded frame, its wire size, and the version byte it was
+    /// stamped with — the stamp matters to handlers that must know
+    /// whether a decoded-to-default field was *stated* or *absent*
+    /// (the `AdoptShard` replica identity).
+    Frame(Frame, usize, u8),
     Malformed {
         err: ProtoError,
         /// Correlation id of the offending query when recoverable from
@@ -377,7 +381,7 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                     break;
                 }
             }
-            ReadEvent::Frame(frame, nbytes) => {
+            ReadEvent::Frame(frame, nbytes, version) => {
                 metrics.net_frames_in.inc();
                 metrics.net_bytes_in.add(nbytes as u64);
                 match frame {
@@ -407,10 +411,38 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                         // admin's confirmation); refusals are typed so
                         // a stale admin can tell "lost the race" from
                         // "sent nonsense".
+                        //
+                        // A pre-v5 adoption carries no replica
+                        // identity — its decoded 0-of-1 default is
+                        // *absence*, not a statement. Applying it to a
+                        // replicated node would silently demote the
+                        // node out of its replica set (both siblings
+                        // then claim replica 0 of 1 and every client's
+                        // grid validation wedges), so it is refused;
+                        // against an unreplicated node it is the plain
+                        // v4 behavior and stays accepted.
+                        if version < REPLICA_SINCE_VERSION && coord.membership().2.of > 1 {
+                            let reply = Frame::Error {
+                                id: 0,
+                                code: ErrorCode::InvalidQuery,
+                                message: format!(
+                                    "pre-v{REPLICA_SINCE_VERSION} adoption carries no replica \
+                                     identity and cannot reconfigure a replicated node"
+                                ),
+                            };
+                            if !send_outbound(&out_tx, reply, stop) {
+                                break;
+                            }
+                            continue;
+                        }
                         let reply = match coord.adopt_shard(
                             info.epoch,
                             info.index as usize,
                             info.count as usize,
+                            ReplicaSpec {
+                                index: info.replica as usize,
+                                of: info.replicas as usize,
+                            },
                             info.start as usize..info.end as usize,
                             info.rows as usize,
                         ) {
@@ -577,7 +609,7 @@ fn read_event(stream: &mut TcpStream, stop: &AtomicBool) -> ReadEvent {
         // Framing was consistent: survive content errors. A bad query
         // still gets its id attributed so the error answers that query
         // instead of reading as a connection-level failure.
-        Ok(frame) => ReadEvent::Frame(frame, 4 + len),
+        Ok(frame) => ReadEvent::Frame(frame, 4 + len, payload[0]),
         Err(err) => ReadEvent::Malformed {
             err,
             id: query_id_of(&payload).unwrap_or(0),
@@ -624,15 +656,16 @@ fn read_exact_interruptible(
     Ok(true)
 }
 
-/// This node's `ShardMap` frame body: its shard identity, owned row
-/// range, and the live map epoch. An unsharded server is shard 0 of 1
-/// owning everything at epoch 0 (a static map), so single-node and
-/// clustered deployments answer uniformly.
+/// This node's `ShardMap` frame body: its shard identity, replica
+/// identity, owned row range, and the live map epoch. An unsharded
+/// server is shard 0 of 1 (replica 0 of 1) owning everything at epoch
+/// 0 (a static map), so single-node and clustered deployments answer
+/// uniformly.
 fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
     let n = coord.store().n;
     // One consistent snapshot: a frame must not mix the epoch of one
     // adoption with the range of another.
-    let (epoch, spec, owned) = coord.membership();
+    let (epoch, spec, replica, owned) = coord.membership();
     let (index, count, range) = match spec {
         Some(spec) => (spec.index, spec.of, owned),
         None => (0, 1, 0..n),
@@ -644,6 +677,8 @@ fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
         end: range.end as u64,
         rows: n as u64,
         epoch,
+        replica: replica.index as u32,
+        replicas: replica.of as u32,
     }
 }
 
@@ -661,6 +696,8 @@ fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
         ("shard_row_start".to_string(), shard.start),
         ("shard_row_end".to_string(), shard.end),
         ("shard_epoch".to_string(), shard.epoch),
+        ("replica_index".to_string(), shard.replica as u64),
+        ("replica_count".to_string(), shard.replicas as u64),
         ("uptime_s".to_string(), coord.uptime().as_secs()),
     ];
     let depths = coord.queue_depths();

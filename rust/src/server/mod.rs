@@ -18,12 +18,16 @@
 //!   plan submission with typed errors.
 //! * [`cluster`] — [`ClusterClient`]: the client-side router for a
 //!   multi-node sharded cluster — shard-map exchange at connect,
-//!   `Pair` routing to the owning node, scatter-gather for
+//!   `Pair` routing to the owning shard, scatter-gather for
 //!   `TopK`/`Block` plans, per-node reconnect, typed partial-failure
 //!   errors. Membership is live (protocol v4): the map carries an
 //!   epoch, stale clients refresh-and-retry instead of failing, and
 //!   `ClusterClient::rebalance` pushes new row ownership to running
-//!   nodes via `AdoptShard` frames.
+//!   nodes via `AdoptShard` frames. Row ranges are replicated
+//!   (protocol v5): with `--replica r/R`, R sibling nodes own the same
+//!   rows, sub-plans round-robin across siblings, and a dead or
+//!   mid-sweep replica is failed over transparently — zero surfaced
+//!   errors, bit-identical replies.
 //! * [`loadgen`] — open- and closed-loop multi-threaded load generator
 //!   reporting throughput and p50/p95/p99 latency, driving one node or
 //!   a whole cluster.

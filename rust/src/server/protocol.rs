@@ -34,20 +34,28 @@
 //! (trailing fields, so v1..v3 bodies stay exact prefixes), the
 //! `AdoptShard` admin frame swaps a node's owned range at runtime, and
 //! the [`ErrorCode::WrongEpoch`] refusal tells a client its shard map
-//! is stale (refresh and retry, don't fail). Encoders always stamp the
-//! current version; decoders accept
+//! is stale (refresh and retry, don't fail); **v5** adds row-range
+//! **replication** — `ShardMapInfo` carries the node's replica
+//! identity (`replica` of `replicas` siblings serving the same rows,
+//! again trailing so the v3/v4 bodies stay exact prefixes), which is
+//! what lets the cluster client place nodes in its
+//! `(shard, replica)` grid and fail over between siblings. Encoders
+//! always stamp the current version; decoders accept
 //! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`], with the v3-only
-//! tags (and the v4-only tag/code) refusing older version bytes.
+//! tags (and the v4-only tag/code) refusing older version bytes and
+//! v5-only trailing content under an older stamp refused as trailing
+//! bytes that version never defined.
 
 use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
 use std::io::{Read, Write};
 use thiserror::Error;
 
 /// Protocol version spoken (and stamped on every frame) by this build.
-pub const PROTOCOL_VERSION: u8 = 4;
+pub const PROTOCOL_VERSION: u8 = 5;
 
-/// Oldest version this build still decodes (v1..v4 share every frame
-/// body layout as prefixes; v3/v4 only *add* tags and trailing fields).
+/// Oldest version this build still decodes (v1..v5 share every frame
+/// body layout as prefixes; v3/v4/v5 only *add* tags and trailing
+/// fields).
 pub const MIN_PROTOCOL_VERSION: u8 = 1;
 
 /// First version carrying the shard-map exchange frames.
@@ -57,6 +65,15 @@ const SHARD_MAP_SINCE_VERSION: u8 = 3;
 /// trailing epoch stamp on `Query` frames), the `AdoptShard` admin
 /// frame, and the `WrongEpoch` error code.
 const EPOCH_SINCE_VERSION: u8 = 4;
+
+/// First version carrying replica identity (`ShardMapInfo::replica` /
+/// `ShardMapInfo::replicas` — trailing fields, so v3/v4 bodies stay
+/// exact prefixes). Pre-v5 speakers decode as replica 0 of 1: the
+/// unreplicated default. Public because the listener must know whether
+/// an `AdoptShard`'s replica identity was *stated* or *defaulted* — a
+/// v4 admin's adoption, applied verbatim, would silently demote a
+/// replicated node to replica 0 of 1 and wedge the grid.
+pub const REPLICA_SINCE_VERSION: u8 = 5;
 
 /// Hard cap on one frame's payload. The largest legitimate frame is a
 /// `Block` reply of [`MAX_BLOCK_CELLS`] f64 cells (8 MiB) or a `TopK`
@@ -192,7 +209,8 @@ pub enum Frame {
     /// geometry (`store_n`, `store_k`) and — since v3 — per-node
     /// health (`shard_index`/`shard_count`, owned row range,
     /// `uptime_s`, per-worker queue depths, in-flight and decode-error
-    /// counters) for client-side balancing.
+    /// counters; since v5 also `replica_index`/`replica_count`) for
+    /// client-side balancing.
     Stats { entries: Vec<(String, u64)> },
     /// v3: ask a node which slice of the cluster row space it owns.
     ShardMapRequest,
@@ -215,7 +233,9 @@ pub enum Frame {
 /// [`Frame::ShardMap`] and [`Frame::AdoptShard`]: shard `index` of
 /// `count` owns rows `start..end` out of `rows` total, under shard-map
 /// `epoch` (v4; 0 = a static map that never changes — decoded from
-/// v3 frames, and what an unclustered node advertises).
+/// v3 frames, and what an unclustered node advertises), as replica
+/// `replica` of `replicas` siblings all serving that same range (v5;
+/// pre-v5 frames decode as replica 0 of 1 — unreplicated).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardMapInfo {
     pub index: u32,
@@ -224,6 +244,8 @@ pub struct ShardMapInfo {
     pub end: u64,
     pub rows: u64,
     pub epoch: u64,
+    pub replica: u32,
+    pub replicas: u32,
 }
 
 const TAG_PING: u8 = 0x01;
@@ -496,6 +518,9 @@ fn encode_shard_info(out: &mut Vec<u8>, info: &ShardMapInfo) {
     put_u64(out, info.rows);
     // Trailing: v3 `ShardMap` bodies are an exact prefix.
     put_u64(out, info.epoch);
+    // Trailing again: v4 bodies are an exact prefix of v5 ones.
+    put_u32(out, info.replica);
+    put_u32(out, info.replicas);
 }
 
 fn decode_shard_info(r: &mut Cursor<'_>, version: u8) -> Result<ShardMapInfo, ProtoError> {
@@ -510,6 +535,17 @@ fn decode_shard_info(r: &mut Cursor<'_>, version: u8) -> Result<ShardMapInfo, Pr
             r.u64()?
         } else {
             0
+        },
+        // Pre-v5 speakers are unreplicated: replica 0 of 1.
+        replica: if version >= REPLICA_SINCE_VERSION {
+            r.u32()?
+        } else {
+            0
+        },
+        replicas: if version >= REPLICA_SINCE_VERSION {
+            r.u32()?
+        } else {
+            1
         },
     })
 }
@@ -801,6 +837,8 @@ mod tests {
             end: 67,
             rows: 100,
             epoch: 9,
+            replica: 1,
+            replicas: 2,
         };
         for f in [Frame::ShardMapRequest, Frame::ShardMap(info)] {
             assert_eq!(round_trip(&f), f);
@@ -825,9 +863,11 @@ mod tests {
     }
 
     #[test]
-    fn v3_shard_map_without_epoch_decodes_as_epoch_zero() {
-        // A v3 speaker's ShardMap body is the v4 body minus the
-        // trailing epoch — it must still decode, as a static map.
+    fn v3_and_v4_shard_map_bodies_decode_as_prefixes() {
+        // A v3 speaker's ShardMap body is the v5 body minus the
+        // trailing epoch (8 bytes) and replica identity (8 bytes); a
+        // v4 speaker's is minus the replica identity only. Both must
+        // still decode, with the defaults for the missing fields.
         let info = ShardMapInfo {
             index: 2,
             count: 3,
@@ -835,25 +875,43 @@ mod tests {
             end: 100,
             rows: 100,
             epoch: 7,
+            replica: 1,
+            replicas: 2,
         };
         let wire = Frame::ShardMap(info).encode();
-        let mut payload = wire[4..wire.len() - 8].to_vec(); // drop epoch
+        let mut payload = wire[4..wire.len() - 16].to_vec(); // drop epoch + replica
         payload[0] = 3;
         match Frame::decode(&payload).expect("v3 body decodes") {
             Frame::ShardMap(got) => {
-                assert_eq!(got.epoch, 0);
+                assert_eq!(got.epoch, 0, "v3 maps are static");
+                assert_eq!((got.replica, got.replicas), (0, 1), "v3 nodes are unreplicated");
                 let fields = (got.index, got.count, got.start, got.end, got.rows);
                 assert_eq!(fields, (2, 3, 67, 100, 100));
             }
             other => panic!("{other:?}"),
         }
-        // Conversely a full v4 body under a v3 stamp has 8 trailing
-        // bytes v3 never defined.
+        let mut payload = wire[4..wire.len() - 8].to_vec(); // drop replica only
+        payload[0] = 4;
+        match Frame::decode(&payload).expect("v4 body decodes") {
+            Frame::ShardMap(got) => {
+                assert_eq!(got.epoch, 7, "v4 carries the epoch");
+                assert_eq!((got.replica, got.replicas), (0, 1), "v4 nodes are unreplicated");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Conversely a full v5 body under a v4 stamp has 8 trailing
+        // bytes v4 never defined, and 16 under a v3 stamp.
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 4;
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::Trailing(8))
+        ));
         let mut payload = wire[4..].to_vec();
         payload[0] = 3;
         assert!(matches!(
             Frame::decode(&payload),
-            Err(ProtoError::Trailing(8))
+            Err(ProtoError::Trailing(16))
         ));
     }
 
@@ -866,6 +924,8 @@ mod tests {
             end: 50,
             rows: 100,
             epoch: 3,
+            replica: 0,
+            replicas: 1,
         };
         let f = Frame::AdoptShard(info);
         assert_eq!(round_trip(&f), f);
@@ -878,6 +938,15 @@ mod tests {
                 "AdoptShard under v{stamp} stamp must be refused"
             );
         }
+        // An AdoptShard body restamped v4 (a legal tag there) still
+        // trips over the trailing replica identity v4 never defined.
+        let wire = f.encode();
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 4;
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::Trailing(8))
+        ));
         // WrongEpoch round-trips under v4 but is refused under v1..v3.
         let err = Frame::Error {
             id: 4,

@@ -235,13 +235,16 @@ fn shard_map_validation_rejects_incomplete_and_mismatched_clusters() {
         other => panic!("expected ShardMap error, got {:?}", other.map(|_| ())),
     }
 
-    // The same address twice: duplicate shard index.
+    // The same address twice: a typed duplicate-address error naming
+    // the repeated address at connect time (the regression: it used to
+    // surface deep in the exchange as a misleading `duplicate shard
+    // index` ShardMap error).
     let dup = vec![addrs[0].clone(), addrs[0].clone(), addrs[1].clone()];
     match ClusterClient::connect(&dup) {
-        Err(ClusterError::ShardMap { detail, .. }) => {
-            assert!(detail.contains("duplicate"), "{detail}")
+        Err(ClusterError::DuplicateAddress { addr }) => {
+            assert_eq!(addr, addrs[0], "the repeated address is named");
         }
-        other => panic!("expected duplicate-index error, got {:?}", other.map(|_| ())),
+        other => panic!("expected DuplicateAddress error, got {:?}", other.map(|_| ())),
     }
 
     // No addresses at all.
@@ -267,8 +270,9 @@ fn node_down_is_a_typed_partial_failure_not_a_hang() {
     let t0 = Instant::now();
     // A pair owned by the dead shard: typed NodeFailed naming it.
     match cluster.pair(12, 3, QueryKind::Oq) {
-        Err(ClusterError::NodeFailed { shard, addr, source }) => {
+        Err(ClusterError::NodeFailed { shard, replica, addr, source }) => {
             assert_eq!(shard, 1);
+            assert_eq!(replica, 0, "an unreplicated cluster has only replica 0");
             assert_eq!(addr, addrs[1]);
             assert!(matches!(source, ClientError::Io(_)), "expected I/O failure: {source:?}");
         }

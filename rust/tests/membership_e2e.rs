@@ -201,7 +201,7 @@ fn rebalance_and_node_bounce_mid_stream_are_routed_around() {
     let (repl_coord, repl_server, repl_addr) =
         start_node(&store, &cfg, Some(ShardSpec { index: 1, of: 3 }));
     let new_addrs = vec![addrs[0].clone(), repl_addr.clone(), addrs[2].clone()];
-    cluster.set_addresses(&new_addrs);
+    cluster.set_addresses(&new_addrs).expect("set addresses");
     let even = stablesketch::coordinator::ShardSet::even(N, 3);
     for (shard, addr) in new_addrs.iter().enumerate() {
         let mut c = SketchClient::connect_with_retry(addr, 10, Duration::from_millis(20))
@@ -214,6 +214,8 @@ fn rebalance_and_node_bounce_mid_stream_are_routed_around() {
             end: r.end as u64,
             rows: N as u64,
             epoch: 3,
+            replica: 0,
+            replicas: 1,
         })
         .expect("adopt");
     }
@@ -287,7 +289,7 @@ fn plainly_restarted_node_is_healed_not_wedged() {
     let (_repl_coord, repl_server, repl_addr) =
         start_node(&store, &cfg, Some(ShardSpec { index: 1, of: 3 }));
     let new_addrs = vec![addrs[0].clone(), repl_addr.clone(), addrs[2].clone()];
-    cluster.set_addresses(&new_addrs);
+    cluster.set_addresses(&new_addrs).expect("set addresses");
 
     // The next plans hit the dead connection, refresh, find epochs
     // {2, 1, 2}, and must converge via the guarded heal — not error.
@@ -339,6 +341,8 @@ fn adoption_is_monotonic_and_stale_stamps_are_refused() {
             end,
             rows: 20,
             epoch,
+            replica: 0,
+            replicas: 1,
         })
     };
 
@@ -359,6 +363,8 @@ fn adoption_is_monotonic_and_stale_stamps_are_refused() {
         end: 10,
         rows: 99,
         epoch: 2,
+        replica: 0,
+        replicas: 1,
     });
     assert!(
         matches!(wrong_rows, Err(ClientError::Server { code: ErrorCode::InvalidQuery, .. })),

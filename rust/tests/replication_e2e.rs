@@ -1,0 +1,480 @@
+//! Row-range replication, end to end on loopback.
+//!
+//! The acceptance contract: against a 3-shard R=2 cluster (six nodes,
+//! two siblings per row range) under a continuous plan stream, killing
+//! one replica mid-stream costs **zero surfaced plan errors and zero
+//! refreshes** — its sub-plans fail over to the sibling — and every
+//! gathered reply stays **bit-identical** to a single-node server on
+//! the same corpus no matter which sibling answered. Restarting the
+//! replica rejoins it through a refresh; only a whole replica set
+//! going down degrades to the PR 4 refresh-then-typed-error path. A
+//! stats-driven rebalance with an idle (cost 0) shard must sweep every
+//! replica without panicking — the `ShardSet::weighted` clamp
+//! regression.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, ReplicaSpec, Reply, ShardSpec};
+use stablesketch::server::protocol::read_frame;
+use stablesketch::server::{
+    ClusterClient, ClusterError, ErrorCode, Frame, ServerConfig, ShardMapInfo, SketchClient,
+    SketchServer,
+};
+use stablesketch::sketch::{SketchEngine, SketchStore};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ALL_KINDS: [QueryKind; 4] = [
+    QueryKind::Oq,
+    QueryKind::Gm,
+    QueryKind::Fp,
+    QueryKind::Median,
+];
+
+const N: usize = 42;
+const SHARDS: usize = 3;
+const R: usize = 2;
+
+fn sketch_corpus(n: usize, k: usize) -> (SketchStore, PipelineConfig) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 512,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.2,
+        k,
+        dim: corpus.dim,
+        shards: 2,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    (store, cfg)
+}
+
+/// Start one node as `shard.index/shard.of` replica
+/// `replica.index/replica.of` (or unsharded when `shard` is `None`).
+fn start_node(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shard: Option<ShardSpec>,
+    replica: ReplicaSpec,
+) -> (Arc<Coordinator>, SketchServer, String) {
+    let coord = Arc::new(
+        Coordinator::start_replicated(cfg.clone(), store.clone(), shard, replica)
+            .expect("coordinator"),
+    );
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server start");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+/// Start a `shards × replicas` grid; node slot `shard * replicas + r`
+/// in every returned vector (the cluster client's shard-major order).
+#[allow(clippy::type_complexity)]
+fn start_grid(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shards: usize,
+    replicas: usize,
+) -> (Vec<Option<Arc<Coordinator>>>, Vec<Option<SketchServer>>, Vec<String>) {
+    let mut coords = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..shards {
+        for r in 0..replicas {
+            let replica = ReplicaSpec {
+                index: r,
+                of: replicas,
+            };
+            let (c, s, a) = start_node(store, cfg, Some(ShardSpec { index, of: shards }), replica);
+            coords.push(Some(c));
+            servers.push(Some(s));
+            addrs.push(a);
+        }
+    }
+    (coords, servers, addrs)
+}
+
+/// A mixed plan covering every shape/kind, with TopKs big enough to
+/// force cross-shard merges and blocks spanning the row space.
+fn mixed_plan(n: u32, salt: u32) -> Vec<Query> {
+    let mut plan = Vec::new();
+    for (t, &kind) in ALL_KINDS.iter().enumerate() {
+        let t = t as u32;
+        plan.push(Query::Pair {
+            i: (salt + t) % n,
+            j: (salt + 3 * t + 1) % n,
+            kind,
+        });
+        plan.push(Query::TopK {
+            i: (salt + 7 * t) % n,
+            m: (n as usize / 3) + 2,
+            kind,
+        });
+        plan.push(Query::Block {
+            rows: vec![salt % n, (salt + n / 2) % n, n - 1 - (salt % n)],
+            cols: vec![(salt + 1) % n, (salt + 5) % n, (salt + 9) % n],
+            kind,
+        });
+    }
+    plan
+}
+
+fn assert_bit_identical(local: &[Reply], remote: &[Reply], tag: &str) {
+    assert_eq!(local.len(), remote.len(), "{tag}: reply count");
+    for (q, (l, r)) in local.iter().zip(remote).enumerate() {
+        match (l, r) {
+            (Reply::Pair(a), Reply::Pair(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: pair bits differ at {q}")
+            }
+            (Reply::TopK(a), Reply::TopK(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: topk length at {q}");
+                for ((ja, da), (jb, db)) in a.iter().zip(b) {
+                    assert_eq!(ja, jb, "{tag}: topk neighbour differs at {q}");
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: topk bits differ at {q}");
+                }
+            }
+            (Reply::Block(a), Reply::Block(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: block length at {q}");
+                for (da, db) in a.iter().zip(b) {
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: block bits differ at {q}");
+                }
+            }
+            other => panic!("{tag}: shape mismatch at {q}: {other:?}"),
+        }
+    }
+}
+
+/// Drive one plan through the cluster and the single-node reference;
+/// the cluster must answer (failing over / refreshing internally as
+/// needed) and the gathered replies must match the reference bit for
+/// bit — whichever replica served each sub-plan.
+fn drive_and_check(cluster: &mut ClusterClient, reference: &mut SketchClient, salt: u32) {
+    let plan = mixed_plan(N as u32, salt);
+    let remote = cluster
+        .query_plan(&plan)
+        .unwrap_or_else(|e| panic!("plan (salt {salt}) must be routed around, got: {e}"));
+    let local = reference.query_plan(&plan).expect("single-node plan");
+    assert_bit_identical(&local, &remote, &format!("salt {salt}"));
+}
+
+/// The headline scenario: plan stream → kill one replica mid-stream
+/// (failover: zero surfaced errors, zero refreshes) → restart it on a
+/// new address and rejoin (one explicit refresh) → more plans. Bit-
+/// identical to a single node throughout.
+#[test]
+fn killing_and_restarting_one_replica_mid_stream_surfaces_zero_errors() {
+    let (store, cfg) = sketch_corpus(N, 64);
+    let (mut coords, mut servers, addrs) = start_grid(&store, &cfg, SHARDS, R);
+    let (_ref_coord, ref_server, ref_addr) = start_node(&store, &cfg, None, ReplicaSpec::solo());
+    let mut reference = SketchClient::connect_with_retry(&ref_addr, 10, Duration::from_millis(20))
+        .expect("reference connect");
+
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    assert_eq!(cluster.shard_count(), SHARDS);
+    assert_eq!(cluster.replica_count(), R);
+    assert_eq!(cluster.rows(), N);
+    assert_eq!(cluster.epoch(), 1, "a fresh replicated cluster starts at epoch 1");
+    // Siblings advertise the same range; the flat node list is
+    // shard-major.
+    let ranges = cluster.node_ranges();
+    assert_eq!(ranges.len(), SHARDS * R);
+    for shard in 0..SHARDS {
+        assert_eq!(
+            ranges[shard * R].1,
+            ranges[shard * R + 1].1,
+            "replicas of shard {shard} own the same rows"
+        );
+    }
+
+    // ---- phase 1: steady state — reads spread over siblings --------
+    for salt in 0..4u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(cluster.metrics().failovers.get(), 0, "steady state needs no failover");
+    for shard in 0..SHARDS {
+        let a = cluster.metrics().node(shard * R).routed.get();
+        let b = cluster.metrics().node(shard * R + 1).routed.get();
+        assert!(a > 0 && b > 0, "round-robin must use both replicas of shard {shard}");
+    }
+
+    // ---- phase 2: kill replica (1, 0) mid-stream -------------------
+    let dead_slot = R; // shard 1, replica 0
+    servers[dead_slot].take().unwrap().shutdown();
+    drop(coords[dead_slot].take());
+    for salt in 4..10u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert!(
+        cluster.metrics().failovers.get() >= 1,
+        "the dead replica's sub-plans must have failed over to its sibling"
+    );
+    assert_eq!(
+        cluster.metrics().refreshes.get(),
+        0,
+        "failover absorbs a node-down without any shard-map refresh"
+    );
+    assert_eq!(
+        cluster.metrics().node(dead_slot).failovers.get(),
+        cluster.metrics().failovers.get(),
+        "every failover is attributed to the dead replica"
+    );
+
+    // ---- phase 3: restart the replica and rejoin -------------------
+    // The replacement runs the same command line (shard 1/3, replica
+    // 0/2) on a fresh port; it boots at epoch 1, which still matches
+    // the cluster (no adoption ever happened), so one refresh against
+    // the updated dial list re-slots it.
+    let repl_shard = ShardSpec {
+        index: 1,
+        of: SHARDS,
+    };
+    let (repl_coord, repl_server, repl_addr) =
+        start_node(&store, &cfg, Some(repl_shard), ReplicaSpec { index: 0, of: R });
+    let mut new_addrs = addrs.clone();
+    new_addrs[dead_slot] = repl_addr.clone();
+    cluster.set_addresses(&new_addrs).expect("set addresses");
+    cluster.refresh().expect("refresh onto the rejoined replica set");
+    for salt in 10..14u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(
+        cluster.node_ranges()[dead_slot].0,
+        repl_addr,
+        "slot (1, 0) is now the replacement node"
+    );
+    assert!(
+        repl_coord.metrics().queries_submitted.get() > 0,
+        "the rejoined replica serves sub-plans again"
+    );
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+    repl_server.shutdown();
+    ref_server.shutdown();
+}
+
+/// A stats-driven rebalance with an idle shard (cost exactly 0 — what
+/// `queue_depth_total` reports) must not panic, must sweep every
+/// replica of every shard to the new epoch, and the streaming client
+/// must converge on the new map with zero surfaced errors. (The
+/// regression: `ShardSet::weighted` asserted `w > 0.0`.)
+#[test]
+fn zero_cost_rebalance_sweeps_every_replica_without_panicking() {
+    let (store, cfg) = sketch_corpus(N, 64);
+    let (_coords, servers, addrs) = start_grid(&store, &cfg, 2, 2);
+    let (_ref_coord, ref_server, ref_addr) = start_node(&store, &cfg, None, ReplicaSpec::solo());
+    let mut reference = SketchClient::connect_with_retry(&ref_addr, 10, Duration::from_millis(20))
+        .expect("reference connect");
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    let mut admin = ClusterClient::connect(&addrs).expect("admin connect");
+    drive_and_check(&mut cluster, &mut reference, 0);
+
+    // Shard 0 idle (cost 0), shard 1 loaded: the idle shard absorbs
+    // rows. Before the weighted clamp this panicked inside rebalance.
+    let (epoch, moves) = admin.rebalance(&[0.0, 3.0]).expect("zero-cost rebalance");
+    assert_eq!(epoch, 2);
+    assert!(!moves.is_empty(), "an idle shard must absorb rows");
+    assert!(
+        moves.iter().all(|m| m.to == 0),
+        "rows move toward the idle shard: {moves:?}"
+    );
+    // Every replica of every shard adopted the new map under epoch 2,
+    // and siblings stayed range-identical.
+    for (slot, addr) in addrs.iter().enumerate() {
+        let mut probe = SketchClient::connect_with_retry(addr, 10, Duration::from_millis(20))
+            .expect("probe connect");
+        let info = probe.shard_map().expect("shard map");
+        assert_eq!(info.epoch, 2, "node {slot} missed the sweep");
+        assert_eq!(info.index as usize, slot / 2);
+        assert_eq!(info.replica as usize, slot % 2);
+        assert_eq!(info.replicas, 2);
+        let admin_range = admin.node_ranges()[slot].1.clone();
+        assert_eq!(
+            (info.start as usize, info.end as usize),
+            (admin_range.start, admin_range.end),
+            "node {slot} advertises the post-rebalance range"
+        );
+    }
+
+    // The streamer still stamps epoch 1: its next plans refresh
+    // transparently (every replica refuses WrongEpoch → refresh →
+    // retry) and stay bit-identical under the skewed map.
+    for salt in 1..5u32 {
+        drive_and_check(&mut cluster, &mut reference, salt);
+    }
+    assert_eq!(cluster.epoch(), 2, "streamer converged on the swept epoch");
+    assert!(cluster.metrics().refreshes.get() >= 1);
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+    ref_server.shutdown();
+}
+
+/// Losing a *whole* replica set is beyond failover: the plan must
+/// degrade to the PR 4 path — refresh attempt, then a prompt typed
+/// `NodeFailed` naming the shard and replica — never a hang, and
+/// never a silently partial gather.
+#[test]
+fn whole_replica_set_down_is_a_typed_partial_failure_not_a_hang() {
+    let (store, cfg) = sketch_corpus(24, 32);
+    let (mut coords, mut servers, addrs) = start_grid(&store, &cfg, 2, 2);
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+
+    // Kill both replicas of shard 1 (rows 12..24).
+    for slot in [2usize, 3] {
+        servers[slot].take().unwrap().shutdown();
+        drop(coords[slot].take());
+    }
+    let t0 = Instant::now();
+    match cluster.pair(13, 2, QueryKind::Oq) {
+        Err(ClusterError::NodeFailed { shard, .. }) => assert_eq!(shard, 1),
+        other => panic!("expected NodeFailed, got {:?}", other.map(|_| ())),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "a dead replica set must fail promptly, not hang"
+    );
+    assert!(
+        cluster.metrics().failovers.get() >= 1,
+        "the sibling was tried before giving up"
+    );
+    // Plans confined to the live shard still work.
+    let d = cluster.pair(2, 5, QueryKind::Oq).expect("live-shard pair");
+    assert!(d.is_finite());
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+}
+
+/// Dial-list validation: a duplicated address is a typed error naming
+/// the repeated address — at connect *and* at `set_addresses` (where
+/// the current list must be kept so the router stays usable).
+#[test]
+fn duplicate_addresses_are_refused_with_the_address_named() {
+    let (store, cfg) = sketch_corpus(20, 32);
+    let (_coords, servers, addrs) = start_grid(&store, &cfg, 1, 2);
+
+    let dup = vec![addrs[0].clone(), addrs[0].clone()];
+    match ClusterClient::connect(&dup) {
+        Err(ClusterError::DuplicateAddress { addr }) => assert_eq!(addr, addrs[0]),
+        other => panic!("expected DuplicateAddress, got {:?}", other.map(|_| ())),
+    }
+
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    match cluster.set_addresses(&dup) {
+        Err(ClusterError::DuplicateAddress { addr }) => assert_eq!(addr, addrs[0]),
+        other => panic!("expected DuplicateAddress, got {other:?}"),
+    }
+    // The rejected list did not clobber the dial list: a refresh
+    // against the kept (valid) list still succeeds.
+    cluster.refresh().expect("refresh against the kept dial list");
+    assert_eq!(cluster.replica_count(), 2);
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+}
+
+/// A pre-v5 `AdoptShard` carries no replica identity, and its decoded
+/// 0-of-1 default is *absence*, not a statement: applied verbatim it
+/// would silently demote a replicated node out of its replica set and
+/// wedge every client's grid validation. It must be refused on a
+/// replicated node (identity and epoch unchanged) while staying plain
+/// accepted v4 behavior against an unreplicated node.
+#[test]
+fn pre_v5_adoption_cannot_demote_a_replicated_node() {
+    use std::io::Write;
+    let (store, cfg) = sketch_corpus(20, 32);
+    let (_c1, server_r, addr_r) = start_node(&store, &cfg, None, ReplicaSpec { index: 1, of: 2 });
+    let shard_u = Some(ShardSpec { index: 0, of: 1 });
+    let (_c2, server_u, addr_u) = start_node(&store, &cfg, shard_u, ReplicaSpec::solo());
+
+    // Build a v4-stamped AdoptShard: encode the v5 frame, drop the
+    // trailing replica identity (8 bytes), restamp version 4, reframe.
+    let info = ShardMapInfo {
+        index: 0,
+        count: 1,
+        start: 0,
+        end: 20,
+        rows: 20,
+        epoch: 7,
+        replica: 0,
+        replicas: 1,
+    };
+    let wire = Frame::AdoptShard(info).encode();
+    let mut payload = wire[4..wire.len() - 8].to_vec();
+    payload[0] = 4;
+    let mut v4_frame = (payload.len() as u32).to_le_bytes().to_vec();
+    v4_frame.extend_from_slice(&payload);
+
+    let send_raw = |addr: &str, bytes: &[u8]| -> Frame {
+        let mut stream = std::net::TcpStream::connect(addr).expect("dial");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .expect("timeout");
+        stream.write_all(bytes).expect("write");
+        read_frame(&mut stream).expect("reply")
+    };
+    // Replicated node: typed refusal, identity and epoch unchanged.
+    match send_raw(&addr_r, &v4_frame) {
+        Frame::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::InvalidQuery);
+            assert!(message.contains("replica"), "{message}");
+        }
+        other => panic!("expected a refusal, got {other:?}"),
+    }
+    let mut probe = SketchClient::connect_with_retry(&addr_r, 10, Duration::from_millis(20))
+        .expect("probe connect");
+    let now = probe.shard_map().expect("shard map");
+    assert_eq!((now.replica, now.replicas), (1, 2), "replica identity preserved");
+    assert_eq!(now.epoch, 1, "refused adoption does not advance the epoch");
+
+    // Unreplicated node: the same pre-v5 frame is plain v4 behavior.
+    match send_raw(&addr_u, &v4_frame) {
+        Frame::ShardMap(now) => {
+            assert_eq!(now.epoch, 7, "v4 adoption accepted on an unreplicated node");
+            assert_eq!((now.replica, now.replicas), (0, 1));
+        }
+        other => panic!("expected the post-adoption map, got {other:?}"),
+    }
+    server_r.shutdown();
+    server_u.shutdown();
+}
+
+/// Replica identity is visible end to end: the v5 `ShardMap` frame and
+/// the `Stats` health section both carry it, and an unsharded-but-
+/// replicated node (`--replica` without `--shard`) is normalized to
+/// shard 0 of 1 with the epoch machinery engaged.
+#[test]
+fn replica_identity_is_advertised_in_shard_map_and_stats() {
+    let (store, cfg) = sketch_corpus(20, 32);
+    let (_coord, server, addr) = start_node(&store, &cfg, None, ReplicaSpec { index: 1, of: 2 });
+    let mut client = SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20))
+        .expect("connect");
+    let info = client.shard_map().expect("shard map");
+    assert_eq!((info.index, info.count), (0, 1), "replicated-unsharded = shard 0 of 1");
+    assert_eq!((info.replica, info.replicas), (1, 2));
+    assert_eq!(info.epoch, 1, "replication engages the epoch machinery");
+    let stats = client.stats().expect("stats");
+    let get = |label: &str| -> u64 {
+        stats
+            .iter()
+            .find(|(l, _)| l == label)
+            .unwrap_or_else(|| panic!("missing stat {label}"))
+            .1
+    };
+    assert_eq!(get("replica_index"), 1);
+    assert_eq!(get("replica_count"), 2);
+    server.shutdown();
+}

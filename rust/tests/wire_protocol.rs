@@ -152,6 +152,8 @@ fn control_and_error_frames_round_trip() {
             end: 100,
             rows: 100,
             epoch: 5,
+            replica: 1,
+            replicas: 2,
         }),
         Frame::AdoptShard(ShardMapInfo {
             index: 1,
@@ -160,6 +162,8 @@ fn control_and_error_frames_round_trip() {
             end: 50,
             rows: 100,
             epoch: 6,
+            replica: 0,
+            replicas: 3,
         }),
         Frame::Error {
             id: 8,
@@ -193,6 +197,8 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             end: 25,
             rows: 100,
             epoch: 2,
+            replica: 0,
+            replicas: 1,
         }),
         Frame::AdoptShard(ShardMapInfo {
             index: 3,
@@ -201,6 +207,8 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             end: 100,
             rows: 100,
             epoch: 3,
+            replica: 1,
+            replicas: 2,
         }),
     ];
     for _ in 0..30 {
@@ -354,12 +362,12 @@ fn query_id_recovered_from_malformed_query_frames() {
     assert_eq!(query_id_of(&[]), None);
 }
 
-/// v4 compatibility contract: everything a v1..v3 speaker can say
-/// still decodes (their bodies are exact prefixes of the v4 layouts),
-/// while v4-only tags and codes under an older version stamp are
-/// refused as self-contradictory.
+/// v5 compatibility contract: everything a v1..v4 speaker can say
+/// still decodes (their bodies are exact prefixes of the v5 layouts),
+/// while newer-only tags, codes, and trailing content under an older
+/// version stamp are refused as self-contradictory.
 #[test]
-fn v4_decoders_accept_v1_to_v3_frames_and_refuse_version_contradictions() {
+fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
     let mut rng = Xoshiro256pp::new(0x0E0C);
     // Query frames: strip the trailing epoch (v4-only) and restamp as
     // each older version — every one must decode, unchecked (epoch 0).
@@ -383,8 +391,18 @@ fn v4_decoders_accept_v1_to_v3_frames_and_refuse_version_contradictions() {
                 other => panic!("{other:?}"),
             }
         }
+        // A v4 speaker's query body is the full v5 one (the epoch is
+        // the last field both speak) — restamped, it must round-trip.
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 4;
+        match Frame::decode(&payload).expect("v4 query frame decodes") {
+            Frame::Query { query: q, .. } => assert_eq!(q, query),
+            other => panic!("{other:?}"),
+        }
     }
-    // ShardMap: a v3 body (no epoch) decodes as a static (epoch 0) map.
+    // ShardMap: a v3 body (no epoch, no replica identity) decodes as a
+    // static (epoch 0), unreplicated map; a v4 body (epoch, no replica
+    // identity) keeps its epoch and defaults to replica 0 of 1.
     let info = ShardMapInfo {
         index: 1,
         count: 3,
@@ -392,17 +410,38 @@ fn v4_decoders_accept_v1_to_v3_frames_and_refuse_version_contradictions() {
         end: 67,
         rows: 100,
         epoch: 12,
+        replica: 1,
+        replicas: 2,
     };
     let wire = Frame::ShardMap(info).encode();
-    let mut payload = wire[4..wire.len() - 8].to_vec();
+    let mut payload = wire[4..wire.len() - 16].to_vec();
     payload[0] = 3;
     match Frame::decode(&payload).expect("v3 shard map decodes") {
         Frame::ShardMap(got) => {
             assert_eq!(got.epoch, 0);
+            assert_eq!((got.replica, got.replicas), (0, 1), "v3 nodes are unreplicated");
             assert_eq!((got.index, got.count, got.start, got.end, got.rows), (1, 3, 34, 67, 100));
         }
         other => panic!("{other:?}"),
     }
+    let mut payload = wire[4..wire.len() - 8].to_vec();
+    payload[0] = 4;
+    match Frame::decode(&payload).expect("v4 shard map decodes") {
+        Frame::ShardMap(got) => {
+            assert_eq!(got.epoch, 12, "v4 carries the epoch");
+            assert_eq!((got.replica, got.replicas), (0, 1), "v4 nodes are unreplicated");
+        }
+        other => panic!("{other:?}"),
+    }
+    // v5-only trailing content under older stamps is refused: the
+    // replica identity is 8 trailing bytes v4 never defined (16 for
+    // v3, which also lacks the epoch).
+    let mut payload = wire[4..].to_vec();
+    payload[0] = 4;
+    assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(8))));
+    let mut payload = wire[4..].to_vec();
+    payload[0] = 3;
+    assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(16))));
     // Control/reply frames are version-stable: restamp as v1..v3.
     for f in [
         Frame::Ping { token: 17 },
