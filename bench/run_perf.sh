@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Regenerate the tracked perf baseline (BENCH_6.json at the repo root).
+#
+# Builds the release binary and runs the `bench perf` harness: fused-
+# kernel micro benches, a framed-protocol loopback pass, and a short
+# 2-shard cluster loadgen pass. Schema: op -> ns/op, throughput,
+# p50/p95/p99 per section, plus derived speedup ratios.
+#
+# Env vars:
+#   SMOKE=1              tiny sizes (CI smoke job)
+#   FEATURES="simd"      build with the SSE2 kernel (results stay
+#                        bit-identical; only the timings move)
+#   OUT=path.json        output path (default BENCH_6.json)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${OUT:-BENCH_6.json}"
+FEATURES="${FEATURES:-}"
+ARGS=(bench perf --out "$OUT")
+if [ "${SMOKE:-0}" = "1" ]; then
+  ARGS+=(--smoke)
+fi
+
+if [ -n "$FEATURES" ]; then
+  cargo build --release --features "$FEATURES"
+else
+  cargo build --release
+fi
+./target/release/stablesketch "${ARGS[@]}"

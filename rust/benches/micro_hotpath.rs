@@ -6,7 +6,7 @@
 mod common;
 
 use stablesketch::bench_util::{bench, black_box, BenchConfig, Table};
-use stablesketch::estimators::quickselect::{select_kth, select_kth_naive};
+use stablesketch::estimators::quickselect::{select_kth, select_kth_f32, select_kth_naive};
 use stablesketch::estimators::{BatchScratch, FusedDiffEstimator, OptimalQuantile, ScaleEstimator};
 use stablesketch::numerics::{Rng, Xoshiro256pp};
 use stablesketch::sketch::{SketchEngine, SketchStore};
@@ -65,6 +65,29 @@ fn main() {
             &mut rows,
             &mut table,
         );
+        // The chunked branchless f32 kernel against the f64 Hoare
+        // reference above (same selection, half the element width, no
+        // data-dependent branches in the partition pass).
+        let pool32: Vec<Vec<f32>> = pool
+            .iter()
+            .map(|v| v.iter().map(|&x| x as f32).collect())
+            .collect();
+        let mut buf32 = vec![0.0f32; k];
+        let m_chunked = bench("select_f32", &cfg, || {
+            c = (c + 1) & 31;
+            buf32.copy_from_slice(&pool32[c]);
+            black_box(select_kth_f32(&mut buf32, k / 2))
+        });
+        push(
+            &format!("select_kth_f32 k={k}"),
+            m_chunked.ns_per_op_median,
+            &format!(
+                "chunked branchless kernel — {:.1}x vs f64 Hoare",
+                m_opt.ns_per_op_median / m_chunked.ns_per_op_median
+            ),
+            &mut rows,
+            &mut table,
+        );
         let m_naive = bench("select_naive", &cfg, || {
             c = (c + 1) & 31;
             black_box(select_kth_naive(&pool[c], k / 2))
@@ -100,7 +123,8 @@ fn main() {
     // estimate. The fused kernel selects straight over the f32
     // differences in a reused scratch.
     let mut fused_speedup_k256 = 0.0;
-    for &k in &[64usize, 256] {
+    let mut fused_speedup_k1000 = 0.0;
+    for &k in &[64usize, 256, 1000] {
         let alpha = 1.0;
         let est = OptimalQuantile::new(alpha, k);
         let mut store = SketchStore::zeros(2, k, alpha, 0);
@@ -136,6 +160,54 @@ fn main() {
         if k == 256 {
             fused_speedup_k256 = speedup;
         }
+        if k == 1000 {
+            fused_speedup_k1000 = speedup;
+        }
+    }
+
+    // --- one worker's TopK scan: sequential vs fanned out ------------
+    // The in-node scoped-thread fan-out (scan_threads); both sides are
+    // bit-identical by construction (tests/kernel_equivalence.rs), so
+    // this measures pure wall-clock. The speedup is recorded, not
+    // asserted — CI boxes may be single-core.
+    {
+        let (n, k) = (12_000usize, 64usize);
+        let est = OptimalQuantile::new(1.0, k);
+        let mut store = SketchStore::zeros(n, k, 1.0, 5);
+        for i in 0..n {
+            for v in store.row_mut(i).iter_mut() {
+                *v = rng.normal() as f32;
+            }
+        }
+        let scan_cfg = BenchConfig {
+            warmup_batches: 1,
+            samples: 7,
+            iters_per_batch: 1,
+        };
+        let mut scratch = BatchScratch::new(k);
+        let m_seq = bench("scan_seq", &scan_cfg, || {
+            black_box(store.top_m_scan(&est, 0, 0..n, 10, 1, &mut scratch))
+        });
+        push(
+            &format!("topk scan seq n={n}"),
+            m_seq.ns_per_op_median,
+            "one worker, one thread",
+            &mut rows,
+            &mut table,
+        );
+        let m_par = bench("scan_par", &scan_cfg, || {
+            black_box(store.top_m_scan(&est, 0, 0..n, 10, 4, &mut scratch))
+        });
+        push(
+            &format!("topk scan par n={n}"),
+            m_par.ns_per_op_median,
+            &format!(
+                "scoped-thread fan-out — {:.1}x vs sequential",
+                m_seq.ns_per_op_median / m_par.ns_per_op_median
+            ),
+            &mut rows,
+            &mut table,
+        );
     }
 
     // --- sampling ---------------------------------------------------
@@ -179,8 +251,13 @@ fn main() {
     // path at serving width (expected ~2x+ from halved memory traffic
     // plus the removed per-query allocation).
     println!("\nfused vs scalar at k=256: {fused_speedup_k256:.1}x");
+    println!("fused vs scalar at k=1000: {fused_speedup_k1000:.1}x");
     assert!(
         fused_speedup_k256 > 1.0,
         "fused path slower than copy+estimate at k=256 ({fused_speedup_k256:.2}x)"
+    );
+    assert!(
+        fused_speedup_k1000 > 1.0,
+        "fused path slower than copy+estimate at k=1000 ({fused_speedup_k1000:.2}x)"
     );
 }

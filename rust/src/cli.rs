@@ -3,15 +3,19 @@
 //! integration tests can drive them directly.
 
 use crate::coordinator::{Coordinator, Query, QueryKind, ReplicaSpec, Reply, ShardSpec};
-use crate::estimators::{tables, BatchScratch, EstimatorKind};
+use crate::estimators::{
+    quickselect, tables, BatchScratch, EstimatorKind, FusedDiffEstimator, OptimalQuantile,
+    ScaleEstimator, KERNEL_LANES,
+};
 use crate::numerics::{Rng, Xoshiro256pp};
 use crate::server::{
     ClusterClient, LoadMode, LoadgenConfig, ServerConfig, SketchClient, SketchServer, Workload,
 };
-use crate::sketch::SketchEngine;
+use crate::sketch::{SketchEngine, SketchStore};
 use crate::simul::{Corpus, CorpusConfig};
 use crate::util::cli::Args;
 use crate::util::config::PipelineConfig;
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -498,5 +502,340 @@ pub fn cmd_experiment(args: &Args) -> Result<()> {
         }
         other => bail!("unknown experiment '{other}' (use fig1|fig2, or cargo bench)"),
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// `bench perf` — the tracked perf-baseline harness (see bench/run_perf.sh)
+// ---------------------------------------------------------------------
+
+/// One harness row: mean ns/op plus exact per-op percentiles computed
+/// from the raw samples (the log2-bucketed histogram is too coarse for
+/// single-op rows).
+struct PerfRow {
+    op: String,
+    ns_per_op: f64,
+    throughput_ops_per_s: f64,
+    p50_ns: u64,
+    p95_ns: u64,
+    p99_ns: u64,
+}
+
+impl PerfRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(self.op.clone())),
+            ("ns_per_op", Json::num(self.ns_per_op)),
+            ("throughput_ops_per_s", Json::num(self.throughput_ops_per_s)),
+            ("p50_ns", Json::num(self.p50_ns as f64)),
+            ("p95_ns", Json::num(self.p95_ns as f64)),
+            ("p99_ns", Json::num(self.p99_ns as f64)),
+        ])
+    }
+}
+
+/// Time `f` once per iteration, recording every sample. One clock read
+/// per op is fine at the sizes this harness measures (≥ ~100 ns ops);
+/// it keeps percentiles exact rather than bucketed.
+fn measure_op<T>(op: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> PerfRow {
+    use crate::bench_util::black_box;
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut ns: Vec<u64> = Vec::with_capacity(iters);
+    let mut total: u128 = 0;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        let dt = t0.elapsed().as_nanos();
+        total += dt;
+        ns.push(dt as u64);
+    }
+    ns.sort_unstable();
+    let q = |p: f64| ns[((ns.len() - 1) as f64 * p) as usize];
+    let mean = total as f64 / ns.len() as f64;
+    PerfRow {
+        op: op.to_string(),
+        ns_per_op: mean,
+        throughput_ops_per_s: if mean > 0.0 { 1e9 / mean } else { 0.0 },
+        p50_ns: q(0.50),
+        p95_ns: q(0.95),
+        p99_ns: q(0.99),
+    }
+}
+
+/// A deterministic sketch store filled with uniform values — scan and
+/// kernel timings do not depend on the value distribution, so there is
+/// no need to pay for a full corpus projection here.
+fn random_store(n: usize, k: usize, alpha: f64, seed: u64) -> SketchStore {
+    let mut store = SketchStore::zeros(n, k, alpha, seed);
+    let mut rng = Xoshiro256pp::new(seed);
+    for i in 0..n {
+        for x in store.row_mut(i) {
+            *x = rng.uniform_in(-4.0, 4.0) as f32;
+        }
+    }
+    store
+}
+
+/// `ns_per_op(a) / ns_per_op(b)` matched by op-name prefix (scan rows
+/// embed the n they ran at). 0.0 when either row is missing.
+fn speedup(rows: &[PerfRow], slow_prefix: &str, fast_prefix: &str) -> f64 {
+    let find = |p: &str| rows.iter().find(|r| r.op.starts_with(p)).map(|r| r.ns_per_op);
+    match (find(slow_prefix), find(fast_prefix)) {
+        (Some(a), Some(b)) if b > 0.0 => a / b,
+        _ => 0.0,
+    }
+}
+
+/// Micro pass: the fused kernel against the scalar reference path, the
+/// selection alone, and one worker's TopK scan sequential vs fanned out.
+fn bench_micro(smoke: bool, seed: u64) -> Result<Vec<PerfRow>> {
+    let alpha = 1.0;
+    let mut rows = Vec::new();
+    let (wu, iters) = if smoke { (200, 2_000) } else { (2_000, 20_000) };
+    for &k in &[64usize, 256, 1000] {
+        let store = random_store(256, k, alpha, seed ^ k as u64);
+        let est = OptimalQuantile::new(alpha, k);
+        // Scalar reference: copy the row diff into an f64 buffer, then
+        // abs + Hoare select + pow — the pre-fusion query path.
+        let mut buf = vec![0.0f64; k];
+        let mut i = 0usize;
+        rows.push(measure_op(&format!("pair_scalar_k{k}"), wu, iters, || {
+            i = (i + 1) % 255;
+            store.diff_into(i, i + 1, &mut buf);
+            est.estimate(&mut buf)
+        }));
+        // Fused kernel: chunked f32 abs-diff + branchless chunked select.
+        let mut scratch = BatchScratch::new(k);
+        let mut i = 0usize;
+        rows.push(measure_op(&format!("pair_fused_k{k}"), wu, iters, || {
+            i = (i + 1) % 255;
+            est.estimate_diff(store.row(i), store.row(i + 1), &mut scratch)
+        }));
+    }
+    // Selection alone at k=1000 (the copy resets the buffer each op and
+    // is charged to both sides equally).
+    {
+        let k = 1000;
+        let mut rng = Xoshiro256pp::new(seed ^ 0x5E1);
+        let base64: Vec<f64> = (0..k).map(|_| rng.uniform_in(0.0, 8.0)).collect();
+        let base32: Vec<f32> = base64.iter().map(|&x| x as f32).collect();
+        let m = k / 2;
+        let mut buf64 = base64.clone();
+        rows.push(measure_op("select_scalar_f64_k1000", wu, iters, || {
+            buf64.copy_from_slice(&base64);
+            quickselect::select_kth(&mut buf64, m)
+        }));
+        let mut buf32 = base32.clone();
+        rows.push(measure_op("select_chunked_f32_k1000", wu, iters, || {
+            buf32.copy_from_slice(&base32);
+            quickselect::select_kth_f32(&mut buf32, m)
+        }));
+    }
+    // One worker's TopK scan. The fan-out only engages above
+    // PAR_MIN_ROWS rows per thread, so the smoke size still exercises
+    // two threads while the full size reaches four.
+    let n = if smoke { 9_000 } else { 20_000 };
+    let k = 64;
+    let store = random_store(n, k, alpha, seed ^ 0x70);
+    let est = OptimalQuantile::new(alpha, k);
+    let scan_iters = if smoke { 6 } else { 15 };
+    let mut scratch = BatchScratch::new(k);
+    rows.push(measure_op(&format!("topk_scan_seq_n{n}"), 2, scan_iters, || {
+        store.top_m_scan(&est, 0, 0..n, 10, 1, &mut scratch)
+    }));
+    let mut scratch = BatchScratch::new(k);
+    rows.push(measure_op(&format!("topk_scan_par_n{n}"), 2, scan_iters, || {
+        store.top_m_scan(&est, 0, 0..n, 10, 4, &mut scratch)
+    }));
+    Ok(rows)
+}
+
+/// Loopback pass: one server process-local over TCP, framed protocol,
+/// single closed-loop client — measures the full wire round trip.
+fn bench_net(smoke: bool, seed: u64) -> Result<Vec<PerfRow>> {
+    let n = 2_000usize;
+    let cfg = PipelineConfig {
+        seed,
+        ..Default::default()
+    };
+    let store = random_store(n, cfg.k, cfg.alpha, seed ^ 0x2E7);
+    let coord = Arc::new(Coordinator::start(cfg, store)?);
+    let server = SketchServer::start(
+        coord,
+        "127.0.0.1:0",
+        ServerConfig {
+            max_connections: 16,
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+    let mut client = SketchClient::connect(&addr).context("loopback connect")?;
+    let mut rows = Vec::new();
+    let (wu, iters) = if smoke { (50, 400) } else { (200, 3_000) };
+    let mut rng = Xoshiro256pp::new(seed ^ 0x11);
+    rows.push(measure_op("net_pair_rtt", wu, iters, || {
+        let i = rng.below(n as u64) as u32;
+        let j = rng.below(n as u64) as u32;
+        client.pair(i, j, QueryKind::Oq).expect("loopback pair")
+    }));
+    let topk_iters = if smoke { 60 } else { 400 };
+    rows.push(measure_op("net_topk_m10", 10, topk_iters, || {
+        let i = rng.below(n as u64) as u32;
+        client.top_k(i, 10, QueryKind::Oq).expect("loopback topk")
+    }));
+    drop(client);
+    server.shutdown();
+    Ok(rows)
+}
+
+/// Cluster pass: a 2-shard loopback cluster driven by the multi-thread
+/// loadgen for a short closed-loop mixed workload. Returns the summary
+/// row plus the loadgen detail object (including the server-side scan
+/// gauges the observability satellite added).
+fn bench_loadgen(smoke: bool, seed: u64) -> Result<(PerfRow, Json)> {
+    let n = 4_000usize;
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for s in 0..2 {
+        let cfg = PipelineConfig {
+            seed,
+            ..Default::default()
+        };
+        let store = random_store(n, cfg.k, cfg.alpha, seed ^ 0x10AD);
+        let coord = Arc::new(Coordinator::start_replicated(
+            cfg,
+            store,
+            Some(ShardSpec { index: s, of: 2 }),
+            ReplicaSpec::solo(),
+        )?);
+        let server = SketchServer::start(
+            coord,
+            "127.0.0.1:0",
+            ServerConfig {
+                max_connections: 32,
+            },
+        )?;
+        addrs.push(server.local_addr().to_string());
+        servers.push(server);
+    }
+    let cfg = LoadgenConfig {
+        addr: addrs.join(","),
+        threads: 2,
+        duration: Duration::from_secs_f64(if smoke { 0.6 } else { 2.5 }),
+        mode: LoadMode::Closed,
+        workload: Workload::Mixed,
+        kind: QueryKind::Oq,
+        topk_m: 10,
+        block_side: 4,
+        seed,
+    };
+    let report = crate::server::loadgen::run(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    for server in servers {
+        server.shutdown();
+    }
+    let ok = report.ok.max(1);
+    // Mean wall time per completed query per thread (closed loop).
+    let mean_ns = report.elapsed.as_nanos() as f64 * cfg.threads as f64 / ok as f64;
+    let row = PerfRow {
+        op: "loadgen_mixed_2shard".to_string(),
+        ns_per_op: mean_ns,
+        throughput_ops_per_s: ok as f64 / report.elapsed.as_secs_f64().max(1e-9),
+        p50_ns: report.latency.quantile_ns(0.50),
+        p95_ns: report.latency.quantile_ns(0.95),
+        p99_ns: report.latency.quantile_ns(0.99),
+    };
+    let opt_num = |v: Option<u64>| match v {
+        Some(v) => Json::num(v as f64),
+        None => Json::Null,
+    };
+    let detail = Json::obj(vec![
+        ("sent", Json::num(report.sent as f64)),
+        ("ok", Json::num(report.ok as f64)),
+        ("overloaded", Json::num(report.overloaded as f64)),
+        ("errors", Json::num(report.errors as f64)),
+        ("server_scan_rows_per_s", opt_num(report.server_scan_rows_per_s)),
+        ("server_kernel_lanes", opt_num(report.server_kernel_lanes)),
+    ]);
+    Ok((row, detail))
+}
+
+/// `bench perf [--smoke] [--out PATH]`: run the micro + loopback +
+/// cluster-loadgen passes and write the tracked baseline JSON (schema:
+/// op → ns/op, throughput, p50/p95/p99 per section, plus derived
+/// speedup ratios). `--smoke` shrinks sizes for CI.
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("perf");
+    if what != "perf" {
+        bail!("unknown bench target '{what}' (use: bench perf [--smoke] [--out PATH])");
+    }
+    let smoke = args.flag("smoke");
+    let out = args.str_or("out", "BENCH_6.json");
+    let seed = args.u64_or("seed", 0xBE7C)?;
+    println!(
+        "bench perf: {} run, simd={}, kernel lanes={}",
+        if smoke { "smoke" } else { "full" },
+        cfg!(feature = "simd"),
+        KERNEL_LANES,
+    );
+    let micro = bench_micro(smoke, seed)?;
+    println!("micro pass done ({} ops)", micro.len());
+    let net = bench_net(smoke, seed)?;
+    println!("net loopback pass done ({} ops)", net.len());
+    let (lg_row, lg_detail) = bench_loadgen(smoke, seed)?;
+    println!("cluster loadgen pass done");
+
+    let mut table = crate::bench_util::Table::new(&[
+        "op", "ns/op", "ops/s", "p50 ns", "p95 ns", "p99 ns",
+    ]);
+    for r in micro.iter().chain(net.iter()).chain(std::iter::once(&lg_row)) {
+        table.row(vec![
+            r.op.clone(),
+            format!("{:.0}", r.ns_per_op),
+            format!("{:.0}", r.throughput_ops_per_s),
+            format!("{}", r.p50_ns),
+            format!("{}", r.p95_ns),
+            format!("{}", r.p99_ns),
+        ]);
+    }
+    table.print();
+    let fused_speedup = speedup(&micro, "pair_scalar_k1000", "pair_fused_k1000");
+    let par_speedup = speedup(&micro, "topk_scan_seq_", "topk_scan_par_");
+    println!(
+        "derived: fused vs scalar @k=1000 = {fused_speedup:.2}x, \
+         parallel vs sequential scan = {par_speedup:.2}x"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("stablesketch perf baseline")),
+        ("pr", Json::num(6.0)),
+        ("smoke", Json::Bool(smoke)),
+        ("simd_feature", Json::Bool(cfg!(feature = "simd"))),
+        ("kernel_lanes", Json::num(KERNEL_LANES as f64)),
+        (
+            "micro_hotpath",
+            Json::Arr(micro.iter().map(PerfRow::to_json).collect()),
+        ),
+        (
+            "net_loopback",
+            Json::Arr(net.iter().map(PerfRow::to_json).collect()),
+        ),
+        (
+            "loadgen",
+            Json::obj(vec![
+                ("rows", Json::Arr(vec![lg_row.to_json()])),
+                ("detail", lg_detail),
+            ]),
+        ),
+        (
+            "derived",
+            Json::obj(vec![
+                ("fused_vs_scalar_k1000", Json::num(fused_speedup)),
+                ("par_vs_seq_scan", Json::num(par_speedup)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, doc.to_string()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
     Ok(())
 }

@@ -428,6 +428,11 @@ pub(crate) struct Shared {
     pub median: QuantileEstimator,
     pub metrics: PipelineMetrics,
     pub stop: AtomicBool,
+    /// In-node fan-out for one worker's TopK/Block scan (resolved from
+    /// `PipelineConfig::scan_threads` at start; always ≥ 1). Scans
+    /// below the `SketchStore::PAR_MIN_*` thresholds stay sequential
+    /// regardless, so this is a ceiling, not a promise.
+    pub scan_threads: usize,
 }
 
 impl Shared {
@@ -435,9 +440,11 @@ impl Shared {
         self.store.lock().unwrap().clone()
     }
 
-    /// The fused estimator serving a query kind.
+    /// The fused estimator serving a query kind. `Sync` is part of the
+    /// contract: the node-local parallel scans share one estimator
+    /// across their scoped sub-threads.
     #[inline]
-    pub fn fused(&self, kind: QueryKind) -> &dyn FusedDiffEstimator {
+    pub fn fused(&self, kind: QueryKind) -> &(dyn FusedDiffEstimator + Sync) {
         match kind {
             QueryKind::Oq => &self.oq,
             QueryKind::Gm => &self.gm,
@@ -522,6 +529,16 @@ impl Coordinator {
         // checked) until an adoption pulls it into a cluster.
         let epoch = u64::from(shard.is_some());
         let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, n);
+        // 0 = auto: a small in-node thread set, capped so a node running
+        // several shard workers doesn't oversubscribe the host.
+        let scan_threads = if config.scan_threads > 0 {
+            config.scan_threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(4)
+        };
         let shared = Arc::new(Shared {
             store_n: AtomicUsize::new(n),
             store: Mutex::new(Arc::new(store)),
@@ -539,7 +556,12 @@ impl Coordinator {
             median: QuantileEstimator::median(alpha, k),
             metrics: PipelineMetrics::default(),
             stop: AtomicBool::new(false),
+            scan_threads,
         });
+        shared
+            .metrics
+            .kernel_lanes_used
+            .set(crate::estimators::KERNEL_LANES as i64);
         let mut queues = Vec::with_capacity(config.shards);
         let mut workers = Vec::with_capacity(config.shards);
         for w in 0..config.shards {

@@ -52,8 +52,25 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
             // One clock read per query; the histogram tracks cost *per
             // fused estimate* so TopK/Block scans land in the same
             // units as single pairs (see metrics::PipelineMetrics).
-            let est_ns = t_est.elapsed().as_nanos() as u64 / estimates.max(1);
+            let spent = t_est.elapsed();
+            let est_ns = spent.as_nanos() as u64 / estimates.max(1);
             shared.metrics.estimate_latency[kind.index()].record_ns(est_ns);
+            // Whole-scan latency per kind, plus the live rows/s gauge —
+            // this is where the multi-threaded scan win is observable
+            // from a running cluster (Stats frame / loadgen report).
+            match &job.query {
+                Query::TopK { .. } => {
+                    shared.metrics.scan_latency[kind.index()].record(spent);
+                    let ns = (spent.as_nanos() as u64).max(1);
+                    let rps = (estimates as u128 * 1_000_000_000 / ns as u128)
+                        .min(i64::MAX as u128) as i64;
+                    shared.metrics.scan_rows_per_s.set(rps);
+                }
+                Query::Block { .. } => {
+                    shared.metrics.scan_latency[kind.index()].record(spent);
+                }
+                Query::Pair { .. } => {}
+            }
             shared
                 .metrics
                 .query_latency
@@ -93,48 +110,20 @@ fn execute(
             // Candidates are the *owned* row range (the whole store on
             // an unsharded node): a sharded node contributes the
             // partial top-m over its slice, and the cluster client
-            // merges partials by (distance, row) — the same order this
+            // merges partials by (distance, row) — the same order the
             // scan produces — so the merged result is bit-identical to
-            // a single node scanning everything.
-            let lo = owned.start.min(store.n);
-            let hi = owned.end.min(store.n);
-            let candidates = (hi - lo).saturating_sub(usize::from(lo <= i && i < hi));
-            let m = (*m).min(candidates);
-            let anchor = store.row(i);
-            // Bounded sorted buffer (ascending): insertion beats a heap
-            // for the small m of kNN serving, and the reply comes out
-            // already ordered. (The materializing variant of this scan
-            // lives in `SketchStore::estimate_row_vs_many`; the serving
-            // path streams instead so it never holds n distances.)
-            let mut best: Vec<(u32, f64)> = Vec::with_capacity(m + 1);
-            let mut scanned = 0u64;
-            for j in lo..hi {
-                if j == i {
-                    continue;
-                }
-                let d = est.estimate_diff(anchor, store.row(j), scratch);
-                scanned += 1;
-                let worst = best.last().map_or(f64::INFINITY, |&(_, w)| w);
-                if best.len() < m || d < worst {
-                    let pos = best.partition_point(|&(_, w)| w <= d);
-                    best.insert(pos, (j as u32, d));
-                    if best.len() > m {
-                        best.pop();
-                    }
-                }
-            }
+            // a single node scanning everything. The scan itself (the
+            // streaming bounded insertion, optionally fanned out over
+            // `scan_threads` sub-ranges) lives on `SketchStore` so the
+            // embedded and serving paths share one implementation.
+            let (best, scanned) =
+                store.top_m_scan(est, i, owned.clone(), *m, shared.scan_threads, scratch);
             shared.metrics.topk_candidates_scanned.add(scanned);
             (Reply::TopK(best), scanned)
         }
         Query::Block { rows, cols, .. } => {
             let mut out = Vec::new();
-            store.estimate_block(
-                est,
-                rows.iter().map(|&r| r as usize),
-                cols.iter().map(|&c| c as usize),
-                scratch,
-                &mut out,
-            );
+            store.estimate_block_par(est, rows, cols, shared.scan_threads, scratch, &mut out);
             let cells = out.len() as u64;
             (Reply::Block(out), cells)
         }

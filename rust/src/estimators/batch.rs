@@ -23,25 +23,118 @@
 
 use super::ScaleEstimator;
 
+/// Lane width the fused abs-diff kernel is chunked by: the SSE2 vector
+/// width under the `simd` feature on x86_64, the autovectorization
+/// chunk otherwise. Surfaced as the `kernel_lanes_used` gauge so a live
+/// cluster reports which kernel build it is running.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub const KERNEL_LANES: usize = 4;
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub const KERNEL_LANES: usize = 8;
+
+/// Fill `dst[j] = |a_j − b_j|` over fixed-width lane chunks — the
+/// portable body, always compiled. Chunking keeps the inner loop free
+/// of per-element length checks so LLVM vectorizes it; the arithmetic
+/// (f32 subtract, clear sign bit) is bit-identical to the scalar form.
+pub fn abs_diff_fill_portable(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    const CHUNK: usize = 8;
+    let mut dc = dst.chunks_exact_mut(CHUNK);
+    let mut ac = a.chunks_exact(CHUNK);
+    let mut bc = b.chunks_exact(CHUNK);
+    for ((d, x), y) in (&mut dc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..CHUNK {
+            d[i] = (x[i] - y[i]).abs();
+        }
+    }
+    for ((d, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *d = (*x - *y).abs();
+    }
+}
+
+/// SSE2 abs-diff (x86_64 baseline, no runtime detection): subtract and
+/// clear the sign bit 4 lanes at a time. `_mm_sub_ps` is the same IEEE
+/// subtract as the scalar path and `abs` is a pure bit-and, so results
+/// are bit-identical to [`abs_diff_fill_portable`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn abs_diff_fill(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let lanes = n - n % 4;
+    // SAFETY: a, b, dst all hold at least `n` f32s (asserted by the
+    // caller); loads/stores are explicit unaligned; SSE2 is baseline.
+    unsafe {
+        let sign = _mm_set1_ps(-0.0);
+        let mut i = 0usize;
+        while i < lanes {
+            let va = _mm_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm_loadu_ps(b.as_ptr().add(i));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_andnot_ps(sign, _mm_sub_ps(va, vb)));
+            i += 4;
+        }
+    }
+    for j in lanes..n {
+        dst[j] = (a[j] - b[j]).abs();
+    }
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub use self::abs_diff_fill_portable as abs_diff_fill;
+
 /// Reusable per-worker scratch for the fused kernel: one f32 difference
-/// buffer, sized (and lazily resized) to the sketch width k. One
-/// `BatchScratch` serves an entire batch/plan — the whole point is that
-/// nothing is allocated per query.
+/// buffer sized to the widest sketch seen so far. One `BatchScratch`
+/// serves an entire batch/plan — the whole point is that nothing is
+/// allocated per query.
+///
+/// Capacity is **grow-only**: a plan stream alternating between sketch
+/// widths never shrink-reallocates (growth doubles, so a mixed-k
+/// stream reallocates O(log max_k) times total — pinned by the
+/// `mixed_width_stream_allocates_o_log` test). Long-lived workers that
+/// want the memory back call [`reset`](Self::reset) explicitly.
 #[derive(Debug, Default)]
 pub struct BatchScratch {
     diff: Vec<f32>,
+    /// Active width of the most recent `abs_diff` (≤ capacity).
+    width: usize,
+    /// Buffer (re)allocation events since construction.
+    grows: u64,
 }
 
 impl BatchScratch {
     pub fn new(k: usize) -> Self {
         Self {
             diff: vec![0.0; k],
+            width: k,
+            grows: u64::from(k > 0),
         }
     }
 
-    /// Current buffer width (grows on demand in `abs_diff`).
+    /// Width of the most recent `abs_diff` (grows on demand).
     pub fn k(&self) -> usize {
+        self.width
+    }
+
+    /// Current buffer capacity in f32 slots (never shrinks except via
+    /// [`reset`](Self::reset)).
+    pub fn capacity(&self) -> usize {
         self.diff.len()
+    }
+
+    /// How many times the buffer has (re)allocated — O(log max_k) for
+    /// any stream of widths under the doubling growth policy.
+    pub fn allocations(&self) -> u64 {
+        self.grows
+    }
+
+    /// Release the buffer entirely (long-lived workers between epochs);
+    /// the next `abs_diff` reallocates from scratch.
+    pub fn reset(&mut self) {
+        self.diff = Vec::new();
+        self.width = 0;
     }
 
     /// Fill the scratch with `|a_j − b_j|` and hand it out for in-place
@@ -49,13 +142,18 @@ impl BatchScratch {
     #[inline]
     pub fn abs_diff(&mut self, a: &[f32], b: &[f32]) -> &mut [f32] {
         assert_eq!(a.len(), b.len(), "sketch rows must share k");
-        if self.diff.len() != a.len() {
-            self.diff.resize(a.len(), 0.0);
+        let k = a.len();
+        if self.diff.len() < k {
+            // Grow-only with doubling: alternating widths reuse the
+            // high-water buffer instead of reallocating per call.
+            let target = k.max(self.diff.len().saturating_mul(2));
+            self.diff.resize(target, 0.0);
+            self.grows += 1;
         }
-        for ((slot, x), y) in self.diff.iter_mut().zip(a).zip(b) {
-            *slot = (*x - *y).abs();
-        }
-        &mut self.diff
+        self.width = k;
+        let dst = &mut self.diff[..k];
+        abs_diff_fill(dst, a, b);
+        dst
     }
 }
 
@@ -172,5 +270,53 @@ mod tests {
         assert_eq!(d.len(), 16);
         assert!(d.iter().all(|&x| (x - 0.5).abs() < 1e-7));
         assert_eq!(scratch.k(), 16);
+    }
+
+    #[test]
+    fn mixed_width_stream_allocates_o_log() {
+        // A plan stream alternating across widths (the regression: the
+        // old scratch resized on *every* width change) must reallocate
+        // at most O(log max_k) times under the doubling policy.
+        let mut scratch = BatchScratch::default();
+        let mut rng = Xoshiro256pp::new(3);
+        let max_k = 4096usize;
+        for step in 0..10_000 {
+            let k = 1 + (rng.below(max_k as u64) as usize);
+            let a: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let d = scratch.abs_diff(&a, &b);
+            assert_eq!(d.len(), k, "step {step}");
+        }
+        let bound = (max_k as f64).log2().ceil() as u64 + 2;
+        assert!(
+            scratch.allocations() <= bound,
+            "mixed-k stream did {} allocations (bound {bound})",
+            scratch.allocations()
+        );
+        assert!(scratch.capacity() >= max_k / 2, "high-water buffer kept");
+        // reset() releases; the next call starts a fresh growth run.
+        scratch.reset();
+        assert_eq!(scratch.capacity(), 0);
+        let a = vec![1.0f32; 8];
+        assert_eq!(scratch.abs_diff(&a, &a).len(), 8);
+    }
+
+    #[test]
+    fn fill_variants_are_bit_identical() {
+        // Portable-chunked vs the dispatched kernel (SSE2 under
+        // --features simd) across widths that are not lane multiples.
+        let mut rng = Xoshiro256pp::new(21);
+        for &k in &[1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 63, 64, 65, 100] {
+            let a: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let mut d1 = vec![0.0f32; k];
+            let mut d2 = vec![0.0f32; k];
+            abs_diff_fill_portable(&mut d1, &a, &b);
+            abs_diff_fill(&mut d2, &a, &b);
+            for j in 0..k {
+                assert_eq!(d1[j].to_bits(), d2[j].to_bits(), "k={k} j={j}");
+                assert_eq!(d1[j].to_bits(), (a[j] - b[j]).abs().to_bits(), "k={k} j={j}");
+            }
+        }
     }
 }

@@ -24,7 +24,10 @@ pub mod tables;
 pub mod tail_bounds;
 
 pub use arithmetic::ArithmeticMean;
-pub use batch::{estimate_many, BatchScratch, FusedDiffEstimator};
+pub use batch::{
+    abs_diff_fill, abs_diff_fill_portable, estimate_many, BatchScratch, FusedDiffEstimator,
+    KERNEL_LANES,
+};
 pub use confidence::{ConfidenceInterval, IntervalBuilder};
 pub use efficiency::{cramer_rao_bound_factor, efficiency_curve, EstimatorKind};
 pub use fractional_power::FractionalPower;

@@ -17,7 +17,7 @@
 
 use super::batch::{BatchScratch, FusedDiffEstimator};
 use super::quantile::QuantileEstimator;
-use super::quickselect::select_kth;
+use super::quickselect::{select_kth, select_kth_f32};
 use super::{tables, ScaleEstimator};
 
 #[derive(Debug, Clone, Copy)]
@@ -121,14 +121,16 @@ impl ScaleEstimator for OptimalQuantile {
 }
 
 impl FusedDiffEstimator for OptimalQuantile {
-    /// The fused hot path: f32 abs-diff → f32 selection → one f64 pow ·
-    /// one multiply. No f64 copy, no allocation — this is what the
-    /// coordinator's TopK/Block plans run per candidate.
+    /// The fused hot path: chunked f32 abs-diff → chunked branchless
+    /// f32 selection → one f64 pow · one multiply. No f64 copy, no
+    /// allocation — this is what the coordinator's TopK/Block plans run
+    /// per candidate. Bit-identical to the scalar [`Self::estimate`]
+    /// (see `tests/kernel_equivalence.rs`).
     #[inline]
     fn estimate_diff(&self, a: &[f32], b: &[f32], scratch: &mut BatchScratch) -> f64 {
         assert_eq!(a.len(), self.k);
         let diff = scratch.abs_diff(a, b);
-        let sel = select_kth(diff, self.idx) as f64;
+        let sel = select_kth_f32(diff, self.idx) as f64;
         sel.powf(self.alpha) * self.scale
     }
 }

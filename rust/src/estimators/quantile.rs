@@ -15,7 +15,7 @@
 //! (Indyk's median estimator) and `q = 0.44` (Fama–Roll).
 
 use super::batch::{BatchScratch, FusedDiffEstimator};
-use super::quickselect::{quantile_index, select_kth};
+use super::quickselect::{quantile_index, select_kth, select_kth_f32};
 use super::ScaleEstimator;
 use crate::stable::StandardStable;
 
@@ -118,12 +118,13 @@ impl ScaleEstimator for QuantileEstimator {
 
 impl FusedDiffEstimator for QuantileEstimator {
     /// Fused q-quantile path (covers the median/Fama–Roll baselines):
-    /// f32 abs-diff → f32 selection → one f64 pow · one multiply.
+    /// chunked f32 abs-diff → chunked branchless f32 selection → one
+    /// f64 pow · one multiply.
     #[inline]
     fn estimate_diff(&self, a: &[f32], b: &[f32], scratch: &mut BatchScratch) -> f64 {
         assert_eq!(a.len(), self.k);
         let diff = scratch.abs_diff(a, b);
-        let sel = select_kth(diff, self.idx) as f64;
+        let sel = select_kth_f32(diff, self.idx) as f64;
         sel.powf(self.alpha) * self.inv_w_alpha
     }
 }

@@ -1,17 +1,31 @@
 //! Selection of the m-th smallest element — the optimal quantile
 //! estimator's entire hot path.
 //!
-//! Two implementations:
-//! * [`select_kth`] — the production path: iterative Hoare partition
+//! Three implementations:
+//! * [`select_kth`] — the scalar reference: iterative Hoare partition
 //!   with median-of-3 pivoting and an insertion-sort base case. O(n)
 //!   average, no allocation, no recursion. Generic over the element
-//!   type so the fused batch kernel ([`crate::estimators::batch`]) can
-//!   select directly over f32 sketch differences while the scalar f64
-//!   path is unchanged.
+//!   type; the f64 `ScaleEstimator::estimate` path still runs it.
+//! * [`select_kth_f32`] — the fused kernel's production path: a
+//!   chunked, branchless three-way partition over fixed-width f32
+//!   lanes. Each round counts `< pivot` / `≤ pivot` in a lane-chunked
+//!   pass (no data-dependent branches, so LLVM autovectorizes it),
+//!   then compacts the surviving side in place with a branchless
+//!   conditional-advance write. With the off-by-default `simd`
+//!   feature on x86_64 the counting/abs primitives use SSE2
+//!   intrinsics directly; [`select_kth_f32_portable`] is the chunked
+//!   path with the portable primitives, always compiled, so the two
+//!   can be compared under either build.
 //! * [`select_kth_naive`] — the paper's own baseline ("recursions and
 //!   the middle element as pivot", §3.3), kept for the Fig 4 ablation:
 //!   the paper notes its reported ~9x speedup used the *naive* variant,
 //!   so the production one should only widen the gap.
+//!
+//! All three return the *same bits* for the same input: a selection
+//! returns the m-th smallest element itself, which is unique as a
+//! value (ties are indistinguishable — this path never sees NaN, and
+//! abs-differences never produce −0.0), so any correct algorithm
+//! agrees bit-for-bit. `tests/kernel_equivalence.rs` pins this.
 
 /// Return the m-th smallest (0-based) of `data`, partially reordering it.
 /// Panics if `data` is empty or `m >= data.len()`. NaNs are not expected
@@ -89,6 +103,156 @@ fn insertion_sort<T: Copy + PartialOrd>(data: &mut [T]) {
         data[j] = v;
     }
 }
+
+/// Lane-chunk width of the branchless counting pass: wide enough that
+/// the compiler unrolls/vectorizes the inner loop, small enough that
+/// the remainder loop stays cheap at the k values serving actually
+/// uses (k is rarely a lane multiple — see `tests/kernel_equivalence`).
+pub const SELECT_CHUNK: usize = 8;
+
+/// Below this length a branchless partition round costs more than just
+/// sorting; matches the scalar path's base-case size.
+const SELECT_SMALL: usize = 12;
+
+/// Return the m-th smallest (0-based) of `data`, partially reordering
+/// it — the chunked branchless kernel described in the module docs.
+/// Bit-identical to [`select_kth`] on every NaN-free input. Panics if
+/// `data` is empty or `m >= data.len()`.
+#[inline]
+pub fn select_kth_f32(data: &mut [f32], m: usize) -> f32 {
+    select_kth_f32_impl(data, m, count_partition)
+}
+
+/// The chunked kernel with the portable (non-intrinsic) counting pass,
+/// regardless of the `simd` feature. Exposed so the equivalence tests
+/// can pit portable-chunked against the SSE2 build directly.
+pub fn select_kth_f32_portable(data: &mut [f32], m: usize) -> f32 {
+    select_kth_f32_impl(data, m, count_partition_portable)
+}
+
+#[inline]
+fn select_kth_f32_impl(
+    data: &mut [f32],
+    m: usize,
+    count: fn(&[f32], f32) -> (usize, usize),
+) -> f32 {
+    assert!(!data.is_empty() && m < data.len(), "select_kth: bad index");
+    debug_assert!(data.iter().all(|x| !x.is_nan()));
+    let mut len = data.len();
+    let mut m = m;
+    loop {
+        if len <= SELECT_SMALL {
+            let work = &mut data[..len];
+            insertion_sort(work);
+            return work[m];
+        }
+        let pivot = median_of_3(data[0], data[len / 2], data[len - 1]);
+        let (n_lt, n_le) = count(&data[..len], pivot);
+        if m < n_lt {
+            // Keep the strict-< side. The pivot itself is never kept,
+            // so `len` strictly shrinks every round.
+            let kept = compact_keep(data, len, pivot, true);
+            debug_assert_eq!(kept, n_lt);
+            len = n_lt;
+        } else if m < n_le {
+            // The answer ties the pivot: every element in [n_lt, n_le)
+            // *is* the pivot value, bit-for-bit (no NaN, no −0.0 here).
+            return pivot;
+        } else {
+            let kept = compact_keep(data, len, pivot, false);
+            debug_assert_eq!(kept, len - n_le);
+            m -= n_le;
+            len -= n_le;
+        }
+    }
+}
+
+#[inline]
+fn median_of_3(a: f32, b: f32, c: f32) -> f32 {
+    // Branch-light median: max(min(a,b), min(max(a,b), c)). f32
+    // min/max are fine here — no NaN on this path.
+    a.min(b).max(a.max(b).min(c))
+}
+
+/// Branchless in-place compaction: keep `x < pivot` (when `lt`) or
+/// `x > pivot` (when `!lt`) in `data[..returned]`, preserving order.
+/// The unconditional write + conditional advance never overwrites an
+/// unread slot because the write cursor trails the read cursor.
+#[inline]
+fn compact_keep(data: &mut [f32], len: usize, pivot: f32, lt: bool) -> usize {
+    let mut w = 0usize;
+    if lt {
+        for i in 0..len {
+            let x = data[i];
+            data[w] = x;
+            w += (x < pivot) as usize;
+        }
+    } else {
+        for i in 0..len {
+            let x = data[i];
+            data[w] = x;
+            w += (x > pivot) as usize;
+        }
+    }
+    w
+}
+
+/// Count `(#{x < pivot}, #{x ≤ pivot})` over fixed-width lane chunks —
+/// the branchless pass the partition round is built on. Portable body:
+/// comparisons become 0/1 adds that LLVM turns into vector compares.
+fn count_partition_portable(data: &[f32], pivot: f32) -> (usize, usize) {
+    let mut lt = 0usize;
+    let mut le = 0usize;
+    let mut chunks = data.chunks_exact(SELECT_CHUNK);
+    for c in &mut chunks {
+        let mut clt = 0usize;
+        let mut cle = 0usize;
+        for &x in c {
+            clt += (x < pivot) as usize;
+            cle += (x <= pivot) as usize;
+        }
+        lt += clt;
+        le += cle;
+    }
+    for &x in chunks.remainder() {
+        lt += (x < pivot) as usize;
+        le += (x <= pivot) as usize;
+    }
+    (lt, le)
+}
+
+/// SSE2 counting pass (x86_64 baseline — no runtime detection needed):
+/// 4-lane compares + movemask popcounts. Identical results to the
+/// portable pass: `_mm_cmplt_ps`/`_mm_cmple_ps` are exact IEEE
+/// compares, the same predicate per lane.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn count_partition(data: &[f32], pivot: f32) -> (usize, usize) {
+    use std::arch::x86_64::*;
+    let mut lt = 0u32;
+    let mut le = 0u32;
+    let mut chunks = data.chunks_exact(4);
+    // SAFETY: chunks_exact guarantees 4 readable f32s per chunk and
+    // unaligned loads are explicit (`loadu`). SSE2 is part of the
+    // x86_64 baseline, so no feature detection is required.
+    unsafe {
+        let pv = _mm_set1_ps(pivot);
+        for c in &mut chunks {
+            let v = _mm_loadu_ps(c.as_ptr());
+            lt += (_mm_movemask_ps(_mm_cmplt_ps(v, pv)) as u32).count_ones();
+            le += (_mm_movemask_ps(_mm_cmple_ps(v, pv)) as u32).count_ones();
+        }
+    }
+    let mut lt = lt as usize;
+    let mut le = le as usize;
+    for &x in chunks.remainder() {
+        lt += (x < pivot) as usize;
+        le += (x <= pivot) as usize;
+    }
+    (lt, le)
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+use self::count_partition_portable as count_partition;
 
 /// The paper's "naive" quick-select: recursive, middle-element pivot,
 /// three-way scan with temporary buffers. Intentionally unoptimized —
@@ -188,6 +352,44 @@ mod tests {
             let mut b64 = xs64.clone();
             assert_eq!(select_kth(&mut b32, m) as f64, select_kth(&mut b64, m));
         }
+    }
+
+    #[test]
+    fn chunked_f32_matches_scalar_reference_bitwise() {
+        let mut rng = Xoshiro256pp::new(77);
+        for trial in 0..60 {
+            let n = 1 + (rng.below(500) as usize);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).abs()).collect();
+            let m = rng.below(n as u64) as usize;
+            let scalar = select_kth(&mut xs.clone(), m);
+            let chunked = select_kth_f32(&mut xs.clone(), m);
+            let portable = select_kth_f32_portable(&mut xs.clone(), m);
+            assert_eq!(chunked.to_bits(), scalar.to_bits(), "trial {trial} n={n} m={m}");
+            assert_eq!(portable.to_bits(), scalar.to_bits(), "trial {trial} n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn chunked_f32_handles_ties_duplicates_and_tiny_inputs() {
+        // All-equal: every order statistic is the common value.
+        let mut v = vec![3.5f32; 97];
+        for m in [0usize, 48, 96] {
+            assert_eq!(select_kth_f32(&mut v.clone(), m), 3.5);
+        }
+        // Heavy ties from a tiny value alphabet.
+        let vals = [0.0f32, 1.0, 1.0, 2.0];
+        let mut rng = Xoshiro256pp::new(5);
+        for _ in 0..30 {
+            let n = 1 + (rng.below(200) as usize);
+            let xs: Vec<f32> = (0..n).map(|_| vals[rng.below(4) as usize]).collect();
+            let m = rng.below(n as u64) as usize;
+            assert_eq!(
+                select_kth_f32(&mut xs.clone(), m).to_bits(),
+                select_kth(&mut xs.clone(), m).to_bits()
+            );
+        }
+        // Single element (k = 1 serving path).
+        assert_eq!(select_kth_f32(&mut [7.25f32], 0), 7.25);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! * `sketch`      — build sketches for a (synthetic) corpus and write them out
 //! * `query`       — estimate pairwise distances from a sketch file
 //! * `serve`       — run the coordinator pipeline on a synthetic workload
+//! * `bench`       — regenerate the tracked perf baseline (BENCH_<pr>.json)
 //! * `experiment`  — regenerate one paper figure (fig1..fig7) quickly
 //! * `gen-tables`  — regenerate rust/src/estimators/tables_data.rs
 //! * `info`        — print constants for a given α (q*, W^α, bounds, k-planner)
@@ -21,6 +22,7 @@ fn main() -> Result<()> {
         Some("query") => stablesketch::cli::cmd_query(&args),
         Some("serve") => stablesketch::cli::cmd_serve(&args),
         Some("loadgen") => stablesketch::cli::cmd_loadgen(&args),
+        Some("bench") => stablesketch::cli::cmd_bench(&args),
         Some("experiment") => stablesketch::cli::cmd_experiment(&args),
         Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
         None => {
@@ -51,6 +53,9 @@ USAGE: stablesketch <subcommand> [options]
   loadgen     --connect 127.0.0.1:7878[,127.0.0.1:7879,...] [--threads 4] [--duration 10]
               [--rate 0] [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median]
               [--topk-m 10] [--block-side 8]
+  bench       perf [--smoke] [--out BENCH_6.json]
+              (fused-kernel micro + net loopback + 2-shard loadgen passes;
+              writes the tracked perf baseline — see bench/run_perf.sh)
   experiment  fig1|fig2|fig3|fig4|fig5|fig6|fig7 [--fast]
   gen-tables  [--reps 200000] [--out rust/src/estimators/tables_data.rs]
   info        --alpha 1.5 [--k 100] [--eps 0.5] [--delta 0.05]

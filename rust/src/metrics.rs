@@ -39,6 +39,12 @@ impl Gauge {
         self.v.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Overwrite with an absolute level (last-writer-wins — used for
+    /// sampled gauges like `scan_rows_per_s`).
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -146,6 +152,21 @@ pub struct PipelineMetrics {
     /// Candidates scanned by `TopK` plans (one fused estimate each);
     /// divides into the TopK estimate latency for per-candidate cost.
     pub topk_candidates_scanned: Counter,
+    /// Wall-clock latency of whole TopK/Block *scans* by estimator
+    /// kind — the complement of the per-estimate `estimate_latency`:
+    /// this is where the multi-threaded node-local scan win shows up
+    /// (a 4-thread scan quarters scan latency while per-estimate cost
+    /// is unchanged).
+    pub scan_latency: [LatencyHistogram; 4],
+    /// Candidate rows per second achieved by the most recent TopK scan
+    /// (a sampled level, not a windowed rate — cheap enough for the
+    /// per-query hot path, and loadgen snapshots it live).
+    pub scan_rows_per_s: Gauge,
+    /// Lane width of the fused kernel this build runs
+    /// ([`crate::estimators::KERNEL_LANES`]): 4 under `--features
+    /// simd` on x86_64 (SSE2), 8 on the portable chunked path. Lets a
+    /// live cluster report which kernel build it is serving with.
+    pub kernel_lanes_used: Gauge,
 
     // ---- network serving layer (server::listener) ------------------
     /// Connections admitted by the accept loop.
@@ -196,9 +217,21 @@ impl PipelineMetrics {
                 s.push_str(&format!(" | est[{label}]: {}", h.summary()));
             }
         }
+        for (label, h) in KIND_LABELS.iter().zip(&self.scan_latency) {
+            if h.count() > 0 {
+                s.push_str(&format!(" | scan[{label}]: {}", h.summary()));
+            }
+        }
         let scanned = self.topk_candidates_scanned.get();
         if scanned > 0 {
             s.push_str(&format!(" | topk candidates scanned: {scanned}"));
+        }
+        let rps = self.scan_rows_per_s.get();
+        if rps > 0 {
+            s.push_str(&format!(
+                " | scan: {rps} rows/s ({} lanes)",
+                self.kernel_lanes_used.get()
+            ));
         }
         if self.connections_opened.get() > 0 || self.connections_rejected.get() > 0 {
             s.push_str(&format!(
@@ -248,6 +281,26 @@ impl PipelineMetrics {
             ("net_overload_replies", self.net_overload_replies.get()),
             ("shard_adoptions", self.shard_adoptions.get()),
             ("net_wrong_epoch_replies", self.net_wrong_epoch_replies.get()),
+            (
+                "scan_rows_per_s",
+                self.scan_rows_per_s.get().max(0) as u64,
+            ),
+            (
+                "kernel_lanes_used",
+                self.kernel_lanes_used.get().max(0) as u64,
+            ),
+            ("scan_oq_p50_ns", self.scan_latency[0].quantile_ns(0.50)),
+            ("scan_oq_p95_ns", self.scan_latency[0].quantile_ns(0.95)),
+            ("scan_oq_p99_ns", self.scan_latency[0].quantile_ns(0.99)),
+            ("scan_gm_p50_ns", self.scan_latency[1].quantile_ns(0.50)),
+            ("scan_gm_p95_ns", self.scan_latency[1].quantile_ns(0.95)),
+            ("scan_gm_p99_ns", self.scan_latency[1].quantile_ns(0.99)),
+            ("scan_fp_p50_ns", self.scan_latency[2].quantile_ns(0.50)),
+            ("scan_fp_p95_ns", self.scan_latency[2].quantile_ns(0.95)),
+            ("scan_fp_p99_ns", self.scan_latency[2].quantile_ns(0.99)),
+            ("scan_median_p50_ns", self.scan_latency[3].quantile_ns(0.50)),
+            ("scan_median_p95_ns", self.scan_latency[3].quantile_ns(0.95)),
+            ("scan_median_p99_ns", self.scan_latency[3].quantile_ns(0.99)),
         ]
     }
 }
@@ -485,6 +538,26 @@ mod tests {
         assert!(r.contains("est[oq]"), "{r}");
         assert!(!r.contains("est[gm]"), "{r}");
         assert!(r.contains("topk candidates scanned: 42"), "{r}");
+    }
+
+    #[test]
+    fn scan_metrics_surface_in_report_and_stats() {
+        let m = PipelineMetrics::default();
+        assert!(!m.report().contains("scan["));
+        assert!(!m.report().contains("rows/s"));
+        m.scan_latency[0].record_ns(2_000_000);
+        m.scan_rows_per_s.set(1_500_000);
+        m.kernel_lanes_used.set(8);
+        let r = m.report();
+        assert!(r.contains("scan[oq]"), "{r}");
+        assert!(!r.contains("scan[gm]"), "{r}");
+        assert!(r.contains("scan: 1500000 rows/s (8 lanes)"), "{r}");
+        let entries = m.stat_entries();
+        let get = |label: &str| entries.iter().find(|(l, _)| *l == label).unwrap().1;
+        assert_eq!(get("scan_rows_per_s"), 1_500_000);
+        assert_eq!(get("kernel_lanes_used"), 8);
+        assert!(get("scan_oq_p50_ns") >= 2_000_000);
+        assert_eq!(get("scan_gm_p50_ns"), 0);
     }
 
     #[test]

@@ -102,13 +102,21 @@ pub struct LoadgenReport {
     pub reconnects: u64,
     pub elapsed: Duration,
     pub latency: Arc<LatencyHistogram>,
+    /// Server-side `scan_rows_per_s` gauge sampled from the first
+    /// node's `Stats` frame after the run — the live view of the
+    /// multi-threaded scan speedup (None: older/foreign server, or the
+    /// post-run probe failed; never fatal to the run itself).
+    pub server_scan_rows_per_s: Option<u64>,
+    /// Server-side `kernel_lanes_used` gauge (which fused-kernel build
+    /// the node is serving with), sampled the same way.
+    pub server_kernel_lanes: Option<u64>,
 }
 
 impl LoadgenReport {
     /// Human-readable one-run summary: throughput + latency quantiles.
     pub fn summary(&self) -> String {
         let secs = self.elapsed.as_secs_f64().max(1e-9);
-        format!(
+        let mut s = format!(
             "loadgen: {} sent ({:.0} qps), {} ok, {} overloaded, {} errors, {} reconnects \
              in {:.2}s | latency: {}",
             self.sent,
@@ -119,7 +127,14 @@ impl LoadgenReport {
             self.reconnects,
             secs,
             self.latency.summary(),
-        )
+        );
+        if let Some(rps) = self.server_scan_rows_per_s {
+            s.push_str(&format!(" | server scan: {rps} rows/s"));
+            if let Some(lanes) = self.server_kernel_lanes {
+                s.push_str(&format!(" ({lanes} lanes)"));
+            }
+        }
+        s
     }
 }
 
@@ -423,13 +438,27 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
     for h in handles {
         let _ = h.join();
     }
+    let elapsed = t0.elapsed();
+    // Best-effort post-run probe of the first node's scan gauges so
+    // the report shows the *server-side* scan rate and kernel build,
+    // not just client-observed latency. Absence (older server, probe
+    // failure) is not an error — the run itself already finished.
+    let (server_scan_rows_per_s, server_kernel_lanes) = match dial(&addrs[0]) {
+        Ok(mut probe) => (
+            probe.stat("scan_rows_per_s").ok().flatten(),
+            probe.stat("kernel_lanes_used").ok().flatten(),
+        ),
+        Err(_) => (None, None),
+    };
     Ok(LoadgenReport {
         sent: sent.load(Ordering::Relaxed),
         ok: ok.load(Ordering::Relaxed),
         overloaded: overloaded.load(Ordering::Relaxed),
         errors: errors.load(Ordering::Relaxed),
         reconnects: reconnects.load(Ordering::Relaxed),
-        elapsed: t0.elapsed(),
+        elapsed,
         latency,
+        server_scan_rows_per_s,
+        server_kernel_lanes,
     })
 }

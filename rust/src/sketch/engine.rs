@@ -64,9 +64,11 @@ impl SketchStore {
     // ---- batched fused estimation over the store -------------------
     //
     // The shared scan loops under both the `SketchEngine` convenience
-    // APIs and the coordinator's `Block` execution (the coordinator's
-    // `TopK` streams a bounded selection instead of materializing all
-    // distances, so it has its own loop). Self-pairs are exactly zero.
+    // APIs and the coordinator's `TopK`/`Block` execution. Self-pairs
+    // are exactly zero. Index sets are validated once up front — the
+    // inner loops run branchless (no per-candidate asserts); the panic
+    // messages are pinned by a regression test in
+    // `tests/kernel_equivalence.rs`.
 
     /// Row-vs-many: distances from row `i` to each candidate, in
     /// order, pushed onto `out` (cleared first).
@@ -80,12 +82,16 @@ impl SketchStore {
     ) where
         E: FusedDiffEstimator + ?Sized,
         I: IntoIterator<Item = usize>,
+        I::IntoIter: Clone,
     {
         assert!(i < self.n, "row {i} out of range (n={})", self.n);
+        let candidates = candidates.into_iter();
+        for j in candidates.clone() {
+            assert!(j < self.n, "candidate {j} out of range (n={})", self.n);
+        }
         out.clear();
         let anchor = self.row(i);
         for j in candidates {
-            assert!(j < self.n, "candidate {j} out of range (n={})", self.n);
             out.push(if i == j {
                 0.0
             } else {
@@ -106,14 +112,213 @@ impl SketchStore {
     ) where
         E: FusedDiffEstimator + ?Sized,
         IR: IntoIterator<Item = usize>,
-        IC: IntoIterator<Item = usize> + Clone,
+        IR::IntoIter: Clone,
+        IC: IntoIterator<Item = usize>,
+        IC::IntoIter: Clone,
     {
+        let rows = rows.into_iter();
+        let cols = cols.into_iter();
+        for r in rows.clone() {
+            assert!(r < self.n, "row {r} out of range (n={})", self.n);
+        }
+        for c in cols.clone() {
+            assert!(c < self.n, "col {c} out of range (n={})", self.n);
+        }
         out.clear();
         for r in rows {
-            assert!(r < self.n, "row {r} out of range (n={})", self.n);
             let anchor = self.row(r);
             for c in cols.clone() {
-                assert!(c < self.n, "col {c} out of range (n={})", self.n);
+                out.push(if r == c {
+                    0.0
+                } else {
+                    est.estimate_diff(anchor, self.row(c), scratch)
+                });
+            }
+        }
+    }
+
+    // ---- multi-threaded node-local scans ---------------------------
+    //
+    // One worker's TopK/Block scan split across a small in-node thread
+    // set (std scoped threads — the crate stays std-only). Sub-scans
+    // cover disjoint contiguous row sub-ranges and merge by the
+    // existing `(distance, row)` `total_cmp` order, which is exactly
+    // the order the sequential bounded insertion produces — so results
+    // are bit-identical to the sequential scan and to the single-node
+    // cluster contract in `replication_e2e`, for every thread count.
+
+    /// Minimum candidate rows in a TopK scan before it fans out across
+    /// threads — below this, spawn/join overhead beats the win.
+    pub const PAR_MIN_ROWS: usize = 4096;
+    /// Minimum cells in a Block scan before it fans out.
+    pub const PAR_MIN_CELLS: usize = 4096;
+
+    /// Streaming bounded TopK over `range ∩ [0, n)` excluding the
+    /// anchor `i` itself: the `m` nearest rows as ascending
+    /// `(distance, row)` pairs, plus how many candidates were scanned.
+    /// With `threads > 1` and a large enough range the scan fans out
+    /// over contiguous sub-ranges (each sub-scan has its own scratch)
+    /// and partial top-m lists merge by `(distance, row)`; the result
+    /// is bit-identical to `threads == 1` by construction — both
+    /// compute the lexicographically m smallest `(distance, row)`
+    /// pairs, and distances here are never NaN or −0.0 so `total_cmp`
+    /// agrees with the insertion order.
+    pub fn top_m_scan<E>(
+        &self,
+        est: &E,
+        i: usize,
+        range: std::ops::Range<usize>,
+        m: usize,
+        threads: usize,
+        scratch: &mut BatchScratch,
+    ) -> (Vec<(u32, f64)>, u64)
+    where
+        E: FusedDiffEstimator + Sync + ?Sized,
+    {
+        assert!(i < self.n, "row {i} out of range (n={})", self.n);
+        let lo = range.start.min(self.n);
+        let hi = range.end.min(self.n).max(lo);
+        let candidates = (hi - lo).saturating_sub(usize::from(lo <= i && i < hi));
+        let m = m.min(candidates);
+        // Each sub-range should amortize a thread spawn; shrink the
+        // fan-out rather than slicing a small scan thinly.
+        let t = threads.clamp(1, ((hi - lo) / Self::PAR_MIN_ROWS).max(1));
+        if t == 1 {
+            let mut best = Vec::with_capacity(m + 1);
+            let scanned = self.top_m_range(est, i, lo, hi, m, scratch, &mut best);
+            return (best, scanned);
+        }
+        let mut partials: Vec<(Vec<(u32, f64)>, u64)> = Vec::with_capacity(t);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..t)
+                .map(|b| {
+                    let blo = lo + (hi - lo) * b / t;
+                    let bhi = lo + (hi - lo) * (b + 1) / t;
+                    s.spawn(move || {
+                        let mut scratch = BatchScratch::new(self.k);
+                        let mut best = Vec::with_capacity(m + 1);
+                        let scanned =
+                            self.top_m_range(est, i, blo, bhi, m, &mut scratch, &mut best);
+                        (best, scanned)
+                    })
+                })
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("scan sub-thread panicked"));
+            }
+        });
+        let mut scanned = 0u64;
+        let mut merged: Vec<(u32, f64)> = Vec::with_capacity(t * m);
+        for (best, sc) in partials {
+            scanned += sc;
+            merged.extend(best);
+        }
+        merged.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        merged.truncate(m);
+        (merged, scanned)
+    }
+
+    /// The sequential bounded-insertion sub-scan: ascending `(distance,
+    /// row)` keeps insertion stable and drops boundary ties, so `best`
+    /// ends up holding exactly the lexicographically m smallest pairs
+    /// of the sub-range. (Insertion beats a heap for the small m of
+    /// kNN serving, and the reply comes out already ordered.)
+    fn top_m_range<E>(
+        &self,
+        est: &E,
+        i: usize,
+        lo: usize,
+        hi: usize,
+        m: usize,
+        scratch: &mut BatchScratch,
+        best: &mut Vec<(u32, f64)>,
+    ) -> u64
+    where
+        E: FusedDiffEstimator + ?Sized,
+    {
+        let anchor = self.row(i);
+        let mut scanned = 0u64;
+        for j in lo..hi {
+            if j == i {
+                continue;
+            }
+            let d = est.estimate_diff(anchor, self.row(j), scratch);
+            scanned += 1;
+            let worst = best.last().map_or(f64::INFINITY, |&(_, w)| w);
+            if best.len() < m || d < worst {
+                let pos = best.partition_point(|&(_, w)| w <= d);
+                best.insert(pos, (j as u32, d));
+                if best.len() > m {
+                    best.pop();
+                }
+            }
+        }
+        scanned
+    }
+
+    /// `estimate_block` specialized to the serving path (u32 index
+    /// sets, validated once up front) with optional row-band fan-out:
+    /// bands are contiguous slices of `rows` computed by independent
+    /// threads and concatenated in order, so the row-major output is
+    /// bit-identical to the sequential loop for every thread count.
+    pub fn estimate_block_par<E>(
+        &self,
+        est: &E,
+        rows: &[u32],
+        cols: &[u32],
+        threads: usize,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<f64>,
+    ) where
+        E: FusedDiffEstimator + Sync + ?Sized,
+    {
+        for &r in rows {
+            assert!((r as usize) < self.n, "row {r} out of range (n={})", self.n);
+        }
+        for &c in cols {
+            assert!((c as usize) < self.n, "col {c} out of range (n={})", self.n);
+        }
+        out.clear();
+        let cells = rows.len() * cols.len();
+        let t = threads.clamp(1, (cells / Self::PAR_MIN_CELLS).max(1)).min(rows.len().max(1));
+        if t == 1 {
+            self.block_band(est, rows, cols, scratch, out);
+            return;
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..t)
+                .map(|b| {
+                    let band = &rows[rows.len() * b / t..rows.len() * (b + 1) / t];
+                    s.spawn(move || {
+                        let mut scratch = BatchScratch::new(self.k);
+                        let mut part = Vec::with_capacity(band.len() * cols.len());
+                        self.block_band(est, band, cols, &mut scratch, &mut part);
+                        part
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.extend(h.join().expect("scan sub-thread panicked"));
+            }
+        });
+    }
+
+    /// One row band of a block scan (indices already validated).
+    fn block_band<E>(
+        &self,
+        est: &E,
+        band: &[u32],
+        cols: &[u32],
+        scratch: &mut BatchScratch,
+        out: &mut Vec<f64>,
+    ) where
+        E: FusedDiffEstimator + ?Sized,
+    {
+        for &r in band {
+            let r = r as usize;
+            let anchor = self.row(r);
+            for &c in cols {
+                let c = c as usize;
                 out.push(if r == c {
                     0.0
                 } else {

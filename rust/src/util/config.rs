@@ -26,6 +26,11 @@ pub struct PipelineConfig {
     pub batch_deadline_us: u64,
     /// Bounded queue depth per shard (backpressure).
     pub queue_depth: usize,
+    /// In-node threads for one worker's TopK/Block scan (0 = auto:
+    /// min(4, available cores); 1 = always sequential). Results are
+    /// bit-identical at every setting — the parallel merge preserves
+    /// `(distance, row)` order exactly.
+    pub scan_threads: usize,
     /// Use the PJRT artifact path for projections when available.
     pub use_pjrt: bool,
     /// Directory of AOT artifacts.
@@ -43,6 +48,7 @@ impl Default for PipelineConfig {
             max_batch: 64,
             batch_deadline_us: 200,
             queue_depth: 1024,
+            scan_threads: 0,
             use_pjrt: false,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -77,6 +83,9 @@ impl PipelineConfig {
                 "queue_depth" => {
                     cfg.queue_depth = val.as_usize().context("queue_depth: integer")?
                 }
+                "scan_threads" => {
+                    cfg.scan_threads = val.as_usize().context("scan_threads: integer")?
+                }
                 "use_pjrt" => cfg.use_pjrt = val.as_bool().context("use_pjrt: bool")?,
                 "artifacts_dir" => {
                     cfg.artifacts_dir = val.as_str().context("artifacts_dir: string")?.into()
@@ -97,6 +106,7 @@ impl PipelineConfig {
         self.shards = args.usize_or("shards", self.shards)?;
         self.max_batch = args.usize_or("max-batch", self.max_batch)?;
         self.queue_depth = args.usize_or("queue-depth", self.queue_depth)?;
+        self.scan_threads = args.usize_or("scan-threads", self.scan_threads)?;
         if args.flag("pjrt") {
             self.use_pjrt = true;
         }
@@ -117,6 +127,9 @@ impl PipelineConfig {
         if self.dim == 0 || self.shards == 0 || self.max_batch == 0 || self.queue_depth == 0 {
             bail!("dim/shards/max_batch/queue_depth must be positive");
         }
+        if self.scan_threads > 256 {
+            bail!("scan_threads must be <= 256 (0 = auto), got {}", self.scan_threads);
+        }
         Ok(())
     }
 
@@ -130,6 +143,7 @@ impl PipelineConfig {
             ("max_batch", Json::num(self.max_batch as f64)),
             ("batch_deadline_us", Json::num(self.batch_deadline_us as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("scan_threads", Json::num(self.scan_threads as f64)),
             ("use_pjrt", Json::Bool(self.use_pjrt)),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
         ])

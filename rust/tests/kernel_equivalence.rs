@@ -1,0 +1,281 @@
+//! Kernel-equivalence property tests: every path that claims to be
+//! bit-identical is pinned here, and CI runs this file under both the
+//! default build and `--features simd`.
+//!
+//! * the chunked branchless f32 selection (and its always-portable
+//!   variant) against the scalar Hoare reference, over adversarial
+//!   inputs and k values that are never lane multiples;
+//! * the fused abs-diff-select estimate against the scalar f64
+//!   reference for all four estimator kinds;
+//! * one worker's parallel TopK/Block scans against the sequential
+//!   loops, for every thread count;
+//! * the hoisted bounds-validation panic messages — validation moved
+//!   out of the hot loops, but the message text is a compatibility
+//!   surface and must not drift.
+//!
+//! Why bitwise equality is the right bar: a selection returns the m-th
+//! smallest *value* (ties are indistinguishable, this path never sees
+//! NaN, and abs-differences never produce −0.0), f32 → f64 widening is
+//! exact and monotone, and the post-selection arithmetic is the same
+//! instruction sequence on every path.
+
+use stablesketch::estimators::quickselect::{
+    select_kth, select_kth_f32, select_kth_f32_portable,
+};
+use stablesketch::estimators::{
+    BatchScratch, FractionalPower, FusedDiffEstimator, GeometricMean, OptimalQuantile,
+    QuantileEstimator, ScaleEstimator,
+};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::sketch::SketchStore;
+
+/// The k grid: never lane-aligned on purpose (lane widths are 4 and 8),
+/// plus the lane multiples themselves and the two extremes.
+const K_GRID: [usize; 7] = [1, 2, 7, 8, 15, 64, 1000];
+
+/// Adversarial nonnegative inputs for the selection kernel: random,
+/// all-equal, tiny-alphabet ties, denormals, and pre-sorted runs.
+fn adversarial_inputs(rng: &mut Xoshiro256pp, n: usize) -> Vec<Vec<f32>> {
+    let mut cases: Vec<Vec<f32>> = Vec::new();
+    cases.push((0..n).map(|_| (rng.normal() as f32).abs()).collect());
+    cases.push(vec![1.25f32; n]);
+    let vals = [0.0f32, 0.5, 0.5, 2.0];
+    cases.push((0..n).map(|_| vals[rng.below(4) as usize]).collect());
+    cases.push(
+        (0..n)
+            .map(|i| {
+                if i % 3 == 0 {
+                    1.0e-42f32 // denormal
+                } else {
+                    (rng.normal() as f32).abs()
+                }
+            })
+            .collect(),
+    );
+    let mut asc: Vec<f32> = (0..n).map(|i| (i / 3) as f32 * 0.5).collect();
+    cases.push(asc.clone());
+    asc.reverse();
+    cases.push(asc);
+    cases
+}
+
+#[test]
+fn chunked_and_portable_select_match_scalar_bitwise() {
+    let mut rng = Xoshiro256pp::new(0xC0DE);
+    for &k in &K_GRID {
+        for (case, xs) in adversarial_inputs(&mut rng, k).into_iter().enumerate() {
+            for m in [0, k / 3, k / 2, k - 1] {
+                let scalar = select_kth(&mut xs.clone(), m);
+                let chunked = select_kth_f32(&mut xs.clone(), m);
+                let portable = select_kth_f32_portable(&mut xs.clone(), m);
+                assert_eq!(
+                    chunked.to_bits(),
+                    scalar.to_bits(),
+                    "chunked k={k} m={m} case={case}"
+                );
+                assert_eq!(
+                    portable.to_bits(),
+                    scalar.to_bits(),
+                    "portable k={k} m={m} case={case}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_estimates_match_scalar_reference_bitwise_for_every_kind() {
+    let mut rng = Xoshiro256pp::new(0xFACE);
+    // k >= 2: all four kinds (oq/gm/fp assert k >= 2).
+    for &k in &K_GRID[1..] {
+        let ests: Vec<Box<dyn FusedDiffEstimator>> = vec![
+            Box::new(OptimalQuantile::new(1.0, k)),
+            Box::new(GeometricMean::new(1.3, k)),
+            Box::new(FractionalPower::new(0.7, k)),
+            Box::new(QuantileEstimator::median(1.0, k)),
+        ];
+        let mut scratch = BatchScratch::default();
+        for case in 0..3usize {
+            let (a, b): (Vec<f32>, Vec<f32>) = match case {
+                // Random rows.
+                0 => (
+                    (0..k).map(|_| rng.normal() as f32).collect(),
+                    (0..k).map(|_| rng.normal() as f32).collect(),
+                ),
+                // All diffs exactly equal (maximal ties in selection).
+                1 => {
+                    let a: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+                    let b = a.iter().map(|x| x - 1.0).collect();
+                    (a, b)
+                }
+                // Denormal diffs.
+                _ => (
+                    (0..k).map(|i| (i as f32 + 1.0) * 1.0e-42).collect(),
+                    vec![0.0f32; k],
+                ),
+            };
+            for est in &ests {
+                let mut buf: Vec<f64> =
+                    a.iter().zip(&b).map(|(x, y)| (x - y) as f64).collect();
+                let scalar = est.estimate(&mut buf);
+                let fused = est.estimate_diff(&a, &b, &mut scratch);
+                assert_eq!(
+                    fused.to_bits(),
+                    scalar.to_bits(),
+                    "{} k={k} case={case}: fused {fused} vs scalar {scalar}",
+                    est.name()
+                );
+            }
+        }
+    }
+    // k = 1 has no oq/gm/fp, but the quantile baseline (and thus the
+    // raw kernel) still serves it.
+    let est = QuantileEstimator::median(1.0, 1);
+    let mut scratch = BatchScratch::default();
+    let (a, b) = (vec![0.75f32], vec![-0.5f32]);
+    let mut buf = vec![(a[0] - b[0]) as f64];
+    assert_eq!(
+        est.estimate_diff(&a, &b, &mut scratch).to_bits(),
+        est.estimate(&mut buf).to_bits()
+    );
+}
+
+/// A store with deterministic random rows. Every 997th row is a copy of
+/// row 0, planting exact distance ties *across* the parallel scan's
+/// sub-range boundaries — the merge must break them by row index
+/// exactly like sequential insertion does.
+fn filled_store(n: usize, k: usize, seed: u64) -> SketchStore {
+    let mut store = SketchStore::zeros(n, k, 1.0, seed);
+    let mut rng = Xoshiro256pp::new(seed);
+    for i in 0..n {
+        for x in store.row_mut(i) {
+            *x = rng.normal() as f32;
+        }
+    }
+    if n > 997 {
+        let r0: Vec<f32> = store.row(0).to_vec();
+        for j in (997..n).step_by(997) {
+            store.row_mut(j).copy_from_slice(&r0);
+        }
+    }
+    store
+}
+
+#[test]
+fn parallel_topk_scan_is_bit_identical_to_sequential() {
+    let (n, k, m) = (20_000usize, 32usize, 25usize);
+    let store = filled_store(n, k, 0x5CA9);
+    let est = OptimalQuantile::new(1.0, k);
+    let mut scratch = BatchScratch::new(k);
+    for range in [0..n, 1_000..n - 1_000, 0..0] {
+        let (seq, seq_scanned) = store.top_m_scan(&est, 7, range.clone(), m, 1, &mut scratch);
+        for threads in [2usize, 3, 4, 8] {
+            let (par, par_scanned) =
+                store.top_m_scan(&est, 7, range.clone(), m, threads, &mut scratch);
+            assert_eq!(par_scanned, seq_scanned, "threads={threads} range={range:?}");
+            assert_eq!(par.len(), seq.len(), "threads={threads} range={range:?}");
+            for (t, (p, s)) in par.iter().zip(&seq).enumerate() {
+                assert_eq!(p.0, s.0, "threads={threads} range={range:?} slot {t}");
+                assert_eq!(
+                    p.1.to_bits(),
+                    s.1.to_bits(),
+                    "threads={threads} range={range:?} slot {t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_block_scan_is_bit_identical_to_sequential() {
+    let (n, k) = (2_048usize, 16usize);
+    let store = filled_store(n, k, 0xB10C);
+    let est = OptimalQuantile::new(1.2, k);
+    let mut rng = Xoshiro256pp::new(9);
+    let rows: Vec<u32> = (0..256).map(|_| rng.below(n as u64) as u32).collect();
+    let cols: Vec<u32> = (0..64).map(|_| rng.below(n as u64) as u32).collect();
+    let mut scratch = BatchScratch::new(k);
+    let mut seq = Vec::new();
+    store.estimate_block_par(&est, &rows, &cols, 1, &mut scratch, &mut seq);
+    assert_eq!(seq.len(), rows.len() * cols.len());
+    for threads in [2usize, 4, 7] {
+        let mut par = Vec::new();
+        store.estimate_block_par(&est, &rows, &cols, threads, &mut scratch, &mut par);
+        assert_eq!(par.len(), seq.len(), "threads={threads}");
+        for (t, (p, s)) in par.iter().zip(&seq).enumerate() {
+            assert_eq!(p.to_bits(), s.to_bits(), "threads={threads} cell {t}");
+        }
+    }
+}
+
+// ---- hoisted-validation panic messages (regression) ------------------
+//
+// PR 6 moved the per-candidate bounds asserts out of the scan inner
+// loops into one up-front validation pass. Out-of-range indices must
+// still panic, with the *same* messages as before.
+
+fn tiny_store() -> (SketchStore, OptimalQuantile) {
+    (filled_store(8, 4, 1), OptimalQuantile::new(1.0, 4))
+}
+
+#[test]
+#[should_panic(expected = "row 42 out of range (n=8)")]
+fn row_vs_many_still_rejects_out_of_range_anchor() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    let mut out = Vec::new();
+    store.estimate_row_vs_many(&est, 42, vec![0usize, 1], &mut scratch, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "candidate 9 out of range (n=8)")]
+fn row_vs_many_still_rejects_out_of_range_candidate() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    let mut out = Vec::new();
+    store.estimate_row_vs_many(&est, 0, vec![1usize, 9], &mut scratch, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "row 9 out of range (n=8)")]
+fn block_still_rejects_out_of_range_row() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    let mut out = Vec::new();
+    store.estimate_block(&est, vec![9usize], vec![0usize, 1], &mut scratch, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "col 9 out of range (n=8)")]
+fn block_still_rejects_out_of_range_col() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    let mut out = Vec::new();
+    store.estimate_block(&est, vec![0usize, 1], vec![9usize], &mut scratch, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "row 9 out of range (n=8)")]
+fn parallel_block_still_rejects_out_of_range_row() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    let mut out = Vec::new();
+    store.estimate_block_par(&est, &[9u32], &[0u32, 1], 4, &mut scratch, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "col 9 out of range (n=8)")]
+fn parallel_block_still_rejects_out_of_range_col() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    let mut out = Vec::new();
+    store.estimate_block_par(&est, &[0u32, 1], &[9u32], 4, &mut scratch, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "row 42 out of range (n=8)")]
+fn topk_scan_still_rejects_out_of_range_anchor() {
+    let (store, est) = tiny_store();
+    let mut scratch = BatchScratch::new(4);
+    store.top_m_scan(&est, 42, 0..8, 3, 1, &mut scratch);
+}
