@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Regenerate the tracked perf baseline (BENCH_6.json at the repo root).
+# Regenerate the tracked perf baseline (BENCH_7.json at the repo root).
 #
 # Builds the release binary and runs the `bench perf` harness: fused-
 # kernel micro benches, a framed-protocol loopback pass, and a short
@@ -10,11 +10,11 @@
 #   SMOKE=1              tiny sizes (CI smoke job)
 #   FEATURES="simd"      build with the SSE2 kernel (results stay
 #                        bit-identical; only the timings move)
-#   OUT=path.json        output path (default BENCH_6.json)
+#   OUT=path.json        output path (default BENCH_7.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-OUT="${OUT:-BENCH_6.json}"
+OUT="${OUT:-BENCH_7.json}"
 FEATURES="${FEATURES:-}"
 ARGS=(bench perf --out "$OUT")
 if [ "${SMOKE:-0}" = "1" ]; then

@@ -256,6 +256,7 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
     let listen = args.req("listen")?.to_string();
     let duration = args.u64_or("duration", 0)?;
     let stats_every = args.u64_or("stats-every", 10)?.max(1);
+    let metrics_dump = args.get("metrics-dump").map(|s| s.to_string());
     let max_connections = args.usize_or("max-conns", 64)?;
     let shard = match args.get("shard") {
         Some(s) => Some(
@@ -303,6 +304,15 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(Duration::from_secs(tick));
         println!("{}", coord.metrics().report());
+        // Periodic Prometheus text dump: a file a scraper (or a human
+        // with `watch cat`) can read without speaking the wire
+        // protocol. Rewritten whole each tick; failure is reported but
+        // never stops serving.
+        if let Some(path) = &metrics_dump {
+            if let Err(e) = std::fs::write(path, coord.metrics().metrics_text()) {
+                eprintln!("metrics dump to {path} failed: {e}");
+            }
+        }
         if duration > 0 && t0.elapsed() >= Duration::from_secs(duration) {
             break;
         }
@@ -319,6 +329,13 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
     if addrs.is_empty() {
         bail!("--connect needs at least one address");
     }
+    if args.flag("watch") {
+        // Live dashboard mode: no queries, just poll every node's
+        // `Stats` frame until the process is killed.
+        println!("watching {} node(s); ctrl-c to stop", addrs.len());
+        crate::server::loadgen::watch_grid(&addrs, None, Duration::from_secs(1));
+        return Ok(());
+    }
     if addrs.len() > 1 {
         return cmd_query_cluster(args, &addrs);
     }
@@ -330,6 +347,12 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
     println!("connected to {addr} (rtt {:.1?}, store_n {n})", rtt);
     if n == 0 {
         bail!("server reports an empty store");
+    }
+    let traces = args.flag("traces");
+    if traces {
+        // Stamp this invocation's queries with one trace id so they
+        // land in the server's trace ring for the dump below.
+        client.set_trace(crate::trace::next_trace_id());
     }
     let i = args.usize_or("i", 0)? as u32;
     let j = args.usize_or("j", 1)? as u32;
@@ -343,6 +366,18 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
     let near = client.top_k(i, m, QueryKind::Oq).context("topk query")?;
     let pretty: Vec<String> = near.iter().map(|(j, d)| format!("{j} ({d:.4})")).collect();
     println!("nearest to {i} by oq estimate: {}", pretty.join(", "));
+    if traces {
+        client.set_trace(0);
+        let (recent, slow) = client.trace_dump().context("trace dump")?;
+        println!("recent traces on {addr} ({}):", recent.len());
+        for r in &recent {
+            println!("  {}", r.render());
+        }
+        println!("slow-query log on {addr} ({}):", slow.len());
+        for r in &slow {
+            println!("  {}", r.render());
+        }
+    }
     Ok(())
 }
 
@@ -406,7 +441,22 @@ fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
         println!("{:<6} d_(α)({i},{j}) = {d:.6}", kind.label());
     }
     let m = args.usize_or("topk-m", 5)?;
-    let near = cluster.top_k(i, m, QueryKind::Oq).context("scatter-gather topk")?;
+    let near = if args.flag("traces") {
+        // Traced scatter-gather: one stitched trace covering every
+        // shard's sub-plan (failover retries included), with the
+        // server-side stage spans harvested over the `TraceDump` frame.
+        let plan = vec![Query::TopK { i, m, kind: QueryKind::Oq }];
+        let (mut replies, trace) = cluster
+            .query_plan_traced(&plan)
+            .map_err(|e| anyhow::anyhow!("traced scatter-gather topk failed: {e}"))?;
+        println!("{}", trace.render());
+        match replies.pop() {
+            Some(Reply::TopK(v)) => v,
+            _ => bail!("unexpected reply shape for traced topk"),
+        }
+    } else {
+        cluster.top_k(i, m, QueryKind::Oq).context("scatter-gather topk")?
+    };
     let pretty: Vec<String> = near.iter().map(|(j, d)| format!("{j} ({d:.4})")).collect();
     println!("nearest to {i} by oq estimate (merged across shards): {}", pretty.join(", "));
     println!("{}", cluster.metrics().report());
@@ -440,6 +490,7 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
         topk_m: args.usize_or("topk-m", 10)?,
         block_side: args.usize_or("block-side", 8)?,
         seed: args.u64_or("seed", 0x10AD)?,
+        watch: args.flag("watch"),
     };
     println!(
         "loadgen: {} threads, {} against {} ({:?}/{:?})",
@@ -679,6 +730,17 @@ fn bench_net(smoke: bool, seed: u64) -> Result<Vec<PerfRow>> {
         let j = rng.below(n as u64) as u32;
         client.pair(i, j, QueryKind::Oq).expect("loopback pair")
     }));
+    // Same round trip with a trace id stamped on every query frame —
+    // the ratio against the untraced row above is the whole-path trace
+    // overhead (span clocks + ring write), tracked in the derived
+    // section of the baseline JSON.
+    rows.push(measure_op("net_pair_rtt_traced", wu, iters, || {
+        client.set_trace(crate::trace::next_trace_id());
+        let i = rng.below(n as u64) as u32;
+        let j = rng.below(n as u64) as u32;
+        client.pair(i, j, QueryKind::Oq).expect("traced loopback pair")
+    }));
+    client.set_trace(0);
     let topk_iters = if smoke { 60 } else { 400 };
     rows.push(measure_op("net_topk_m10", 10, topk_iters, || {
         let i = rng.below(n as u64) as u32;
@@ -729,6 +791,7 @@ fn bench_loadgen(smoke: bool, seed: u64) -> Result<(PerfRow, Json)> {
         topk_m: 10,
         block_side: 4,
         seed,
+        watch: false,
     };
     let report = crate::server::loadgen::run(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
     for server in servers {
@@ -749,6 +812,21 @@ fn bench_loadgen(smoke: bool, seed: u64) -> Result<(PerfRow, Json)> {
         Some(v) => Json::num(v as f64),
         None => Json::Null,
     };
+    // Per-kind server-side scan quantiles (the mixed workload scans
+    // with one kind, so typically a single entry) ride into the
+    // baseline JSON alongside the scan gauges.
+    let scan_quantiles: Vec<(&str, Json)> = report
+        .server_scan_quantiles
+        .iter()
+        .map(|(kind, [p50, p95, p99])| {
+            let obj = Json::obj(vec![
+                ("p50_ns", Json::num(*p50 as f64)),
+                ("p95_ns", Json::num(*p95 as f64)),
+                ("p99_ns", Json::num(*p99 as f64)),
+            ]);
+            (*kind, obj)
+        })
+        .collect();
     let detail = Json::obj(vec![
         ("sent", Json::num(report.sent as f64)),
         ("ok", Json::num(report.ok as f64)),
@@ -756,6 +834,7 @@ fn bench_loadgen(smoke: bool, seed: u64) -> Result<(PerfRow, Json)> {
         ("errors", Json::num(report.errors as f64)),
         ("server_scan_rows_per_s", opt_num(report.server_scan_rows_per_s)),
         ("server_kernel_lanes", opt_num(report.server_kernel_lanes)),
+        ("server_scan_quantiles", Json::obj(scan_quantiles)),
     ]);
     Ok((row, detail))
 }
@@ -770,7 +849,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         bail!("unknown bench target '{what}' (use: bench perf [--smoke] [--out PATH])");
     }
     let smoke = args.flag("smoke");
-    let out = args.str_or("out", "BENCH_6.json");
+    let out = args.str_or("out", "BENCH_7.json");
     let seed = args.u64_or("seed", 0xBE7C)?;
     println!(
         "bench perf: {} run, simd={}, kernel lanes={}",
@@ -801,14 +880,19 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     table.print();
     let fused_speedup = speedup(&micro, "pair_scalar_k1000", "pair_fused_k1000");
     let par_speedup = speedup(&micro, "topk_scan_seq_", "topk_scan_par_");
+    // Tracing cost on the full wire path: traced / untraced mean RTT
+    // (`speedup` finds the first prefix match, and the untraced row is
+    // pushed first). ~1.0 means per-query tracing is effectively free.
+    let traced_ratio = speedup(&net, "net_pair_rtt_traced", "net_pair_rtt");
     println!(
         "derived: fused vs scalar @k=1000 = {fused_speedup:.2}x, \
-         parallel vs sequential scan = {par_speedup:.2}x"
+         parallel vs sequential scan = {par_speedup:.2}x, \
+         traced vs untraced rtt = {traced_ratio:.3}x"
     );
 
     let doc = Json::obj(vec![
         ("bench", Json::str("stablesketch perf baseline")),
-        ("pr", Json::num(6.0)),
+        ("pr", Json::num(7.0)),
         ("smoke", Json::Bool(smoke)),
         ("simd_feature", Json::Bool(cfg!(feature = "simd"))),
         ("kernel_lanes", Json::num(KERNEL_LANES as f64)),
@@ -832,6 +916,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             Json::obj(vec![
                 ("fused_vs_scalar_k1000", Json::num(fused_speedup)),
                 ("par_vs_seq_scan", Json::num(par_speedup)),
+                ("net_traced_vs_untraced_rtt", Json::num(traced_ratio)),
             ]),
         ),
     ]);

@@ -46,6 +46,7 @@ use crate::estimators::{
 };
 use crate::metrics::PipelineMetrics;
 use crate::sketch::{SketchStore, StreamEvent, StreamingSketcher};
+use crate::trace::{TraceBuf, TraceRecord};
 use crate::util::config::PipelineConfig;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -332,6 +333,26 @@ pub enum SubmitError {
     Shutdown,
 }
 
+/// Per-query span accumulator, threaded from admission to the reply
+/// write alongside the reply itself. `trace_id == 0` is the untraced
+/// fast path: the worker still copies the stage timings in (they are
+/// timestamps it already takes for the latency histograms — no extra
+/// clock reads), and the completion site decides whether anything is
+/// retained (trace ring for traced queries, slow-query log for
+/// anything over threshold).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceSpans {
+    /// Client-chosen v6 trace id (0 = untraced).
+    pub trace_id: u64,
+    /// Frame-parse time, stamped by the network listener (0 for
+    /// in-process plans).
+    pub decode_ns: u64,
+    /// Admission → worker pickup, stamped by the worker.
+    pub queue_ns: u64,
+    /// Worker execute (scan + kernel), stamped by the worker.
+    pub scan_ns: u64,
+}
+
 #[derive(Debug)]
 pub(crate) struct Job {
     pub query: Query,
@@ -341,8 +362,12 @@ pub(crate) struct Job {
     /// epoch, so queries admitted just before an adoption still finish
     /// under the map they were routed with.
     pub epoch: u64,
+    /// Trace identity + decode span from the submitter; the worker
+    /// fills the queue/scan spans and hands the whole thing back with
+    /// the reply.
+    pub trace: TraceSpans,
     pub submitted: Instant,
-    pub reply: std::sync::mpsc::Sender<(usize, Reply)>,
+    pub reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
 }
 
 /// This node's live shard ownership: the map epoch, the shard identity
@@ -427,6 +452,9 @@ pub(crate) struct Shared {
     pub fp: FractionalPower,
     pub median: QuantileEstimator,
     pub metrics: PipelineMetrics,
+    /// Per-node trace retention: completed traced queries + the
+    /// slow-query log (see [`crate::trace::TraceBuf`]).
+    pub traces: TraceBuf,
     pub stop: AtomicBool,
     /// In-node fan-out for one worker's TopK/Block scan (resolved from
     /// `PipelineConfig::scan_threads` at start; always ≥ 1). Scans
@@ -555,6 +583,7 @@ impl Coordinator {
             fp: FractionalPower::new(alpha, k),
             median: QuantileEstimator::median(alpha, k),
             metrics: PipelineMetrics::default(),
+            traces: TraceBuf::new(),
             stop: AtomicBool::new(false),
             scan_threads,
         });
@@ -596,6 +625,40 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &PipelineMetrics {
         &self.shared.metrics
+    }
+
+    /// This node's trace retention: the ring of completed traced
+    /// queries plus the slow-query log (served over the wire by the
+    /// `TraceDump` frame).
+    pub fn traces(&self) -> &TraceBuf {
+        &self.shared.traces
+    }
+
+    /// Complete a query's trace at the reply-write boundary: `spans`
+    /// is the accumulator that rode through the worker, `write_ns` the
+    /// encode+write time the caller just measured. Retention is decided
+    /// by [`TraceBuf::wants`] (one atomic load on the untraced,
+    /// under-threshold fast path — no lock, no allocation).
+    pub fn record_trace(&self, seq: u64, spans: TraceSpans, write_ns: u64) {
+        let total = spans
+            .decode_ns
+            .saturating_add(spans.queue_ns)
+            .saturating_add(spans.scan_ns)
+            .saturating_add(write_ns);
+        if !self.shared.traces.wants(spans.trace_id, total) {
+            return;
+        }
+        let (_, spec, replica, _) = self.membership();
+        self.shared.traces.record(TraceRecord {
+            trace_id: spans.trace_id,
+            seq,
+            shard: spec.map(|s| s.index).unwrap_or(0) as u32,
+            replica: replica.index as u32,
+            decode_ns: spans.decode_ns,
+            queue_ns: spans.queue_ns,
+            scan_ns: spans.scan_ns,
+            write_ns,
+        });
     }
 
     /// This node's slice of the cluster (None = owns everything).
@@ -756,10 +819,10 @@ impl Coordinator {
             validate_query(q, n)?;
         }
         let total = queries.len();
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply)>();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply, TraceSpans)>();
         let mut pending = 0usize;
         for (seq, query) in queries.into_iter().enumerate() {
-            match self.submit_validated(query, 0, seq, tx.clone()) {
+            match self.submit_validated(query, 0, TraceSpans::default(), seq, tx.clone()) {
                 Ok(()) => pending += 1,
                 Err(SubmitError::Overloaded) => {
                     bail!("backpressure: shard queues full after {pending} submissions");
@@ -774,7 +837,7 @@ impl Coordinator {
         drop(tx);
         let mut out: Vec<Option<Reply>> = vec![None; total];
         for _ in 0..pending {
-            let (seq, reply) = rx.recv()?;
+            let (seq, reply, _spans) = rx.recv()?;
             out[seq] = Some(reply);
         }
         Ok(out
@@ -793,7 +856,7 @@ impl Coordinator {
         &self,
         query: Query,
         tag: usize,
-        reply: std::sync::mpsc::Sender<(usize, Reply)>,
+        reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
     ) -> Result<(), SubmitError> {
         self.submit_stamped(query, 0, tag, reply)
     }
@@ -809,7 +872,21 @@ impl Coordinator {
         query: Query,
         epoch: u64,
         tag: usize,
-        reply: std::sync::mpsc::Sender<(usize, Reply)>,
+        reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
+    ) -> Result<(), SubmitError> {
+        self.submit_traced(query, epoch, TraceSpans::default(), tag, reply)
+    }
+
+    /// [`Self::submit_stamped`] with a trace context (the v6 network
+    /// path): the listener's decode span and the client's trace id ride
+    /// through the worker and come back attached to the reply.
+    pub fn submit_traced(
+        &self,
+        query: Query,
+        epoch: u64,
+        trace: TraceSpans,
+        tag: usize,
+        reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
     ) -> Result<(), SubmitError> {
         if epoch != 0 {
             let current = self.shared.epoch.load(Ordering::Acquire);
@@ -821,7 +898,7 @@ impl Coordinator {
         if let Err(e) = validate_query(&query, n) {
             return Err(SubmitError::Invalid(e.to_string()));
         }
-        self.submit_validated(query, epoch, tag, reply)
+        self.submit_validated(query, epoch, trace, tag, reply)
     }
 
     /// Route an already-validated query (shared tail of [`Self::submit`]
@@ -830,13 +907,15 @@ impl Coordinator {
         &self,
         query: Query,
         epoch: u64,
+        trace: TraceSpans,
         tag: usize,
-        reply: std::sync::mpsc::Sender<(usize, Reply)>,
+        reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
     ) -> Result<(), SubmitError> {
         let job = Job {
             query,
             seq: tag,
             epoch,
+            trace,
             submitted: Instant::now(),
             reply,
         };

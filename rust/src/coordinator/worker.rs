@@ -5,7 +5,7 @@
 
 use super::backpressure::BoundedQueue;
 use super::batcher::{BatchPolicy, Batcher};
-use super::{Job, Query, Reply, Shared};
+use super::{Job, Query, Reply, Shared, TraceSpans};
 use crate::estimators::{BatchScratch, FusedDiffEstimator};
 use crate::sketch::SketchStore;
 use std::sync::Arc;
@@ -44,6 +44,7 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
                     Reply::WrongEpoch {
                         current: ownership.epoch,
                     },
+                    job.trace,
                 ));
                 continue;
             };
@@ -76,8 +77,25 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
                 .query_latency
                 .record(job.submitted.elapsed());
             shared.metrics.queries_completed.inc();
+            // Fill the trace's queue/scan stages from timings already
+            // taken for the metrics above — tracing adds no clock reads
+            // to this loop. Traced jobs clamp to >= 1ns so every stage
+            // of a completed trace is visibly non-zero.
+            let mut spans = job.trace;
+            let queue_ns = (t_est - job.submitted).as_nanos() as u64;
+            let scan_ns = spent.as_nanos() as u64;
+            if spans.trace_id != 0 {
+                spans.queue_ns = queue_ns.max(1);
+                spans.scan_ns = scan_ns.max(1);
+            } else {
+                spans = TraceSpans {
+                    queue_ns,
+                    scan_ns,
+                    ..spans
+                };
+            }
             // Receiver may have given up (client dropped) — ignore.
-            let _ = job.reply.send((job.seq, reply));
+            let _ = job.reply.send((job.seq, reply, spans));
         }
         shared.metrics.batch_latency.record(t_batch.elapsed());
     }

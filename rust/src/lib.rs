@@ -32,6 +32,10 @@
 //!   protocol, TCP listener with a bounded connection pool, blocking
 //!   pipelined client, and an open/closed-loop load generator.
 //! * [`simul`] — Monte-Carlo drivers regenerating the paper's figures.
+//! * [`trace`] — end-to-end query tracing: per-stage spans (decode,
+//!   queue, scan, write) stamped by a v6 wire trace id, per-node trace
+//!   rings with a slow-query log, and client-side stitching of a
+//!   scatter-gathered plan into one cluster-wide trace tree.
 
 pub mod bench_util;
 pub mod cli;
@@ -45,6 +49,7 @@ pub mod simul;
 pub mod sketch;
 pub mod stable;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 
 pub use stable::{StableDist, StandardStable};

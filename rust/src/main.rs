@@ -41,19 +41,24 @@ USAGE: stablesketch <subcommand> [options]
   query       --i 0 --j 1 [--estimator oq|gm|fp|hm|median] (uses sketch run inline)
               [--connect 127.0.0.1:7878]  (queries a serve --listen process instead;
               a comma-separated address list queries a sharded cluster)
+              [--traces]  (trace this invocation's queries and pretty-print the
+              stitched per-stage trace plus the nodes' recent-trace rings)
+              [--watch]  (live per-node dashboard: qps, queue depth, p99, shard
+              identity — polls Stats once a second until killed)
               [--rebalance 1.0,2.0,1.5]  (admin: recompute row ownership from
               per-shard costs and push the new shard map to every node
               under the next epoch instead of querying)
   serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
               [--workload pair|topk|block|mixed] [--topk-m 10] [--block-side 8]
               [--listen 127.0.0.1:7878 [--duration 0] [--stats-every 10] [--max-conns 64]
-               [--shard 0/3] [--replica 0/2]]
+               [--shard 0/3] [--replica 0/2] [--metrics-dump metrics.prom]]
               (--shard i/of = one node of an of-shard cluster; --replica r/R = one of
-              R siblings owning the same rows — clients fail over between siblings)
+              R siblings owning the same rows — clients fail over between siblings;
+              --metrics-dump rewrites a Prometheus text file every stats tick)
   loadgen     --connect 127.0.0.1:7878[,127.0.0.1:7879,...] [--threads 4] [--duration 10]
               [--rate 0] [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median]
-              [--topk-m 10] [--block-side 8]
-  bench       perf [--smoke] [--out BENCH_6.json]
+              [--topk-m 10] [--block-side 8] [--watch]
+  bench       perf [--smoke] [--out BENCH_7.json]
               (fused-kernel micro + net loopback + 2-shard loadgen passes;
               writes the tracked perf baseline — see bench/run_perf.sh)
   experiment  fig1|fig2|fig3|fig4|fig5|fig6|fig7 [--fast]

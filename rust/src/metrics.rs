@@ -90,15 +90,21 @@ impl LatencyHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean recorded latency. **0.0 on an empty histogram** — a
+    /// deterministic, comparable value (it used to be NaN, which
+    /// poisoned downstream arithmetic and made snapshot assertions
+    /// impossible).
     pub fn mean_ns(&self) -> f64 {
         let c = self.count();
         if c == 0 {
-            return f64::NAN;
+            return 0.0;
         }
         self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
     }
 
     /// Approximate quantile (upper edge of the covering bucket).
+    /// **0 on an empty histogram** — deterministic, so `Stats` frames
+    /// and the Prometheus exposition report idle histograms uniformly.
     pub fn quantile_ns(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -113,6 +119,43 @@ impl LatencyHistogram {
             }
         }
         u64::MAX
+    }
+
+    /// Append this histogram's Prometheus text series: cumulative
+    /// `<name>_bucket{…le="2^(b+1)"}` lines up to the highest occupied
+    /// bucket, the mandatory `le="+Inf"` bucket, then `<name>_sum` and
+    /// `<name>_count`. `labels` is a pre-rendered `k="v"` list ("" for
+    /// none); bucket edges are the log2 upper bounds, so `le` values
+    /// ascend by construction. The bucket array is snapshotted first so
+    /// cumulative counts are monotone even under concurrent recording.
+    fn render_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+        use std::fmt::Write as _;
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        let comma = if labels.is_empty() { "" } else { "," };
+        let braced = if labels.is_empty() {
+            String::new()
+        } else {
+            format!("{{{labels}}}")
+        };
+        let mut acc = 0u64;
+        if let Some(last) = counts.iter().rposition(|&c| c > 0) {
+            for (b, &c) in counts.iter().enumerate().take(last + 1) {
+                acc += c;
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{{{labels}{comma}le=\"{}\"}} {acc}",
+                    1u64 << (b + 1)
+                );
+            }
+        }
+        let _ = writeln!(out, "{name}_bucket{{{labels}{comma}le=\"+Inf\"}} {total}");
+        let _ = writeln!(out, "{name}_sum{braced} {}", self.sum_ns.load(Ordering::Relaxed));
+        let _ = writeln!(out, "{name}_count{braced} {total}");
     }
 
     pub fn summary(&self) -> String {
@@ -303,6 +346,196 @@ impl PipelineMetrics {
             ("scan_median_p99_ns", self.scan_latency[3].quantile_ns(0.99)),
         ]
     }
+
+    /// Render every pipeline metric in Prometheus text exposition
+    /// format under the `stablesketch_` prefix: counters as
+    /// `<name>_total`, gauges bare, histograms as cumulative
+    /// `_bucket{le=…}` series with `_sum`/`_count`, each family
+    /// preceded by its `# TYPE` line. Per-kind estimate/scan
+    /// histograms are one family each, labelled `kind="oq|gm|fp|
+    /// median"`. Names are stable — `validate_metrics_text` (and the
+    /// snapshot test behind it) pins them, and the `MetricsText` wire
+    /// frame and `serve --metrics-dump` both serve exactly this
+    /// output.
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        let counters: [(&str, &Counter); 16] = [
+            ("stablesketch_queries_submitted_total", &self.queries_submitted),
+            ("stablesketch_queries_completed_total", &self.queries_completed),
+            ("stablesketch_queries_rejected_total", &self.queries_rejected),
+            ("stablesketch_batches_formed_total", &self.batches_formed),
+            ("stablesketch_batch_fill_total", &self.batch_fill),
+            ("stablesketch_events_ingested_total", &self.events_ingested),
+            ("stablesketch_topk_candidates_scanned_total", &self.topk_candidates_scanned),
+            ("stablesketch_connections_opened_total", &self.connections_opened),
+            ("stablesketch_connections_closed_total", &self.connections_closed),
+            ("stablesketch_connections_rejected_total", &self.connections_rejected),
+            ("stablesketch_net_frames_in_total", &self.net_frames_in),
+            ("stablesketch_net_frames_out_total", &self.net_frames_out),
+            ("stablesketch_net_bytes_in_total", &self.net_bytes_in),
+            ("stablesketch_net_bytes_out_total", &self.net_bytes_out),
+            ("stablesketch_net_decode_errors_total", &self.net_decode_errors),
+            ("stablesketch_net_overload_replies_total", &self.net_overload_replies),
+        ];
+        for (name, c) in counters {
+            prom_counter(&mut out, name, c.get());
+        }
+        prom_counter(&mut out, "stablesketch_shard_adoptions_total", self.shard_adoptions.get());
+        prom_counter(
+            &mut out,
+            "stablesketch_net_wrong_epoch_replies_total",
+            self.net_wrong_epoch_replies.get(),
+        );
+        let gauges: [(&str, &Gauge); 4] = [
+            ("stablesketch_connections_active", &self.connections_active),
+            ("stablesketch_net_queries_inflight", &self.net_queries_inflight),
+            ("stablesketch_scan_rows_per_s", &self.scan_rows_per_s),
+            ("stablesketch_kernel_lanes_used", &self.kernel_lanes_used),
+        ];
+        for (name, g) in gauges {
+            prom_gauge(&mut out, name, g.get());
+        }
+        prom_histogram_type(&mut out, "stablesketch_query_latency_ns");
+        self.query_latency.render_prometheus(&mut out, "stablesketch_query_latency_ns", "");
+        prom_histogram_type(&mut out, "stablesketch_batch_latency_ns");
+        self.batch_latency.render_prometheus(&mut out, "stablesketch_batch_latency_ns", "");
+        prom_histogram_type(&mut out, "stablesketch_estimate_latency_ns");
+        for (label, h) in KIND_LABELS.iter().zip(&self.estimate_latency) {
+            let labels = format!("kind=\"{label}\"");
+            h.render_prometheus(&mut out, "stablesketch_estimate_latency_ns", &labels);
+        }
+        prom_histogram_type(&mut out, "stablesketch_scan_latency_ns");
+        for (label, h) in KIND_LABELS.iter().zip(&self.scan_latency) {
+            let labels = format!("kind=\"{label}\"");
+            h.render_prometheus(&mut out, "stablesketch_scan_latency_ns", &labels);
+        }
+        out
+    }
+}
+
+fn prom_counter(out: &mut String, name: &str, v: u64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, v: i64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_histogram_type(out: &mut String, name: &str) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} histogram");
+}
+
+/// Validate a Prometheus text exposition: every `# TYPE` family name
+/// declared once, every sample line parseable and belonging to a
+/// declared family (histogram samples only via `_bucket`/`_sum`/
+/// `_count`), no duplicate series (name + label set), and every
+/// histogram series' `le` buckets strictly ascending with monotone
+/// non-decreasing cumulative counts, ending at `le="+Inf"`. This is
+/// what CI runs over `metrics_text()` output so the exposition can
+/// never silently drift into something a scraper rejects.
+pub fn validate_metrics_text(text: &str) -> Result<(), String> {
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut families: BTreeMap<String, String> = BTreeMap::new(); // name -> kind
+    let mut seen_series: BTreeSet<String> = BTreeSet::new();
+    // (family, labels-minus-le) -> [(le, cumulative count)]
+    let mut hist_buckets: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let (name, kind) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(n), Some(k), None) => (n, k),
+                _ => return Err(format!("line {ln}: malformed TYPE line: {line}")),
+            };
+            if !matches!(kind, "counter" | "gauge" | "histogram") {
+                return Err(format!("line {ln}: unknown metric kind {kind}"));
+            }
+            if families.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {ln}: duplicate TYPE for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample: name[{labels}] value
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {ln}: no value: {line}"))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|_| format!("line {ln}: non-numeric value: {line}"))?;
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => {
+                let labels = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {ln}: unterminated labels: {line}"))?;
+                (n, labels)
+            }
+            None => (series, ""),
+        };
+        if !seen_series.insert(series.to_string()) {
+            return Err(format!("line {ln}: duplicate series {series}"));
+        }
+        let (family, is_bucket) = if let Some(f) = name.strip_suffix("_bucket") {
+            (f, true)
+        } else if let Some(f) = name.strip_suffix("_sum").or_else(|| name.strip_suffix("_count")) {
+            (f, false)
+        } else {
+            (name, false)
+        };
+        let family_kind = families
+            .get(family)
+            .or_else(|| families.get(name))
+            .ok_or_else(|| format!("line {ln}: sample {name} has no TYPE declaration"))?;
+        if (family_kind == "histogram") != (family != name) {
+            return Err(format!(
+                "line {ln}: sample {name} does not match its family kind {family_kind}"
+            ));
+        }
+        if is_bucket {
+            let mut le: Option<f64> = None;
+            let mut rest_labels: Vec<&str> = Vec::new();
+            for pair in labels.split(',').filter(|p| !p.is_empty()) {
+                match pair.strip_prefix("le=\"").and_then(|v| v.strip_suffix('"')) {
+                    Some("+Inf") => le = Some(f64::INFINITY),
+                    Some(v) => {
+                        let parsed = v.parse().map_err(|_| format!("line {ln}: bad le {v}"))?;
+                        le = Some(parsed);
+                    }
+                    None => rest_labels.push(pair),
+                }
+            }
+            let le = le.ok_or_else(|| format!("line {ln}: bucket without le: {line}"))?;
+            hist_buckets
+                .entry(format!("{family}{{{}}}", rest_labels.join(",")))
+                .or_default()
+                .push((le, value));
+        }
+    }
+    for (series, buckets) in &hist_buckets {
+        for pair in buckets.windows(2) {
+            if pair[1].0 <= pair[0].0 {
+                return Err(format!("{series}: le edges not ascending"));
+            }
+            if pair[1].1 < pair[0].1 {
+                return Err(format!("{series}: cumulative bucket counts decrease"));
+            }
+        }
+        match buckets.last() {
+            Some((le, _)) if le.is_infinite() => {}
+            _ => return Err(format!("{series}: missing le=\"+Inf\" bucket")),
+        }
+    }
+    Ok(())
 }
 
 /// Client-side counters for one remote node of a sharded cluster —
@@ -459,6 +692,61 @@ impl ClusterMetrics {
         }
         s
     }
+
+    /// Prometheus text exposition of the client-side cluster view:
+    /// lifetime totals (refresh-proof, like [`ClusterMetrics::report`])
+    /// plus one labelled series per live node slot —
+    /// `node="<addr>",shard="<s>",replica="<r>"` in shard-major order.
+    /// Validated by the same `validate_metrics_text` CI gate as the
+    /// server-side exposition.
+    pub fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        prom_counter(&mut out, "stablesketch_cluster_plans_total", self.plans.get());
+        prom_counter(&mut out, "stablesketch_cluster_subqueries_total", self.subqueries.get());
+        prom_counter(&mut out, "stablesketch_cluster_refreshes_total", self.refreshes.get());
+        prom_counter(
+            &mut out,
+            "stablesketch_cluster_retried_plans_total",
+            self.retried_plans.get(),
+        );
+        prom_counter(&mut out, "stablesketch_cluster_failovers_total", self.failovers.get());
+        prom_counter(&mut out, "stablesketch_cluster_reconnects_total", self.total_reconnects());
+        prom_counter(&mut out, "stablesketch_cluster_errors_total", self.total_errors());
+        prom_gauge(&mut out, "stablesketch_cluster_replicas", self.replicas as i64);
+        prom_gauge(&mut out, "stablesketch_cluster_nodes", self.nodes.len() as i64);
+        let node_counters: [(&str, fn(&NodeMetrics) -> u64); 4] = [
+            ("stablesketch_cluster_node_routed_total", |n| n.routed.get()),
+            ("stablesketch_cluster_node_errors_total", |n| n.errors.get()),
+            ("stablesketch_cluster_node_reconnects_total", |n| n.reconnects.get()),
+            ("stablesketch_cluster_node_failovers_total", |n| n.failovers.get()),
+        ];
+        for (name, get) in node_counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (i, n) in self.nodes.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{name}{{node=\"{}\",shard=\"{}\",replica=\"{}\"}} {}",
+                    n.addr,
+                    i / self.replicas,
+                    i % self.replicas,
+                    get(n)
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE stablesketch_cluster_node_inflight gauge");
+        for (i, n) in self.nodes.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "stablesketch_cluster_node_inflight{{node=\"{}\",shard=\"{}\",replica=\"{}\"}} {}",
+                n.addr,
+                i / self.replicas,
+                i % self.replicas,
+                n.inflight.get()
+            );
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -587,6 +875,139 @@ mod tests {
         m.connections_opened.inc();
         m.net_frames_in.add(3);
         assert!(m.report().contains("| net:"), "{}", m.report());
+    }
+
+    /// Empty histograms must read as deterministic zeros (mean used to
+    /// be NaN), so idle nodes report comparable stats everywhere.
+    #[test]
+    fn histogram_empty_reads_as_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert!(h.summary().contains("n=0 mean=0.0us"), "{}", h.summary());
+    }
+
+    #[test]
+    fn histogram_single_sample_lands_in_one_bucket() {
+        let h = LatencyHistogram::new();
+        h.record_ns(1_000); // bucket [512, 1024)
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), 1_024, "q={q}");
+        }
+        assert_eq!(h.mean_ns(), 1_000.0);
+    }
+
+    #[test]
+    fn histogram_top_bucket_saturates() {
+        let h = LatencyHistogram::new();
+        h.record_ns(u64::MAX); // far beyond bucket 47's edge — must clamp, not panic
+        h.record_ns(1u64 << 60);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile_ns(0.99), 1u64 << 48, "clamped to the top bucket edge");
+        assert!(h.mean_ns() > 1e18, "mean reflects raw sums, not bucket edges");
+    }
+
+    /// The `Stats` wire snapshot is a stable contract: keys must stay
+    /// unique and in this exact order (clients index into it, README
+    /// documents it). Grow it by appending here AND in `stat_entries`.
+    #[test]
+    fn stat_entries_keys_unique_and_match_snapshot() {
+        let expected = [
+            "queries_submitted",
+            "queries_completed",
+            "queries_rejected",
+            "batches_formed",
+            "events_ingested",
+            "query_latency_p50_ns",
+            "query_latency_p95_ns",
+            "query_latency_p99_ns",
+            "connections_opened",
+            "connections_closed",
+            "connections_rejected",
+            "connections_active",
+            "net_queries_inflight",
+            "net_frames_in",
+            "net_frames_out",
+            "net_bytes_in",
+            "net_bytes_out",
+            "net_decode_errors",
+            "net_overload_replies",
+            "shard_adoptions",
+            "net_wrong_epoch_replies",
+            "scan_rows_per_s",
+            "kernel_lanes_used",
+            "scan_oq_p50_ns",
+            "scan_oq_p95_ns",
+            "scan_oq_p99_ns",
+            "scan_gm_p50_ns",
+            "scan_gm_p95_ns",
+            "scan_gm_p99_ns",
+            "scan_fp_p50_ns",
+            "scan_fp_p95_ns",
+            "scan_fp_p99_ns",
+            "scan_median_p50_ns",
+            "scan_median_p95_ns",
+            "scan_median_p99_ns",
+        ];
+        let m = PipelineMetrics::default();
+        let keys: Vec<&str> = m.stat_entries().iter().map(|(k, _)| *k).collect();
+        let unique: std::collections::BTreeSet<&str> = keys.iter().copied().collect();
+        assert_eq!(unique.len(), keys.len(), "stat_entries keys must be unique");
+        assert_eq!(keys, expected, "stat_entries snapshot drifted");
+    }
+
+    #[test]
+    fn pipeline_metrics_text_passes_validator() {
+        let m = PipelineMetrics::default();
+        validate_metrics_text(&m.metrics_text()).expect("idle exposition must validate");
+        m.queries_submitted.inc();
+        m.query_latency.record_ns(1_000);
+        m.query_latency.record_ns(100_000);
+        m.estimate_latency[2].record_ns(512);
+        m.scan_latency[3].record_ns(2_000_000);
+        m.scan_rows_per_s.set(1_000_000);
+        m.connections_active.inc();
+        let text = m.metrics_text();
+        validate_metrics_text(&text).expect("active exposition must validate");
+        assert!(text.contains("stablesketch_queries_submitted_total 1"), "{text}");
+        assert!(text.contains("stablesketch_scan_rows_per_s 1000000"), "{text}");
+        assert!(text.contains("stablesketch_query_latency_ns_count 2"), "{text}");
+        assert!(text.contains("kind=\"fp\""), "{text}");
+        assert!(text.contains("kind=\"median\",le=\"+Inf\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn cluster_metrics_text_passes_validator_and_labels_nodes() {
+        let addrs: Vec<String> = ["a:1", "a:2", "b:1", "b:2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let m = ClusterMetrics::new(addrs, 2);
+        m.plans.inc();
+        m.node(1).failovers.inc();
+        let text = m.metrics_text();
+        validate_metrics_text(&text).expect("cluster exposition must validate");
+        assert!(text.contains("stablesketch_cluster_plans_total 1"), "{text}");
+        let lbl = "node=\"a:2\",shard=\"0\",replica=\"1\"";
+        assert!(text.contains(&format!("stablesketch_cluster_node_failovers_total{{{lbl}}} 1")));
+    }
+
+    #[test]
+    fn metrics_text_validator_rejects_malformed_expositions() {
+        assert!(validate_metrics_text("undeclared_sample 1\n").is_err(), "no TYPE decl");
+        assert!(validate_metrics_text("# TYPE x summary\n").is_err(), "unknown kind");
+        let dup = "# TYPE a counter\na 1\na 2\n";
+        assert!(validate_metrics_text(dup).is_err(), "duplicate series");
+        let shrinking = "# TYPE h histogram\nh_bucket{le=\"2\"} 5\nh_bucket{le=\"4\"} 3\n\
+                         h_bucket{le=\"+Inf\"} 5\nh_sum 1\nh_count 5\n";
+        assert!(validate_metrics_text(shrinking).is_err(), "buckets must be cumulative");
+        let unordered = "# TYPE h histogram\nh_bucket{le=\"4\"} 1\nh_bucket{le=\"2\"} 1\n\
+                         h_bucket{le=\"+Inf\"} 1\nh_sum 1\nh_count 1\n";
+        assert!(validate_metrics_text(unordered).is_err(), "le edges must ascend");
+        let no_inf = "# TYPE h histogram\nh_bucket{le=\"2\"} 1\nh_sum 1\nh_count 1\n";
+        assert!(validate_metrics_text(no_inf).is_err(), "+Inf bucket is mandatory");
     }
 
     #[test]

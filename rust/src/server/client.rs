@@ -13,6 +13,7 @@ use super::protocol::{
     read_frame, write_frame, ErrorCode, Frame, FrameReadError, ProtoError, ShardMapInfo,
 };
 use crate::coordinator::{Query, QueryKind, Reply};
+use crate::trace::TraceRecord;
 use std::io::{BufWriter, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -76,6 +77,11 @@ pub struct SketchClient {
     /// after each shard-map exchange so a node whose map moved on
     /// answers `WrongEpoch` instead of a silently mis-routed reply.
     epoch: u64,
+    /// v6 trace id stamped on outgoing query frames (0 = untraced —
+    /// the default). Set around a plan by the cluster client's traced
+    /// path so every node the plan touches retains per-stage spans
+    /// under one id.
+    trace_id: u64,
 }
 
 /// Shared dial path for `connect` and `reconnect`: one place for every
@@ -98,6 +104,7 @@ impl SketchClient {
             next_id: 1,
             timeout: Some(DEFAULT_IO_TIMEOUT),
             epoch: 0,
+            trace_id: 0,
         })
     }
 
@@ -110,6 +117,17 @@ impl SketchClient {
     /// The shard-map epoch currently stamped on query frames.
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// Stamp subsequent query frames with a v6 trace id (0 stops
+    /// stamping). Survives [`Self::reconnect`].
+    pub fn set_trace(&mut self, trace_id: u64) {
+        self.trace_id = trace_id;
+    }
+
+    /// The trace id currently stamped on query frames (0 = untraced).
+    pub fn trace(&self) -> u64 {
+        self.trace_id
     }
 
     /// Override the per-read/write timeout (`None` blocks forever —
@@ -220,6 +238,27 @@ impl SketchClient {
             .map(|(_, v)| v))
     }
 
+    /// v6 admin call: pull the node's recent completed traces and its
+    /// slow-query log (`(recent, slow)`, both oldest-first).
+    pub fn trace_dump(&mut self) -> Result<(Vec<TraceRecord>, Vec<TraceRecord>), ClientError> {
+        write_frame(&mut self.stream, &Frame::TraceDumpRequest)?;
+        match self.read()? {
+            Frame::TraceDump { traces, slow } => Ok((traces, slow)),
+            Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
+            _ => Err(ClientError::Unexpected("non-trace reply to trace dump")),
+        }
+    }
+
+    /// v6 admin call: the node's metrics in Prometheus text format.
+    pub fn metrics_text(&mut self) -> Result<String, ClientError> {
+        write_frame(&mut self.stream, &Frame::MetricsTextRequest)?;
+        match self.read()? {
+            Frame::MetricsText { text } => Ok(text),
+            Frame::Error { code, message, .. } => Err(ClientError::Server { code, message }),
+            _ => Err(ClientError::Unexpected("non-text reply to metrics request")),
+        }
+    }
+
     /// Execute a query plan remotely: pipeline every query onto the
     /// wire, then collect the shape-matched replies in input order.
     ///
@@ -241,6 +280,7 @@ impl SketchClient {
                         id: base + off as u64,
                         query: query.clone(),
                         epoch: self.epoch,
+                        trace_id: self.trace_id,
                     },
                 )?;
             }

@@ -62,7 +62,8 @@ use crate::coordinator::{
     Query, QueryKind, ReplicaMove, ReplicaSet, Reply, ShardSet, MAX_BLOCK_CELLS,
 };
 use crate::metrics::{ClusterMetrics, NodeMetrics};
-use std::time::Duration;
+use crate::trace::{next_trace_id, QueryTrace, SubPlanTrace};
+use std::time::{Duration, Instant};
 use thiserror::Error;
 
 /// Dial policy during a shard-map refresh (tight — unlike the initial
@@ -251,6 +252,14 @@ pub struct ClusterClient {
     /// for that shard is offered to first.
     cursor: Vec<usize>,
     metrics: ClusterMetrics,
+    /// Trace id stamped on every node connection while a traced plan
+    /// runs (0 = untraced, the steady state). Set and cleared by
+    /// [`Self::query_plan_traced`]; re-applied per attempt so clients
+    /// rebuilt by a mid-plan refresh stay stamped.
+    trace_id: u64,
+    /// Client-side sub-plan spans of the most recent traced attempt,
+    /// harvested by [`Self::query_plan_traced`] for stitching.
+    last_subs: Vec<SubPlanTrace>,
 }
 
 /// How a plan slot's sub-replies are reassembled.
@@ -305,6 +314,8 @@ impl ClusterClient {
             epoch: view.epoch,
             cursor,
             metrics,
+            trace_id: 0,
+            last_subs: Vec::new(),
         })
     }
 
@@ -550,6 +561,65 @@ impl ClusterClient {
         }
     }
 
+    /// [`Self::query_plan`] with end-to-end tracing: stamp a fresh v6
+    /// trace id on every query frame of the plan, run it (failover and
+    /// refresh-and-retry behave exactly as untraced), then pull
+    /// `TraceDump`s from the nodes that served each sub-plan and stitch
+    /// their per-stage server spans under the client-side timings into
+    /// one [`QueryTrace`]. Replies are bit-identical to the untraced
+    /// path — tracing changes retention on the servers, never routing
+    /// or execution.
+    pub fn query_plan_traced(
+        &mut self,
+        plan: &[Query],
+    ) -> Result<(Vec<Reply>, QueryTrace), ClusterError> {
+        let trace_id = next_trace_id();
+        self.trace_id = trace_id;
+        let refreshes_before = self.metrics.refreshes.get();
+        let t0 = Instant::now();
+        let result = self.query_plan(plan);
+        let total_ns = (t0.elapsed().as_nanos() as u64).max(1);
+        self.trace_id = 0;
+        for group in &mut self.nodes {
+            for node in group {
+                node.client.set_trace(0);
+            }
+        }
+        let replies = result?;
+        let mut subs = std::mem::take(&mut self.last_subs);
+        // Harvest server-side spans from each answering node's trace
+        // ring. A node that has since vanished (its grid slot was
+        // rebuilt by a refresh) just contributes no server spans — the
+        // client-side timing for its sub-plan still stands.
+        for sub in &mut subs {
+            let node = self
+                .nodes
+                .get_mut(sub.shard)
+                .and_then(|g| g.get_mut(sub.replica))
+                .filter(|n| n.addr == sub.addr);
+            if let Some(node) = node {
+                if let Ok((recent, _slow)) = node.client.trace_dump() {
+                    sub.server = recent
+                        .into_iter()
+                        .filter(|r| r.trace_id == trace_id)
+                        .collect();
+                }
+            }
+        }
+        // Shard sub-plans run in parallel, so the client-side overhead
+        // (routing, scatter, merge) is what the slowest sub-plan does
+        // not account for.
+        let slowest = subs.iter().map(|s| s.client_ns).max().unwrap_or(0);
+        let trace = QueryTrace {
+            trace_id,
+            total_ns,
+            route_ns: total_ns.saturating_sub(slowest),
+            refreshes: self.metrics.refreshes.get() - refreshes_before,
+            subs,
+        };
+        Ok((replies, trace))
+    }
+
     /// One attempt of [`Self::query_plan`] under the current map.
     fn query_plan_once(&mut self, plan: &[Query]) -> Result<Vec<Reply>, ClusterError> {
         if plan.is_empty() {
@@ -557,6 +627,17 @@ impl ClusterClient {
         }
         self.validate(plan)?;
         self.metrics.plans.inc();
+        // Stamp (or clear) the trace id on every connection per attempt
+        // — a refresh between attempts rebuilds the clients, which
+        // otherwise would silently run the retry untraced.
+        if self.trace_id != 0 {
+            self.last_subs.clear();
+        }
+        for group in &mut self.nodes {
+            for node in group {
+                node.client.set_trace(self.trace_id);
+            }
+        }
         let n_shards = self.nodes.len();
         let replicas = self.replicas;
 
@@ -626,7 +707,7 @@ impl ClusterClient {
         // on its own scoped thread; a plan touching a single shard
         // (the Pair hot path) runs inline, keeping thread create/join
         // off its latency ---------------------------------------------
-        type ShardResult = Result<(usize, Vec<Reply>), (usize, ClientError)>;
+        type ShardResult = Result<ShardServe, (usize, ClientError)>;
         let mut results: Vec<Option<ShardResult>> = (0..n_shards).map(|_| None).collect();
         let contributing = subs.iter().filter(|s| !s.is_empty()).count();
         let metrics = &self.metrics;
@@ -639,7 +720,7 @@ impl ClusterClient {
                 .enumerate()
             {
                 *res = Some(if sub.is_empty() {
-                    Ok((starts[shard], Vec::new()))
+                    Ok(ShardServe::empty(starts[shard]))
                 } else {
                     run_shard_plan(shard, group, sub, starts[shard], metrics)
                 });
@@ -654,7 +735,7 @@ impl ClusterClient {
                     .enumerate()
                 {
                     if sub.is_empty() {
-                        *res = Some(Ok((starts[shard], Vec::new())));
+                        *res = Some(Ok(ShardServe::empty(starts[shard])));
                         continue;
                     }
                     let start = starts[shard];
@@ -671,9 +752,22 @@ impl ClusterClient {
         let mut shard_replies: Vec<Vec<Reply>> = Vec::with_capacity(n_shards);
         for (shard, res) in results.into_iter().enumerate() {
             match res.expect("every shard slot written") {
-                Ok((replica, replies)) => {
-                    served.push(replica);
-                    shard_replies.push(replies);
+                Ok(serve) => {
+                    // A traced plan keeps each contributing sub-plan's
+                    // client-side span; the server spans are harvested
+                    // after the plan by `query_plan_traced`.
+                    if self.trace_id != 0 && serve.attempts > 0 {
+                        self.last_subs.push(SubPlanTrace {
+                            shard,
+                            replica: serve.replica,
+                            addr: self.nodes[shard][serve.replica].addr.clone(),
+                            attempts: serve.attempts,
+                            client_ns: serve.client_ns,
+                            server: Vec::new(),
+                        });
+                    }
+                    served.push(serve.replica);
+                    shard_replies.push(serve.replies);
                 }
                 Err((replica, ClientError::Overloaded(message))) => {
                     return Err(ClusterError::Overloaded {
@@ -1189,6 +1283,29 @@ fn exchange(addrs: &[String], dial_attempts: usize) -> Result<ClusterView, Clust
     })
 }
 
+/// How one shard's sub-plan was served: which replica answered, how
+/// many replica attempts it took (1 = no failover; 0 = the shard had
+/// nothing to contribute), and the client-side wall time spent —
+/// the per-sub-plan span of a stitched [`QueryTrace`].
+struct ShardServe {
+    replica: usize,
+    attempts: u32,
+    client_ns: u64,
+    replies: Vec<Reply>,
+}
+
+impl ShardServe {
+    /// A shard the plan never touched.
+    fn empty(replica: usize) -> ShardServe {
+        ShardServe {
+            replica,
+            attempts: 0,
+            client_ns: 0,
+            replies: Vec::new(),
+        }
+    }
+}
+
 /// One shard's share of a scatter: offer the sub-plan to the replica
 /// ring starting at `start`, failing over to the next sibling when a
 /// replica is unusable — an I/O failure that survives its one
@@ -1210,14 +1327,22 @@ fn run_shard_plan(
     queries: &[Query],
     start: usize,
     metrics: &ClusterMetrics,
-) -> Result<(usize, Vec<Reply>), (usize, ClientError)> {
+) -> Result<ShardServe, (usize, ClientError)> {
+    let t0 = Instant::now();
     let replicas = group.len();
     let mut first: Option<(usize, ClientError)> = None;
     for attempt in 0..replicas {
         let replica = (start + attempt) % replicas;
         let nm = metrics.node(shard * replicas + replica);
         match run_node_plan(&mut group[replica], queries, nm) {
-            Ok(replies) => return Ok((replica, replies)),
+            Ok(replies) => {
+                return Ok(ShardServe {
+                    replica,
+                    attempts: attempt as u32 + 1,
+                    client_ns: (t0.elapsed().as_nanos() as u64).max(1),
+                    replies,
+                })
+            }
             Err(e) => {
                 let fail_over = match &e {
                     ClientError::Overloaded(_) => false,

@@ -28,7 +28,7 @@ use super::protocol::{
     query_id_of, write_frame, ErrorCode, Frame, ProtoError, ShardMapInfo, MAX_FRAME_BYTES,
     MAX_STATS_ENTRIES, REPLICA_SINCE_VERSION,
 };
-use crate::coordinator::{AdoptError, Coordinator, ReplicaSpec, Reply, SubmitError};
+use crate::coordinator::{AdoptError, Coordinator, ReplicaSpec, Reply, SubmitError, TraceSpans};
 use crate::metrics::PipelineMetrics;
 use anyhow::{Context, Result};
 use std::io::{BufWriter, Read, Write};
@@ -36,7 +36,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Listener knobs. Everything else (queue depths, shard counts) is the
 /// coordinator's [`crate::util::config::PipelineConfig`].
@@ -217,11 +217,12 @@ fn reject_over_capacity(stream: TcpStream, cap: usize) {
 }
 
 enum ReadEvent {
-    /// A decoded frame, its wire size, and the version byte it was
+    /// A decoded frame, its wire size, the version byte it was
     /// stamped with — the stamp matters to handlers that must know
     /// whether a decoded-to-default field was *stated* or *absent*
-    /// (the `AdoptShard` replica identity).
-    Frame(Frame, usize, u8),
+    /// (the `AdoptShard` replica identity) — and the frame-parse time
+    /// in nanoseconds (the decode stage of a query's trace).
+    Frame(Frame, usize, u8, u64),
     Malformed {
         err: ProtoError,
         /// Correlation id of the offending query when recoverable from
@@ -232,19 +233,34 @@ enum ReadEvent {
     Closed,
 }
 
-/// Stop-aware bounded send: waits while the outbound queue is full,
-/// gives up when the peer's lane is gone or the server is stopping.
-/// Returns `false` when the frame could not be handed off.
-fn send_outbound(tx: &mpsc::SyncSender<Frame>, mut frame: Frame, stop: &AtomicBool) -> bool {
+/// One frame bound for the writer, optionally carrying the `(seq,
+/// spans)` trace accumulator of the query it answers so the writer can
+/// complete the trace after measuring the encode/write stage.
+type OutItem = (Frame, Option<(u64, TraceSpans)>);
+
+/// Stop-aware bounded send for control frames (no trace attached):
+/// waits while the outbound queue is full, gives up when the peer's
+/// lane is gone or the server is stopping. Returns `false` when the
+/// frame could not be handed off.
+fn send_outbound(tx: &mpsc::SyncSender<OutItem>, frame: Frame, stop: &AtomicBool) -> bool {
+    send_outbound_item(tx, (frame, None), stop)
+}
+
+/// [`send_outbound`] for reply frames that carry their trace spans.
+fn send_outbound_item(
+    tx: &mpsc::SyncSender<OutItem>,
+    mut item: OutItem,
+    stop: &AtomicBool,
+) -> bool {
     loop {
-        match tx.try_send(frame) {
+        match tx.try_send(item) {
             Ok(()) => return true,
             Err(mpsc::TrySendError::Disconnected(_)) => return false,
-            Err(mpsc::TrySendError::Full(f)) => {
+            Err(mpsc::TrySendError::Full(i)) => {
                 if stop.load(Ordering::SeqCst) {
                     return false;
                 }
-                frame = f;
+                item = i;
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
@@ -269,10 +285,11 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
     // a peer that pipelines queries without reading replies fills this,
     // then the reader stops consuming its input (TCP backpressure) —
     // server memory stays bounded.
-    let (out_tx, out_rx) = mpsc::sync_channel::<Frame>(OUTBOUND_QUEUE);
-    // Reply lane: the coordinator's workers send (tag, Reply) here.
-    // Unbounded, but at most `conn_inflight` replies can be pending.
-    let (reply_tx, reply_rx) = mpsc::channel::<(usize, Reply)>();
+    let (out_tx, out_rx) = mpsc::sync_channel::<OutItem>(OUTBOUND_QUEUE);
+    // Reply lane: the coordinator's workers send (tag, Reply, spans)
+    // here. Unbounded, but at most `conn_inflight` replies can be
+    // pending.
+    let (reply_tx, reply_rx) = mpsc::channel::<(usize, Reply, TraceSpans)>();
     // Queries submitted on this connection whose reply frame has not
     // been handed to the writer yet.
     let conn_inflight = Arc::new(AtomicUsize::new(0));
@@ -289,13 +306,25 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                     // flush: pipelined reply bursts batch their
                     // syscalls, a lone reply still leaves immediately.
                     let mut next = Some(first);
-                    while let Some(frame) = next {
+                    while let Some((frame, trace)) = next {
+                        let t_write = Instant::now();
                         match write_frame(&mut w, &frame) {
                             Ok(nbytes) => {
                                 m.net_bytes_out.add(nbytes as u64);
                                 m.net_frames_out.inc();
                             }
                             Err(_) => return,
+                        }
+                        // The reply write is this query's last stage:
+                        // complete its trace (encode + buffered write;
+                        // traced queries clamp to >= 1ns so the stage
+                        // is visibly non-zero).
+                        if let Some((seq, spans)) = trace {
+                            let mut write_ns = t_write.elapsed().as_nanos() as u64;
+                            if spans.trace_id != 0 {
+                                write_ns = write_ns.max(1);
+                            }
+                            coord.record_trace(seq, spans, write_ns);
                         }
                         next = out_rx.try_recv().ok();
                     }
@@ -319,7 +348,7 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
             .name("sketch-conn-fwd".to_string())
             .spawn(move || {
                 let m = coord.metrics();
-                while let Ok((tag, reply)) = reply_rx.recv() {
+                while let Ok((tag, reply, spans)) = reply_rx.recv() {
                     m.net_queries_inflight.dec();
                     conn_inflight.fetch_sub(1, Ordering::SeqCst);
                     let frame = match reply {
@@ -344,7 +373,7 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                             reply,
                         },
                     };
-                    if !send_outbound(&out_tx, frame, &stop) {
+                    if !send_outbound_item(&out_tx, (frame, Some((tag as u64, spans))), &stop) {
                         return;
                     }
                 }
@@ -381,7 +410,7 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                     break;
                 }
             }
-            ReadEvent::Frame(frame, nbytes, version) => {
+            ReadEvent::Frame(frame, nbytes, version, decode_ns) => {
                 metrics.net_frames_in.inc();
                 metrics.net_bytes_in.add(nbytes as u64);
                 match frame {
@@ -393,6 +422,25 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                     Frame::StatsRequest => {
                         let reply = Frame::Stats {
                             entries: stats_snapshot(coord),
+                        };
+                        if !send_outbound(&out_tx, reply, stop) {
+                            break;
+                        }
+                    }
+                    Frame::TraceDumpRequest => {
+                        // The v6 admin path: hand back this node's
+                        // recent traced queries + slow-query log so a
+                        // cluster client can stitch per-node spans
+                        // into one query trace.
+                        let (traces, slow) = coord.traces().dump();
+                        let reply = Frame::TraceDump { traces, slow };
+                        if !send_outbound(&out_tx, reply, stop) {
+                            break;
+                        }
+                    }
+                    Frame::MetricsTextRequest => {
+                        let reply = Frame::MetricsText {
+                            text: coord.metrics().metrics_text(),
                         };
                         if !send_outbound(&out_tx, reply, stop) {
                             break;
@@ -464,7 +512,12 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                             break;
                         }
                     }
-                    Frame::Query { id, query, epoch } => {
+                    Frame::Query {
+                        id,
+                        query,
+                        epoch,
+                        trace_id,
+                    } => {
                         // Cap this connection's pipelined depth: a peer
                         // that submits without reading replies parks
                         // here (TCP backpressure) instead of pinning
@@ -486,7 +539,18 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                         if dead {
                             break;
                         }
-                        match coord.submit_stamped(query, epoch, id as usize, reply_tx.clone()) {
+                        let trace = TraceSpans {
+                            trace_id,
+                            decode_ns,
+                            ..TraceSpans::default()
+                        };
+                        match coord.submit_traced(
+                            query,
+                            epoch,
+                            trace,
+                            id as usize,
+                            reply_tx.clone(),
+                        ) {
                             Ok(()) => {
                                 metrics.net_queries_inflight.inc();
                                 conn_inflight.fetch_add(1, Ordering::SeqCst);
@@ -543,7 +607,9 @@ fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<Atom
                     | Frame::Reply { .. }
                     | Frame::Error { .. }
                     | Frame::Stats { .. }
-                    | Frame::ShardMap(_) => {
+                    | Frame::ShardMap(_)
+                    | Frame::TraceDump { .. }
+                    | Frame::MetricsText { .. } => {
                         metrics.net_decode_errors.inc();
                         let reply = Frame::Error {
                             id: 0,
@@ -605,11 +671,19 @@ fn read_event(stream: &mut TcpStream, stop: &AtomicBool) -> ReadEvent {
         Ok(true) => {}
         _ => return ReadEvent::Closed, // mid-frame EOF / stop
     }
+    let t_decode = Instant::now();
     match Frame::decode(&payload) {
         // Framing was consistent: survive content errors. A bad query
         // still gets its id attributed so the error answers that query
-        // instead of reading as a connection-level failure.
-        Ok(frame) => ReadEvent::Frame(frame, 4 + len, payload[0]),
+        // instead of reading as a connection-level failure. The parse
+        // time becomes the decode stage of a traced query (clamped to
+        // >= 1ns so completed traces never show a zero stage).
+        Ok(frame) => ReadEvent::Frame(
+            frame,
+            4 + len,
+            payload[0],
+            (t_decode.elapsed().as_nanos() as u64).max(1),
+        ),
         Err(err) => ReadEvent::Malformed {
             err,
             id: query_id_of(&payload).unwrap_or(0),

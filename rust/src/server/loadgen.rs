@@ -21,7 +21,7 @@
 use super::client::{ClientError, SketchClient};
 use super::cluster::{ClusterClient, ClusterError};
 use crate::coordinator::{Query, QueryKind};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{LatencyHistogram, KIND_LABELS};
 use crate::numerics::{Rng, Xoshiro256pp};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -75,6 +75,10 @@ pub struct LoadgenConfig {
     /// Side length of Block queries (`side × side` cells).
     pub block_side: usize,
     pub seed: u64,
+    /// Print a live per-node dashboard ([`watch_grid`]) while the run
+    /// drives load: every node's qps, queue depth, p99 and shard
+    /// identity, sampled once a second from its `Stats` frame.
+    pub watch: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -89,6 +93,7 @@ impl Default for LoadgenConfig {
             topk_m: 10,
             block_side: 8,
             seed: 0x10AD,
+            watch: false,
         }
     }
 }
@@ -110,6 +115,11 @@ pub struct LoadgenReport {
     /// Server-side `kernel_lanes_used` gauge (which fused-kernel build
     /// the node is serving with), sampled the same way.
     pub server_kernel_lanes: Option<u64>,
+    /// Per-estimator-kind server-side scan latency quantiles
+    /// `(kind, [p50, p95, p99])` in ns, from the same post-run `Stats`
+    /// fetch — only kinds whose scan histogram is non-empty, so a
+    /// pair-only run reports no scan rows at all.
+    pub server_scan_quantiles: Vec<(&'static str, [u64; 3])>,
 }
 
 impl LoadgenReport {
@@ -133,6 +143,14 @@ impl LoadgenReport {
             if let Some(lanes) = self.server_kernel_lanes {
                 s.push_str(&format!(" ({lanes} lanes)"));
             }
+        }
+        for (kind, [p50, p95, p99]) in &self.server_scan_quantiles {
+            s.push_str(&format!(
+                " | server scan[{kind}]: p50<{:.1}us p95<{:.1}us p99<{:.1}us",
+                *p50 as f64 / 1e3,
+                *p95 as f64 / 1e3,
+                *p99 as f64 / 1e3,
+            ));
         }
         s
     }
@@ -322,6 +340,18 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
     let threads = cfg.threads.max(1);
     let t0 = Instant::now();
     let deadline = t0 + cfg.duration;
+    // Live dashboard rides alongside the workers on its own thread so
+    // polling `Stats` never steals a drive loop's cycle.
+    let watch_handle = if cfg.watch {
+        let addrs = addrs.clone();
+        let handle = std::thread::Builder::new()
+            .name("loadgen-watch".to_string())
+            .spawn(move || watch_grid(&addrs, Some(deadline), Duration::from_secs(1)))
+            .expect("spawning loadgen watch thread");
+        Some(handle)
+    } else {
+        None
+    };
     let mut handles = Vec::with_capacity(threads);
     for t in 0..threads {
         let cfg = cfg.clone();
@@ -438,18 +468,36 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
     for h in handles {
         let _ = h.join();
     }
+    if let Some(h) = watch_handle {
+        let _ = h.join();
+    }
     let elapsed = t0.elapsed();
-    // Best-effort post-run probe of the first node's scan gauges so
-    // the report shows the *server-side* scan rate and kernel build,
-    // not just client-observed latency. Absence (older server, probe
-    // failure) is not an error — the run itself already finished.
-    let (server_scan_rows_per_s, server_kernel_lanes) = match dial(&addrs[0]) {
-        Ok(mut probe) => (
-            probe.stat("scan_rows_per_s").ok().flatten(),
-            probe.stat("kernel_lanes_used").ok().flatten(),
-        ),
-        Err(_) => (None, None),
-    };
+    // Best-effort post-run probe of the first node's scan stats so the
+    // report shows the *server-side* scan rate, kernel build, and
+    // per-kind scan tails, not just client-observed latency. One
+    // `Stats` fetch serves every field (it used to be one round trip
+    // per stat). Absence (older server, probe failure) is not an
+    // error — the run itself already finished.
+    let mut server_scan_rows_per_s = None;
+    let mut server_kernel_lanes = None;
+    let mut server_scan_quantiles = Vec::new();
+    if let Ok(Ok(entries)) = dial(&addrs[0]).map(|mut probe| probe.stats()) {
+        let get = |label: &str| entries.iter().find(|(l, _)| l == label).map(|&(_, v)| v);
+        server_scan_rows_per_s = get("scan_rows_per_s");
+        server_kernel_lanes = get("kernel_lanes_used");
+        for kind in KIND_LABELS {
+            let quantiles = [
+                get(&format!("scan_{kind}_p50_ns")),
+                get(&format!("scan_{kind}_p95_ns")),
+                get(&format!("scan_{kind}_p99_ns")),
+            ];
+            if let [Some(p50), Some(p95), Some(p99)] = quantiles {
+                if p50 > 0 {
+                    server_scan_quantiles.push((kind, [p50, p95, p99]));
+                }
+            }
+        }
+    }
     Ok(LoadgenReport {
         sent: sent.load(Ordering::Relaxed),
         ok: ok.load(Ordering::Relaxed),
@@ -460,5 +508,79 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
         latency,
         server_scan_rows_per_s,
         server_kernel_lanes,
+        server_scan_quantiles,
     })
+}
+
+/// Live cluster dashboard: poll every node's `Stats` frame once per
+/// `interval` and print one line per node — qps since the previous
+/// sample, in-flight queue depth, query p99, active connections — plus
+/// the node's shard/replica identity from its `ShardMap` frame. Runs
+/// until `deadline` (`None` = until the process is killed, the
+/// `query --watch` mode). A node that drops mid-watch prints as `down`
+/// and keeps being polled, so a bounce shows up as a gap in the
+/// dashboard instead of ending it.
+pub fn watch_grid(addrs: &[String], deadline: Option<Instant>, interval: Duration) {
+    let mut clients: Vec<Option<SketchClient>> = addrs.iter().map(|_| None).collect();
+    let mut idents: Vec<String> = addrs.iter().map(|_| String::new()).collect();
+    let mut last: Vec<Option<(Instant, u64)>> = vec![None; addrs.len()];
+    let mut tick = 0u64;
+    loop {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return;
+            }
+        }
+        let mut lines = Vec::with_capacity(addrs.len());
+        for (i, addr) in addrs.iter().enumerate() {
+            if clients[i].is_none() {
+                clients[i] = SketchClient::connect(addr).ok();
+                if let Some(client) = clients[i].as_mut() {
+                    idents[i] = match client.shard_map() {
+                        Ok(m) => format!(
+                            "shard {}/{} r{}/{} epoch {}",
+                            m.index, m.count, m.replica, m.replicas, m.epoch
+                        ),
+                        Err(_) => "shard ?".to_string(),
+                    };
+                }
+            }
+            let entries = match clients[i].as_mut().map(|c| c.stats()) {
+                Some(Ok(entries)) => entries,
+                _ => {
+                    clients[i] = None;
+                    last[i] = None;
+                    lines.push(format!("  {addr}: down"));
+                    continue;
+                }
+            };
+            let now = Instant::now();
+            let get = |label: &str| {
+                entries.iter().find(|(l, _)| l == label).map(|&(_, v)| v).unwrap_or(0)
+            };
+            let done = get("queries_completed");
+            let qps = match last[i] {
+                Some((t, prev)) => {
+                    let dt = now.duration_since(t).as_secs_f64().max(1e-9);
+                    done.saturating_sub(prev) as f64 / dt
+                }
+                None => 0.0,
+            };
+            last[i] = Some((now, done));
+            lines.push(format!(
+                "  {addr} [{}]: {qps:.0} qps, {} inflight, p99<{:.1}us, {} conns, {} overloaded",
+                idents[i],
+                get("net_queries_inflight"),
+                get("query_latency_p99_ns") as f64 / 1e3,
+                get("connections_active"),
+                get("net_overload_replies"),
+            ));
+        }
+        tick += 1;
+        println!("watch #{tick}:");
+        for line in lines {
+            println!("{line}");
+        }
+        std::thread::sleep(interval);
+    }
 }

@@ -30,7 +30,14 @@
 //!   errors, bit-identical replies.
 //! * [`loadgen`] — open- and closed-loop multi-threaded load generator
 //!   reporting throughput and p50/p95/p99 latency, driving one node or
-//!   a whole cluster.
+//!   a whole cluster, plus a live per-node `--watch` dashboard.
+//!
+//! The serving layer is fully observable (protocol v6): every `Query`
+//! frame can carry a trace id, each node records per-stage spans
+//! (decode → queue → scan → write) into a [`crate::trace::TraceBuf`]
+//! ring served by the `TraceDump` admin frame, and every node exposes
+//! its metrics in Prometheus text format via the `MetricsText` frame —
+//! see the README's Observability section.
 
 pub mod client;
 pub mod cluster;

@@ -39,22 +39,29 @@
 //! identity (`replica` of `replicas` siblings serving the same rows,
 //! again trailing so the v3/v4 bodies stay exact prefixes), which is
 //! what lets the cluster client place nodes in its
-//! `(shard, replica)` grid and fail over between siblings. Encoders
+//! `(shard, replica)` grid and fail over between siblings; **v6** adds
+//! observability — `Query` frames carry a trailing **trace id** (0 =
+//! untraced; the v4/v5 bodies stay exact prefixes), the
+//! `TraceDumpRequest`/`TraceDump` exchange pulls a node's completed
+//! trace ring and slow-query log, and the
+//! `MetricsTextRequest`/`MetricsText` exchange serves the node's
+//! metrics in Prometheus text format. Encoders
 //! always stamp the current version; decoders accept
 //! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`], with the v3-only
-//! tags (and the v4-only tag/code) refusing older version bytes and
-//! v5-only trailing content under an older stamp refused as trailing
-//! bytes that version never defined.
+//! tags (and the v4-only tag/code, and the v6-only tags) refusing
+//! older version bytes and v5/v6-only trailing content under an older
+//! stamp refused as trailing bytes that version never defined.
 
 use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
+use crate::trace::TraceRecord;
 use std::io::{Read, Write};
 use thiserror::Error;
 
 /// Protocol version spoken (and stamped on every frame) by this build.
-pub const PROTOCOL_VERSION: u8 = 5;
+pub const PROTOCOL_VERSION: u8 = 6;
 
-/// Oldest version this build still decodes (v1..v5 share every frame
-/// body layout as prefixes; v3/v4/v5 only *add* tags and trailing
+/// Oldest version this build still decodes (v1..v6 share every frame
+/// body layout as prefixes; v3/v4/v5/v6 only *add* tags and trailing
 /// fields).
 pub const MIN_PROTOCOL_VERSION: u8 = 1;
 
@@ -75,6 +82,13 @@ const EPOCH_SINCE_VERSION: u8 = 4;
 /// replicated node to replica 0 of 1 and wedge the grid.
 pub const REPLICA_SINCE_VERSION: u8 = 5;
 
+/// First version carrying tracing and metrics exposition: the trailing
+/// `trace_id` stamp on `Query` frames (0 = untraced; pre-v6 bodies
+/// stay exact prefixes and decode as untraced), the
+/// `TraceDumpRequest`/`TraceDump` exchange, and the
+/// `MetricsTextRequest`/`MetricsText` exchange.
+const TRACE_SINCE_VERSION: u8 = 6;
+
 /// Hard cap on one frame's payload. The largest legitimate frame is a
 /// `Block` reply of [`MAX_BLOCK_CELLS`] f64 cells (8 MiB) or a `TopK`
 /// reply of [`MAX_TOPK_M`] (u32, f64) entries (12 MiB); 16 MiB bounds
@@ -93,6 +107,13 @@ pub const MAX_ERROR_MSG_BYTES: usize = 1024;
 /// Caps for [`Frame::Stats`] payloads.
 pub const MAX_STATS_ENTRIES: usize = 256;
 pub const MAX_STATS_LABEL_BYTES: usize = 64;
+
+/// Cap on records per list in a [`Frame::TraceDump`] (the server-side
+/// rings are far smaller; this bounds hostile frames, not honest ones).
+pub const MAX_TRACE_RECORDS: usize = 1024;
+
+/// Cap on the rendered text in a [`Frame::MetricsText`].
+pub const MAX_METRICS_TEXT_BYTES: usize = 1 << 20;
 
 /// Decode failure. Every variant is a clean, bounded error — the
 /// decoder holds no state, so after a *content* error the stream is
@@ -192,8 +213,16 @@ pub enum Frame {
     /// speakers) and is never checked; a nonzero stamp that does not
     /// match the serving node's epoch earns a
     /// [`ErrorCode::WrongEpoch`] refusal instead of a silently
-    /// mis-routed answer.
-    Query { id: u64, query: Query, epoch: u64 },
+    /// mis-routed answer. `trace_id` (v6, trailing again) asks the
+    /// node to record per-stage spans for this query — 0 means
+    /// "untraced" (the fast path; also what every pre-v6 frame decodes
+    /// as).
+    Query {
+        id: u64,
+        query: Query,
+        epoch: u64,
+        trace_id: u64,
+    },
     /// The shape-matched answer to the query with the same `id`.
     Reply { id: u64, reply: Reply },
     /// A refusal. `id` names the query it answers, or 0 for
@@ -227,6 +256,22 @@ pub enum Frame {
     /// epoch, `InvalidQuery` for a range/geometry that makes no
     /// sense).
     AdoptShard(ShardMapInfo),
+    /// v6: ask a node for its recent completed traces and slow-query
+    /// log.
+    TraceDumpRequest,
+    /// v6: the node's trace retention, oldest first — the completed
+    /// traced queries still in the ring, then the threshold-gated
+    /// slow-query log (which may contain untraced records: trace id 0).
+    TraceDump {
+        traces: Vec<TraceRecord>,
+        slow: Vec<TraceRecord>,
+    },
+    /// v6: ask a node for its metrics in Prometheus text format.
+    MetricsTextRequest,
+    /// v6: the node's `PipelineMetrics` rendered as Prometheus text
+    /// exposition format (`# TYPE` lines, cumulative `_bucket{le=…}`
+    /// histogram series).
+    MetricsText { text: String },
 }
 
 /// One node's slice of the cluster row space, as carried by
@@ -258,6 +303,10 @@ const TAG_STATS: u8 = 0x07;
 const TAG_SHARD_MAP_REQUEST: u8 = 0x08;
 const TAG_SHARD_MAP: u8 = 0x09;
 const TAG_ADOPT_SHARD: u8 = 0x0A;
+const TAG_TRACE_DUMP_REQUEST: u8 = 0x0B;
+const TAG_TRACE_DUMP: u8 = 0x0C;
+const TAG_METRICS_TEXT_REQUEST: u8 = 0x0D;
+const TAG_METRICS_TEXT: u8 = 0x0E;
 
 const SHAPE_PAIR: u8 = 0;
 const SHAPE_TOPK: u8 = 1;
@@ -364,13 +413,21 @@ impl Frame {
                 body.push(TAG_PONG);
                 put_u64(&mut body, *token);
             }
-            Frame::Query { id, query, epoch } => {
+            Frame::Query {
+                id,
+                query,
+                epoch,
+                trace_id,
+            } => {
                 body.push(TAG_QUERY);
                 put_u64(&mut body, *id);
                 encode_query(&mut body, query);
                 // Trailing so the v1..v3 body layout stays an exact
                 // prefix of the v4 one.
                 put_u64(&mut body, *epoch);
+                // Trailing again: v4/v5 bodies are exact prefixes of
+                // the v6 one.
+                put_u64(&mut body, *trace_id);
             }
             Frame::Reply { id, reply } => {
                 body.push(TAG_REPLY);
@@ -406,6 +463,26 @@ impl Frame {
                 body.push(TAG_ADOPT_SHARD);
                 encode_shard_info(&mut body, info);
             }
+            Frame::TraceDumpRequest => {
+                body.push(TAG_TRACE_DUMP_REQUEST);
+            }
+            Frame::TraceDump { traces, slow } => {
+                body.push(TAG_TRACE_DUMP);
+                for list in [traces, slow] {
+                    let n = list.len().min(MAX_TRACE_RECORDS);
+                    put_u32(&mut body, n as u32);
+                    for rec in list.iter().take(n) {
+                        encode_trace_record(&mut body, rec);
+                    }
+                }
+            }
+            Frame::MetricsTextRequest => {
+                body.push(TAG_METRICS_TEXT_REQUEST);
+            }
+            Frame::MetricsText { text } => {
+                body.push(TAG_METRICS_TEXT);
+                put_str(&mut body, text, MAX_METRICS_TEXT_BYTES);
+            }
         }
         debug_assert!(body.len() <= MAX_FRAME_BYTES, "encoder produced an oversized frame");
         let mut out = Vec::with_capacity(4 + body.len());
@@ -440,7 +517,18 @@ impl Frame {
                 } else {
                     0
                 };
-                Frame::Query { id, query, epoch }
+                // v1..v5 queries carry no trace stamp; 0 = untraced.
+                let trace_id = if version >= TRACE_SINCE_VERSION {
+                    r.u64()?
+                } else {
+                    0
+                };
+                Frame::Query {
+                    id,
+                    query,
+                    epoch,
+                    trace_id,
+                }
             }
             TAG_REPLY => {
                 let id = r.u64()?;
@@ -484,9 +572,42 @@ impl Frame {
             TAG_ADOPT_SHARD if version < EPOCH_SINCE_VERSION => {
                 return Err(ProtoError::BadVersion(version));
             }
+            TAG_TRACE_DUMP_REQUEST | TAG_TRACE_DUMP | TAG_METRICS_TEXT_REQUEST
+            | TAG_METRICS_TEXT
+                if version < TRACE_SINCE_VERSION =>
+            {
+                return Err(ProtoError::BadVersion(version));
+            }
             TAG_SHARD_MAP_REQUEST => Frame::ShardMapRequest,
             TAG_SHARD_MAP => Frame::ShardMap(decode_shard_info(&mut r, version)?),
             TAG_ADOPT_SHARD => Frame::AdoptShard(decode_shard_info(&mut r, version)?),
+            TAG_TRACE_DUMP_REQUEST => Frame::TraceDumpRequest,
+            TAG_TRACE_DUMP => {
+                let mut lists = [Vec::new(), Vec::new()];
+                for list in &mut lists {
+                    let n = r.u32()? as usize;
+                    if n > MAX_TRACE_RECORDS {
+                        return Err(ProtoError::LengthCap {
+                            what: "trace records",
+                            got: n,
+                            cap: MAX_TRACE_RECORDS,
+                        });
+                    }
+                    // 6×u64 + 2×u32 per record, checked before the
+                    // allocation like every other repeated field.
+                    r.expect_remaining(n * 56)?;
+                    list.reserve(n);
+                    for _ in 0..n {
+                        list.push(decode_trace_record(&mut r)?);
+                    }
+                }
+                let [traces, slow] = lists;
+                Frame::TraceDump { traces, slow }
+            }
+            TAG_METRICS_TEXT_REQUEST => Frame::MetricsTextRequest,
+            TAG_METRICS_TEXT => Frame::MetricsText {
+                text: r.str(MAX_METRICS_TEXT_BYTES)?,
+            },
             other => return Err(ProtoError::BadTag(other)),
         };
         r.finish()?;
@@ -508,6 +629,30 @@ pub fn query_id_of(payload: &[u8]) -> Option<u64> {
         return None;
     }
     Some(u64::from_le_bytes(payload[2..10].try_into().unwrap()))
+}
+
+fn encode_trace_record(out: &mut Vec<u8>, rec: &TraceRecord) {
+    put_u64(out, rec.trace_id);
+    put_u64(out, rec.seq);
+    put_u32(out, rec.shard);
+    put_u32(out, rec.replica);
+    put_u64(out, rec.decode_ns);
+    put_u64(out, rec.queue_ns);
+    put_u64(out, rec.scan_ns);
+    put_u64(out, rec.write_ns);
+}
+
+fn decode_trace_record(r: &mut Cursor<'_>) -> Result<TraceRecord, ProtoError> {
+    Ok(TraceRecord {
+        trace_id: r.u64()?,
+        seq: r.u64()?,
+        shard: r.u32()?,
+        replica: r.u32()?,
+        decode_ns: r.u64()?,
+        queue_ns: r.u64()?,
+        scan_ns: r.u64()?,
+        write_ns: r.u64()?,
+    })
 }
 
 fn encode_shard_info(out: &mut Vec<u8>, info: &ShardMapInfo) {
@@ -975,10 +1120,12 @@ mod tests {
                 kind: QueryKind::Oq,
             },
             epoch: 6,
+            trace_id: 0,
         };
         let wire = f.encode();
-        // Drop the trailing epoch and stamp v3: decodes with epoch 0.
-        let mut payload = wire[4..wire.len() - 8].to_vec();
+        // Drop the trailing epoch + trace id and stamp v3: decodes
+        // with epoch 0.
+        let mut payload = wire[4..wire.len() - 16].to_vec();
         payload[0] = 3;
         match Frame::decode(&payload).expect("v3 query decodes") {
             Frame::Query { id, epoch, .. } => {
@@ -987,7 +1134,126 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
-        // The full v4 body round-trips its stamp.
+        // The full v6 body round-trips its stamps.
         assert_eq!(round_trip(&f), f);
+    }
+
+    #[test]
+    fn v5_query_without_trace_stamp_decodes_as_untraced() {
+        let f = Frame::Query {
+            id: 12,
+            query: Query::Pair {
+                i: 3,
+                j: 4,
+                kind: QueryKind::Gm,
+            },
+            epoch: 9,
+            trace_id: 77,
+        };
+        let wire = f.encode();
+        // Drop the trailing trace id and stamp v5 (or v4): decodes
+        // with trace 0, keeping the epoch.
+        for stamp in [4u8, 5] {
+            let mut payload = wire[4..wire.len() - 8].to_vec();
+            payload[0] = stamp;
+            match Frame::decode(&payload).expect("pre-v6 query decodes") {
+                Frame::Query {
+                    id,
+                    epoch,
+                    trace_id,
+                    ..
+                } => {
+                    assert_eq!(id, 12);
+                    assert_eq!(epoch, 9);
+                    assert_eq!(trace_id, 0, "pre-v6 queries are untraced");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // A full v6 body under a v5 stamp has 8 trailing bytes v5
+        // never defined; under a v3 stamp, 16.
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 5;
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::Trailing(8))
+        ));
+        let mut payload = wire[4..].to_vec();
+        payload[0] = 3;
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::Trailing(16))
+        ));
+    }
+
+    #[test]
+    fn trace_and_metrics_frames_round_trip_and_are_v6_only() {
+        let rec = TraceRecord {
+            trace_id: 0xBEEF,
+            seq: 3,
+            shard: 1,
+            replica: 0,
+            decode_ns: 900,
+            queue_ns: 12_000,
+            scan_ns: 210_000,
+            write_ns: 4_000,
+        };
+        let slow_rec = TraceRecord {
+            trace_id: 0,
+            seq: 9,
+            ..rec
+        };
+        let frames = [
+            Frame::TraceDumpRequest,
+            Frame::TraceDump {
+                traces: vec![rec],
+                slow: vec![slow_rec, rec],
+            },
+            Frame::TraceDump {
+                traces: vec![],
+                slow: vec![],
+            },
+            Frame::MetricsTextRequest,
+            Frame::MetricsText {
+                text: "# TYPE stablesketch_queries_completed counter\n\
+                       stablesketch_queries_completed 5\n"
+                    .into(),
+            },
+        ];
+        for f in &frames {
+            assert_eq!(&round_trip(f), f);
+        }
+        // The same tags under any pre-v6 stamp are self-contradictory.
+        for f in &frames {
+            for stamp in 1..TRACE_SINCE_VERSION {
+                let wire = f.encode();
+                let mut payload = wire[4..].to_vec();
+                payload[0] = stamp;
+                assert!(
+                    matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+                    "v6 tag under v{stamp} stamp must be refused"
+                );
+            }
+        }
+        // A TraceDump declaring more records than the cap is refused
+        // before any allocation.
+        let wire = Frame::TraceDumpRequest.encode();
+        let mut payload = wire[4..].to_vec();
+        payload[1] = 0x0C; // TAG_TRACE_DUMP with a hostile count
+        payload.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ProtoError::LengthCap { what: "trace records", .. })
+        ));
+        // Truncated TraceDump bodies err cleanly.
+        let wire = Frame::TraceDump {
+            traces: vec![rec],
+            slow: vec![rec],
+        }
+        .encode();
+        let payload = &wire[4..];
+        for cut in 2..payload.len() {
+            assert!(Frame::decode(&payload[..cut]).is_err(), "cut {cut}");
+        }
     }
 }

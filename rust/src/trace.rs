@@ -1,0 +1,406 @@
+//! End-to-end query tracing: per-node span records, a fixed-size ring
+//! buffer of completed traces, a threshold-gated slow-query log, and
+//! the client-side stitched trace assembled by the cluster router.
+//!
+//! A trace is born on the client: [`next_trace_id`] stamps a query plan
+//! with a non-zero `trace_id`, carried on every v6 `Query` frame the
+//! plan fans out into. Each serving node stamps timestamps at its stage
+//! boundaries only — listener decode, coordinator queue wait, worker
+//! scan/kernel, reply encode+write — and deposits one [`TraceRecord`]
+//! per traced query into its [`TraceBuf`]. The untraced fast path
+//! (`trace_id == 0`) takes a single branch and never locks the buffer.
+//! The cluster client then pulls those records back over the wire
+//! (`TraceDump` frames) and stitches them under its own per-sub-plan
+//! timings — including failover retries and shard-map refreshes — into
+//! one [`QueryTrace`] with a stage breakdown per shard.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Completed server-side spans for one query at one node.
+///
+/// All four stage spans are measured at stage boundaries (two `Instant`
+/// reads each), never inside the kernel loops. For traced queries the
+/// worker clamps the queue and scan spans to ≥ 1 ns so a trace can
+/// never show a stage as absent merely because it was fast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Client-chosen trace id (0 = untraced; such records appear only
+    /// in the slow-query log, never in the trace ring).
+    pub trace_id: u64,
+    /// The query frame's correlation id.
+    pub seq: u64,
+    /// Shard identity of the answering node.
+    pub shard: u32,
+    /// Replica identity of the answering node.
+    pub replica: u32,
+    /// Frame-parse time in the listener's reader thread.
+    pub decode_ns: u64,
+    /// Admission → worker pickup (coordinator queue wait).
+    pub queue_ns: u64,
+    /// Worker execute: scan + fused kernel + estimate.
+    pub scan_ns: u64,
+    /// Reply encode + socket write in the writer thread.
+    pub write_ns: u64,
+}
+
+impl TraceRecord {
+    /// Sum of the four stage spans — the node-local service time.
+    pub fn total_ns(&self) -> u64 {
+        self.decode_ns
+            .saturating_add(self.queue_ns)
+            .saturating_add(self.scan_ns)
+            .saturating_add(self.write_ns)
+    }
+
+    /// One-line rendering: `trace 0x1d seq 3 [shard 0.1] decode 1.2µs | …`.
+    pub fn render(&self) -> String {
+        format!(
+            "trace {:#x} seq {} [shard {}.{}] decode {} | queue {} | scan {} | write {} = {}",
+            self.trace_id,
+            self.seq,
+            self.shard,
+            self.replica,
+            fmt_ns(self.decode_ns),
+            fmt_ns(self.queue_ns),
+            fmt_ns(self.scan_ns),
+            fmt_ns(self.write_ns),
+            fmt_ns(self.total_ns()),
+        )
+    }
+}
+
+/// Default capacity of the completed-trace ring.
+pub const TRACE_RING_CAPACITY: usize = 256;
+/// Default capacity of the slow-query log ring.
+pub const SLOW_LOG_CAPACITY: usize = 64;
+/// Default slow-query threshold: 10 ms node-local service time.
+pub const DEFAULT_SLOW_THRESHOLD_NS: u64 = 10_000_000;
+
+/// Per-node trace retention: a bounded ring of completed traced
+/// queries plus a separate threshold-gated slow-query log (which
+/// admits untraced queries too — a slow query is interesting whether
+/// or not anyone asked for a trace).
+///
+/// Lock discipline: the untraced fast path pays one atomic load (the
+/// threshold check) and takes a mutex only for queries that are
+/// actually slow; traced queries lock once per completion. Dumps copy
+/// out under the lock — the rings are small by construction.
+pub struct TraceBuf {
+    recent: Mutex<VecDeque<TraceRecord>>,
+    slow: Mutex<VecDeque<TraceRecord>>,
+    slow_threshold_ns: AtomicU64,
+    /// Traced completions evicted from the ring before any dump.
+    dropped: AtomicU64,
+}
+
+impl Default for TraceBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceBuf {
+    pub fn new() -> Self {
+        Self {
+            recent: Mutex::new(VecDeque::with_capacity(TRACE_RING_CAPACITY)),
+            slow: Mutex::new(VecDeque::with_capacity(SLOW_LOG_CAPACITY)),
+            slow_threshold_ns: AtomicU64::new(DEFAULT_SLOW_THRESHOLD_NS),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Lower (or raise) the slow-query gate. 0 logs everything.
+    pub fn set_slow_threshold_ns(&self, ns: u64) {
+        self.slow_threshold_ns.store(ns, Ordering::Relaxed);
+    }
+
+    pub fn slow_threshold_ns(&self) -> u64 {
+        self.slow_threshold_ns.load(Ordering::Relaxed)
+    }
+
+    /// Traced completions evicted before being dumped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Whether a completion with this identity/latency needs recording
+    /// at all — the untraced fast path's single (lock-free) check.
+    pub fn wants(&self, trace_id: u64, total_ns: u64) -> bool {
+        trace_id != 0 || total_ns >= self.slow_threshold_ns.load(Ordering::Relaxed)
+    }
+
+    /// Deposit one completed record. Traced records enter the trace
+    /// ring; anything at or over the slow threshold also enters the
+    /// slow log.
+    pub fn record(&self, rec: TraceRecord) {
+        if rec.trace_id != 0 {
+            let mut ring = self.recent.lock().expect("trace ring poisoned");
+            if ring.len() == TRACE_RING_CAPACITY {
+                ring.pop_front();
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.push_back(rec);
+        }
+        if rec.total_ns() >= self.slow_threshold_ns.load(Ordering::Relaxed) {
+            let mut log = self.slow.lock().expect("slow log poisoned");
+            if log.len() == SLOW_LOG_CAPACITY {
+                log.pop_front();
+            }
+            log.push_back(rec);
+        }
+    }
+
+    /// Copy out (recent traced records, slow-query log), oldest first.
+    pub fn dump(&self) -> (Vec<TraceRecord>, Vec<TraceRecord>) {
+        let recent = self
+            .recent
+            .lock()
+            .expect("trace ring poisoned")
+            .iter()
+            .copied()
+            .collect();
+        let slow = self
+            .slow
+            .lock()
+            .expect("slow log poisoned")
+            .iter()
+            .copied()
+            .collect();
+        (recent, slow)
+    }
+
+    /// Records in the trace ring matching one trace id, oldest first.
+    pub fn find(&self, trace_id: u64) -> Vec<TraceRecord> {
+        self.recent
+            .lock()
+            .expect("trace ring poisoned")
+            .iter()
+            .filter(|r| r.trace_id == trace_id)
+            .copied()
+            .collect()
+    }
+}
+
+/// Process-unique, never-zero trace id: a per-process random base
+/// (wall-clock seeded, splitmix-scrambled) plus a counter, so ids from
+/// concurrent client processes against the same cluster don't collide
+/// in the nodes' trace rings.
+pub fn next_trace_id() -> u64 {
+    static BASE: OnceLock<u64> = OnceLock::new();
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let base = *BASE.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED)
+            ^ (std::process::id() as u64) << 32;
+        // splitmix64 finalizer — spreads the seed over the whole word.
+        let mut z = nanos.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    });
+    let id = base.wrapping_add(COUNTER.fetch_add(1, Ordering::Relaxed));
+    // 0 means "untraced" on the wire; skip it.
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// One shard's sub-plan inside a stitched cluster trace.
+#[derive(Debug, Clone)]
+pub struct SubPlanTrace {
+    pub shard: usize,
+    /// Replica that finally answered.
+    pub replica: usize,
+    /// Address of the answering node.
+    pub addr: String,
+    /// Replicas tried: 1 = first choice answered, ≥ 2 = failover.
+    pub attempts: u32,
+    /// Client-observed wall time for the whole sub-plan (all attempts).
+    pub client_ns: u64,
+    /// Server-side stage spans pulled from the answering node's trace
+    /// ring (None: node restarted, ring wrapped, or pre-v6 server).
+    pub server: Vec<TraceRecord>,
+}
+
+/// A whole query plan's stitched trace: client-side routing/gather
+/// framing around one [`SubPlanTrace`] per contributing shard.
+#[derive(Debug, Clone)]
+pub struct QueryTrace {
+    pub trace_id: u64,
+    /// Wall time of the full plan, client-observed.
+    pub total_ns: u64,
+    /// Validation + routing before the scatter.
+    pub route_ns: u64,
+    /// Shard-map refreshes the plan needed (0 on the happy path).
+    pub refreshes: u64,
+    pub subs: Vec<SubPlanTrace>,
+}
+
+impl QueryTrace {
+    /// Multi-line pretty rendering of the stitched trace
+    /// (client → shard → replica → worker stages).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "trace {:#x}: total {} (route {}, refreshes {})\n",
+            self.trace_id,
+            fmt_ns(self.total_ns),
+            fmt_ns(self.route_ns),
+            self.refreshes,
+        );
+        for (i, sub) in self.subs.iter().enumerate() {
+            let tee = if i + 1 == self.subs.len() {
+                "└─"
+            } else {
+                "├─"
+            };
+            let bar = if i + 1 == self.subs.len() { "  " } else { "│ " };
+            out.push_str(&format!(
+                "{tee} shard {} → replica {} @{} ({} attempt{}{}) client {}\n",
+                sub.shard,
+                sub.replica,
+                sub.addr,
+                sub.attempts,
+                if sub.attempts == 1 { "" } else { "s" },
+                if sub.attempts > 1 { ", failover" } else { "" },
+                fmt_ns(sub.client_ns),
+            ));
+            if sub.server.is_empty() {
+                out.push_str(&format!("{bar}   server spans: (not retained)\n"));
+            }
+            for rec in &sub.server {
+                out.push_str(&format!(
+                    "{bar}   decode {} | queue {} | scan {} | write {}\n",
+                    fmt_ns(rec.decode_ns),
+                    fmt_ns(rec.queue_ns),
+                    fmt_ns(rec.scan_ns),
+                    fmt_ns(rec.write_ns),
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Human duration: `837ns`, `12.3µs`, `4.6ms`, `1.20s`.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace_id: u64, seq: u64, scan_ns: u64) -> TraceRecord {
+        TraceRecord {
+            trace_id,
+            seq,
+            shard: 0,
+            replica: 0,
+            decode_ns: 1,
+            queue_ns: 2,
+            scan_ns,
+            write_ns: 3,
+        }
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let buf = TraceBuf::new();
+        for i in 0..(TRACE_RING_CAPACITY as u64 + 5) {
+            buf.record(rec(100 + i, i, 10));
+        }
+        let (recent, _) = buf.dump();
+        assert_eq!(recent.len(), TRACE_RING_CAPACITY);
+        assert_eq!(buf.dropped(), 5);
+        // Oldest five evicted: the ring starts at trace 105.
+        assert_eq!(recent[0].trace_id, 105);
+        assert_eq!(recent.last().unwrap().seq, TRACE_RING_CAPACITY as u64 + 4);
+    }
+
+    #[test]
+    fn slow_log_is_threshold_gated_and_admits_untraced() {
+        let buf = TraceBuf::new();
+        buf.set_slow_threshold_ns(100);
+        buf.record(rec(0, 1, 10)); // untraced, fast: nowhere
+        buf.record(rec(0, 2, 500)); // untraced, slow: slow log only
+        buf.record(rec(7, 3, 10)); // traced, fast: ring only
+        buf.record(rec(8, 4, 500)); // traced, slow: both
+        let (recent, slow) = buf.dump();
+        assert_eq!(
+            recent.iter().map(|r| r.seq).collect::<Vec<_>>(),
+            vec![3, 4]
+        );
+        assert_eq!(slow.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![2, 4]);
+        assert!(!buf.wants(0, 50));
+        assert!(buf.wants(0, 100));
+        assert!(buf.wants(9, 0));
+    }
+
+    #[test]
+    fn find_filters_by_trace_id() {
+        let buf = TraceBuf::new();
+        buf.record(rec(5, 1, 10));
+        buf.record(rec(6, 2, 10));
+        buf.record(rec(5, 3, 10));
+        let hits = buf.find(5);
+        assert_eq!(hits.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn renderings_name_every_stage() {
+        let r = rec(0x1d, 9, 44);
+        for stage in ["decode", "queue", "scan", "write"] {
+            assert!(r.render().contains(stage), "{stage} in {}", r.render());
+        }
+        let qt = QueryTrace {
+            trace_id: 0x1d,
+            total_ns: 1_500_000,
+            route_ns: 900,
+            refreshes: 1,
+            subs: vec![SubPlanTrace {
+                shard: 2,
+                replica: 1,
+                addr: "127.0.0.1:7878".into(),
+                attempts: 2,
+                client_ns: 1_200_000,
+                server: vec![r],
+            }],
+        };
+        let text = qt.render();
+        assert!(text.contains("shard 2 → replica 1"));
+        assert!(text.contains("failover"));
+        assert!(text.contains("refreshes 1"));
+        assert!(text.contains("scan"));
+    }
+
+    #[test]
+    fn fmt_ns_picks_sane_units() {
+        assert_eq!(fmt_ns(999), "999ns");
+        assert_eq!(fmt_ns(1_500), "1.5µs");
+        assert_eq!(fmt_ns(2_500_000), "2.5ms");
+        assert_eq!(fmt_ns(1_200_000_000), "1.20s");
+    }
+}

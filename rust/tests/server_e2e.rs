@@ -196,6 +196,7 @@ fn malformed_frames_get_error_replies_and_never_kill_the_server() {
                 kind: QueryKind::Oq,
             },
             epoch: 0,
+            trace_id: 0,
         },
     )
     .expect("write query");

@@ -1,0 +1,361 @@
+//! End-to-end query tracing over the wire (protocol v6).
+//!
+//! The acceptance contract: a traced plan against a 3-shard × 2-replica
+//! loopback grid — with one replica killed so a failover happens *inside*
+//! the traced plan — produces a single stitched [`QueryTrace`] carrying
+//! non-zero decode/queue/scan/write spans for every contributing shard,
+//! attributes the failover to the right sub-plan, and returns replies
+//! bit-identical to an untraced single-node run. Around that headline:
+//! the per-node trace ring and threshold-gated slow log behave over the
+//! wire exactly as the [`stablesketch::trace::TraceBuf`] unit contract
+//! says, and the `MetricsText` frame serves a Prometheus exposition that
+//! passes the strict validator.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, ReplicaSpec, Reply, ShardSpec};
+use stablesketch::metrics::validate_metrics_text;
+use stablesketch::server::{ClusterClient, ServerConfig, SketchClient, SketchServer};
+use stablesketch::sketch::{SketchEngine, SketchStore};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::trace::next_trace_id;
+use stablesketch::util::config::PipelineConfig;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ALL_KINDS: [QueryKind; 4] = [
+    QueryKind::Oq,
+    QueryKind::Gm,
+    QueryKind::Fp,
+    QueryKind::Median,
+];
+
+const N: usize = 42;
+const SHARDS: usize = 3;
+const R: usize = 2;
+
+fn sketch_corpus(n: usize, k: usize) -> (SketchStore, PipelineConfig) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 512,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.2,
+        k,
+        dim: corpus.dim,
+        shards: 2,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, corpus.dim, k, cfg.seed);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    (store, cfg)
+}
+
+fn start_node(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shard: Option<ShardSpec>,
+    replica: ReplicaSpec,
+) -> (Arc<Coordinator>, SketchServer, String) {
+    let coord = Arc::new(
+        Coordinator::start_replicated(cfg.clone(), store.clone(), shard, replica)
+            .expect("coordinator"),
+    );
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server start");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+/// Start a `shards × replicas` grid; node slot `shard * replicas + r`
+/// in every returned vector (the cluster client's shard-major order).
+#[allow(clippy::type_complexity)]
+fn start_grid(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shards: usize,
+    replicas: usize,
+) -> (Vec<Option<Arc<Coordinator>>>, Vec<Option<SketchServer>>, Vec<String>) {
+    let mut coords = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..shards {
+        for r in 0..replicas {
+            let replica = ReplicaSpec {
+                index: r,
+                of: replicas,
+            };
+            let (c, s, a) = start_node(store, cfg, Some(ShardSpec { index, of: shards }), replica);
+            coords.push(Some(c));
+            servers.push(Some(s));
+            addrs.push(a);
+        }
+    }
+    (coords, servers, addrs)
+}
+
+fn dial(addr: &str) -> SketchClient {
+    SketchClient::connect_with_retry(addr, 10, Duration::from_millis(20)).expect("connect")
+}
+
+/// A mixed plan covering every shape/kind, with TopKs big enough to
+/// force cross-shard merges and blocks spanning the row space.
+fn mixed_plan(n: u32, salt: u32) -> Vec<Query> {
+    let mut plan = Vec::new();
+    for (t, &kind) in ALL_KINDS.iter().enumerate() {
+        let t = t as u32;
+        plan.push(Query::Pair {
+            i: (salt + t) % n,
+            j: (salt + 3 * t + 1) % n,
+            kind,
+        });
+        plan.push(Query::TopK {
+            i: (salt + 7 * t) % n,
+            m: (n as usize / 3) + 2,
+            kind,
+        });
+        plan.push(Query::Block {
+            rows: vec![salt % n, (salt + n / 2) % n, n - 1 - (salt % n)],
+            cols: vec![(salt + 1) % n, (salt + 5) % n, (salt + 9) % n],
+            kind,
+        });
+    }
+    plan
+}
+
+fn assert_bit_identical(local: &[Reply], remote: &[Reply], tag: &str) {
+    assert_eq!(local.len(), remote.len(), "{tag}: reply count");
+    for (q, (l, r)) in local.iter().zip(remote).enumerate() {
+        match (l, r) {
+            (Reply::Pair(a), Reply::Pair(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: pair bits differ at {q}")
+            }
+            (Reply::TopK(a), Reply::TopK(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: topk length at {q}");
+                for ((ja, da), (jb, db)) in a.iter().zip(b) {
+                    assert_eq!(ja, jb, "{tag}: topk neighbour differs at {q}");
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: topk bits differ at {q}");
+                }
+            }
+            (Reply::Block(a), Reply::Block(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: block length at {q}");
+                for (da, db) in a.iter().zip(b) {
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: block bits differ at {q}");
+                }
+            }
+            other => panic!("{tag}: shape mismatch at {q}: {other:?}"),
+        }
+    }
+}
+
+/// The headline scenario: one traced mixed plan through a 3×2 grid with
+/// shard 1's first-choice replica dead, so the trace must swallow a live
+/// failover. One stitched trace, every shard contributing non-zero
+/// per-stage spans, the failover attributed to the right sub-plan, and
+/// replies bit-identical to an untraced single-node reference.
+#[test]
+fn traced_plan_through_a_replicated_grid_stitches_one_trace_with_failover() {
+    let (store, cfg) = sketch_corpus(N, 64);
+    let (mut coords, mut servers, addrs) = start_grid(&store, &cfg, SHARDS, R);
+    let (_ref_coord, ref_server, ref_addr) = start_node(&store, &cfg, None, ReplicaSpec::solo());
+    let mut reference = dial(&ref_addr);
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+
+    // Kill shard 1's replica 0 after connect: the round-robin cursor
+    // starts there, so the traced plan's first attempt at shard 1 hits
+    // the corpse and fails over to the sibling mid-trace.
+    let dead_slot = R;
+    servers[dead_slot].take().unwrap().shutdown();
+    drop(coords[dead_slot].take());
+
+    let plan = mixed_plan(N as u32, 3);
+    let (remote, trace) = cluster.query_plan_traced(&plan).expect("traced plan");
+    let local = reference.query_plan(&plan).expect("single-node plan");
+    assert_bit_identical(&local, &remote, "traced vs reference");
+
+    assert_ne!(trace.trace_id, 0, "a traced plan always gets a real id");
+    assert!(trace.total_ns > 0);
+    assert_eq!(trace.refreshes, 0, "failover absorbs a dead replica without a refresh");
+    assert_eq!(trace.subs.len(), SHARDS, "every shard contributes one sub-plan");
+    let mut shards_seen: Vec<usize> = trace.subs.iter().map(|s| s.shard).collect();
+    shards_seen.sort_unstable();
+    assert_eq!(shards_seen, vec![0, 1, 2]);
+    for sub in &trace.subs {
+        assert!(sub.client_ns > 0, "shard {}: client span missing", sub.shard);
+        assert!(!sub.server.is_empty(), "shard {} retained no server spans", sub.shard);
+        for rec in &sub.server {
+            assert_eq!(rec.trace_id, trace.trace_id, "one trace id end to end");
+            assert_eq!(rec.shard as usize, sub.shard, "span attributed to the right shard");
+            assert_eq!(rec.replica as usize, sub.replica, "span names the answering replica");
+            assert!(
+                rec.decode_ns > 0 && rec.queue_ns > 0 && rec.scan_ns > 0 && rec.write_ns > 0,
+                "every stage span is non-zero: {}",
+                rec.render()
+            );
+        }
+    }
+    let failed_over = trace.subs.iter().find(|s| s.shard == 1).expect("shard 1 sub");
+    assert!(failed_over.attempts >= 2, "shard 1's sub-plan must record the failover");
+    assert_eq!(failed_over.replica, 1, "the surviving sibling answered");
+    assert!(cluster.metrics().failovers.get() >= 1);
+    let text = trace.render();
+    assert!(text.contains("failover"), "{text}");
+    assert!(text.contains("decode"), "{text}");
+
+    // Tracing never perturbs results: the same plan untraced is
+    // bit-identical too, whichever siblings serve it.
+    let untraced = cluster.query_plan(&plan).expect("untraced plan");
+    assert_bit_identical(&local, &untraced, "untraced vs reference");
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+    ref_server.shutdown();
+}
+
+/// The per-node trace ring over the wire: only queries stamped with a
+/// trace id enter it — one record per traced query, distinct seqs, all
+/// four stage spans non-zero — and `set_trace(0)` turns retention back
+/// off on the same connection.
+#[test]
+fn trace_ring_retains_exactly_the_traced_queries() {
+    let (store, cfg) = sketch_corpus(24, 32);
+    let (_coord, server, addr) = start_node(&store, &cfg, None, ReplicaSpec::solo());
+    let mut client = dial(&addr);
+
+    let untraced = Query::Pair {
+        i: 0,
+        j: 1,
+        kind: QueryKind::Oq,
+    };
+    client.query_plan(&[untraced.clone()]).expect("untraced");
+    let (recent, _) = client.trace_dump().expect("dump");
+    assert!(recent.is_empty(), "untraced queries must not enter the trace ring");
+
+    let trace_id = next_trace_id();
+    client.set_trace(trace_id);
+    let plan = vec![
+        Query::Pair {
+            i: 0,
+            j: 1,
+            kind: QueryKind::Oq,
+        },
+        Query::TopK {
+            i: 2,
+            m: 5,
+            kind: QueryKind::Gm,
+        },
+        Query::Block {
+            rows: vec![0, 3],
+            cols: vec![1, 2],
+            kind: QueryKind::Fp,
+        },
+    ];
+    client.query_plan(&plan).expect("traced plan");
+    client.set_trace(0);
+    client.query_plan(&[untraced]).expect("untraced again");
+
+    let (recent, _slow) = client.trace_dump().expect("dump");
+    assert_eq!(recent.len(), plan.len(), "one record per traced query, nothing else");
+    let mut seqs = Vec::new();
+    for rec in &recent {
+        assert_eq!(rec.trace_id, trace_id);
+        assert!(
+            rec.decode_ns > 0 && rec.queue_ns > 0 && rec.scan_ns > 0 && rec.write_ns > 0,
+            "every stage span is non-zero: {}",
+            rec.render()
+        );
+        let sum = rec.decode_ns + rec.queue_ns + rec.scan_ns + rec.write_ns;
+        assert_eq!(rec.total_ns(), sum);
+        seqs.push(rec.seq);
+    }
+    seqs.sort_unstable();
+    seqs.dedup();
+    assert_eq!(seqs.len(), plan.len(), "each traced frame keeps its own correlation id");
+    server.shutdown();
+}
+
+/// The slow-query log is threshold-gated and admits untraced queries:
+/// with the gate at `u64::MAX` nothing is slow; dropped to 0 every
+/// completion lands in the slow log (trace id 0) while the trace ring
+/// stays empty.
+#[test]
+fn slow_log_gate_works_end_to_end_and_admits_untraced_queries() {
+    let (store, cfg) = sketch_corpus(24, 32);
+    let (coord, server, addr) = start_node(&store, &cfg, None, ReplicaSpec::solo());
+    let mut client = dial(&addr);
+    let pair = |i: u32, j: u32| Query::Pair {
+        i,
+        j,
+        kind: QueryKind::Oq,
+    };
+
+    coord.traces().set_slow_threshold_ns(u64::MAX);
+    client.query_plan(&[pair(0, 1)]).expect("fast query");
+    let (recent, slow) = client.trace_dump().expect("dump");
+    assert!(recent.is_empty() && slow.is_empty(), "nothing clears an infinite gate");
+
+    coord.traces().set_slow_threshold_ns(0);
+    client.query_plan(&[pair(2, 3)]).expect("slow query");
+    let (recent, slow) = client.trace_dump().expect("dump");
+    assert!(recent.is_empty(), "untraced queries stay out of the trace ring");
+    assert_eq!(slow.len(), 1, "a zero gate logs every completion");
+    assert_eq!(slow[0].trace_id, 0, "the slow log admits untraced queries");
+    assert!(slow[0].total_ns() > 0);
+
+    coord.traces().set_slow_threshold_ns(u64::MAX);
+    client.query_plan(&[pair(4, 5)]).expect("fast again");
+    let (_, slow) = client.trace_dump().expect("dump");
+    assert_eq!(slow.len(), 1, "raising the gate stops further slow-log growth");
+    server.shutdown();
+}
+
+/// The `MetricsText` frame serves a Prometheus text exposition that
+/// passes the strict validator, reflects served traffic, and merges
+/// cleanly with the client-side cluster exposition (disjoint families —
+/// one scrape can concatenate both).
+#[test]
+fn metrics_text_over_the_wire_passes_the_validator() {
+    let (store, cfg) = sketch_corpus(N, 64);
+    let (_coords, servers, addrs) = start_grid(&store, &cfg, 2, 2);
+    let mut cluster = ClusterClient::connect(&addrs).expect("cluster connect");
+    for salt in 0..3u32 {
+        let plan = mixed_plan(N as u32, salt);
+        cluster.query_plan(&plan).expect("plan");
+    }
+
+    let mut probe = dial(&addrs[0]);
+    let server_text = probe.metrics_text().expect("metrics over the wire");
+    validate_metrics_text(&server_text)
+        .unwrap_or_else(|e| panic!("server exposition invalid: {e}\n{server_text}"));
+    for family in [
+        "# TYPE stablesketch_queries_completed_total counter",
+        "# TYPE stablesketch_connections_active gauge",
+        "# TYPE stablesketch_query_latency_ns histogram",
+        "stablesketch_query_latency_ns_bucket",
+        "kind=\"oq\"",
+    ] {
+        assert!(server_text.contains(family), "missing {family} in:\n{server_text}");
+    }
+    let served: u64 = server_text
+        .lines()
+        .find(|l| l.starts_with("stablesketch_queries_completed_total "))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .expect("completed counter sample");
+    assert!(served > 0, "the probed node served sub-plans");
+
+    let client_text = cluster.metrics().metrics_text();
+    validate_metrics_text(&client_text)
+        .unwrap_or_else(|e| panic!("cluster exposition invalid: {e}\n{client_text}"));
+    let merged = format!("{server_text}{client_text}");
+    validate_metrics_text(&merged)
+        .unwrap_or_else(|e| panic!("merged exposition invalid: {e}"));
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+}

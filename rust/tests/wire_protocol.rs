@@ -86,6 +86,7 @@ fn randomized_query_frames_round_trip() {
             id: rng.next_u64(),
             query: rand_query(&mut rng),
             epoch: rng.next_u64(),
+            trace_id: rng.next_u64(),
         };
         assert_eq!(round_trip(&frame), frame);
     }
@@ -216,6 +217,7 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             id: rng.next_u64(),
             query: rand_query(&mut rng),
             epoch: rng.next_u64(),
+            trace_id: rng.next_u64(),
         });
         frames.push(Frame::Reply {
             id: rng.next_u64(),
@@ -252,6 +254,7 @@ fn corrupted_discriminants_err_cleanly() {
             kind: QueryKind::Oq,
         },
         epoch: 0,
+        trace_id: 0,
     };
     let wire = frame.encode();
     let payload = &wire[4..];
@@ -369,17 +372,19 @@ fn query_id_recovered_from_malformed_query_frames() {
 #[test]
 fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
     let mut rng = Xoshiro256pp::new(0x0E0C);
-    // Query frames: strip the trailing epoch (v4-only) and restamp as
-    // each older version — every one must decode, unchecked (epoch 0).
+    // Query frames: strip the trailing trace id (v6-only) and epoch
+    // (v4-only) and restamp as each older version — every one must
+    // decode, unchecked (epoch 0).
     for _ in 0..100 {
         let query = rand_query(&mut rng);
         let frame = Frame::Query {
             id: rng.next_u64(),
             query: query.clone(),
             epoch: rng.next_u64() | 1,
+            trace_id: rng.next_u64(),
         };
         let wire = frame.encode();
-        let v3_body = &wire[4..wire.len() - 8]; // minus the epoch stamp
+        let v3_body = &wire[4..wire.len() - 16]; // minus epoch + trace id
         for stamp in 1u8..=3 {
             let mut payload = v3_body.to_vec();
             payload[0] = stamp;
@@ -391,9 +396,9 @@ fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
                 other => panic!("{other:?}"),
             }
         }
-        // A v4 speaker's query body is the full v5 one (the epoch is
-        // the last field both speak) — restamped, it must round-trip.
-        let mut payload = wire[4..].to_vec();
+        // A v4 speaker's query body ends at the epoch (the trace id is
+        // v6-only) — stripped and restamped, it must round-trip.
+        let mut payload = wire[4..wire.len() - 8].to_vec();
         payload[0] = 4;
         match Frame::decode(&payload).expect("v4 query frame decodes") {
             Frame::Query { query: q, .. } => assert_eq!(q, query),
@@ -518,6 +523,90 @@ fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
             Frame::decode(&payload),
             Err(ProtoError::BadVersion(v)) if v == stamp
         ));
+    }
+}
+
+/// v6 compatibility contract, mirroring the v4/v5 suites: the trace id
+/// is a trailing `Query` field only a v6 speaker emits. Pre-v6 query
+/// bodies decode as untraced (trace 0); a full v6 body under an older
+/// stamp is self-contradictory and refused; and the trace/metrics
+/// admin frames are v6-only tags.
+#[test]
+fn v6_trace_fields_are_prefix_compatible_and_gated() {
+    use stablesketch::trace::TraceRecord;
+    let mut rng = Xoshiro256pp::new(0x76CE);
+    for _ in 0..100 {
+        let query = rand_query(&mut rng);
+        let frame = Frame::Query {
+            id: rng.next_u64(),
+            query: query.clone(),
+            epoch: rng.next_u64() | 1,
+            trace_id: rng.next_u64() | 1,
+        };
+        // A traced query round-trips bit-exactly under v6.
+        assert_eq!(round_trip(&frame), frame);
+        let wire = frame.encode();
+        // A v4/v5 speaker's body stops at the epoch: stripped and
+        // restamped, it decodes as the same query, untraced.
+        for stamp in [4u8, 5] {
+            let mut payload = wire[4..wire.len() - 8].to_vec();
+            payload[0] = stamp;
+            match Frame::decode(&payload).expect("pre-v6 query frame decodes") {
+                Frame::Query { query: q, trace_id, .. } => {
+                    assert_eq!(q, query);
+                    assert_eq!(trace_id, 0, "pre-v6 queries decode as untraced");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // The full v6 body under older stamps carries trailing bytes
+        // those versions never defined: 8 for v4/v5 (the trace id),
+        // 16 for v1..v3 (trace id + epoch).
+        for stamp in [4u8, 5] {
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(8))));
+        }
+        for stamp in 1u8..=3 {
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(16))));
+        }
+    }
+    // The trace dump and metrics exposition frames round-trip under v6
+    // and are refused under every older stamp.
+    let rec = |seq: u64| TraceRecord {
+        trace_id: 7,
+        seq,
+        shard: 1,
+        replica: 0,
+        decode_ns: 10,
+        queue_ns: 20,
+        scan_ns: 30,
+        write_ns: 40,
+    };
+    let frames = [
+        Frame::TraceDumpRequest,
+        Frame::TraceDump {
+            traces: vec![rec(1), rec(2)],
+            slow: vec![rec(3)],
+        },
+        Frame::MetricsTextRequest,
+        Frame::MetricsText {
+            text: "# TYPE x counter\nx 1\n".to_string(),
+        },
+    ];
+    for f in frames {
+        assert_eq!(round_trip(&f), f);
+        let wire = f.encode();
+        for stamp in 1u8..=5 {
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(
+                matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+                "v6-only frame under a v{stamp} stamp must be refused"
+            );
+        }
     }
 }
 
