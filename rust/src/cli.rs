@@ -258,6 +258,11 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
     let stats_every = args.u64_or("stats-every", 10)?.max(1);
     let metrics_dump = args.get("metrics-dump").map(|s| s.to_string());
     let max_connections = args.usize_or("max-conns", 64)?;
+    let io_threads = args.usize_or("io-threads", 0)?;
+    let idle_timeout = match args.u64_or("idle-timeout", 60)? {
+        0 => None,
+        secs => Some(Duration::from_secs(secs)),
+    };
     let shard = match args.get("shard") {
         Some(s) => Some(
             ShardSpec::parse(s)
@@ -274,9 +279,17 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
     let store = engine.sketch_all(corpus.as_slice(), corpus.n);
     let coord = Arc::new(Coordinator::start_replicated(cfg.clone(), store, shard, replica)?);
     let owned = coord.owned_range();
-    let server = SketchServer::start(coord.clone(), &listen, ServerConfig { max_connections })?;
+    let server = SketchServer::start(
+        coord.clone(),
+        &listen,
+        ServerConfig {
+            max_connections,
+            io_threads,
+            idle_timeout,
+        },
+    )?;
     println!(
-        "serving on {} (n={} k={} alpha={} shards={}, {} max conns{}{}); \
+        "serving on {} (n={} k={} alpha={} shards={}, {} max conns, {} io threads{}{}); \
          try: stablesketch loadgen --connect {}",
         server.local_addr(),
         corpus.n,
@@ -284,6 +297,11 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
         cfg.alpha,
         cfg.shards,
         max_connections,
+        if io_threads == 0 {
+            "auto".to_string()
+        } else {
+            io_threads.to_string()
+        },
         match shard {
             Some(s) => format!(", cluster shard {s} owning rows {}..{}", owned.start, owned.end),
             None => String::new(),
@@ -469,6 +487,27 @@ fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
 /// multi-threaded workload and report throughput + latency quantiles.
 pub fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.req("connect")?.to_string();
+    if args.get("conns").is_some() {
+        // `--conns N`: connection-count soak instead of a throughput
+        // run — hold N concurrent pipelined connections and prove the
+        // server serves all of them on its fixed thread count.
+        let cfg = crate::server::loadgen::ConnScaleConfig {
+            addr,
+            conns: args.usize_or("conns", 1024)?,
+            drivers: args.usize_or("drivers", 0)?,
+            rounds: args.usize_or("rounds", 4)?,
+            pipeline: args.usize_or("pipeline", 4)?,
+            seed: args.u64_or("seed", 0x10AD)?,
+        };
+        println!(
+            "loadgen conn-scale soak: {} concurrent connections against {}",
+            cfg.conns, cfg.addr
+        );
+        let report =
+            crate::server::loadgen::run_conn_scale(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("{}", report.summary());
+        return Ok(());
+    }
     let workload = args.str_or("workload", "pair");
     let workload = Workload::parse(&workload)
         .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}' (pair|topk|block|mixed)"))?;
@@ -718,6 +757,7 @@ fn bench_net(smoke: bool, seed: u64) -> Result<Vec<PerfRow>> {
         "127.0.0.1:0",
         ServerConfig {
             max_connections: 16,
+            ..Default::default()
         },
     )?;
     let addr = server.local_addr().to_string();
@@ -776,6 +816,7 @@ fn bench_loadgen(smoke: bool, seed: u64) -> Result<(PerfRow, Json)> {
             "127.0.0.1:0",
             ServerConfig {
                 max_connections: 32,
+                ..Default::default()
             },
         )?;
         addrs.push(server.local_addr().to_string());
@@ -839,17 +880,78 @@ fn bench_loadgen(smoke: bool, seed: u64) -> Result<(PerfRow, Json)> {
     Ok((row, detail))
 }
 
+/// Connection-scale pass: one loopback server on a fixed io-thread
+/// count, soaked at increasing concurrent-connection counts by the
+/// `--conns` loadgen mode. RTT quantiles should stay flat-ish as the
+/// connection count grows — the readiness-driven listener's scaling
+/// claim, tracked in the baseline's `net_conn_scale` section.
+fn bench_conn_scale(smoke: bool, seed: u64) -> Result<Vec<Json>> {
+    use crate::server::loadgen::{run_conn_scale, ConnScaleConfig};
+    let steps: &[usize] = if smoke { &[16, 64] } else { &[16, 256, 1024] };
+    let n = 2_000usize;
+    let cfg = PipelineConfig {
+        seed,
+        // The full pass bursts conns × pipeline = 4096 queries at once;
+        // give the shard queues headroom so the soak measures held
+        // connections, not admission backpressure.
+        queue_depth: 8192,
+        ..Default::default()
+    };
+    let store = random_store(n, cfg.k, cfg.alpha, seed ^ 0xC0);
+    let coord = Arc::new(Coordinator::start(cfg, store)?);
+    let server = SketchServer::start(
+        coord,
+        "127.0.0.1:0",
+        ServerConfig {
+            max_connections: steps.iter().copied().max().unwrap_or(16) + 8,
+            io_threads: 2,
+            ..Default::default()
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+    let mut rows = Vec::new();
+    for &conns in steps {
+        let report = run_conn_scale(&ConnScaleConfig {
+            addr: addr.clone(),
+            conns,
+            drivers: 0,
+            rounds: if smoke { 2 } else { 4 },
+            pipeline: 4,
+            seed,
+        })
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if report.errors != 0 || report.established != conns {
+            bail!(
+                "conn-scale pass unhealthy at {conns} conns: {} established, {} errors",
+                report.established,
+                report.errors
+            );
+        }
+        println!("  conn-scale @{conns}: {}", report.summary());
+        rows.push(Json::obj(vec![
+            ("conns", Json::num(conns as f64)),
+            ("established", Json::num(report.established as f64)),
+            ("ok", Json::num(report.ok as f64)),
+            ("rtt_p50_ns", Json::num(report.latency.quantile_ns(0.50) as f64)),
+            ("rtt_p99_ns", Json::num(report.latency.quantile_ns(0.99) as f64)),
+        ]));
+    }
+    server.shutdown();
+    Ok(rows)
+}
+
 /// `bench perf [--smoke] [--out PATH]`: run the micro + loopback +
-/// cluster-loadgen passes and write the tracked baseline JSON (schema:
-/// op → ns/op, throughput, p50/p95/p99 per section, plus derived
-/// speedup ratios). `--smoke` shrinks sizes for CI.
+/// cluster-loadgen + connection-scale passes and write the tracked
+/// baseline JSON (schema: op → ns/op, throughput, p50/p95/p99 per
+/// section, plus derived speedup ratios). `--smoke` shrinks sizes for
+/// CI.
 pub fn cmd_bench(args: &Args) -> Result<()> {
     let what = args.positional.first().map(String::as_str).unwrap_or("perf");
     if what != "perf" {
         bail!("unknown bench target '{what}' (use: bench perf [--smoke] [--out PATH])");
     }
     let smoke = args.flag("smoke");
-    let out = args.str_or("out", "BENCH_7.json");
+    let out = args.str_or("out", "BENCH_8.json");
     let seed = args.u64_or("seed", 0xBE7C)?;
     println!(
         "bench perf: {} run, simd={}, kernel lanes={}",
@@ -863,6 +965,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     println!("net loopback pass done ({} ops)", net.len());
     let (lg_row, lg_detail) = bench_loadgen(smoke, seed)?;
     println!("cluster loadgen pass done");
+    let conn_scale = bench_conn_scale(smoke, seed)?;
+    println!("conn-scale pass done ({} steps)", conn_scale.len());
 
     let mut table = crate::bench_util::Table::new(&[
         "op", "ns/op", "ops/s", "p50 ns", "p95 ns", "p99 ns",
@@ -892,7 +996,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
 
     let doc = Json::obj(vec![
         ("bench", Json::str("stablesketch perf baseline")),
-        ("pr", Json::num(7.0)),
+        ("pr", Json::num(8.0)),
         ("smoke", Json::Bool(smoke)),
         ("simd_feature", Json::Bool(cfg!(feature = "simd"))),
         ("kernel_lanes", Json::num(KERNEL_LANES as f64)),
@@ -911,6 +1015,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 ("detail", lg_detail),
             ]),
         ),
+        ("net_conn_scale", Json::Arr(conn_scale)),
         (
             "derived",
             Json::obj(vec![

@@ -353,6 +353,101 @@ pub struct TraceSpans {
     pub scan_ns: u64,
 }
 
+/// One finished query, as delivered to a [`CompletionQueue`]: the
+/// submitter's correlation tag, the worker's reply, and the accumulated
+/// trace spans, plus the opaque connection token the submitter attached
+/// so a queue shared by many connections can route each completion back
+/// to its owner.
+#[derive(Debug)]
+pub struct Completion {
+    /// Submitter-chosen token identifying the owning connection.
+    pub conn: u64,
+    /// Submitter-chosen correlation tag (the wire frame id).
+    pub tag: usize,
+    pub reply: Reply,
+    pub spans: TraceSpans,
+}
+
+/// A wakeup-capable completion mailbox: workers push finished queries,
+/// then fire the wake callback so the owning event loop (parked in
+/// `poll(2)`) comes back and drains. This replaces the
+/// blocking-forwarder-thread reply path for the readiness-driven
+/// server.
+///
+/// Contract (relied on by `server::listener`):
+/// - `push` never blocks: the queue is unbounded, bounded in practice
+///   by the submitter's own inflight cap (the listener stops reading a
+///   connection at `MAX_CONN_INFLIGHT` outstanding queries, so the
+///   queue holds at most inflight-cap × connections entries).
+/// - The wake callback runs on the *worker* thread after the
+///   completion is visible in the queue, so a loop that drains after
+///   waking can never miss one; it must therefore be cheap and
+///   nonblocking (the reactor's self-pipe write is both).
+/// - `drain` hands back completions in push order.
+pub struct CompletionQueue {
+    queue: Mutex<Vec<Completion>>,
+    wake: Box<dyn Fn() + Send + Sync>,
+}
+
+impl CompletionQueue {
+    /// Build a queue whose `wake` is invoked (after the push is
+    /// visible) every time a completion arrives.
+    pub fn new(wake: impl Fn() + Send + Sync + 'static) -> Arc<Self> {
+        Arc::new(Self {
+            queue: Mutex::new(Vec::new()),
+            wake: Box::new(wake),
+        })
+    }
+
+    /// Deliver one completion and fire the wakeup. Called from worker
+    /// threads; never blocks beyond the queue mutex.
+    pub fn push(&self, c: Completion) {
+        self.queue.lock().unwrap().push(c);
+        (self.wake)();
+    }
+
+    /// Take everything delivered so far, in push order. Called by the
+    /// owning event loop after a wakeup (spurious drains return empty).
+    pub fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+}
+
+impl std::fmt::Debug for CompletionQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let depth = self.queue.lock().map(|q| q.len()).unwrap_or(0);
+        f.debug_struct("CompletionQueue").field("depth", &depth).finish()
+    }
+}
+
+/// Where a job's reply goes: the blocking channel path (in-process
+/// plans, tests) or a completion queue that wakes an event loop (the
+/// network server). Workers call [`ReplyTo::send`] without knowing
+/// which; both are fire-and-forget from the worker's side.
+#[derive(Debug, Clone)]
+pub(crate) enum ReplyTo {
+    Channel(std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>),
+    Completion { queue: Arc<CompletionQueue>, conn: u64 },
+}
+
+impl ReplyTo {
+    pub fn send(&self, tag: usize, reply: Reply, spans: TraceSpans) {
+        match self {
+            // A dropped receiver means the submitter gave up (connection
+            // closed); the reply is discarded, same as before.
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send((tag, reply, spans));
+            }
+            ReplyTo::Completion { queue, conn } => queue.push(Completion {
+                conn: *conn,
+                tag,
+                reply,
+                spans,
+            }),
+        }
+    }
+}
+
 #[derive(Debug)]
 pub(crate) struct Job {
     pub query: Query,
@@ -367,7 +462,7 @@ pub(crate) struct Job {
     /// the reply.
     pub trace: TraceSpans,
     pub submitted: Instant,
-    pub reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
+    pub reply: ReplyTo,
 }
 
 /// This node's live shard ownership: the map epoch, the shard identity
@@ -822,7 +917,13 @@ impl Coordinator {
         let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply, TraceSpans)>();
         let mut pending = 0usize;
         for (seq, query) in queries.into_iter().enumerate() {
-            match self.submit_validated(query, 0, TraceSpans::default(), seq, tx.clone()) {
+            match self.submit_validated(
+                query,
+                0,
+                TraceSpans::default(),
+                seq,
+                ReplyTo::Channel(tx.clone()),
+            ) {
                 Ok(()) => pending += 1,
                 Err(SubmitError::Overloaded) => {
                     bail!("backpressure: shard queues full after {pending} submissions");
@@ -859,6 +960,43 @@ impl Coordinator {
         reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
     ) -> Result<(), SubmitError> {
         self.submit_stamped(query, 0, tag, reply)
+    }
+
+    /// [`Self::submit_traced`] with a [`CompletionQueue`] destination
+    /// instead of a channel (the readiness-driven network path): the
+    /// finished query lands on `queue` tagged with `conn` so the owning
+    /// event loop can route it back to its connection. Identical
+    /// admission semantics — same epoch check, validation, and
+    /// [`SubmitError::Overloaded`] backpressure.
+    pub fn submit_completion(
+        &self,
+        query: Query,
+        epoch: u64,
+        trace: TraceSpans,
+        tag: usize,
+        queue: &Arc<CompletionQueue>,
+        conn: u64,
+    ) -> Result<(), SubmitError> {
+        if epoch != 0 {
+            let current = self.shared.epoch.load(Ordering::Acquire);
+            if epoch != current {
+                return Err(SubmitError::WrongEpoch { current });
+            }
+        }
+        let n = self.shared.store_n.load(Ordering::Acquire) as u32;
+        if let Err(e) = validate_query(&query, n) {
+            return Err(SubmitError::Invalid(e.to_string()));
+        }
+        self.submit_validated(
+            query,
+            epoch,
+            trace,
+            tag,
+            ReplyTo::Completion {
+                queue: Arc::clone(queue),
+                conn,
+            },
+        )
     }
 
     /// [`Self::submit`] with a shard-map epoch stamp (the v4 network
@@ -898,7 +1036,7 @@ impl Coordinator {
         if let Err(e) = validate_query(&query, n) {
             return Err(SubmitError::Invalid(e.to_string()));
         }
-        self.submit_validated(query, epoch, trace, tag, reply)
+        self.submit_validated(query, epoch, trace, tag, ReplyTo::Channel(reply))
     }
 
     /// Route an already-validated query (shared tail of [`Self::submit`]
@@ -909,7 +1047,7 @@ impl Coordinator {
         epoch: u64,
         trace: TraceSpans,
         tag: usize,
-        reply: std::sync::mpsc::Sender<(usize, Reply, TraceSpans)>,
+        reply: ReplyTo,
     ) -> Result<(), SubmitError> {
         let job = Job {
             query,

@@ -80,7 +80,13 @@ mod tests {
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn job(reply: &mpsc::Sender<(usize, crate::coordinator::Reply)>) -> Job {
+    fn job(
+        reply: &mpsc::Sender<(
+            usize,
+            crate::coordinator::Reply,
+            crate::coordinator::TraceSpans,
+        )>,
+    ) -> Job {
         Job {
             query: Query::Pair {
                 i: 0,
@@ -88,8 +94,10 @@ mod tests {
                 kind: QueryKind::Oq,
             },
             seq: 0,
+            epoch: 0,
+            trace: crate::coordinator::TraceSpans::default(),
             submitted: Instant::now(),
-            reply: reply.clone(),
+            reply: crate::coordinator::ReplyTo::Channel(reply.clone()),
         }
     }
 

@@ -39,13 +39,13 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
             // with.
             let Some(owned) = ownership.range_for(job.epoch) else {
                 shared.metrics.queries_completed.inc();
-                let _ = job.reply.send((
+                job.reply.send(
                     job.seq,
                     Reply::WrongEpoch {
                         current: ownership.epoch,
                     },
                     job.trace,
-                ));
+                );
                 continue;
             };
             let t_est = Instant::now();
@@ -95,7 +95,7 @@ pub(crate) fn run(shared: Arc<Shared>, queue: Arc<BoundedQueue<Job>>, policy: Ba
                 };
             }
             // Receiver may have given up (client dropped) — ignore.
-            let _ = job.reply.send((job.seq, reply, spans));
+            job.reply.send(job.seq, reply, spans);
         }
         shared.metrics.batch_latency.record(t_batch.elapsed());
     }

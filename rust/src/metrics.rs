@@ -238,6 +238,22 @@ pub struct PipelineMetrics {
     /// Queries refused with `WrongEpoch` because their shard-map stamp
     /// was stale — each one tells a client to refresh its map.
     pub net_wrong_epoch_replies: Counter,
+
+    // ---- readiness reactor (server::reactor) -----------------------
+    /// Event-loop threads the server started (`--io-threads`, 0 =
+    /// auto). Fixed for the server's lifetime.
+    pub reactor_loops: Gauge,
+    /// File descriptors currently registered across every event loop's
+    /// poll set: each loop's wake pipe, loop 0's listener, and one per
+    /// live connection.
+    pub reactor_registered_fds: Gauge,
+    /// Self-pipe wakeups observed by the event loops (completion-queue
+    /// deliveries, accept handoffs, shutdown). Coalesced: many wakes
+    /// landing while a loop runs count once.
+    pub reactor_wakeups: Counter,
+    /// Readiness events `poll(2)` reported across all loops; the rate
+    /// (events/s) is the reactor's dispatch throughput.
+    pub reactor_readiness_events: Counter,
 }
 
 impl PipelineMetrics {
@@ -344,6 +360,16 @@ impl PipelineMetrics {
             ("scan_median_p50_ns", self.scan_latency[3].quantile_ns(0.50)),
             ("scan_median_p95_ns", self.scan_latency[3].quantile_ns(0.95)),
             ("scan_median_p99_ns", self.scan_latency[3].quantile_ns(0.99)),
+            ("reactor_loops", self.reactor_loops.get().max(0) as u64),
+            (
+                "reactor_registered_fds",
+                self.reactor_registered_fds.get().max(0) as u64,
+            ),
+            ("reactor_wakeups", self.reactor_wakeups.get()),
+            (
+                "reactor_readiness_events",
+                self.reactor_readiness_events.get(),
+            ),
         ]
     }
 
@@ -386,11 +412,23 @@ impl PipelineMetrics {
             "stablesketch_net_wrong_epoch_replies_total",
             self.net_wrong_epoch_replies.get(),
         );
-        let gauges: [(&str, &Gauge); 4] = [
+        prom_counter(
+            &mut out,
+            "stablesketch_reactor_wakeups_total",
+            self.reactor_wakeups.get(),
+        );
+        prom_counter(
+            &mut out,
+            "stablesketch_reactor_readiness_events_total",
+            self.reactor_readiness_events.get(),
+        );
+        let gauges: [(&str, &Gauge); 6] = [
             ("stablesketch_connections_active", &self.connections_active),
             ("stablesketch_net_queries_inflight", &self.net_queries_inflight),
             ("stablesketch_scan_rows_per_s", &self.scan_rows_per_s),
             ("stablesketch_kernel_lanes_used", &self.kernel_lanes_used),
+            ("stablesketch_reactor_loops", &self.reactor_loops),
+            ("stablesketch_reactor_registered_fds", &self.reactor_registered_fds),
         ];
         for (name, g) in gauges {
             prom_gauge(&mut out, name, g.get());
@@ -950,6 +988,10 @@ mod tests {
             "scan_median_p50_ns",
             "scan_median_p95_ns",
             "scan_median_p99_ns",
+            "reactor_loops",
+            "reactor_registered_fds",
+            "reactor_wakeups",
+            "reactor_readiness_events",
         ];
         let m = PipelineMetrics::default();
         let keys: Vec<&str> = m.stat_entries().iter().map(|(k, _)| *k).collect();

@@ -1,0 +1,516 @@
+//! Per-connection state machine for the readiness-driven server: one
+//! small struct per socket instead of three blocking threads.
+//!
+//! A [`Conn`] owns a nonblocking `TcpStream` and carries everything a
+//! readiness event needs to make progress:
+//!
+//! - a [`FrameAssembler`] holding the partial frame a read left behind,
+//! - an outbound byte buffer (encoded frames + a write cursor) holding
+//!   whatever the socket would not take,
+//! - the pipelined-inflight count and the idle clock.
+//!
+//! The owning event loop translates readiness into calls —
+//! [`Conn::on_readable`], [`Conn::on_writable`],
+//! [`Conn::on_completion`] — and derives next iteration's poll interest
+//! from [`Conn::wants_read`] / [`Conn::wants_write`]. Backpressure is
+//! interest management, not blocking: at [`MAX_CONN_INFLIGHT`]
+//! outstanding queries or a full outbound buffer the connection simply
+//! stops wanting POLLIN, the kernel socket buffer fills, and the peer's
+//! TCP stream stalls — the same flow control the old blocking reader
+//! provided, with no thread parked.
+//!
+//! Frame semantics are byte-for-byte those of the blocking listener:
+//! the same dispatch, the same error typing
+//! (`Overloaded`/`WrongEpoch`/`InvalidQuery`/…), and the same
+//! trace ordering — a reply's write span is measured over encode +
+//! buffer append and recorded via `Coordinator::record_trace` *before*
+//! the bytes reach the socket, preserving record-trace-before-flush.
+
+use super::listener::{shard_map_info, stats_snapshot};
+use super::protocol::{query_id_of, ErrorCode, Frame, FrameAssembler, REPLICA_SINCE_VERSION};
+use crate::coordinator::{
+    AdoptError, CompletionQueue, Coordinator, ReplicaSpec, Reply, SubmitError, TraceSpans,
+};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Max queries a single connection may have submitted with the reply
+/// not yet encoded. Bounds completion-queue buffering a peer can pin by
+/// pipelining without reading. Checked between read syscalls, so one
+/// 16 KiB read burst may overshoot by the few hundred frames it holds —
+/// bounded either way.
+pub(crate) const MAX_CONN_INFLIGHT: usize = 4096;
+
+/// Soft cap on buffered outbound bytes: past it the connection stops
+/// reading new requests (replies still append — they are bounded by the
+/// inflight cap) until the peer drains.
+const OUTBUF_SOFT_CAP: usize = 1 << 20;
+
+/// Read syscall granularity.
+const READ_CHUNK: usize = 16 << 10;
+
+/// One live connection's entire state.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    /// Token workers stamp on completions so a shared queue routes back
+    /// here.
+    id: u64,
+    asm: FrameAssembler,
+    /// Encoded-but-unsent bytes; `out_pos` is the write cursor.
+    outbuf: Vec<u8>,
+    out_pos: usize,
+    /// Submitted queries whose completion has not been encoded yet.
+    inflight: usize,
+    /// Idle clock: reset on *completed* inbound frames and on write
+    /// progress — never on partial reads, so a slowloris peer
+    /// dribbling header bytes is reaped at the idle timeout.
+    last_activity: Instant,
+    /// Peer EOF or fatal protocol error: stop reading, finish writing
+    /// what is owed (pending replies), then die.
+    read_closed: bool,
+    /// Unrecoverable (write error, torn framing): reap now.
+    dead: bool,
+}
+
+impl Conn {
+    /// Adopt an accepted stream. Returns `Err` only if the socket
+    /// cannot be made nonblocking (it is unusable in this design).
+    pub fn new(stream: TcpStream, id: u64) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            id,
+            asm: FrameAssembler::new(),
+            outbuf: Vec::new(),
+            out_pos: 0,
+            inflight: 0,
+            last_activity: Instant::now(),
+            read_closed: false,
+            dead: false,
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.stream.as_raw_fd()
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    fn pending_out(&self) -> usize {
+        self.outbuf.len() - self.out_pos
+    }
+
+    /// Ready to be dropped: either unrecoverable, or read side done
+    /// with nothing left to flush and no replies still owed.
+    pub fn finished(&self) -> bool {
+        self.dead || (self.read_closed && self.inflight == 0 && self.pending_out() == 0)
+    }
+
+    /// POLLIN interest: reading is useful and allowed right now.
+    pub fn wants_read(&self) -> bool {
+        !self.dead
+            && !self.read_closed
+            && self.inflight < MAX_CONN_INFLIGHT
+            && self.pending_out() < OUTBUF_SOFT_CAP
+    }
+
+    /// POLLOUT interest: bytes are waiting for the socket.
+    pub fn wants_write(&self) -> bool {
+        !self.dead && self.pending_out() > 0
+    }
+
+    /// When this connection should be reaped if nothing more happens,
+    /// given the server's idle timeout.
+    pub fn idle_deadline(&self, idle_timeout: Duration) -> Instant {
+        self.last_activity + idle_timeout
+    }
+
+    /// Reap if the idle deadline has passed. Returns true when the
+    /// connection was expired (caller tears it down).
+    pub fn check_idle(&mut self, now: Instant, idle_timeout: Duration) -> bool {
+        if now.duration_since(self.last_activity) >= idle_timeout {
+            self.dead = true;
+        }
+        self.dead
+    }
+
+    /// Drain the socket's readable bytes through the assembler and
+    /// dispatch every completed frame. Stops at `WouldBlock`, at the
+    /// inflight/outbuf caps, or when the connection is done for.
+    pub fn on_readable(&mut self, coord: &Arc<Coordinator>, completions: &Arc<CompletionQueue>) {
+        let mut chunk = [0u8; READ_CHUNK];
+        while self.wants_read() {
+            let n = match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // Clean EOF. Anything the assembler holds is a
+                    // truncated frame — unanswerable, just drop it;
+                    // replies still owed flush before teardown.
+                    self.read_closed = true;
+                    return;
+                }
+                Ok(n) => n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    return;
+                }
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            };
+            let mut off = 0;
+            while off < n {
+                match self.asm.feed(&chunk[off..n]) {
+                    Ok((used, done)) => {
+                        off += used;
+                        if let Some(payload) = done {
+                            self.last_activity = Instant::now();
+                            self.on_payload(&payload, coord, completions);
+                        }
+                        if self.dead || self.read_closed {
+                            return;
+                        }
+                    }
+                    Err(err) => {
+                        // Framing is gone (hostile length prefix):
+                        // answer, flush, close — byte alignment is
+                        // unrecoverable, so the rest of the buffer is
+                        // garbage too.
+                        coord.metrics().net_decode_errors.inc();
+                        self.push_frame(
+                            &Frame::Error {
+                                id: 0,
+                                code: ErrorCode::Malformed,
+                                message: err.to_string(),
+                            },
+                            None,
+                            coord,
+                        );
+                        self.read_closed = true;
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One completed payload: decode (timing the parse for the trace's
+    /// decode stage) and dispatch exactly as the blocking listener did.
+    fn on_payload(
+        &mut self,
+        payload: &[u8],
+        coord: &Arc<Coordinator>,
+        completions: &Arc<CompletionQueue>,
+    ) {
+        let metrics = coord.metrics();
+        let t_decode = Instant::now();
+        let frame = match Frame::decode(payload) {
+            Ok(frame) => frame,
+            Err(err) => {
+                // Framing was consistent: survive content errors. A bad
+                // query still gets its id attributed so the error
+                // answers that query instead of reading as a
+                // connection-level failure.
+                metrics.net_decode_errors.inc();
+                let id = query_id_of(payload).unwrap_or(0);
+                self.push_frame(
+                    &Frame::Error {
+                        id,
+                        code: if id == 0 {
+                            ErrorCode::Malformed
+                        } else {
+                            ErrorCode::InvalidQuery
+                        },
+                        message: err.to_string(),
+                    },
+                    None,
+                    coord,
+                );
+                return;
+            }
+        };
+        let decode_ns = (t_decode.elapsed().as_nanos() as u64).max(1);
+        let version = payload[0];
+        metrics.net_frames_in.inc();
+        metrics.net_bytes_in.add((4 + payload.len()) as u64);
+        match frame {
+            Frame::Ping { token } => {
+                self.push_frame(&Frame::Pong { token }, None, coord);
+            }
+            Frame::StatsRequest => {
+                let reply = Frame::Stats {
+                    entries: stats_snapshot(coord),
+                };
+                self.push_frame(&reply, None, coord);
+            }
+            Frame::TraceDumpRequest => {
+                // The v6 admin path: hand back this node's recent
+                // traced queries + slow-query log so a cluster client
+                // can stitch per-node spans into one query trace.
+                let (traces, slow) = coord.traces().dump();
+                self.push_frame(&Frame::TraceDump { traces, slow }, None, coord);
+            }
+            Frame::MetricsTextRequest => {
+                let reply = Frame::MetricsText {
+                    text: coord.metrics().metrics_text(),
+                };
+                self.push_frame(&reply, None, coord);
+            }
+            Frame::ShardMapRequest => {
+                let reply = Frame::ShardMap(shard_map_info(coord));
+                self.push_frame(&reply, None, coord);
+            }
+            Frame::AdoptShard(info) => {
+                // The v4 admin path: swap this node's shard
+                // identity/owned range at runtime. Success answers with
+                // the post-adoption map (the admin's confirmation);
+                // refusals are typed so a stale admin can tell "lost
+                // the race" from "sent nonsense".
+                //
+                // A pre-v5 adoption carries no replica identity — its
+                // decoded 0-of-1 default is *absence*, not a statement.
+                // Applying it to a replicated node would silently
+                // demote the node out of its replica set (both siblings
+                // then claim replica 0 of 1 and every client's grid
+                // validation wedges), so it is refused; against an
+                // unreplicated node it is the plain v4 behavior and
+                // stays accepted.
+                if version < REPLICA_SINCE_VERSION && coord.membership().2.of > 1 {
+                    let reply = Frame::Error {
+                        id: 0,
+                        code: ErrorCode::InvalidQuery,
+                        message: format!(
+                            "pre-v{REPLICA_SINCE_VERSION} adoption carries no replica \
+                             identity and cannot reconfigure a replicated node"
+                        ),
+                    };
+                    self.push_frame(&reply, None, coord);
+                    return;
+                }
+                let reply = match coord.adopt_shard(
+                    info.epoch,
+                    info.index as usize,
+                    info.count as usize,
+                    ReplicaSpec {
+                        index: info.replica as usize,
+                        of: info.replicas as usize,
+                    },
+                    info.start as usize..info.end as usize,
+                    info.rows as usize,
+                ) {
+                    Ok(()) => Frame::ShardMap(shard_map_info(coord)),
+                    Err(AdoptError::Stale { current }) => Frame::Error {
+                        id: 0,
+                        code: ErrorCode::WrongEpoch,
+                        message: format!("stale adoption: node is already at epoch {current}"),
+                    },
+                    Err(AdoptError::Invalid(msg)) => Frame::Error {
+                        id: 0,
+                        code: ErrorCode::InvalidQuery,
+                        message: msg,
+                    },
+                };
+                self.push_frame(&reply, None, coord);
+            }
+            Frame::Query {
+                id,
+                query,
+                epoch,
+                trace_id,
+            } => {
+                let trace = TraceSpans {
+                    trace_id,
+                    decode_ns,
+                    ..TraceSpans::default()
+                };
+                let submitted = coord.submit_completion(
+                    query,
+                    epoch,
+                    trace,
+                    id as usize,
+                    completions,
+                    self.id,
+                );
+                match submitted {
+                    Ok(()) => {
+                        metrics.net_queries_inflight.inc();
+                        self.inflight += 1;
+                    }
+                    Err(SubmitError::WrongEpoch { current }) => {
+                        metrics.net_wrong_epoch_replies.inc();
+                        let reply = Frame::Error {
+                            id,
+                            code: ErrorCode::WrongEpoch,
+                            message: format!(
+                                "query stamped epoch {epoch} but node is at {current}; \
+                                 refresh the shard map and retry"
+                            ),
+                        };
+                        self.push_frame(&reply, None, coord);
+                    }
+                    Err(SubmitError::Invalid(msg)) => {
+                        let reply = Frame::Error {
+                            id,
+                            code: ErrorCode::InvalidQuery,
+                            message: msg,
+                        };
+                        self.push_frame(&reply, None, coord);
+                    }
+                    Err(SubmitError::Overloaded) => {
+                        metrics.net_overload_replies.inc();
+                        let reply = Frame::Error {
+                            id,
+                            code: ErrorCode::Overloaded,
+                            message: "shard queues full; retry with backoff".to_string(),
+                        };
+                        self.push_frame(&reply, None, coord);
+                    }
+                    Err(SubmitError::Shutdown) => {
+                        let reply = Frame::Error {
+                            id,
+                            code: ErrorCode::ShuttingDown,
+                            message: "pipeline is shut down".to_string(),
+                        };
+                        self.push_frame(&reply, None, coord);
+                        self.read_closed = true;
+                    }
+                }
+            }
+            // Server-to-client frames arriving at the server are a
+            // protocol violation, but a recoverable one.
+            Frame::Pong { .. }
+            | Frame::Reply { .. }
+            | Frame::Error { .. }
+            | Frame::Stats { .. }
+            | Frame::ShardMap(_)
+            | Frame::TraceDump { .. }
+            | Frame::MetricsText { .. } => {
+                metrics.net_decode_errors.inc();
+                let reply = Frame::Error {
+                    id: 0,
+                    code: ErrorCode::Malformed,
+                    message: "unexpected server-to-client frame".to_string(),
+                };
+                self.push_frame(&reply, None, coord);
+            }
+        }
+    }
+
+    /// A finished query came back from the workers: decrement the
+    /// inflight accounting and encode the reply (or the typed
+    /// `WrongEpoch` refusal for a worker-side epoch miss).
+    pub fn on_completion(
+        &mut self,
+        tag: usize,
+        reply: Reply,
+        spans: TraceSpans,
+        coord: &Arc<Coordinator>,
+    ) {
+        let metrics = coord.metrics();
+        metrics.net_queries_inflight.dec();
+        self.inflight = self.inflight.saturating_sub(1);
+        let frame = match reply {
+            // A worker-side epoch refusal (the query's map stamp became
+            // unresolvable while queued) goes out as the same
+            // WrongEpoch error frame the admission check uses — one
+            // client-visible signal for "refresh your map and retry".
+            Reply::WrongEpoch { current } => {
+                metrics.net_wrong_epoch_replies.inc();
+                Frame::Error {
+                    id: tag as u64,
+                    code: ErrorCode::WrongEpoch,
+                    message: format!(
+                        "map changed while the query was queued; \
+                         node is now at epoch {current}"
+                    ),
+                }
+            }
+            reply => Frame::Reply {
+                id: tag as u64,
+                reply,
+            },
+        };
+        self.push_frame(&frame, Some((tag as u64, spans)), coord);
+    }
+
+    /// Encode `frame` onto the outbound buffer. For reply frames this
+    /// is the query's final stage: its trace completes *here*, before
+    /// any socket write — encode + buffer append is the write span
+    /// (traced queries clamp to >= 1ns so the stage is visibly
+    /// non-zero), preserving record-trace-before-flush.
+    fn push_frame(
+        &mut self,
+        frame: &Frame,
+        trace: Option<(u64, TraceSpans)>,
+        coord: &Arc<Coordinator>,
+    ) {
+        let t_write = Instant::now();
+        let bytes = frame.encode();
+        self.outbuf.extend_from_slice(&bytes);
+        let m = coord.metrics();
+        m.net_bytes_out.add(bytes.len() as u64);
+        m.net_frames_out.inc();
+        if let Some((seq, spans)) = trace {
+            let mut write_ns = t_write.elapsed().as_nanos() as u64;
+            if spans.trace_id != 0 {
+                write_ns = write_ns.max(1);
+            }
+            coord.record_trace(seq, spans, write_ns);
+        }
+    }
+
+    /// Push buffered bytes into the socket until it refuses or the
+    /// buffer empties. Write progress counts as activity (a peer
+    /// draining a long reply is not idle).
+    pub fn on_writable(&mut self) {
+        while self.pending_out() > 0 {
+            match self.stream.write(&self.outbuf[self.out_pos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    break;
+                }
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        // Reclaim flushed bytes: wholesale when empty, compacting when
+        // the cursor has run far ahead of a long tail.
+        if self.out_pos == self.outbuf.len() {
+            self.outbuf.clear();
+            self.out_pos = 0;
+        } else if self.out_pos > (64 << 10) {
+            self.outbuf.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+    }
+
+    /// Force-kill (loop teardown). The caller settles gauges via
+    /// [`Conn::inflight`].
+    pub fn mark_dead(&mut self) {
+        self.dead = true;
+    }
+}

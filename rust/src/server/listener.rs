@@ -1,40 +1,45 @@
-//! The TCP serving front end: accept loop, bounded connection pool,
-//! and per-connection reader/forwarder/writer threads bridging decoded
-//! frames into the coordinator's pipelined [`Coordinator::submit`].
+//! The TCP serving front end: a readiness-driven event-loop server.
 //!
-//! Per-connection topology (all blocking std threads — the pool is
-//! bounded, so thread count is too):
+//! One thread per core (configurable via [`ServerConfig::io_threads`]),
+//! each running the same loop over its share of the connections:
 //!
 //! ```text
-//!   socket ──► reader ──(submit)──► coordinator shards
-//!                │  ▲                      │ (tag, Reply)
-//!                │  └── control frames     ▼
-//!                └─────► out_tx ◄──── forwarder
-//!                            │
-//!                            ▼
-//!                         writer ──► socket
+//!              accept-ready (loop 0) ── round-robin ──┐
+//!                                                     ▼
+//!   ┌─ event loop ──────────────────────────────────────────────┐
+//!   │ poll(2): wake pipe | [listener] | conn fds (interest from  │
+//!   │          each Conn's state machine)                        │
+//!   │   readable ─► Conn::on_readable ─ FrameAssembler ─ submit ─┼─► shards
+//!   │   writable ─► Conn::on_writable (drain outbuf)             │     │
+//!   │   wakeup  ─► drain CompletionQueue ─► Conn::on_completion ◄┼─────┘
+//!   └─────────────────────────────────────────────────────────────┘
 //! ```
 //!
-//! Only the writer thread touches the socket's write half, so reply
-//! and control frames never interleave mid-frame. Backpressure from
-//! the shard queues maps to an explicit [`ErrorCode::Overloaded`]
-//! reply on the same connection — the caller sheds load; the
-//! connection survives. Malformed *content* (a well-framed payload
-//! that fails to decode) gets an error frame and the connection
-//! continues; a broken *framing* layer (oversized length prefix)
-//! closes it, since byte alignment is unrecoverable.
+//! Thread count is **fixed**: io loops + coordinator workers,
+//! independent of connection count — the property that lets one node
+//! hold thousands of connections (the old design parked three blocking
+//! threads per connection). Workers finish queries onto each loop's
+//! [`CompletionQueue`], whose wake callback writes the loop's self-pipe
+//! ([`super::reactor`]), so replies flow without any forwarder thread.
+//!
+//! Contracts carried over unchanged from the blocking design (the e2e
+//! suites pin them): backpressure from full shard queues is an explicit
+//! [`ErrorCode::Overloaded`] reply, never a hang; one admission over
+//! [`ServerConfig::max_connections`] is answered with
+//! [`ErrorCode::TooManyConnections`] and closed; malformed *content*
+//! gets an error frame on a surviving connection while broken *framing*
+//! flushes an error and closes; and a traced query's write span is
+//! recorded before its bytes reach the socket.
 
-use super::protocol::{
-    query_id_of, write_frame, ErrorCode, Frame, ProtoError, ShardMapInfo, MAX_FRAME_BYTES,
-    MAX_STATS_ENTRIES, REPLICA_SINCE_VERSION,
-};
-use crate::coordinator::{AdoptError, Coordinator, ReplicaSpec, Reply, SubmitError, TraceSpans};
-use crate::metrics::PipelineMetrics;
+use super::conn::Conn;
+use super::protocol::{write_frame, ErrorCode, Frame, ShardMapInfo, MAX_STATS_ENTRIES};
+use super::reactor::{waker, PollSet, WakeRx, Waker};
+use crate::coordinator::{CompletionQueue, Coordinator};
 use anyhow::{Context, Result};
-use std::io::{BufWriter, Read, Write};
+use std::collections::HashMap;
+use std::io::{BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -45,48 +50,52 @@ pub struct ServerConfig {
     /// Hard cap on concurrently admitted connections; one over it is
     /// answered with [`ErrorCode::TooManyConnections`] and closed.
     pub max_connections: usize,
+    /// Event-loop threads. `0` = one per available core. Each loop owns
+    /// a disjoint share of the connections (round-robin at accept).
+    pub io_threads: usize,
+    /// Reap a connection with no *completed* inbound frame and no write
+    /// progress for this long — partial reads do not count, so a
+    /// slowloris peer dribbling header bytes cannot hold a pool slot.
+    /// `None` disables reaping.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             max_connections: 64,
+            io_threads: 0,
+            idle_timeout: Some(Duration::from_secs(60)),
         }
     }
 }
 
-/// How often blocked reads wake up to check the stop flag.
-const READ_TICK: Duration = Duration::from_millis(100);
-/// Accept-loop poll interval (the listener runs non-blocking so
-/// shutdown never hangs on `accept`).
-const ACCEPT_TICK: Duration = Duration::from_millis(10);
-/// A peer that has not drained its socket for this long is wedged;
-/// the write fails and the connection is torn down. Also bounds how
-/// long shutdown can wait on a blocked writer thread.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
-/// Outbound frame queue bound per connection. With the writer stalled
-/// (slow peer) the queue fills, control-frame sends start waiting
-/// stop-aware, and the reader stops consuming input — backpressure
-/// propagates to the peer's TCP stream instead of server memory.
-const OUTBOUND_QUEUE: usize = 1024;
-/// Max queries a single connection may have in flight (submitted,
-/// reply not yet handed to the writer). Bounds the reply-channel
-/// buffering a peer can pin by pipelining queries without reading.
-const MAX_CONN_INFLIGHT: usize = 4096;
+/// Ceiling on one poll park: a safety tick so a lost wakeup degrades to
+/// a 1s stall instead of a hang. Shutdown does not wait on it — `stop`
+/// wakes every loop through its pipe.
+const MAX_POLL_PARK: Duration = Duration::from_secs(1);
 
 /// A running TCP server over a coordinator. Dropping it (or calling
-/// [`Self::shutdown`]) stops accepting, interrupts connection readers,
-/// and joins every thread it spawned.
+/// [`Self::shutdown`]) stops every event loop (via their wake pipes —
+/// no timed polling) and joins them.
 pub struct SketchServer {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+    wakers: Vec<Waker>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// What the acceptor needs to hand a fresh connection to a loop: its
+/// injection mailbox and its wake handle.
+struct LoopHandle {
+    injected: Arc<Mutex<Vec<TcpStream>>>,
+    waker: Waker,
 }
 
 impl SketchServer {
     /// Bind `addr` (e.g. `"127.0.0.1:7878"`, port 0 for ephemeral) and
     /// start serving `coordinator`. Returns as soon as the socket is
-    /// listening; the accept loop runs on its own thread.
+    /// listening; the event loops run on their own threads.
     pub fn start(
         coordinator: Arc<Coordinator>,
         addr: &str,
@@ -97,16 +106,67 @@ impl SketchServer {
             .set_nonblocking(true)
             .context("setting listener non-blocking")?;
         let local_addr = listener.local_addr().context("reading local addr")?;
+        let loops = match config.io_threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            n => n,
+        };
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let accept_handle = std::thread::Builder::new()
-            .name("sketch-accept".to_string())
-            .spawn(move || accept_loop(listener, coordinator, config, stop2))
-            .context("spawning accept thread")?;
+        let active = Arc::new(AtomicUsize::new(0));
+        let next_conn_id = Arc::new(AtomicU64::new(1));
+        coordinator.metrics().reactor_loops.set(loops as i64);
+
+        // Build every loop's plumbing first: the acceptor (loop 0)
+        // needs every loop's mailbox + waker before any thread starts.
+        let mut wakers = Vec::with_capacity(loops);
+        let mut wake_rxs = Vec::with_capacity(loops);
+        let mut handles_for_acceptor = Vec::with_capacity(loops);
+        let mut mailboxes = Vec::with_capacity(loops);
+        for _ in 0..loops {
+            let (wk, rx) = waker().context("creating event-loop waker")?;
+            let injected: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+            handles_for_acceptor.push(LoopHandle {
+                injected: injected.clone(),
+                waker: wk.try_clone().context("cloning waker")?,
+            });
+            mailboxes.push(injected);
+            wakers.push(wk);
+            wake_rxs.push(rx);
+        }
+        let handles_for_acceptor = Arc::new(handles_for_acceptor);
+
+        let mut handles = Vec::with_capacity(loops);
+        for (index, (wake_rx, injected)) in
+            wake_rxs.into_iter().zip(mailboxes.into_iter()).enumerate()
+        {
+            let el = EventLoop {
+                index,
+                coord: coordinator.clone(),
+                config: config.clone(),
+                stop: stop.clone(),
+                active: active.clone(),
+                next_conn_id: next_conn_id.clone(),
+                wake_rx,
+                injected,
+                listener: if index == 0 {
+                    Some(listener.try_clone().context("cloning listener")?)
+                } else {
+                    None
+                },
+                peers: handles_for_acceptor.clone(),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("sketch-io-{index}"))
+                .spawn(move || el.run())
+                .context("spawning event-loop thread")?;
+            handles.push(handle);
+        }
         Ok(SketchServer {
             local_addr,
             stop,
-            accept_handle: Some(accept_handle),
+            wakers,
+            handles,
         })
     }
 
@@ -115,14 +175,18 @@ impl SketchServer {
         self.local_addr
     }
 
-    /// Stop accepting, interrupt live connections, join all threads.
+    /// Stop every event loop, close live connections, join all threads.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        // Wakeup-driven, not timed: every loop leaves `poll` now.
+        for wk in &self.wakers {
+            wk.wake();
+        }
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -134,74 +198,10 @@ impl Drop for SketchServer {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    coordinator: Arc<Coordinator>,
-    config: ServerConfig,
-    stop: Arc<AtomicBool>,
-) {
-    let active = Arc::new(AtomicUsize::new(0));
-    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-    while !stop.load(Ordering::SeqCst) {
-        // Reap finished connection threads every iteration (not just on
-        // idle ticks) so sustained connection churn cannot grow the
-        // handle list without bound.
-        conns.lock().unwrap().retain(|h| !h.is_finished());
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let metrics = coordinator.metrics();
-                if active.load(Ordering::SeqCst) >= config.max_connections {
-                    metrics.connections_rejected.inc();
-                    reject_over_capacity(stream, config.max_connections);
-                    continue;
-                }
-                let _ = stream.set_nonblocking(false);
-                let _ = stream.set_nodelay(true);
-                metrics.connections_opened.inc();
-                metrics.connections_active.inc();
-                active.fetch_add(1, Ordering::SeqCst);
-                let coord = coordinator.clone();
-                let stop2 = stop.clone();
-                let active2 = active.clone();
-                let spawned = std::thread::Builder::new()
-                    .name("sketch-conn".to_string())
-                    .spawn(move || {
-                        serve_connection(stream, &coord, &stop2);
-                        let m = coord.metrics();
-                        m.connections_active.dec();
-                        m.connections_closed.inc();
-                        active2.fetch_sub(1, Ordering::SeqCst);
-                    });
-                match spawned {
-                    Ok(h) => conns.lock().unwrap().push(h),
-                    Err(_) => {
-                        // Spawn failure: roll the admission back.
-                        metrics.connections_active.dec();
-                        metrics.connections_closed.inc();
-                        active.fetch_sub(1, Ordering::SeqCst);
-                    }
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(ACCEPT_TICK);
-            }
-            Err(_) => {
-                if stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                std::thread::sleep(ACCEPT_TICK);
-            }
-        }
-    }
-    // Readers observe the stop flag within READ_TICK and unwind.
-    let handles: Vec<_> = conns.lock().unwrap().drain(..).collect();
-    for h in handles {
-        let _ = h.join();
-    }
-}
-
-/// Tell an over-capacity client why, then drop the socket. No writer
-/// thread exists yet, so writing directly is safe.
+/// Tell an over-capacity client why, then drop the socket. The socket
+/// never enters any loop's poll set, so writing directly is safe; the
+/// frame fits any socket buffer, so the blocking write cannot stall the
+/// acceptor.
 fn reject_over_capacity(stream: TcpStream, cap: usize) {
     let _ = stream.set_nonblocking(false);
     let mut w = BufWriter::new(stream);
@@ -216,518 +216,219 @@ fn reject_over_capacity(stream: TcpStream, cap: usize) {
     let _ = w.flush();
 }
 
-enum ReadEvent {
-    /// A decoded frame, its wire size, the version byte it was
-    /// stamped with — the stamp matters to handlers that must know
-    /// whether a decoded-to-default field was *stated* or *absent*
-    /// (the `AdoptShard` replica identity) — and the frame-parse time
-    /// in nanoseconds (the decode stage of a query's trace).
-    Frame(Frame, usize, u8, u64),
-    Malformed {
-        err: ProtoError,
-        /// Correlation id of the offending query when recoverable from
-        /// the payload; 0 marks a connection-level error.
-        id: u64,
-        fatal: bool,
-    },
-    Closed,
+/// One event loop: a poll set over its wake pipe, (loop 0 only) the
+/// listener, and its share of the connections.
+struct EventLoop {
+    index: usize,
+    coord: Arc<Coordinator>,
+    config: ServerConfig,
+    stop: Arc<AtomicBool>,
+    /// Cluster-wide admitted-connection count (capacity checks happen
+    /// at accept on loop 0; every loop decrements as it reaps).
+    active: Arc<AtomicUsize>,
+    next_conn_id: Arc<AtomicU64>,
+    wake_rx: WakeRx,
+    /// Fresh connections the acceptor assigned to this loop.
+    injected: Arc<Mutex<Vec<TcpStream>>>,
+    /// Loop 0's accept socket.
+    listener: Option<TcpListener>,
+    /// Every loop's mailbox + waker, for round-robin dispatch.
+    peers: Arc<Vec<LoopHandle>>,
 }
 
-/// One frame bound for the writer, optionally carrying the `(seq,
-/// spans)` trace accumulator of the query it answers so the writer can
-/// complete the trace after measuring the encode/write stage.
-type OutItem = (Frame, Option<(u64, TraceSpans)>);
-
-/// Stop-aware bounded send for control frames (no trace attached):
-/// waits while the outbound queue is full, gives up when the peer's
-/// lane is gone or the server is stopping. Returns `false` when the
-/// frame could not be handed off.
-fn send_outbound(tx: &mpsc::SyncSender<OutItem>, frame: Frame, stop: &AtomicBool) -> bool {
-    send_outbound_item(tx, (frame, None), stop)
-}
-
-/// [`send_outbound`] for reply frames that carry their trace spans.
-fn send_outbound_item(
-    tx: &mpsc::SyncSender<OutItem>,
-    mut item: OutItem,
-    stop: &AtomicBool,
-) -> bool {
-    loop {
-        match tx.try_send(item) {
-            Ok(()) => return true,
-            Err(mpsc::TrySendError::Disconnected(_)) => return false,
-            Err(mpsc::TrySendError::Full(i)) => {
-                if stop.load(Ordering::SeqCst) {
-                    return false;
+impl EventLoop {
+    fn run(self) {
+        let metrics = self.coord.metrics();
+        // The wake pipe (and loop 0's listener) count as registered fds
+        // for the lifetime of the loop.
+        metrics.reactor_registered_fds.inc();
+        if self.listener.is_some() {
+            metrics.reactor_registered_fds.inc();
+        }
+        // Workers land completions here; the callback pokes our pipe.
+        let completions = {
+            let wk = self
+                .peers
+                .get(self.index)
+                .map(|h| h.waker.try_clone().expect("waker clone"))
+                .expect("own loop handle");
+            CompletionQueue::new(move || wk.wake())
+        };
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut poll = PollSet::new();
+        let mut slots: Vec<u64> = Vec::new(); // poll slot → conn id, parallel past the fixed slots
+        let mut rr = 0usize; // round-robin cursor (loop 0)
+        let mut listener_paused = false;
+        loop {
+            // 1. Adopt connections the acceptor assigned to us.
+            let fresh: Vec<TcpStream> = std::mem::take(&mut *self.injected.lock().unwrap());
+            for stream in fresh {
+                let id = self.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                match Conn::new(stream, id) {
+                    Ok(conn) => {
+                        metrics.reactor_registered_fds.inc();
+                        conns.insert(id, conn);
+                    }
+                    Err(_) => {
+                        // Unusable socket: roll the admission back.
+                        metrics.connections_active.dec();
+                        metrics.connections_closed.inc();
+                        self.active.fetch_sub(1, Ordering::SeqCst);
+                    }
                 }
-                item = i;
-                std::thread::sleep(Duration::from_millis(2));
             }
-        }
-    }
-}
-
-/// One admitted connection, run to completion on the reader thread.
-fn serve_connection(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<AtomicBool>) {
-    let _ = stream.set_read_timeout(Some(READ_TICK));
-    let write_half = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    // A peer that stops draining for WRITE_TIMEOUT is wedged: the write
-    // errors out and the connection dies instead of blocking a thread
-    // (and shutdown) forever.
-    let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
-    let metrics: &PipelineMetrics = coord.metrics();
-
-    // Outbound lane: every frame leaving this connection goes through
-    // out_tx so the writer thread is the socket's only writer. Bounded:
-    // a peer that pipelines queries without reading replies fills this,
-    // then the reader stops consuming its input (TCP backpressure) —
-    // server memory stays bounded.
-    let (out_tx, out_rx) = mpsc::sync_channel::<OutItem>(OUTBOUND_QUEUE);
-    // Reply lane: the coordinator's workers send (tag, Reply, spans)
-    // here. Unbounded, but at most `conn_inflight` replies can be
-    // pending.
-    let (reply_tx, reply_rx) = mpsc::channel::<(usize, Reply, TraceSpans)>();
-    // Queries submitted on this connection whose reply frame has not
-    // been handed to the writer yet.
-    let conn_inflight = Arc::new(AtomicUsize::new(0));
-
-    let writer = {
-        let coord = coord.clone();
-        std::thread::Builder::new()
-            .name("sketch-conn-writer".to_string())
-            .spawn(move || {
-                let m = coord.metrics();
-                let mut w = BufWriter::new(write_half);
-                while let Ok(first) = out_rx.recv() {
-                    // Coalesce whatever is already queued into one
-                    // flush: pipelined reply bursts batch their
-                    // syscalls, a lone reply still leaves immediately.
-                    let mut next = Some(first);
-                    while let Some((frame, trace)) = next {
-                        let t_write = Instant::now();
-                        match write_frame(&mut w, &frame) {
-                            Ok(nbytes) => {
-                                m.net_bytes_out.add(nbytes as u64);
-                                m.net_frames_out.inc();
-                            }
-                            Err(_) => return,
-                        }
-                        // The reply write is this query's last stage:
-                        // complete its trace (encode + buffered write;
-                        // traced queries clamp to >= 1ns so the stage
-                        // is visibly non-zero).
-                        if let Some((seq, spans)) = trace {
-                            let mut write_ns = t_write.elapsed().as_nanos() as u64;
-                            if spans.trace_id != 0 {
-                                write_ns = write_ns.max(1);
-                            }
-                            coord.record_trace(seq, spans, write_ns);
-                        }
-                        next = out_rx.try_recv().ok();
+            // 2. Route finished queries back to their connections. A
+            // miss means the connection was reaped after submitting —
+            // its gauge share was settled at teardown; drop the reply.
+            for c in completions.drain() {
+                if let Some(conn) = conns.get_mut(&c.conn) {
+                    conn.on_completion(c.tag, c.reply, c.spans, &self.coord);
+                    // Opportunistic flush: the reply usually fits the
+                    // socket buffer, making one syscall now and saving
+                    // a poll round-trip.
+                    if conn.wants_write() {
+                        conn.on_writable();
                     }
-                    if w.flush().is_err() {
-                        return;
+                } else {
+                    metrics.net_queries_inflight.dec();
+                }
+            }
+            // 3. Reap idle and finished connections.
+            let now = Instant::now();
+            let mut doomed: Vec<u64> = Vec::new();
+            for (id, conn) in conns.iter_mut() {
+                if let Some(t) = self.config.idle_timeout {
+                    conn.check_idle(now, t);
+                }
+                if conn.finished() {
+                    doomed.push(*id);
+                }
+            }
+            for id in doomed {
+                if let Some(conn) = conns.remove(&id) {
+                    self.retire(&conn);
+                }
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            // 4. Build this iteration's poll set from live interest.
+            poll.clear();
+            slots.clear();
+            let wake_slot = poll.push(self.wake_rx.as_raw_fd(), true, false);
+            let listener_slot = self.listener.as_ref().and_then(|l| {
+                use std::os::unix::io::AsRawFd;
+                if listener_paused {
+                    None
+                } else {
+                    Some(poll.push(l.as_raw_fd(), true, false))
+                }
+            });
+            listener_paused = false;
+            let first_conn_slot = poll.len();
+            let mut next_deadline: Option<Instant> = None;
+            for (id, conn) in conns.iter() {
+                poll.push(conn.fd(), conn.wants_read(), conn.wants_write());
+                slots.push(*id);
+                if let Some(t) = self.config.idle_timeout {
+                    let d = conn.idle_deadline(t);
+                    next_deadline = Some(next_deadline.map_or(d, |nd| nd.min(d)));
+                }
+            }
+            let timeout = match next_deadline {
+                Some(d) => d.saturating_duration_since(now).min(MAX_POLL_PARK),
+                None => MAX_POLL_PARK,
+            };
+            // 5. Park until readiness, wakeup, or the next deadline.
+            let ready = match poll.poll(Some(timeout)) {
+                Ok(n) => n,
+                Err(_) => continue,
+            };
+            if ready > 0 {
+                metrics.reactor_readiness_events.add(ready as u64);
+            }
+            if poll.readiness(wake_slot).readable {
+                self.wake_rx.drain();
+                metrics.reactor_wakeups.inc();
+            }
+            // 6. Accept-ready (loop 0): admit or reject, then deal the
+            // admitted stream to a loop's mailbox and wake it.
+            if let (Some(listener), Some(slot)) = (self.listener.as_ref(), listener_slot) {
+                if poll.readiness(slot).any() {
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _peer)) => {
+                                if self.active.load(Ordering::SeqCst)
+                                    >= self.config.max_connections
+                                {
+                                    metrics.connections_rejected.inc();
+                                    reject_over_capacity(stream, self.config.max_connections);
+                                    continue;
+                                }
+                                metrics.connections_opened.inc();
+                                metrics.connections_active.inc();
+                                self.active.fetch_add(1, Ordering::SeqCst);
+                                let target = &self.peers[rr % self.peers.len()];
+                                rr = rr.wrapping_add(1);
+                                target.injected.lock().unwrap().push(stream);
+                                target.waker.wake();
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(_) => {
+                                // Transient accept failure (EMFILE,
+                                // aborted handshake): skip the listener
+                                // for one tick instead of spinning on a
+                                // level-triggered error.
+                                listener_paused = true;
+                                break;
+                            }
+                        }
                     }
                 }
-            })
-    };
-    let writer = match writer {
-        Ok(h) => h,
-        Err(_) => return,
-    };
-
-    let forwarder = {
-        let coord = coord.clone();
-        let out_tx = out_tx.clone();
-        let stop = stop.clone();
-        let conn_inflight = conn_inflight.clone();
-        std::thread::Builder::new()
-            .name("sketch-conn-fwd".to_string())
-            .spawn(move || {
-                let m = coord.metrics();
-                while let Ok((tag, reply, spans)) = reply_rx.recv() {
-                    m.net_queries_inflight.dec();
-                    conn_inflight.fetch_sub(1, Ordering::SeqCst);
-                    let frame = match reply {
-                        // A worker-side epoch refusal (the query's map
-                        // stamp became unresolvable while queued) goes
-                        // out as the same WrongEpoch error frame the
-                        // admission check uses — one client-visible
-                        // signal for "refresh your map and retry".
-                        Reply::WrongEpoch { current } => {
-                            m.net_wrong_epoch_replies.inc();
-                            Frame::Error {
-                                id: tag as u64,
-                                code: ErrorCode::WrongEpoch,
-                                message: format!(
-                                    "map changed while the query was queued; \
-                                     node is now at epoch {current}"
-                                ),
-                            }
-                        }
-                        reply => Frame::Reply {
-                            id: tag as u64,
-                            reply,
-                        },
-                    };
-                    if !send_outbound_item(&out_tx, (frame, Some((tag as u64, spans))), &stop) {
-                        return;
-                    }
+            }
+            // 7. Drive every ready connection's state machine.
+            for (i, id) in slots.iter().enumerate() {
+                let r = poll.readiness(first_conn_slot + i);
+                if !r.any() {
+                    continue;
                 }
-            })
-    };
-    let forwarder = match forwarder {
-        Ok(h) => h,
-        Err(_) => {
-            drop(out_tx);
-            let _ = writer.join();
-            return;
-        }
-    };
-
-    let mut stream = stream;
-    loop {
-        match read_event(&mut stream, stop) {
-            ReadEvent::Closed => break,
-            ReadEvent::Malformed { err, id, fatal } => {
-                metrics.net_decode_errors.inc();
-                let reply = Frame::Error {
-                    id,
-                    code: if id == 0 {
-                        ErrorCode::Malformed
-                    } else {
-                        // A well-framed query whose body failed decode
-                        // (oversized block, bad kind byte, …): answer
-                        // that query; the connection stays usable.
-                        ErrorCode::InvalidQuery
-                    },
-                    message: err.to_string(),
+                let Some(conn) = conns.get_mut(id) else {
+                    continue;
                 };
-                if !send_outbound(&out_tx, reply, stop) || fatal {
-                    break;
+                if r.readable || r.broken {
+                    conn.on_readable(&self.coord, &completions);
                 }
-            }
-            ReadEvent::Frame(frame, nbytes, version, decode_ns) => {
-                metrics.net_frames_in.inc();
-                metrics.net_bytes_in.add(nbytes as u64);
-                match frame {
-                    Frame::Ping { token } => {
-                        if !send_outbound(&out_tx, Frame::Pong { token }, stop) {
-                            break;
-                        }
-                    }
-                    Frame::StatsRequest => {
-                        let reply = Frame::Stats {
-                            entries: stats_snapshot(coord),
-                        };
-                        if !send_outbound(&out_tx, reply, stop) {
-                            break;
-                        }
-                    }
-                    Frame::TraceDumpRequest => {
-                        // The v6 admin path: hand back this node's
-                        // recent traced queries + slow-query log so a
-                        // cluster client can stitch per-node spans
-                        // into one query trace.
-                        let (traces, slow) = coord.traces().dump();
-                        let reply = Frame::TraceDump { traces, slow };
-                        if !send_outbound(&out_tx, reply, stop) {
-                            break;
-                        }
-                    }
-                    Frame::MetricsTextRequest => {
-                        let reply = Frame::MetricsText {
-                            text: coord.metrics().metrics_text(),
-                        };
-                        if !send_outbound(&out_tx, reply, stop) {
-                            break;
-                        }
-                    }
-                    Frame::ShardMapRequest => {
-                        let reply = Frame::ShardMap(shard_map_info(coord));
-                        if !send_outbound(&out_tx, reply, stop) {
-                            break;
-                        }
-                    }
-                    Frame::AdoptShard(info) => {
-                        // The v4 admin path: swap this node's shard
-                        // identity/owned range at runtime. Success
-                        // answers with the post-adoption map (the
-                        // admin's confirmation); refusals are typed so
-                        // a stale admin can tell "lost the race" from
-                        // "sent nonsense".
-                        //
-                        // A pre-v5 adoption carries no replica
-                        // identity — its decoded 0-of-1 default is
-                        // *absence*, not a statement. Applying it to a
-                        // replicated node would silently demote the
-                        // node out of its replica set (both siblings
-                        // then claim replica 0 of 1 and every client's
-                        // grid validation wedges), so it is refused;
-                        // against an unreplicated node it is the plain
-                        // v4 behavior and stays accepted.
-                        if version < REPLICA_SINCE_VERSION && coord.membership().2.of > 1 {
-                            let reply = Frame::Error {
-                                id: 0,
-                                code: ErrorCode::InvalidQuery,
-                                message: format!(
-                                    "pre-v{REPLICA_SINCE_VERSION} adoption carries no replica \
-                                     identity and cannot reconfigure a replicated node"
-                                ),
-                            };
-                            if !send_outbound(&out_tx, reply, stop) {
-                                break;
-                            }
-                            continue;
-                        }
-                        let reply = match coord.adopt_shard(
-                            info.epoch,
-                            info.index as usize,
-                            info.count as usize,
-                            ReplicaSpec {
-                                index: info.replica as usize,
-                                of: info.replicas as usize,
-                            },
-                            info.start as usize..info.end as usize,
-                            info.rows as usize,
-                        ) {
-                            Ok(()) => Frame::ShardMap(shard_map_info(coord)),
-                            Err(AdoptError::Stale { current }) => Frame::Error {
-                                id: 0,
-                                code: ErrorCode::WrongEpoch,
-                                message: format!(
-                                    "stale adoption: node is already at epoch {current}"
-                                ),
-                            },
-                            Err(AdoptError::Invalid(msg)) => Frame::Error {
-                                id: 0,
-                                code: ErrorCode::InvalidQuery,
-                                message: msg,
-                            },
-                        };
-                        if !send_outbound(&out_tx, reply, stop) {
-                            break;
-                        }
-                    }
-                    Frame::Query {
-                        id,
-                        query,
-                        epoch,
-                        trace_id,
-                    } => {
-                        // Cap this connection's pipelined depth: a peer
-                        // that submits without reading replies parks
-                        // here (TCP backpressure) instead of pinning
-                        // unbounded reply buffering.
-                        let mut dead = false;
-                        while conn_inflight.load(Ordering::SeqCst) >= MAX_CONN_INFLIGHT {
-                            // Bail if the connection is going away: the
-                            // counter can never drain once the
-                            // forwarder or writer has exited.
-                            if stop.load(Ordering::SeqCst)
-                                || forwarder.is_finished()
-                                || writer.is_finished()
-                            {
-                                dead = true;
-                                break;
-                            }
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        if dead {
-                            break;
-                        }
-                        let trace = TraceSpans {
-                            trace_id,
-                            decode_ns,
-                            ..TraceSpans::default()
-                        };
-                        match coord.submit_traced(
-                            query,
-                            epoch,
-                            trace,
-                            id as usize,
-                            reply_tx.clone(),
-                        ) {
-                            Ok(()) => {
-                                metrics.net_queries_inflight.inc();
-                                conn_inflight.fetch_add(1, Ordering::SeqCst);
-                            }
-                            Err(SubmitError::WrongEpoch { current }) => {
-                                metrics.net_wrong_epoch_replies.inc();
-                                let reply = Frame::Error {
-                                    id,
-                                    code: ErrorCode::WrongEpoch,
-                                    message: format!(
-                                        "query stamped epoch {epoch} but node is at {current}; \
-                                         refresh the shard map and retry"
-                                    ),
-                                };
-                                if !send_outbound(&out_tx, reply, stop) {
-                                    break;
-                                }
-                            }
-                            Err(SubmitError::Invalid(msg)) => {
-                                let reply = Frame::Error {
-                                    id,
-                                    code: ErrorCode::InvalidQuery,
-                                    message: msg,
-                                };
-                                if !send_outbound(&out_tx, reply, stop) {
-                                    break;
-                                }
-                            }
-                            Err(SubmitError::Overloaded) => {
-                                metrics.net_overload_replies.inc();
-                                let reply = Frame::Error {
-                                    id,
-                                    code: ErrorCode::Overloaded,
-                                    message: "shard queues full; retry with backoff".to_string(),
-                                };
-                                if !send_outbound(&out_tx, reply, stop) {
-                                    break;
-                                }
-                            }
-                            Err(SubmitError::Shutdown) => {
-                                let reply = Frame::Error {
-                                    id,
-                                    code: ErrorCode::ShuttingDown,
-                                    message: "pipeline is shut down".to_string(),
-                                };
-                                let _ = send_outbound(&out_tx, reply, stop);
-                                break;
-                            }
-                        }
-                    }
-                    // Server-to-client frames arriving at the server are
-                    // a protocol violation, but a recoverable one.
-                    Frame::Pong { .. }
-                    | Frame::Reply { .. }
-                    | Frame::Error { .. }
-                    | Frame::Stats { .. }
-                    | Frame::ShardMap(_)
-                    | Frame::TraceDump { .. }
-                    | Frame::MetricsText { .. } => {
-                        metrics.net_decode_errors.inc();
-                        let reply = Frame::Error {
-                            id: 0,
-                            code: ErrorCode::Malformed,
-                            message: "unexpected server-to-client frame".to_string(),
-                        };
-                        if !send_outbound(&out_tx, reply, stop) {
-                            break;
-                        }
-                    }
+                if conn.wants_write() {
+                    conn.on_writable();
                 }
             }
         }
+        // Teardown: every connection this loop still owns is settled
+        // here — gauges never report phantom connections or in-flight
+        // queries after shutdown.
+        for (_, mut conn) in conns.drain() {
+            conn.mark_dead();
+            self.retire(&conn);
+        }
+        metrics.reactor_registered_fds.dec();
+        if self.listener.is_some() {
+            metrics.reactor_registered_fds.dec();
+        }
     }
-    // Unwind: dropping our senders lets the forwarder drain any still
-    // in-flight replies (their job-held senders drop as workers finish)
-    // and then the writer flush what the forwarder produced.
-    drop(reply_tx);
-    drop(out_tx);
-    let _ = forwarder.join();
-    let _ = writer.join();
-    // If the forwarder exited early (writer lane gone), replies it
-    // never drained still count in the gauge: settle them here so
-    // Stats never reports phantom in-flight queries. Only the
-    // forwarder decrements `conn_inflight`, so after the join this
-    // value is exactly the undrained remainder.
-    for _ in 0..conn_inflight.load(Ordering::SeqCst) {
-        metrics.net_queries_inflight.dec();
-    }
-}
 
-/// Read one frame, tolerating read timeouts (used as stop-flag ticks)
-/// *without* losing partially-read bytes.
-fn read_event(stream: &mut TcpStream, stop: &AtomicBool) -> ReadEvent {
-    let mut len4 = [0u8; 4];
-    match read_exact_interruptible(stream, &mut len4, stop, true) {
-        Ok(true) => {}
-        Ok(false) => return ReadEvent::Closed, // clean EOF between frames
-        Err(_) => return ReadEvent::Closed,
-    }
-    let len = u32::from_le_bytes(len4) as usize;
-    if len > MAX_FRAME_BYTES {
-        // Cannot resync: the next `len` bytes are unbounded garbage.
-        return ReadEvent::Malformed {
-            err: ProtoError::FrameTooLarge(len),
-            id: 0,
-            fatal: true,
-        };
-    }
-    if len < 2 {
-        return ReadEvent::Malformed {
-            err: ProtoError::FrameTooSmall(len),
-            id: 0,
-            fatal: true,
-        };
-    }
-    let mut payload = vec![0u8; len];
-    match read_exact_interruptible(stream, &mut payload, stop, false) {
-        Ok(true) => {}
-        _ => return ReadEvent::Closed, // mid-frame EOF / stop
-    }
-    let t_decode = Instant::now();
-    match Frame::decode(&payload) {
-        // Framing was consistent: survive content errors. A bad query
-        // still gets its id attributed so the error answers that query
-        // instead of reading as a connection-level failure. The parse
-        // time becomes the decode stage of a traced query (clamped to
-        // >= 1ns so completed traces never show a zero stage).
-        Ok(frame) => ReadEvent::Frame(
-            frame,
-            4 + len,
-            payload[0],
-            (t_decode.elapsed().as_nanos() as u64).max(1),
-        ),
-        Err(err) => ReadEvent::Malformed {
-            err,
-            id: query_id_of(&payload).unwrap_or(0),
-            fatal: false,
-        },
-    }
-}
-
-/// `read_exact` that treats read timeouts as stop-flag checkpoints and
-/// keeps its position across them. `Ok(false)` is a clean EOF before
-/// any byte (only when `eof_ok`).
-fn read_exact_interruptible(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    stop: &AtomicBool,
-    eof_ok: bool,
-) -> std::io::Result<bool> {
-    let mut got = 0usize;
-    while got < buf.len() {
-        if stop.load(Ordering::SeqCst) {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::ConnectionAborted,
-                "server shutting down",
-            ));
+    /// Settle one reaped connection's accounting. Replies still owed to
+    /// it (submitted, not yet completed) keep their gauge share settled
+    /// here; their completions are dropped on arrival.
+    fn retire(&self, conn: &Conn) {
+        let metrics = self.coord.metrics();
+        for _ in 0..conn.inflight() {
+            metrics.net_queries_inflight.dec();
         }
-        match stream.read(&mut buf[got..]) {
-            Ok(0) => {
-                if got == 0 && eof_ok {
-                    return Ok(false);
-                }
-                return Err(std::io::ErrorKind::UnexpectedEof.into());
-            }
-            Ok(n) => got += n,
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut
-                    || e.kind() == std::io::ErrorKind::Interrupted =>
-            {
-                continue;
-            }
-            Err(e) => return Err(e),
-        }
+        metrics.connections_active.dec();
+        metrics.connections_closed.inc();
+        metrics.reactor_registered_fds.dec();
+        self.active.fetch_sub(1, Ordering::SeqCst);
     }
-    Ok(true)
 }
 
 /// This node's `ShardMap` frame body: its shard identity, replica
@@ -735,7 +436,7 @@ fn read_exact_interruptible(
 /// server is shard 0 of 1 (replica 0 of 1) owning everything at epoch
 /// 0 (a static map), so single-node and clustered deployments answer
 /// uniformly.
-fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
+pub(crate) fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
     let n = coord.store().n;
     // One consistent snapshot: a frame must not mix the epoch of one
     // adoption with the range of another.
@@ -759,7 +460,7 @@ fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
 /// The `Stats` frame payload: store geometry, per-node health (shard
 /// identity, uptime, per-worker queue depths — what the cluster client
 /// balances on), plus every pipeline and network counter.
-fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
+pub(crate) fn stats_snapshot(coord: &Coordinator) -> Vec<(String, u64)> {
     let store = coord.store();
     let shard = shard_map_info(coord);
     let mut entries = vec![

@@ -512,6 +512,242 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, LoadgenError> {
     })
 }
 
+// ---- high-connection-count soak (`loadgen --conns N`) ---------------
+
+/// Knobs for [`run_conn_scale`]: hold `conns` concurrent pipelined
+/// connections open against one node and drive query rounds over all
+/// of them. The client side stays cheap — a few driver threads each
+/// own a *slice* of the connections (blocking sockets, written then
+/// read in bursts) — so the thing under test is the server's ability
+/// to hold and serve the connection count, not the client's ability to
+/// spawn threads.
+#[derive(Debug, Clone)]
+pub struct ConnScaleConfig {
+    /// Server address (single node).
+    pub addr: String,
+    /// Concurrent connections to establish and hold.
+    pub conns: usize,
+    /// Driver threads (0 = auto: up to 8, never more than `conns`).
+    pub drivers: usize,
+    /// Write-all-then-read-all rounds over every connection.
+    pub rounds: usize,
+    /// Pipelined queries per connection per round.
+    pub pipeline: usize,
+    pub seed: u64,
+}
+
+impl Default for ConnScaleConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            conns: 1024,
+            drivers: 0,
+            rounds: 4,
+            pipeline: 4,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// What [`run_conn_scale`] observed.
+pub struct ConnScaleReport {
+    /// Connections requested.
+    pub conns: usize,
+    /// Connections that reached an admitted, answering state.
+    pub established: usize,
+    /// Connections the server refused with a *typed*
+    /// `TooManyConnections` error (capacity working as designed —
+    /// distinct from `errors`).
+    pub rejected: u64,
+    pub sent: u64,
+    pub ok: u64,
+    /// Untyped failures: transport errors, unexpected frames, non-cap
+    /// error replies. A healthy soak reports 0.
+    pub errors: u64,
+    pub elapsed: Duration,
+    /// Per-reply RTT, measured from its round's write burst.
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl ConnScaleReport {
+    pub fn summary(&self) -> String {
+        let secs = self.elapsed.as_secs_f64().max(1e-9);
+        format!(
+            "conn-scale: {}/{} connections held ({} typed rejections), {} sent \
+             ({:.0} qps), {} ok, {} errors in {:.2}s | rtt: {}",
+            self.established,
+            self.conns,
+            self.rejected,
+            self.sent,
+            self.sent as f64 / secs,
+            self.ok,
+            self.errors,
+            secs,
+            self.latency.summary(),
+        )
+    }
+}
+
+/// One raw soak connection: no [`SketchClient`] (its reply-map and
+/// trace bookkeeping are overhead at thousands of connections), just a
+/// blocking socket the driver writes frame bursts to.
+struct SoakConn {
+    stream: std::net::TcpStream,
+    /// When this connection's current round burst was written.
+    burst_at: Instant,
+}
+
+/// Establish + hold `cfg.conns` concurrent pipelined connections and
+/// drive `cfg.rounds` query rounds across all of them. Every
+/// connection stays open for the whole run — the server must hold them
+/// *simultaneously* (the readiness-driven listener's reason to exist).
+/// Over-capacity admissions are counted only if refused with the typed
+/// `TooManyConnections` frame; anything untyped is an error.
+pub fn run_conn_scale(cfg: &ConnScaleConfig) -> Result<ConnScaleReport, LoadgenError> {
+    use super::protocol::{read_frame, write_frame, ErrorCode, Frame};
+
+    let mut probe = dial(&cfg.addr).map_err(LoadgenError::Client)?;
+    let n = match probe.stat("store_n").map_err(LoadgenError::Client)? {
+        Some(n) => n,
+        None => return Err(LoadgenError::MissingStat("store_n")),
+    };
+    if n == 0 {
+        return Err(ClientError::Unexpected("server reports an empty store (store_n = 0)").into());
+    }
+    drop(probe);
+
+    let drivers = match cfg.drivers {
+        0 => cfg.conns.clamp(1, 8),
+        d => d.min(cfg.conns.max(1)),
+    };
+    let latency = Arc::new(LatencyHistogram::new());
+    let sent = Arc::new(AtomicU64::new(0));
+    let ok = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let established = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+
+    let mut handles = Vec::with_capacity(drivers);
+    for d in 0..drivers {
+        // Deal connections round-robin so driver loads stay even.
+        let share = (cfg.conns + drivers - 1 - d) / drivers;
+        let cfg = cfg.clone();
+        let latency = latency.clone();
+        let sent = sent.clone();
+        let ok = ok.clone();
+        let rejected = rejected.clone();
+        let errors = errors.clone();
+        let established = established.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("conn-scale-{d}"))
+                .spawn(move || {
+                    let mut rng = Xoshiro256pp::new(cfg.seed ^ (d as u64).wrapping_mul(0xC0));
+                    // Phase 1: establish this driver's slice, proving
+                    // admission with a Ping (the capacity refusal
+                    // arrives as a frame, not a failed connect).
+                    let mut conns: Vec<SoakConn> = Vec::with_capacity(share);
+                    'dialing: for c in 0..share {
+                        let mut attempt = 0;
+                        let stream = loop {
+                            match std::net::TcpStream::connect(&cfg.addr) {
+                                Ok(s) => break s,
+                                Err(_) if attempt < 10 => {
+                                    attempt += 1;
+                                    std::thread::sleep(Duration::from_millis(50));
+                                }
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                    continue 'dialing;
+                                }
+                            }
+                        };
+                        let _ = stream.set_nodelay(true);
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+                        let mut stream = stream;
+                        let token = (d * share + c) as u64;
+                        if write_frame(&mut stream, &Frame::Ping { token }).is_err() {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        match read_frame(&mut stream) {
+                            Ok(Frame::Pong { token: t }) if t == token => {
+                                established.fetch_add(1, Ordering::Relaxed);
+                                conns.push(SoakConn {
+                                    stream,
+                                    burst_at: Instant::now(),
+                                });
+                            }
+                            Ok(Frame::Error { code, .. })
+                                if code == ErrorCode::TooManyConnections =>
+                            {
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    // Phase 2: pipelined rounds — write a burst to
+                    // *every* connection, then collect every reply, so
+                    // the server holds the full set's queries at once.
+                    for _round in 0..cfg.rounds {
+                        for conn in conns.iter_mut() {
+                            conn.burst_at = Instant::now();
+                            for id in 0..cfg.pipeline {
+                                let frame = Frame::Query {
+                                    id: id as u64,
+                                    query: Query::Pair {
+                                        i: rng.below(n) as u32,
+                                        j: rng.below(n) as u32,
+                                        kind: QueryKind::Oq,
+                                    },
+                                    epoch: 0,
+                                    trace_id: 0,
+                                };
+                                if write_frame(&mut conn.stream, &frame).is_ok() {
+                                    sent.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        for conn in conns.iter_mut() {
+                            for _ in 0..cfg.pipeline {
+                                match read_frame(&mut conn.stream) {
+                                    Ok(Frame::Reply { .. }) => {
+                                        latency.record(conn.burst_at.elapsed());
+                                        ok.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    _ => {
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Connections drop together here: the whole slice
+                    // was concurrently open for the entire run.
+                })
+                .expect("spawning conn-scale thread"),
+        );
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(ConnScaleReport {
+        conns: cfg.conns,
+        established: established.load(Ordering::Relaxed) as usize,
+        rejected: rejected.load(Ordering::Relaxed),
+        sent: sent.load(Ordering::Relaxed),
+        ok: ok.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+        elapsed: t0.elapsed(),
+        latency,
+    })
+}
+
 /// Live cluster dashboard: poll every node's `Stats` frame once per
 /// `interval` and print one line per node — qps since the previous
 /// sample, in-flight queue depth, query p99, active connections — plus

@@ -3,17 +3,26 @@
 //! if remote callers can reach the estimator — this module puts the
 //! coordinator's query plans behind a TCP wire.
 //!
-//! Four pieces:
+//! Pieces:
 //!
 //! * [`protocol`] — versioned length-framed binary encoding of every
 //!   [`crate::coordinator::Query`]/[`crate::coordinator::Reply`]
 //!   variant plus `Ping`/`Stats` control frames. Strictly
 //!   bounds-checked: malformed bytes decode to errors, never panics
-//!   or unbounded allocations.
-//! * [`listener`] — [`SketchServer`]: TCP accept loop, bounded
-//!   connection pool, per-connection reader/writer threads feeding the
-//!   coordinator's pipelined `submit`. Queue-full backpressure maps to
-//!   an explicit `Overloaded` reply frame, not a dropped connection.
+//!   or unbounded allocations. [`protocol::FrameAssembler`] is the
+//!   resumable decoder the event loop feeds partial reads into.
+//! * [`reactor`] — the std-only readiness layer: a `poll(2)` binding
+//!   ([`reactor::PollSet`]) and a self-pipe wakeup
+//!   ([`reactor::Waker`]) so any thread can pull an event loop out of
+//!   its park.
+//! * `conn` (crate-internal) — the per-connection state machine:
+//!   partial-frame reassembly, outbound byte buffering with
+//!   partial-write resume, pipelined-inflight caps, and the idle clock.
+//! * [`listener`] — [`SketchServer`]: one event-loop thread per core
+//!   (`--io-threads`) over nonblocking sockets; loop 0 accepts and
+//!   deals connections round-robin. Thread count is fixed regardless
+//!   of connection count. Queue-full backpressure maps to an explicit
+//!   `Overloaded` reply frame, not a dropped connection.
 //! * [`client`] — [`SketchClient`]: blocking, reconnectable, pipelined
 //!   plan submission with typed errors.
 //! * [`cluster`] — [`ClusterClient`]: the client-side router for a
@@ -30,7 +39,36 @@
 //!   errors, bit-identical replies.
 //! * [`loadgen`] — open- and closed-loop multi-threaded load generator
 //!   reporting throughput and p50/p95/p99 latency, driving one node or
-//!   a whole cluster, plus a live per-node `--watch` dashboard.
+//!   a whole cluster, a high-connection-count soak mode (`--conns`),
+//!   plus a live per-node `--watch` dashboard.
+//!
+//! # The completion-queue contract
+//!
+//! Replies cross from coordinator workers back to the serving layer
+//! through [`crate::coordinator::CompletionQueue`], one per event
+//! loop. The contract, end to end:
+//!
+//! 1. The listener submits a network query with
+//!    `Coordinator::submit_completion(query, epoch, trace, tag,
+//!    queue, conn_id)`. Admission is identical to the channel path
+//!    (same epoch check, validation, and `Overloaded` refusal — the
+//!    never-hang backpressure contract is enforced *at submit*, so a
+//!    full shard queue surfaces as a typed error frame immediately).
+//! 2. When a worker finishes the query it pushes a
+//!    `Completion { conn, tag, reply, spans }` and the queue fires its
+//!    wake callback — a [`reactor::Waker::wake`] self-pipe write — so
+//!    the owning loop leaves `poll(2)`. The push happens-before the
+//!    wake, so a loop that drains after waking can never miss one.
+//! 3. The loop drains the queue, routes each completion to its
+//!    connection by `conn` id (completions for reaped connections are
+//!    dropped; their gauge share was settled at teardown), encodes the
+//!    reply, and records the trace — *before* the bytes reach the
+//!    socket, preserving record-trace-before-flush — then flushes as
+//!    the socket allows.
+//!
+//! Depth is bounded without blocking: each connection stops reading
+//! (drops POLLIN interest) at its pipelined-inflight cap, so a queue
+//! holds at most cap × connections entries and `push` never waits.
 //!
 //! The serving layer is fully observable (protocol v6): every `Query`
 //! frame can carry a trace id, each node records per-stage spans
@@ -41,12 +79,16 @@
 
 pub mod client;
 pub mod cluster;
+pub(crate) mod conn;
 pub mod listener;
 pub mod loadgen;
 pub mod protocol;
+pub mod reactor;
 
 pub use client::{ClientError, SketchClient};
 pub use cluster::{ClusterClient, ClusterError};
 pub use listener::{ServerConfig, SketchServer};
-pub use loadgen::{LoadMode, LoadgenConfig, LoadgenReport, Workload};
-pub use protocol::{ErrorCode, Frame, ProtoError, ShardMapInfo, PROTOCOL_VERSION};
+pub use loadgen::{
+    ConnScaleConfig, ConnScaleReport, LoadMode, LoadgenConfig, LoadgenReport, Workload,
+};
+pub use protocol::{ErrorCode, Frame, FrameAssembler, ProtoError, ShardMapInfo, PROTOCOL_VERSION};

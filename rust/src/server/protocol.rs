@@ -896,6 +896,95 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameReadError> {
     Ok(Frame::decode(&payload)?)
 }
 
+// ---- resumable frame assembly --------------------------------------
+
+/// Incremental counterpart of [`read_frame`] for nonblocking sockets:
+/// feed it whatever bytes a readiness event delivered — even one at a
+/// time — and it hands back complete payloads as they finish.
+///
+/// The assembler carries a partial length prefix and a partial body
+/// across calls, so a frame split at *any* byte boundary reassembles to
+/// the exact payload `read_frame` would have produced (pinned by the
+/// chunking property test in `tests/wire_protocol.rs`). The same
+/// validation order applies: the 4-byte little-endian length is checked
+/// against [`MAX_FRAME_BYTES`] and the 2-byte minimum *before* the body
+/// buffer is allocated, so a hostile prefix costs nothing. Length
+/// errors are framing errors — the stream offset is lost, so the
+/// assembler must be discarded with the connection. *Content* errors
+/// (a completed payload that fails [`Frame::decode`]) leave the stream
+/// framed; the caller may keep feeding.
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    /// Bytes of the u32 length prefix collected so far (< 4).
+    header: [u8; 4],
+    header_len: usize,
+    /// Body buffer, allocated once the validated prefix completes.
+    body: Vec<u8>,
+    /// Total body length the prefix promised (0 = still in the header).
+    body_target: usize,
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True while no bytes of the *current* frame have arrived — i.e.
+    /// the stream sits exactly on a frame boundary.
+    pub fn is_empty(&self) -> bool {
+        self.header_len == 0 && self.body_target == 0
+    }
+
+    /// Consume bytes from `buf`. Returns how many bytes were consumed
+    /// and, if those bytes completed a frame, its raw payload
+    /// (`version | tag | body` — hand it to [`Frame::decode`]).
+    ///
+    /// At most one frame is returned per call; callers loop until the
+    /// consumed count reaches `buf.len()`:
+    ///
+    /// ```text
+    /// while off < buf.len() {
+    ///     let (n, done) = asm.feed(&buf[off..])?;
+    ///     off += n;
+    ///     if let Some(payload) = done { /* decode + dispatch */ }
+    /// }
+    /// ```
+    pub fn feed(&mut self, buf: &[u8]) -> Result<(usize, Option<Vec<u8>>), ProtoError> {
+        let mut used = 0;
+        // Phase 1: finish the length prefix.
+        if self.body_target == 0 {
+            let want = 4 - self.header_len;
+            let take = want.min(buf.len());
+            self.header[self.header_len..self.header_len + take].copy_from_slice(&buf[..take]);
+            self.header_len += take;
+            used += take;
+            if self.header_len < 4 {
+                return Ok((used, None));
+            }
+            let len = u32::from_le_bytes(self.header) as usize;
+            if len > MAX_FRAME_BYTES {
+                return Err(ProtoError::FrameTooLarge(len));
+            }
+            if len < 2 {
+                return Err(ProtoError::FrameTooSmall(len));
+            }
+            self.body_target = len;
+            self.body = Vec::with_capacity(len.min(64 << 10));
+        }
+        // Phase 2: fill the body.
+        let want = self.body_target - self.body.len();
+        let take = want.min(buf.len() - used);
+        self.body.extend_from_slice(&buf[used..used + take]);
+        used += take;
+        if self.body.len() == self.body_target {
+            self.header_len = 0;
+            self.body_target = 0;
+            return Ok((used, Some(std::mem::take(&mut self.body))));
+        }
+        Ok((used, None))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1255,5 +1344,74 @@ mod tests {
         for cut in 2..payload.len() {
             assert!(Frame::decode(&payload[..cut]).is_err(), "cut {cut}");
         }
+    }
+
+    #[test]
+    fn frame_assembler_reassembles_across_arbitrary_splits() {
+        let frames = [
+            Frame::Ping { token: 42 },
+            Frame::StatsRequest,
+            Frame::Error {
+                id: 7,
+                code: ErrorCode::Overloaded,
+                message: "shard queues full; retry with backoff".into(),
+            },
+        ];
+        // Concatenate the wire bytes and feed them one byte at a time:
+        // the assembler must hand back exactly the payloads read_frame
+        // would, at exactly the frame boundaries.
+        let mut wire = Vec::new();
+        let mut want = Vec::new();
+        for f in &frames {
+            let b = f.encode();
+            want.push(b[4..].to_vec());
+            wire.extend_from_slice(&b);
+        }
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        for byte in &wire {
+            let (n, done) = asm.feed(std::slice::from_ref(byte)).expect("feed");
+            assert_eq!(n, 1);
+            if let Some(p) = done {
+                got.push(p);
+            }
+        }
+        assert_eq!(got, want);
+        assert!(asm.is_empty(), "stream ends on a frame boundary");
+        // Multiple frames in one buffer: each feed returns at most one
+        // frame, and the consumed counts walk the buffer exactly.
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < wire.len() {
+            let (n, done) = asm.feed(&wire[off..]).expect("feed");
+            assert!(n > 0);
+            off += n;
+            if let Some(p) = done {
+                got.push(p);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn frame_assembler_rejects_hostile_prefixes_before_allocating() {
+        let mut asm = FrameAssembler::new();
+        let hostile = (u32::MAX).to_le_bytes();
+        // Dribble the prefix one byte at a time; the error lands on the
+        // byte that completes it.
+        for byte in &hostile[..3] {
+            let (n, done) = asm.feed(std::slice::from_ref(byte)).expect("partial prefix");
+            assert_eq!((n, done), (1, None));
+        }
+        assert!(matches!(
+            asm.feed(&hostile[3..]),
+            Err(ProtoError::FrameTooLarge(_))
+        ));
+        let mut asm = FrameAssembler::new();
+        assert!(matches!(
+            asm.feed(&1u32.to_le_bytes()),
+            Err(ProtoError::FrameTooSmall(1))
+        ));
     }
 }

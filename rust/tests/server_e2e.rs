@@ -15,9 +15,10 @@ use stablesketch::server::{ClientError, ErrorCode, ServerConfig, SketchClient, S
 use stablesketch::sketch::SketchEngine;
 use stablesketch::simul::{Corpus, CorpusConfig};
 use stablesketch::util::config::PipelineConfig;
-use std::io::Write;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const ALL_KINDS: [QueryKind; 4] = [
     QueryKind::Oq,
@@ -243,7 +244,15 @@ fn malformed_frames_get_error_replies_and_never_kill_the_server() {
 
 #[test]
 fn connection_pool_is_bounded_with_typed_rejection() {
-    let (_coord, server, addr) = start_stack(10, 32, 1, ServerConfig { max_connections: 1 });
+    let (_coord, server, addr) = start_stack(
+        10,
+        32,
+        1,
+        ServerConfig {
+            max_connections: 1,
+            ..Default::default()
+        },
+    );
     let mut first =
         SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20)).expect("first");
     assert!(first.ping().is_ok());
@@ -341,6 +350,7 @@ fn loadgen_reports_throughput_and_latency_quantiles() {
         topk_m: 4,
         block_side: 3,
         seed: 7,
+        watch: false,
     })
     .expect("loadgen");
     assert!(report.ok > 0, "no queries completed");
@@ -359,9 +369,134 @@ fn loadgen_reports_throughput_and_latency_quantiles() {
         topk_m: 4,
         block_side: 3,
         seed: 8,
+        watch: false,
     })
     .expect("open loadgen");
     assert!(open.ok > 0);
     assert!(open.sent <= 200, "open loop must pace itself: {}", open.sent);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_latency_is_bounded_idle_and_loaded() {
+    // Idle: event loops parked in poll() with no connections. Shutdown
+    // is wakeup-driven (stop flag + self-pipe), not a timed tick, so it
+    // must come back well under the old 2ms-sleep-loop era's worst case.
+    let (_coord, server, _addr) = start_stack(10, 32, 1, ServerConfig::default());
+    let t0 = Instant::now();
+    server.shutdown();
+    let idle = t0.elapsed();
+    assert!(idle < Duration::from_millis(100), "idle shutdown took {idle:?}");
+
+    // Loaded: live connections with plans in flight when stop lands.
+    let (_coord, server, addr) = start_stack(20, 32, 2, ServerConfig::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut drivers = Vec::new();
+    for t in 0..3u32 {
+        let addr = addr.clone();
+        let stop = stop.clone();
+        drivers.push(std::thread::spawn(move || {
+            let mut client =
+                SketchClient::connect_with_retry(&addr, 10, Duration::from_millis(20))
+                    .expect("connect");
+            let plan = mixed_plan(20, t + 1);
+            while !stop.load(Ordering::Relaxed) {
+                // Errors are the expected shape once the server goes
+                // away mid-plan; the measurement is the join below.
+                if client.query_plan(&plan).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(200)); // let traffic build
+    let t0 = Instant::now();
+    server.shutdown();
+    let loaded = t0.elapsed();
+    stop.store(true, Ordering::Relaxed);
+    for d in drivers {
+        let _ = d.join();
+    }
+    assert!(
+        loaded < Duration::from_millis(100),
+        "loaded shutdown took {loaded:?}"
+    );
+}
+
+#[test]
+fn idle_timeout_reaps_slowloris_but_not_active_connections() {
+    let (coord, server, addr) = start_stack(
+        10,
+        32,
+        1,
+        ServerConfig {
+            max_connections: 1,
+            idle_timeout: Some(Duration::from_millis(300)),
+            ..Default::default()
+        },
+    );
+
+    // Slowloris: dribble a valid Ping frame one byte at a time, slower
+    // than the idle timeout ever to complete. Partial bytes must NOT
+    // reset the idle clock, so the reaper kills the connection even
+    // though the socket is never strictly silent.
+    let mut encoded = Vec::new();
+    write_frame(&mut encoded, &Frame::Ping { token: 1 }).expect("encode ping");
+    let mut sly = std::net::TcpStream::connect(&addr).expect("slowloris connect");
+    sly.set_read_timeout(Some(Duration::from_millis(100)))
+        .expect("read timeout");
+    let t0 = Instant::now();
+    let mut reaped = false;
+    let mut next = 0usize;
+    while t0.elapsed() < Duration::from_secs(10) && next < encoded.len() {
+        if sly.write_all(&encoded[next..next + 1]).is_err() {
+            reaped = true;
+            break;
+        }
+        next += 1;
+        // A reaped connection surfaces as EOF or a reset on read.
+        let mut buf = [0u8; 1];
+        match sly.read(&mut buf) {
+            Ok(0) => {
+                reaped = true;
+                break;
+            }
+            Ok(_) => panic!("server answered an incomplete frame"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                reaped = true;
+                break;
+            }
+        }
+    }
+    assert!(reaped, "slowloris connection survived past the idle timeout");
+    drop(sly);
+
+    // The reaper settled the books: the gauge drops back to zero and
+    // the only pool slot is free again for a well-behaved client.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut client = loop {
+        let attempt = SketchClient::connect_with_retry(&addr, 5, Duration::from_millis(50))
+            .and_then(|mut c| c.ping().map(|_| c));
+        match attempt {
+            Ok(c) => break c,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "slot never freed: {e:?}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    assert_eq!(coord.metrics().connections_active.get(), 1);
+    assert!(coord.metrics().connections_closed.get() >= 1);
+
+    // The flip side: a connection that keeps *completing* frames lives
+    // well past the timeout — the idle clock resets on completed
+    // inbound frames, not on raw bytes.
+    for _ in 0..10 {
+        assert!(client.pair(0, 1, QueryKind::Oq).is_ok());
+        std::thread::sleep(Duration::from_millis(100));
+    }
     server.shutdown();
 }

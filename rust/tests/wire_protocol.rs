@@ -643,3 +643,128 @@ fn frame_reader_rejects_hostile_length_prefixes() {
     assert_eq!(read_frame(&mut cur).unwrap(), Frame::Ping { token: 1 });
     assert_eq!(read_frame(&mut cur).unwrap(), Frame::StatsRequest);
 }
+
+/// The event loop never sees whole frames — the kernel hands it
+/// arbitrary byte runs. Feeding every frame shape the protocol can
+/// express through [`FrameAssembler`] under the two worst chunkings
+/// (one byte at a time, and random split points) must yield payloads
+/// byte-identical to the one-shot encoding, in order, with no state
+/// left over.
+#[test]
+fn frame_assembler_matches_one_shot_encoding_under_any_chunking() {
+    use stablesketch::server::FrameAssembler;
+    use stablesketch::trace::TraceRecord;
+    let mut rng = Xoshiro256pp::new(0x5EED);
+    let rec = |seq: u64| TraceRecord {
+        trace_id: 9,
+        seq,
+        shard: 0,
+        replica: 1,
+        decode_ns: 1,
+        queue_ns: 2,
+        scan_ns: 3,
+        write_ns: 4,
+    };
+    // Every variant, then a randomized population of the two
+    // payload-bearing shapes.
+    let mut frames = vec![
+        Frame::Ping { token: 99 },
+        Frame::Pong { token: u64::MAX },
+        Frame::StatsRequest,
+        Frame::Stats {
+            entries: vec![("a".into(), 1), ("b".into(), 2)],
+        },
+        Frame::Error {
+            id: 3,
+            code: ErrorCode::Overloaded,
+            message: "busy — ünïcode ok".into(),
+        },
+        Frame::ShardMapRequest,
+        Frame::ShardMap(ShardMapInfo {
+            index: 0,
+            count: 4,
+            start: 0,
+            end: 25,
+            rows: 100,
+            epoch: 2,
+            replica: 0,
+            replicas: 1,
+        }),
+        Frame::AdoptShard(ShardMapInfo {
+            index: 3,
+            count: 4,
+            start: 75,
+            end: 100,
+            rows: 100,
+            epoch: 3,
+            replica: 1,
+            replicas: 2,
+        }),
+        Frame::TraceDumpRequest,
+        Frame::TraceDump {
+            traces: vec![rec(1), rec(2)],
+            slow: vec![rec(3)],
+        },
+        Frame::MetricsTextRequest,
+        Frame::MetricsText {
+            text: "# TYPE x counter\nx 1\n".to_string(),
+        },
+    ];
+    for _ in 0..40 {
+        frames.push(Frame::Query {
+            id: rng.next_u64(),
+            query: rand_query(&mut rng),
+            epoch: rng.next_u64(),
+            trace_id: rng.next_u64(),
+        });
+        frames.push(Frame::Reply {
+            id: rng.next_u64(),
+            reply: rand_reply(&mut rng),
+        });
+    }
+
+    // One concatenated conversation; reassembly must find every frame
+    // boundary on its own.
+    let stream: Vec<u8> = frames.iter().flat_map(|f| f.encode()).collect();
+    let one_shot: Vec<Vec<u8>> = frames.iter().map(|f| f.encode()[4..].to_vec()).collect();
+
+    let feed_in_chunks = |chunks: &[&[u8]]| -> Vec<Vec<u8>> {
+        let mut asm = FrameAssembler::new();
+        let mut out = Vec::new();
+        for chunk in chunks {
+            let mut rest = *chunk;
+            while !rest.is_empty() {
+                let (used, payload) = asm.feed(rest).expect("valid stream never errs");
+                assert!(used > 0, "assembler must make progress on nonempty input");
+                rest = &rest[used..];
+                if let Some(p) = payload {
+                    out.push(p);
+                }
+            }
+        }
+        assert!(asm.is_empty(), "no partial frame may remain at stream end");
+        out
+    };
+
+    // Worst case: one byte per read.
+    let bytes: Vec<&[u8]> = stream.chunks(1).collect();
+    assert_eq!(feed_in_chunks(&bytes), one_shot);
+
+    // Random split points, many shapes of them.
+    for _ in 0..50 {
+        let mut chunks: Vec<&[u8]> = Vec::new();
+        let mut off = 0;
+        while off < stream.len() {
+            let take = (rng.below(97) as usize + 1).min(stream.len() - off);
+            chunks.push(&stream[off..off + take]);
+            off += take;
+        }
+        assert_eq!(feed_in_chunks(&chunks), one_shot);
+    }
+
+    // The payloads are not just byte-identical — they decode back to
+    // the original frames.
+    for (payload, frame) in one_shot.iter().zip(&frames) {
+        assert_eq!(&Frame::decode(payload).unwrap(), frame);
+    }
+}
