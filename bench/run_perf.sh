@@ -1,18 +1,20 @@
 #!/usr/bin/env bash
-# Regenerate the tracked perf baseline (BENCH_8.json at the repo root).
+# Regenerate the tracked perf baseline (BENCH_9.json at the repo root).
 #
 # Builds the release binary and runs the `bench perf` harness: fused-
-# kernel micro benches, a framed-protocol loopback pass, a short
-# 2-shard cluster loadgen pass, and the connection-scale soak
-# (net_conn_scale: RTT p50/p99 at 16/256/1024 held connections on a
-# fixed io-thread count). Schema: op -> ns/op, throughput, p50/p95/p99
-# per section, plus derived speedup ratios.
+# kernel micro benches, the bit-scan pass (dense f32 vs packed sign
+# TopK scans at equal n and k — rows/s and bytes/row), a framed-
+# protocol loopback pass, a short 2-shard cluster loadgen pass, and
+# the connection-scale soak (net_conn_scale: RTT p50/p99 at
+# 16/256/1024 held connections on a fixed io-thread count). Schema:
+# op -> ns/op, throughput, p50/p95/p99 per section, plus derived
+# speedup ratios.
 #
 # Env vars:
 #   SMOKE=1              tiny sizes (CI smoke job)
 #   FEATURES="simd"      build with the SSE2 kernel (results stay
 #                        bit-identical; only the timings move)
-#   OUT=path.json        output path (default BENCH_8.json)
+#   OUT=path.json        output path (default BENCH_9.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,7 +24,7 @@ if [ "$(ulimit -n)" != "unlimited" ] && [ "$(ulimit -n)" -lt 4096 ]; then
   ulimit -n 4096 2>/dev/null || true
 fi
 
-OUT="${OUT:-BENCH_8.json}"
+OUT="${OUT:-BENCH_9.json}"
 FEATURES="${FEATURES:-}"
 ARGS=(bench perf --out "$OUT")
 if [ "${SMOKE:-0}" = "1" ]; then

@@ -11,7 +11,7 @@ use crate::numerics::{Rng, Xoshiro256pp};
 use crate::server::{
     ClusterClient, LoadMode, LoadgenConfig, ServerConfig, SketchClient, SketchServer, Workload,
 };
-use crate::sketch::{SketchEngine, SketchStore};
+use crate::sketch::{SketchDtype, SketchEngine, SketchStore};
 use crate::simul::{Corpus, CorpusConfig};
 use crate::util::cli::Args;
 use crate::util::config::PipelineConfig;
@@ -33,11 +33,36 @@ fn corpus_from_args(args: &Args) -> Result<(Corpus, PipelineConfig)> {
     Ok((corpus, cfg))
 }
 
+/// `--dtype dense|sign`: which sketch representation to build. The
+/// sign path packs one bit per projection (α = 1 sign Cauchy family).
+fn dtype_from_args(args: &Args) -> Result<SketchDtype> {
+    match args.str_or("dtype", "dense").as_str() {
+        "dense" | "f32" => Ok(SketchDtype::DenseF32),
+        "sign" | "bits" => Ok(SketchDtype::SignBits),
+        other => bail!("unknown --dtype '{other}' (dense|sign)"),
+    }
+}
+
+/// Build the engine, honouring `--sparsity s` (0 < s ≤ 1): a very
+/// sparse projection matrix (cs/0611114) that touches only an s
+/// fraction of coordinates per projection, rescaled to stay unbiased.
+fn engine_from_args(args: &Args, cfg: &PipelineConfig) -> Result<SketchEngine> {
+    let sparsity = args.f64_or("sparsity", 1.0)?;
+    if !(sparsity > 0.0 && sparsity <= 1.0) {
+        bail!("--sparsity must be in (0, 1], got {sparsity}");
+    }
+    Ok(if sparsity < 1.0 {
+        SketchEngine::with_sparsity(cfg.alpha, cfg.dim, cfg.k, cfg.seed, sparsity)
+    } else {
+        SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed)
+    })
+}
+
 /// `sketch`: generate a synthetic corpus, sketch it, report compression
 /// + accuracy against exact distances on a sample of pairs.
 pub fn cmd_sketch(args: &Args) -> Result<()> {
     let (corpus, cfg) = corpus_from_args(args)?;
-    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
+    let engine = engine_from_args(args, &cfg)?;
     let t0 = Instant::now();
     let store = engine.sketch_all(corpus.as_slice(), corpus.n);
     let dt = t0.elapsed();
@@ -178,8 +203,18 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     let topk_m = args.usize_or("topk-m", 10)?;
     let block_side = args.usize_or("block-side", 8)?;
-    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
-    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let dtype = dtype_from_args(args)?;
+    let engine = engine_from_args(args, &cfg)?;
+    let store = match dtype {
+        SketchDtype::DenseF32 => engine.sketch_all(corpus.as_slice(), corpus.n),
+        SketchDtype::SignBits => engine.sketch_all_sign(corpus.as_slice(), corpus.n),
+    };
+    // A sign store only answers the popcount estimator; every dense
+    // kind would be an admission refusal.
+    let kind = match dtype {
+        SketchDtype::DenseF32 => QueryKind::Oq,
+        SketchDtype::SignBits => QueryKind::Sign,
+    };
     let coord = Coordinator::start(cfg.clone(), store)?;
     let mut rng = Xoshiro256pp::new(cfg.seed ^ 2);
     let n = corpus.n as u64;
@@ -194,17 +229,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             0 => Query::Pair {
                 i: rng.below(n) as u32,
                 j: rng.below(n) as u32,
-                kind: QueryKind::Oq,
+                kind,
             },
             1 => Query::TopK {
                 i: rng.below(n) as u32,
                 m: topk_m,
-                kind: QueryKind::Oq,
+                kind,
             },
             _ => Query::Block {
                 rows: (0..block_side).map(|_| rng.below(n) as u32).collect(),
                 cols: (0..block_side).map(|_| rng.below(n) as u32).collect(),
-                kind: QueryKind::Oq,
+                kind,
             },
         }
     };
@@ -275,8 +310,13 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("invalid --replica '{s}' (expected r/R, e.g. 0/2)"))?,
         None => ReplicaSpec::solo(),
     };
-    let engine = SketchEngine::new(cfg.alpha, cfg.dim, cfg.k, cfg.seed);
-    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let dtype = dtype_from_args(args)?;
+    let engine = engine_from_args(args, &cfg)?;
+    let store = match dtype {
+        SketchDtype::DenseF32 => engine.sketch_all(corpus.as_slice(), corpus.n),
+        SketchDtype::SignBits => engine.sketch_all_sign(corpus.as_slice(), corpus.n),
+    };
+    let store_bytes = store.memory_bytes();
     let coord = Arc::new(Coordinator::start_replicated(cfg.clone(), store, shard, replica)?);
     let owned = coord.owned_range();
     let server = SketchServer::start(
@@ -289,12 +329,14 @@ fn cmd_serve_network(args: &Args) -> Result<()> {
         },
     )?;
     println!(
-        "serving on {} (n={} k={} alpha={} shards={}, {} max conns, {} io threads{}{}); \
-         try: stablesketch loadgen --connect {}",
+        "serving on {} (n={} k={} alpha={} dtype={} [{:.1} KiB] shards={}, {} max conns, \
+         {} io threads{}{}); try: stablesketch loadgen --connect {}",
         server.local_addr(),
         corpus.n,
         cfg.k,
         cfg.alpha,
+        dtype.label(),
+        store_bytes as f64 / 1024.0,
         cfg.shards,
         max_connections,
         if io_threads == 0 {
@@ -374,16 +416,25 @@ fn cmd_query_remote(args: &Args) -> Result<()> {
     }
     let i = args.usize_or("i", 0)? as u32;
     let j = args.usize_or("j", 1)? as u32;
-    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median] {
+    // The node's representation decides which estimator kinds are
+    // admissible: a sign-bits node serves only the popcount estimator.
+    let sign = client.shard_map().context("shard map")?.dtype == SketchDtype::SignBits.code();
+    let kinds: &[QueryKind] = if sign {
+        &[QueryKind::Sign]
+    } else {
+        &[QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median]
+    };
+    let scan_kind = if sign { QueryKind::Sign } else { QueryKind::Oq };
+    for &kind in kinds {
         let d = client
             .pair(i, j, kind)
             .with_context(|| format!("pair query ({i},{j}) kind {kind:?}"))?;
         println!("{:<6} d_(α)({i},{j}) = {d:.6}", kind.label());
     }
     let m = args.usize_or("topk-m", 5)?;
-    let near = client.top_k(i, m, QueryKind::Oq).context("topk query")?;
+    let near = client.top_k(i, m, scan_kind).context("topk query")?;
     let pretty: Vec<String> = near.iter().map(|(j, d)| format!("{j} ({d:.4})")).collect();
-    println!("nearest to {i} by oq estimate: {}", pretty.join(", "));
+    println!("nearest to {i} by {} estimate: {}", scan_kind.label(), pretty.join(", "));
     if traces {
         client.set_trace(0);
         let (recent, slow) = client.trace_dump().context("trace dump")?;
@@ -452,7 +503,16 @@ fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
     }
     let i = args.usize_or("i", 0)? as u32;
     let j = args.usize_or("j", 1)? as u32;
-    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median] {
+    // The exchange already validated every node agrees on one
+    // representation; it decides the admissible kinds cluster-wide.
+    let sign = cluster.dtype_code() == SketchDtype::SignBits.code();
+    let kinds: &[QueryKind] = if sign {
+        &[QueryKind::Sign]
+    } else {
+        &[QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median]
+    };
+    let scan_kind = if sign { QueryKind::Sign } else { QueryKind::Oq };
+    for &kind in kinds {
         let d = cluster
             .pair(i, j, kind)
             .with_context(|| format!("pair query ({i},{j}) kind {kind:?}"))?;
@@ -463,7 +523,7 @@ fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
         // Traced scatter-gather: one stitched trace covering every
         // shard's sub-plan (failover retries included), with the
         // server-side stage spans harvested over the `TraceDump` frame.
-        let plan = vec![Query::TopK { i, m, kind: QueryKind::Oq }];
+        let plan = vec![Query::TopK { i, m, kind: scan_kind }];
         let (mut replies, trace) = cluster
             .query_plan_traced(&plan)
             .map_err(|e| anyhow::anyhow!("traced scatter-gather topk failed: {e}"))?;
@@ -473,10 +533,14 @@ fn cmd_query_cluster(args: &Args, addrs: &[String]) -> Result<()> {
             _ => bail!("unexpected reply shape for traced topk"),
         }
     } else {
-        cluster.top_k(i, m, QueryKind::Oq).context("scatter-gather topk")?
+        cluster.top_k(i, m, scan_kind).context("scatter-gather topk")?
     };
     let pretty: Vec<String> = near.iter().map(|(j, d)| format!("{j} ({d:.4})")).collect();
-    println!("nearest to {i} by oq estimate (merged across shards): {}", pretty.join(", "));
+    println!(
+        "nearest to {i} by {} estimate (merged across shards): {}",
+        scan_kind.label(),
+        pretty.join(", ")
+    );
     println!("{}", cluster.metrics().report());
     Ok(())
 }
@@ -513,7 +577,7 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}' (pair|topk|block|mixed)"))?;
     let kind = args.str_or("kind", "oq");
     let kind = QueryKind::parse(&kind)
-        .ok_or_else(|| anyhow::anyhow!("unknown kind '{kind}' (oq|gm|fp|median)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown kind '{kind}' (oq|gm|fp|median|sign)"))?;
     let rate = args.f64_or("rate", 0.0)?;
     let cfg = LoadgenConfig {
         addr,
@@ -742,6 +806,60 @@ fn bench_micro(smoke: bool, seed: u64) -> Result<Vec<PerfRow>> {
     Ok(rows)
 }
 
+/// A packed sign store with deterministic random rows (pad bits
+/// masked, as the sketcher guarantees) — popcount timings do not
+/// depend on which bits are set, only on the word count.
+fn random_sign_store(n: usize, k: usize, seed: u64) -> SketchStore {
+    let mut store = SketchStore::zeros_sign(n, k, 1.0, seed);
+    let words = store.words_per_row();
+    let pad_mask = if k % 64 == 0 { u64::MAX } else { (1u64 << (k % 64)) - 1 };
+    let mut rng = Xoshiro256pp::new(seed);
+    for i in 0..n {
+        let row = store.sign_row_mut(i);
+        for w in row.iter_mut() {
+            *w = rng.next_u64();
+        }
+        row[words - 1] &= pad_mask;
+    }
+    store
+}
+
+/// Bit-scan pass: one worker's TopK scan from a dense f32 store vs the
+/// packed sign store at equal row count and k — the headline numbers
+/// for the 1-bit representation (scan rows/s and resident bytes/row),
+/// tracked in the baseline's `bit_scan` section.
+fn bench_bit_scan(smoke: bool, seed: u64) -> Result<(Vec<PerfRow>, Json)> {
+    let alpha = 1.0;
+    let n = if smoke { 9_000 } else { 20_000 };
+    let k = 256;
+    let scan_m = 10;
+    let mut rows = Vec::new();
+    let dense = random_store(n, k, alpha, seed ^ 0xB17);
+    let est = OptimalQuantile::new(alpha, k);
+    let mut scratch = BatchScratch::new(k);
+    let dense_iters = if smoke { 6 } else { 15 };
+    rows.push(measure_op(&format!("bit_topk_dense_n{n}_k{k}"), 2, dense_iters, || {
+        dense.top_m_scan(&est, 0, 0..n, scan_m, 4, &mut scratch)
+    }));
+    let sign = random_sign_store(n, k, seed ^ 0x516);
+    // The popcount scan is far cheaper per row; more iterations keep
+    // the percentiles meaningful at the same wall budget.
+    let sign_iters = if smoke { 40 } else { 120 };
+    rows.push(measure_op(&format!("bit_topk_sign_n{n}_k{k}"), 6, sign_iters, || {
+        sign.top_m_scan_sign(0, 0..n, scan_m, 4)
+    }));
+    let rows_per_s = |r: &PerfRow| n as f64 * 1e9 / r.ns_per_op.max(1e-9);
+    let detail = Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("dense_bytes_per_row", Json::num((k * 4) as f64)),
+        ("sign_bytes_per_row", Json::num((sign.words_per_row() * 8) as f64)),
+        ("dense_scan_rows_per_s", Json::num(rows_per_s(&rows[0]))),
+        ("sign_scan_rows_per_s", Json::num(rows_per_s(&rows[1]))),
+    ]);
+    Ok((rows, detail))
+}
+
 /// Loopback pass: one server process-local over TCP, framed protocol,
 /// single closed-loop client — measures the full wire round trip.
 fn bench_net(smoke: bool, seed: u64) -> Result<Vec<PerfRow>> {
@@ -951,7 +1069,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
         bail!("unknown bench target '{what}' (use: bench perf [--smoke] [--out PATH])");
     }
     let smoke = args.flag("smoke");
-    let out = args.str_or("out", "BENCH_8.json");
+    let out = args.str_or("out", "BENCH_9.json");
     let seed = args.u64_or("seed", 0xBE7C)?;
     println!(
         "bench perf: {} run, simd={}, kernel lanes={}",
@@ -961,6 +1079,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     );
     let micro = bench_micro(smoke, seed)?;
     println!("micro pass done ({} ops)", micro.len());
+    let (bit, bit_detail) = bench_bit_scan(smoke, seed)?;
+    println!("bit-scan pass done ({} ops)", bit.len());
     let net = bench_net(smoke, seed)?;
     println!("net loopback pass done ({} ops)", net.len());
     let (lg_row, lg_detail) = bench_loadgen(smoke, seed)?;
@@ -971,7 +1091,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     let mut table = crate::bench_util::Table::new(&[
         "op", "ns/op", "ops/s", "p50 ns", "p95 ns", "p99 ns",
     ]);
-    for r in micro.iter().chain(net.iter()).chain(std::iter::once(&lg_row)) {
+    for r in micro.iter().chain(bit.iter()).chain(net.iter()).chain(std::iter::once(&lg_row)) {
         table.row(vec![
             r.op.clone(),
             format!("{:.0}", r.ns_per_op),
@@ -984,6 +1104,9 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     table.print();
     let fused_speedup = speedup(&micro, "pair_scalar_k1000", "pair_fused_k1000");
     let par_speedup = speedup(&micro, "topk_scan_seq_", "topk_scan_par_");
+    // The packed representation's scan advantage at equal n and k (the
+    // acceptance bar is ≥ 4×).
+    let sign_speedup = speedup(&bit, "bit_topk_dense_", "bit_topk_sign_");
     // Tracing cost on the full wire path: traced / untraced mean RTT
     // (`speedup` finds the first prefix match, and the untraced row is
     // pushed first). ~1.0 means per-query tracing is effectively free.
@@ -991,18 +1114,26 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     println!(
         "derived: fused vs scalar @k=1000 = {fused_speedup:.2}x, \
          parallel vs sequential scan = {par_speedup:.2}x, \
+         sign vs dense topk scan = {sign_speedup:.2}x, \
          traced vs untraced rtt = {traced_ratio:.3}x"
     );
 
     let doc = Json::obj(vec![
         ("bench", Json::str("stablesketch perf baseline")),
-        ("pr", Json::num(8.0)),
+        ("pr", Json::num(9.0)),
         ("smoke", Json::Bool(smoke)),
         ("simd_feature", Json::Bool(cfg!(feature = "simd"))),
         ("kernel_lanes", Json::num(KERNEL_LANES as f64)),
         (
             "micro_hotpath",
             Json::Arr(micro.iter().map(PerfRow::to_json).collect()),
+        ),
+        (
+            "bit_scan",
+            Json::obj(vec![
+                ("rows", Json::Arr(bit.iter().map(PerfRow::to_json).collect())),
+                ("detail", bit_detail),
+            ]),
         ),
         (
             "net_loopback",
@@ -1021,6 +1152,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             Json::obj(vec![
                 ("fused_vs_scalar_k1000", Json::num(fused_speedup)),
                 ("par_vs_seq_scan", Json::num(par_speedup)),
+                ("sign_vs_dense_topk_scan", Json::num(sign_speedup)),
                 ("net_traced_vs_untraced_rtt", Json::num(traced_ratio)),
             ]),
         ),

@@ -45,7 +45,7 @@ use crate::estimators::{
     FractionalPower, FusedDiffEstimator, GeometricMean, OptimalQuantile, QuantileEstimator,
 };
 use crate::metrics::PipelineMetrics;
-use crate::sketch::{SketchStore, StreamEvent, StreamingSketcher};
+use crate::sketch::{SketchDtype, SketchStore, StreamEvent, StreamingSketcher};
 use crate::trace::{TraceBuf, TraceRecord};
 use crate::util::config::PipelineConfig;
 use anyhow::{bail, Result};
@@ -64,6 +64,11 @@ pub enum QueryKind {
     Fp,
     /// Sample median (Indyk baseline).
     Median,
+    /// Sign collision probability over bit-packed 1-bit sketches
+    /// (XOR + popcount; 1308.1009). Valid only against a
+    /// [`SketchDtype::SignBits`] store — admission refuses it on a
+    /// dense store, and refuses the dense kinds on a sign store.
+    Sign,
 }
 
 impl QueryKind {
@@ -75,6 +80,7 @@ impl QueryKind {
             QueryKind::Gm => 1,
             QueryKind::Fp => 2,
             QueryKind::Median => 3,
+            QueryKind::Sign => 4,
         }
     }
 
@@ -86,11 +92,12 @@ impl QueryKind {
             1 => Some(QueryKind::Gm),
             2 => Some(QueryKind::Fp),
             3 => Some(QueryKind::Median),
+            4 => Some(QueryKind::Sign),
             _ => None,
         }
     }
 
-    /// Parse a kind label (`oq|gm|fp|median`), as printed by
+    /// Parse a kind label (`oq|gm|fp|median|sign`), as printed by
     /// [`Self::label`].
     pub fn parse(s: &str) -> Option<QueryKind> {
         match s {
@@ -98,6 +105,7 @@ impl QueryKind {
             "gm" => Some(QueryKind::Gm),
             "fp" => Some(QueryKind::Fp),
             "median" | "med" => Some(QueryKind::Median),
+            "sign" => Some(QueryKind::Sign),
             _ => None,
         }
     }
@@ -547,6 +555,11 @@ pub(crate) struct Shared {
     pub fp: FractionalPower,
     pub median: QuantileEstimator,
     pub metrics: PipelineMetrics,
+    /// The representation of the served store, fixed at start: ingest
+    /// never changes it (it is refused outright on a sign-bits store),
+    /// so per-query admission can check kind-vs-dtype without touching
+    /// the store mutex.
+    pub dtype: SketchDtype,
     /// Per-node trace retention: completed traced queries + the
     /// slow-query log (see [`crate::trace::TraceBuf`]).
     pub traces: TraceBuf,
@@ -573,6 +586,10 @@ impl Shared {
             QueryKind::Gm => &self.gm,
             QueryKind::Fp => &self.fp,
             QueryKind::Median => &self.median,
+            // Admission pairs Sign with sign-bits stores only, and the
+            // worker dispatches those to the popcount path before ever
+            // asking for a fused f32 estimator.
+            QueryKind::Sign => unreachable!("sign queries do not use a fused f32 estimator"),
         }
     }
 }
@@ -636,6 +653,8 @@ impl Coordinator {
         let alpha = config.alpha;
         let k = config.k;
         let n = store.n;
+        let dtype = store.dtype();
+        let store_bytes = store.memory_bytes();
         // R > 1 without --shard: one shard of 1, replicated — the
         // epoch stamps must engage so the siblings can be swept. The
         // scan range stays open-ended (0..usize::MAX) like the solo
@@ -651,7 +670,12 @@ impl Coordinator {
         // engage; an unsharded node's map is static (epoch 0, never
         // checked) until an adoption pulls it into a cluster.
         let epoch = u64::from(shard.is_some());
-        let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, n);
+        // A sign-bits node refuses ingest outright, so don't let its
+        // sketcher allocate the dense n×k shadow store a dense node's
+        // ingest path maintains (that buffer alone would be 32× the
+        // bit-packed store it sits next to).
+        let ingest_rows = if dtype == SketchDtype::DenseF32 { n } else { 0 };
+        let ingest = StreamingSketcher::new(alpha, config.dim, k, config.seed, ingest_rows);
         // 0 = auto: a small in-node thread set, capped so a node running
         // several shard workers doesn't oversubscribe the host.
         let scan_threads = if config.scan_threads > 0 {
@@ -678,6 +702,7 @@ impl Coordinator {
             fp: FractionalPower::new(alpha, k),
             median: QuantileEstimator::median(alpha, k),
             metrics: PipelineMetrics::default(),
+            dtype,
             traces: TraceBuf::new(),
             stop: AtomicBool::new(false),
             scan_threads,
@@ -686,6 +711,10 @@ impl Coordinator {
             .metrics
             .kernel_lanes_used
             .set(crate::estimators::KERNEL_LANES as i64);
+        shared
+            .metrics
+            .store_bytes
+            .set(store_bytes.min(i64::MAX as usize) as i64);
         let mut queues = Vec::with_capacity(config.shards);
         let mut workers = Vec::with_capacity(config.shards);
         for w in 0..config.shards {
@@ -911,7 +940,7 @@ impl Coordinator {
     pub fn query_plan(&self, queries: Vec<Query>) -> Result<Vec<Reply>> {
         let n = self.shared.store_n.load(Ordering::Acquire) as u32;
         for q in &queries {
-            validate_query(q, n)?;
+            validate_query(q, n, self.shared.dtype)?;
         }
         let total = queries.len();
         let (tx, rx) = std::sync::mpsc::channel::<(usize, Reply, TraceSpans)>();
@@ -984,7 +1013,7 @@ impl Coordinator {
             }
         }
         let n = self.shared.store_n.load(Ordering::Acquire) as u32;
-        if let Err(e) = validate_query(&query, n) {
+        if let Err(e) = validate_query(&query, n, self.shared.dtype) {
             return Err(SubmitError::Invalid(e.to_string()));
         }
         self.submit_validated(
@@ -1033,7 +1062,7 @@ impl Coordinator {
             }
         }
         let n = self.shared.store_n.load(Ordering::Acquire) as u32;
-        if let Err(e) = validate_query(&query, n) {
+        if let Err(e) = validate_query(&query, n, self.shared.dtype) {
             return Err(SubmitError::Invalid(e.to_string()));
         }
         self.submit_validated(query, epoch, trace, tag, ReplyTo::Channel(reply))
@@ -1069,7 +1098,19 @@ impl Coordinator {
     }
 
     /// Apply turnstile events and publish a fresh snapshot (epoch).
+    ///
+    /// Refused on a sign-bits store: the streaming sketcher accumulates
+    /// dense f32 projections, and silently publishing a dense snapshot
+    /// over a sign store would flip the node's representation under its
+    /// clients mid-connection.
     pub fn ingest(&self, events: &[StreamEvent]) -> Result<()> {
+        if self.shared.dtype != SketchDtype::DenseF32 {
+            bail!(
+                "ingest is not supported on a {} store (the streaming \
+                 sketcher is dense-only)",
+                self.shared.dtype.label()
+            );
+        }
         let mut ingest = self.ingest.lock().unwrap();
         for &ev in events {
             ingest.apply(ev);
@@ -1077,8 +1118,13 @@ impl Coordinator {
         }
         let snapshot = Arc::new(ingest.store().clone());
         let n = snapshot.n;
+        let bytes = snapshot.memory_bytes();
         *self.shared.store.lock().unwrap() = snapshot;
         self.shared.store_n.store(n, Ordering::Release);
+        self.shared
+            .metrics
+            .store_bytes
+            .set(bytes.min(i64::MAX as usize) as i64);
         Ok(())
     }
 
@@ -1092,10 +1138,27 @@ impl Coordinator {
     }
 }
 
-/// Admission checks against the current snapshot size. Kept out of the
-/// workers so a malformed query is rejected before it consumes a queue
-/// slot.
-fn validate_query(q: &Query, n: u32) -> Result<()> {
+/// Admission checks against the current snapshot size and
+/// representation. Kept out of the workers so a malformed query is
+/// rejected before it consumes a queue slot.
+fn validate_query(q: &Query, n: u32, dtype: SketchDtype) -> Result<()> {
+    match (q.kind(), dtype) {
+        (QueryKind::Sign, SketchDtype::SignBits) => {}
+        (QueryKind::Sign, SketchDtype::DenseF32) => {
+            bail!(
+                "kind sign requires a sign-bits store (this node serves {})",
+                dtype.label()
+            );
+        }
+        (kind, SketchDtype::SignBits) => {
+            bail!(
+                "kind {} requires a dense f32 store (this node serves {})",
+                kind.label(),
+                dtype.label()
+            );
+        }
+        (_, SketchDtype::DenseF32) => {}
+    }
     match q {
         Query::Pair { i, j, .. } => {
             if *i >= n || *j >= n {

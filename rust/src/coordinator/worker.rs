@@ -7,7 +7,7 @@ use super::backpressure::BoundedQueue;
 use super::batcher::{BatchPolicy, Batcher};
 use super::{Job, Query, Reply, Shared, TraceSpans};
 use crate::estimators::{BatchScratch, FusedDiffEstimator};
-use crate::sketch::SketchStore;
+use crate::sketch::{SketchDtype, SketchStore};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -112,6 +112,12 @@ fn execute(
     owned: &std::ops::Range<usize>,
     scratch: &mut BatchScratch,
 ) -> (Reply, u64) {
+    // Representation dispatch: a sign-bits snapshot routes to the
+    // XOR+popcount scans; admission guarantees the kind matches the
+    // dtype, so the dense arm below never sees a Sign query.
+    if store.dtype() == SketchDtype::SignBits {
+        return execute_sign(shared, store, query, owned);
+    }
     let est = shared.fused(query.kind());
     match query {
         Query::Pair { i, j, .. } => {
@@ -142,6 +148,37 @@ fn execute(
         Query::Block { rows, cols, .. } => {
             let mut out = Vec::new();
             store.estimate_block_par(est, rows, cols, shared.scan_threads, scratch, &mut out);
+            let cells = out.len() as u64;
+            (Reply::Block(out), cells)
+        }
+    }
+}
+
+/// The sign-bits arm of [`execute`]: identical plan shapes and reply
+/// ordering, but each distance is a normalized Hamming mismatch over
+/// bit-packed rows (no estimator object, no f32 scratch). Sharded TopK
+/// partials merge under the same `(distance, row)` order as the dense
+/// scan, so cluster merges stay bit-identical to a single node's.
+fn execute_sign(
+    shared: &Shared,
+    store: &SketchStore,
+    query: &Query,
+    owned: &std::ops::Range<usize>,
+) -> (Reply, u64) {
+    match query {
+        Query::Pair { i, j, .. } => {
+            let d = store.estimate_pair_sign(*i as usize, *j as usize);
+            (Reply::Pair(d), 1)
+        }
+        Query::TopK { i, m, .. } => {
+            let (best, scanned) =
+                store.top_m_scan_sign(*i as usize, owned.clone(), *m, shared.scan_threads);
+            shared.metrics.topk_candidates_scanned.add(scanned);
+            (Reply::TopK(best), scanned)
+        }
+        Query::Block { rows, cols, .. } => {
+            let mut out = Vec::new();
+            store.estimate_block_sign_par(rows, cols, shared.scan_threads, &mut out);
             let cells = out.len() as u64;
             (Reply::Block(out), cells)
         }

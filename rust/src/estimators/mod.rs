@@ -20,6 +20,7 @@ mod harmonic_mean;
 mod optimal_quantile;
 mod quantile;
 pub mod quickselect;
+pub mod sign;
 pub mod tables;
 pub mod tail_bounds;
 
@@ -35,6 +36,7 @@ pub use geometric_mean::GeometricMean;
 pub use harmonic_mean::HarmonicMean;
 pub use optimal_quantile::OptimalQuantile;
 pub use quantile::QuantileEstimator;
+pub use sign::{hamming_words, hamming_words_portable, SignCollision};
 
 /// A scale-parameter estimator bound to fixed `(α, k)`.
 ///

@@ -1,0 +1,139 @@
+//! Sign-sketch estimation: the **XOR+popcount collision** path.
+//!
+//! Sign Cauchy Projections (Li–Samorodnitsky–Hopcroft, arXiv:1308.1009)
+//! keep only the *sign* of each stable projection, so a row's sketch is
+//! k bits packed into `⌈k/64⌉` u64 words and "estimation" collapses to
+//! counting sign disagreements: the normalized Hamming distance
+//! `h(a, b) = popcount(a ⊕ b) / k` is an unbiased estimate of the sign
+//! mismatch probability `P(sign⟨u,r⟩ ≠ sign⟨v,r⟩)`, which is monotone in
+//! similarity — nearer rows collide more. The hot loop is a word-wise
+//! XOR feeding `count_ones` (one `popcnt` per word on x86_64), which is
+//! why a sign store scans at memcmp-like speed: 64 coordinates per
+//! 8-byte load instead of one coordinate per 4-byte load.
+//!
+//! Like PR 6's selection kernel, the dispatched variant under
+//! `--features simd` must be **bit-identical** to the portable one.
+//! Here that holds trivially — both compute the same exact integer sum
+//! — but the contract is still pinned by `tests/sign_equivalence.rs`
+//! under both builds in CI, so a future fancier reduction (AVX2
+//! `vpshufb` popcount, etc.) inherits the guard.
+
+/// Portable Hamming weight of `a ⊕ b`, word by word. `count_ones`
+/// compiles to the native popcount where the target has one.
+pub fn hamming_words_portable(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut sum = 0u64;
+    for (x, y) in a.iter().zip(b) {
+        sum += (x ^ y).count_ones() as u64;
+    }
+    sum
+}
+
+/// Lane-unrolled Hamming weight: four independent XOR+popcount chains
+/// per iteration so the popcounts pipeline instead of serializing on
+/// one accumulator. Integer sums are exact and addition is associative
+/// over u64 here (k ≤ 2³² bits keeps every partial far from overflow),
+/// so this is bit-identical to [`hamming_words_portable`] by
+/// construction — and pinned under both builds in CI.
+#[cfg(feature = "simd")]
+pub fn hamming_words_lanes(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    const LANES: usize = 4;
+    let mut acc = [0u64; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (x, y) in (&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            acc[l] += (x[l] ^ y[l]).count_ones() as u64;
+        }
+    }
+    let mut sum = acc.iter().sum::<u64>();
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        sum += (x ^ y).count_ones() as u64;
+    }
+    sum
+}
+
+/// The dispatched Hamming kernel: the lane-unrolled variant under
+/// `--features simd`, the portable loop otherwise. Both produce the
+/// same exact integer, so the dispatch never changes results.
+#[cfg(feature = "simd")]
+pub use self::hamming_words_lanes as hamming_words;
+#[cfg(not(feature = "simd"))]
+pub use self::hamming_words_portable as hamming_words;
+
+/// The sign collision-probability estimator bound to a sketch width k:
+/// maps packed sign rows to the estimated sign-mismatch probability.
+/// It deliberately does **not** implement `ScaleEstimator` — its output
+/// is a probability in `[0, 1]`, not a scale `d_(α)`, and it consumes
+/// packed words rather than f64 samples. It joins the serving pipeline
+/// through `QueryKind::Sign` and the `SignBits` scan loops on
+/// `SketchStore` instead.
+#[derive(Debug, Clone, Copy)]
+pub struct SignCollision {
+    k: usize,
+}
+
+impl SignCollision {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "sign estimator needs k > 0");
+        Self { k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Estimated sign-mismatch probability `popcount(a ⊕ b) / k` — the
+    /// distance the sign serving path reports. Exactly 0.0 for equal
+    /// rows; never NaN or −0.0, so `total_cmp` ordering agrees with the
+    /// TopK insertion order just like the dense path.
+    #[inline]
+    pub fn mismatch(&self, a: &[u64], b: &[u64]) -> f64 {
+        hamming_words(a, b) as f64 / self.k as f64
+    }
+
+    /// Estimated collision probability `1 − mismatch` (the quantity
+    /// 1308.1009 states its closed forms for).
+    #[inline]
+    pub fn collision(&self, a: &[u64], b: &[u64]) -> f64 {
+        1.0 - self.mismatch(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn hamming_counts_exact_bit_differences() {
+        assert_eq!(hamming_words_portable(&[0], &[0]), 0);
+        assert_eq!(hamming_words_portable(&[u64::MAX], &[0]), 64);
+        assert_eq!(hamming_words_portable(&[0b1011, 0b1], &[0b0001, 0b0]), 3);
+        // Random words: cross-check against a bit-by-bit count.
+        let mut rng = Xoshiro256pp::new(9);
+        for words in [1usize, 2, 3, 5, 8, 17] {
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let mut slow = 0u64;
+            for w in 0..words {
+                for bit in 0..64 {
+                    slow += u64::from((a[w] >> bit) & 1 != (b[w] >> bit) & 1);
+                }
+            }
+            assert_eq!(hamming_words_portable(&a, &b), slow, "words={words}");
+            assert_eq!(hamming_words(&a, &b), slow, "dispatched, words={words}");
+        }
+    }
+
+    #[test]
+    fn mismatch_is_normalized_and_zero_on_self() {
+        let est = SignCollision::new(128);
+        let a = vec![0xDEAD_BEEF_0123_4567u64, 0x0F0F_0F0F_0F0F_0F0F];
+        assert_eq!(est.mismatch(&a, &a), 0.0);
+        assert_eq!(est.collision(&a, &a), 1.0);
+        let b = vec![!a[0], a[1]];
+        assert_eq!(est.mismatch(&a, &b), 0.5);
+    }
+}

@@ -37,7 +37,7 @@ stablesketch — stable random projections with optimal-quantile estimation
 
 USAGE: stablesketch <subcommand> [options]
 
-  sketch      --n 1000 --dim 4096 --k 64 --alpha 1.0 [--out sketches.json]
+  sketch      --n 1000 --dim 4096 --k 64 --alpha 1.0 [--sparsity 0.1] [--out sketches.json]
   query       --i 0 --j 1 [--estimator oq|gm|fp|hm|median] (uses sketch run inline)
               [--connect 127.0.0.1:7878]  (queries a serve --listen process instead;
               a comma-separated address list queries a sharded cluster)
@@ -49,24 +49,29 @@ USAGE: stablesketch <subcommand> [options]
               per-shard costs and push the new shard map to every node
               under the next epoch instead of querying)
   serve       --n 1000 --queries 10000 --shards 2 [--pjrt]
+              [--dtype dense|sign] [--sparsity 0.1]
               [--workload pair|topk|block|mixed] [--topk-m 10] [--block-side 8]
               [--listen 127.0.0.1:7878 [--duration 0] [--stats-every 10] [--max-conns 64]
                [--io-threads 0] [--idle-timeout 60] [--shard 0/3] [--replica 0/2]
                [--metrics-dump metrics.prom]]
-              (--shard i/of = one node of an of-shard cluster; --replica r/R = one of
+              (--dtype sign = a bit-packed sign-sketch store served by the popcount
+              estimator, 32x smaller than dense f32; --sparsity s = very sparse
+              projection matrix touching an s fraction of coordinates;
+              --shard i/of = one node of an of-shard cluster; --replica r/R = one of
               R siblings owning the same rows — clients fail over between siblings;
               --io-threads 0 = one event loop per core; --idle-timeout 0 disables
               idle reaping; --metrics-dump rewrites a Prometheus text file every
               stats tick)
   loadgen     --connect 127.0.0.1:7878[,127.0.0.1:7879,...] [--threads 4] [--duration 10]
-              [--rate 0] [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median]
+              [--rate 0] [--workload pair|topk|block|mixed] [--kind oq|gm|fp|median|sign]
               [--topk-m 10] [--block-side 8] [--watch]
               [--conns 1024 [--drivers 0] [--rounds 4] [--pipeline 4]]
               (--conns N switches to the connection-scale soak: hold N concurrent
               pipelined connections and report per-round RTT quantiles)
-  bench       perf [--smoke] [--out BENCH_8.json]
-              (fused-kernel micro + net loopback + 2-shard loadgen + conn-scale
-              passes; writes the tracked perf baseline — see bench/run_perf.sh)
+  bench       perf [--smoke] [--out BENCH_9.json]
+              (fused-kernel micro + bit-scan + net loopback + 2-shard loadgen +
+              conn-scale passes; writes the tracked perf baseline — see
+              bench/run_perf.sh)
   experiment  fig1|fig2|fig3|fig4|fig5|fig6|fig7 [--fast]
   gen-tables  [--reps 200000] [--out rust/src/estimators/tables_data.rs]
   info        --alpha 1.5 [--k 100] [--eps 0.5] [--delta 0.05]

@@ -171,8 +171,9 @@ impl LatencyHistogram {
 }
 
 /// Labels for the per-estimator-kind histograms, in the order of
-/// `coordinator::QueryKind::index()`.
-pub const KIND_LABELS: [&str; 4] = ["oq", "gm", "fp", "median"];
+/// `coordinator::QueryKind::index()`. "sign" is the popcount
+/// collision estimator over bit-packed stores (protocol v7).
+pub const KIND_LABELS: [&str; 5] = ["oq", "gm", "fp", "median", "sign"];
 
 /// Coordinator-wide metrics bundle.
 #[derive(Debug, Default)]
@@ -191,7 +192,7 @@ pub struct PipelineMetrics {
     /// performed, so TopK/Block scans land in the same units as single
     /// pairs and the fused kernel's win is directly observable.
     /// Excludes queueing; count = queries executed, not estimates.
-    pub estimate_latency: [LatencyHistogram; 4],
+    pub estimate_latency: [LatencyHistogram; 5],
     /// Candidates scanned by `TopK` plans (one fused estimate each);
     /// divides into the TopK estimate latency for per-candidate cost.
     pub topk_candidates_scanned: Counter,
@@ -200,7 +201,7 @@ pub struct PipelineMetrics {
     /// this is where the multi-threaded node-local scan win shows up
     /// (a 4-thread scan quarters scan latency while per-estimate cost
     /// is unchanged).
-    pub scan_latency: [LatencyHistogram; 4],
+    pub scan_latency: [LatencyHistogram; 5],
     /// Candidate rows per second achieved by the most recent TopK scan
     /// (a sampled level, not a windowed rate — cheap enough for the
     /// per-query hot path, and loadgen snapshots it live).
@@ -210,6 +211,12 @@ pub struct PipelineMetrics {
     /// simd` on x86_64 (SSE2), 8 on the portable chunked path. Lets a
     /// live cluster report which kernel build it is serving with.
     pub kernel_lanes_used: Gauge,
+    /// True resident footprint of the serving store in bytes
+    /// (`SketchStore::memory_bytes`: struct + backing capacity in the
+    /// active dtype's element width) — set at coordinator start and
+    /// after every ingest publish. The 32× dense-vs-sign gap is read
+    /// straight off this gauge in `Stats`/Prometheus/`--watch`.
+    pub store_bytes: Gauge,
 
     // ---- network serving layer (server::listener) ------------------
     /// Connections admitted by the accept loop.
@@ -370,6 +377,10 @@ impl PipelineMetrics {
                 "reactor_readiness_events",
                 self.reactor_readiness_events.get(),
             ),
+            ("scan_sign_p50_ns", self.scan_latency[4].quantile_ns(0.50)),
+            ("scan_sign_p95_ns", self.scan_latency[4].quantile_ns(0.95)),
+            ("scan_sign_p99_ns", self.scan_latency[4].quantile_ns(0.99)),
+            ("store_bytes", self.store_bytes.get().max(0) as u64),
         ]
     }
 
@@ -422,13 +433,14 @@ impl PipelineMetrics {
             "stablesketch_reactor_readiness_events_total",
             self.reactor_readiness_events.get(),
         );
-        let gauges: [(&str, &Gauge); 6] = [
+        let gauges: [(&str, &Gauge); 7] = [
             ("stablesketch_connections_active", &self.connections_active),
             ("stablesketch_net_queries_inflight", &self.net_queries_inflight),
             ("stablesketch_scan_rows_per_s", &self.scan_rows_per_s),
             ("stablesketch_kernel_lanes_used", &self.kernel_lanes_used),
             ("stablesketch_reactor_loops", &self.reactor_loops),
             ("stablesketch_reactor_registered_fds", &self.reactor_registered_fds),
+            ("stablesketch_store_bytes", &self.store_bytes),
         ];
         for (name, g) in gauges {
             prom_gauge(&mut out, name, g.get());
@@ -878,12 +890,18 @@ mod tests {
         assert!(r.contains("scan[oq]"), "{r}");
         assert!(!r.contains("scan[gm]"), "{r}");
         assert!(r.contains("scan: 1500000 rows/s (8 lanes)"), "{r}");
+        m.scan_latency[4].record_ns(40_000);
+        m.store_bytes.set(1 << 20);
         let entries = m.stat_entries();
         let get = |label: &str| entries.iter().find(|(l, _)| *l == label).unwrap().1;
         assert_eq!(get("scan_rows_per_s"), 1_500_000);
         assert_eq!(get("kernel_lanes_used"), 8);
         assert!(get("scan_oq_p50_ns") >= 2_000_000);
         assert_eq!(get("scan_gm_p50_ns"), 0);
+        assert!(get("scan_sign_p50_ns") >= 40_000);
+        assert_eq!(get("store_bytes"), 1 << 20);
+        let r = m.report();
+        assert!(r.contains("scan[sign]"), "{r}");
     }
 
     #[test]
@@ -992,6 +1010,10 @@ mod tests {
             "reactor_registered_fds",
             "reactor_wakeups",
             "reactor_readiness_events",
+            "scan_sign_p50_ns",
+            "scan_sign_p95_ns",
+            "scan_sign_p99_ns",
+            "store_bytes",
         ];
         let m = PipelineMetrics::default();
         let keys: Vec<&str> = m.stat_entries().iter().map(|(k, _)| *k).collect();
@@ -1011,13 +1033,17 @@ mod tests {
         m.scan_latency[3].record_ns(2_000_000);
         m.scan_rows_per_s.set(1_000_000);
         m.connections_active.inc();
+        m.store_bytes.set(4_096);
+        m.scan_latency[4].record_ns(8_000);
         let text = m.metrics_text();
         validate_metrics_text(&text).expect("active exposition must validate");
         assert!(text.contains("stablesketch_queries_submitted_total 1"), "{text}");
         assert!(text.contains("stablesketch_scan_rows_per_s 1000000"), "{text}");
+        assert!(text.contains("stablesketch_store_bytes 4096"), "{text}");
         assert!(text.contains("stablesketch_query_latency_ns_count 2"), "{text}");
         assert!(text.contains("kind=\"fp\""), "{text}");
         assert!(text.contains("kind=\"median\",le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("kind=\"sign\",le=\"+Inf\"} 1"), "{text}");
     }
 
     #[test]

@@ -211,6 +211,9 @@ struct ClusterView {
     replicas: usize,
     rows: usize,
     epoch: u64,
+    /// The sketch representation every node agreed on (v7 wire code;
+    /// 0 = dense f32 — what every pre-v7 node decodes as).
+    dtype: u8,
 }
 
 impl ClusterView {
@@ -248,6 +251,11 @@ pub struct ClusterClient {
     rows: usize,
     /// The shard-map epoch every node agreed on at the last exchange.
     epoch: u64,
+    /// The sketch representation every node agreed on at the last
+    /// exchange (v7 wire code; a grid mixing representations is
+    /// refused at exchange time — answers from different dtypes are
+    /// not comparable, so a mixed grid can never serve a merged plan).
+    dtype: u8,
     /// Per-shard round-robin cursor: which replica the next sub-plan
     /// for that shard is offered to first.
     cursor: Vec<usize>,
@@ -312,6 +320,7 @@ impl ClusterClient {
             replicas: view.replicas,
             rows: view.rows,
             epoch: view.epoch,
+            dtype: view.dtype,
             cursor,
             metrics,
             trace_id: 0,
@@ -323,6 +332,14 @@ impl ClusterClient {
     /// pre-epoch map).
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// The sketch representation the whole cluster serves, as the v7
+    /// wire code (0 = dense f32, 1 = bit-packed sign). The exchange
+    /// refuses a grid whose nodes disagree, so one code describes
+    /// every node.
+    pub fn dtype_code(&self) -> u8 {
+        self.dtype
     }
 
     /// Swap the dial list used by the next refresh — how a caller
@@ -357,6 +374,7 @@ impl ClusterClient {
         self.replicas = view.replicas;
         self.rows = view.rows;
         self.epoch = view.epoch;
+        self.dtype = view.dtype;
         Ok(())
     }
 
@@ -438,6 +456,7 @@ impl ClusterClient {
                     epoch,
                     replica: replica as u32,
                     replicas: self.replicas as u32,
+                    dtype: self.dtype,
                 };
                 let node = &mut self.nodes[shard][replica];
                 if let Err(source) = node.client.adopt_shard(info) {
@@ -1079,6 +1098,7 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
     let total = addrs.len();
     let rows = dialed[0].2.rows;
     let replicas = (dialed[0].2.replicas.max(1)) as usize;
+    let dtype = dialed[0].2.dtype;
     if total % replicas != 0 {
         return Err(ClusterError::ShardMap {
             addr: addrs[0].clone(),
@@ -1094,11 +1114,12 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
         if info.count as usize != count
             || info.rows != rows
             || (info.replicas.max(1)) as usize != replicas
+            || info.dtype != dtype
         {
             return Err(ClusterError::ShardMap {
                 addr: addr.clone(),
                 detail: "refusing to heal: nodes disagree on shard count, replication factor, \
-                         or row total"
+                         row total, or sketch dtype"
                     .into(),
             });
         }
@@ -1127,6 +1148,7 @@ fn heal(addrs: &[String]) -> Result<(), ClusterError> {
             epoch,
             replica: info.replica,
             replicas: replicas as u32,
+            dtype,
         };
         match client.adopt_shard(adopt) {
             Ok(_) => {}
@@ -1165,6 +1187,7 @@ fn exchange(addrs: &[String], dial_attempts: usize) -> Result<ClusterView, Clust
     let rows = dialed[0].2.rows;
     let epoch = dialed[0].2.epoch;
     let replicas = dialed[0].2.replicas.max(1);
+    let dtype = dialed[0].2.dtype;
     if (count as usize) * (replicas as usize) != addrs.len() {
         return Err(ClusterError::ShardMap {
             addr: dialed[0].0.clone(),
@@ -1191,6 +1214,22 @@ fn exchange(addrs: &[String], dial_attempts: usize) -> Result<ClusterView, Clust
                     info.replicas.max(1),
                     info.rows,
                     info.epoch
+                ),
+            });
+        }
+        // Representation agreement is its own refusal (not folded into
+        // the geometry line): a mixed grid is an operator error the
+        // convergence loop can never wait out, and distances from
+        // different representations must never be merged into one
+        // reply.
+        if info.dtype != dtype {
+            return Err(ClusterError::ShardMap {
+                addr,
+                detail: format!(
+                    "node serves sketch dtype {} but its peers serve dtype {dtype} \
+                     (0 = dense-f32, 1 = sign-bits); a cluster cannot mix sketch \
+                     representations",
+                    info.dtype
                 ),
             });
         }
@@ -1280,6 +1319,7 @@ fn exchange(addrs: &[String], dial_attempts: usize) -> Result<ClusterView, Clust
         replicas: replicas as usize,
         rows: rows as usize,
         epoch,
+        dtype,
     })
 }
 

@@ -27,7 +27,9 @@
 //! the bytes reach the socket, preserving record-trace-before-flush.
 
 use super::listener::{shard_map_info, stats_snapshot};
-use super::protocol::{query_id_of, ErrorCode, Frame, FrameAssembler, REPLICA_SINCE_VERSION};
+use super::protocol::{
+    query_id_of, ErrorCode, Frame, FrameAssembler, DTYPE_SINCE_VERSION, REPLICA_SINCE_VERSION,
+};
 use crate::coordinator::{
     AdoptError, CompletionQueue, Coordinator, ReplicaSpec, Reply, SubmitError, TraceSpans,
 };
@@ -294,6 +296,26 @@ impl Conn {
                         message: format!(
                             "pre-v{REPLICA_SINCE_VERSION} adoption carries no replica \
                              identity and cannot reconfigure a replicated node"
+                        ),
+                    };
+                    self.push_frame(&reply, None, coord);
+                    return;
+                }
+                // An adoption re-slots ownership; it can never change
+                // what representation this node serves. A v7 admin
+                // *stating* a different dtype is proposing exactly
+                // that, so it is refused before the epoch machinery
+                // runs. (A pre-v7 adoption's decoded 0 is absence, not
+                // a statement — the plain v4/v5/v6 behavior stays.)
+                let node_dtype = coord.store().dtype().code();
+                if version >= DTYPE_SINCE_VERSION && info.dtype != node_dtype {
+                    let reply = Frame::Error {
+                        id: 0,
+                        code: ErrorCode::InvalidQuery,
+                        message: format!(
+                            "adoption states sketch dtype {} but this node serves dtype \
+                             {node_dtype}; an adoption cannot change a node's representation",
+                            info.dtype
                         ),
                     };
                     self.push_frame(&reply, None, coord);

@@ -437,7 +437,8 @@ impl EventLoop {
 /// 0 (a static map), so single-node and clustered deployments answer
 /// uniformly.
 pub(crate) fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
-    let n = coord.store().n;
+    let store = coord.store();
+    let n = store.n;
     // One consistent snapshot: a frame must not mix the epoch of one
     // adoption with the range of another.
     let (epoch, spec, replica, owned) = coord.membership();
@@ -454,6 +455,7 @@ pub(crate) fn shard_map_info(coord: &Coordinator) -> ShardMapInfo {
         epoch,
         replica: replica.index as u32,
         replicas: replica.of as u32,
+        dtype: store.dtype().code(),
     }
 }
 

@@ -774,8 +774,15 @@ pub fn watch_grid(addrs: &[String], deadline: Option<Instant>, interval: Duratio
                 if let Some(client) = clients[i].as_mut() {
                     idents[i] = match client.shard_map() {
                         Ok(m) => format!(
-                            "shard {}/{} r{}/{} epoch {}",
-                            m.index, m.count, m.replica, m.replicas, m.epoch
+                            "shard {}/{} r{}/{} epoch {} {}",
+                            m.index,
+                            m.count,
+                            m.replica,
+                            m.replicas,
+                            m.epoch,
+                            crate::sketch::SketchDtype::from_code(m.dtype)
+                                .map(|d| d.label())
+                                .unwrap_or("dtype?"),
                         ),
                         Err(_) => "shard ?".to_string(),
                     };
@@ -804,12 +811,14 @@ pub fn watch_grid(addrs: &[String], deadline: Option<Instant>, interval: Duratio
             };
             last[i] = Some((now, done));
             lines.push(format!(
-                "  {addr} [{}]: {qps:.0} qps, {} inflight, p99<{:.1}us, {} conns, {} overloaded",
+                "  {addr} [{}]: {qps:.0} qps, {} inflight, p99<{:.1}us, {} conns, \
+                 {} overloaded, store {:.1} KiB",
                 idents[i],
                 get("net_queries_inflight"),
                 get("query_latency_p99_ns") as f64 / 1e3,
                 get("connections_active"),
                 get("net_overload_replies"),
+                get("store_bytes") as f64 / 1024.0,
             ));
         }
         tick += 1;

@@ -45,12 +45,20 @@
 //! `TraceDumpRequest`/`TraceDump` exchange pulls a node's completed
 //! trace ring and slow-query log, and the
 //! `MetricsTextRequest`/`MetricsText` exchange serves the node's
-//! metrics in Prometheus text format. Encoders
+//! metrics in Prometheus text format; **v7** makes the sketch
+//! representation part of the cluster contract — `ShardMapInfo`
+//! carries a trailing **dtype** byte (0 = dense f32, 1 = bit-packed
+//! sign; pre-v7 bodies stay exact prefixes and decode as dense f32)
+//! so the cluster client can refuse a mixed-representation grid, and
+//! the `sign` estimator kind becomes encodable in `Query` frames
+//! (kind code 4, refused under any pre-v7 stamp — no older speaker
+//! ever defined it). Encoders
 //! always stamp the current version; decoders accept
 //! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`], with the v3-only
-//! tags (and the v4-only tag/code, and the v6-only tags) refusing
-//! older version bytes and v5/v6-only trailing content under an older
-//! stamp refused as trailing bytes that version never defined.
+//! tags (and the v4-only tag/code, the v6-only tags, and the v7-only
+//! kind code) refusing older version bytes and v5/v6/v7-only trailing
+//! content under an older stamp refused as trailing bytes that
+//! version never defined.
 
 use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
 use crate::trace::TraceRecord;
@@ -58,11 +66,11 @@ use std::io::{Read, Write};
 use thiserror::Error;
 
 /// Protocol version spoken (and stamped on every frame) by this build.
-pub const PROTOCOL_VERSION: u8 = 6;
+pub const PROTOCOL_VERSION: u8 = 7;
 
-/// Oldest version this build still decodes (v1..v6 share every frame
-/// body layout as prefixes; v3/v4/v5/v6 only *add* tags and trailing
-/// fields).
+/// Oldest version this build still decodes (v1..v7 share every frame
+/// body layout as prefixes; v3/v4/v5/v6/v7 only *add* tags, kind
+/// codes, and trailing fields).
 pub const MIN_PROTOCOL_VERSION: u8 = 1;
 
 /// First version carrying the shard-map exchange frames.
@@ -88,6 +96,14 @@ pub const REPLICA_SINCE_VERSION: u8 = 5;
 /// `TraceDumpRequest`/`TraceDump` exchange, and the
 /// `MetricsTextRequest`/`MetricsText` exchange.
 const TRACE_SINCE_VERSION: u8 = 6;
+
+/// First version carrying the sketch representation: the trailing
+/// `dtype` byte on `ShardMapInfo` (0 = dense f32, 1 = bit-packed sign
+/// sketches; pre-v7 bodies stay exact prefixes and decode as dense
+/// f32) and the `sign` estimator kind code in `Query` frames. Public
+/// because the cluster client keys its mixed-representation refusal
+/// on whether a peer *stated* its dtype or predates the field.
+pub const DTYPE_SINCE_VERSION: u8 = 7;
 
 /// Hard cap on one frame's payload. The largest legitimate frame is a
 /// `Block` reply of [`MAX_BLOCK_CELLS`] f64 cells (8 MiB) or a `TopK`
@@ -280,7 +296,11 @@ pub enum Frame {
 /// `epoch` (v4; 0 = a static map that never changes — decoded from
 /// v3 frames, and what an unclustered node advertises), as replica
 /// `replica` of `replicas` siblings all serving that same range (v5;
-/// pre-v5 frames decode as replica 0 of 1 — unreplicated).
+/// pre-v5 frames decode as replica 0 of 1 — unreplicated), serving
+/// sketches of representation `dtype` (v7;
+/// [`crate::sketch::SketchDtype`] codes — 0 = dense f32, 1 =
+/// bit-packed sign; pre-v7 frames decode as 0, the only
+/// representation those speakers ever served).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardMapInfo {
     pub index: u32,
@@ -291,6 +311,7 @@ pub struct ShardMapInfo {
     pub epoch: u64,
     pub replica: u32,
     pub replicas: u32,
+    pub dtype: u8,
 }
 
 const TAG_PING: u8 = 0x01;
@@ -510,7 +531,7 @@ impl Frame {
             TAG_PONG => Frame::Pong { token: r.u64()? },
             TAG_QUERY => {
                 let id = r.u64()?;
-                let query = decode_query(&mut r)?;
+                let query = decode_query(&mut r, version)?;
                 // v1..v3 queries carry no epoch stamp; 0 = unchecked.
                 let epoch = if version >= EPOCH_SINCE_VERSION {
                     r.u64()?
@@ -666,6 +687,8 @@ fn encode_shard_info(out: &mut Vec<u8>, info: &ShardMapInfo) {
     // Trailing again: v4 bodies are an exact prefix of v5 ones.
     put_u32(out, info.replica);
     put_u32(out, info.replicas);
+    // Trailing again: v5/v6 bodies are an exact prefix of v7 ones.
+    out.push(info.dtype);
 }
 
 fn decode_shard_info(r: &mut Cursor<'_>, version: u8) -> Result<ShardMapInfo, ProtoError> {
@@ -692,16 +715,28 @@ fn decode_shard_info(r: &mut Cursor<'_>, version: u8) -> Result<ShardMapInfo, Pr
         } else {
             1
         },
+        // Pre-v7 speakers only ever served dense f32 stores.
+        dtype: if version >= DTYPE_SINCE_VERSION {
+            r.u8()?
+        } else {
+            0
+        },
     })
 }
 
-fn decode_kind(b: u8) -> Result<QueryKind, ProtoError> {
-    QueryKind::from_index(b as usize).ok_or(ProtoError::BadKind(b))
+fn decode_kind(b: u8, version: u8) -> Result<QueryKind, ProtoError> {
+    let kind = QueryKind::from_index(b as usize).ok_or(ProtoError::BadKind(b))?;
+    // The sign kind code under a stamp that never defined it is
+    // self-contradictory, same rule as the version-gated tags.
+    if kind == QueryKind::Sign && version < DTYPE_SINCE_VERSION {
+        return Err(ProtoError::BadVersion(version));
+    }
+    Ok(kind)
 }
 
-fn decode_query(r: &mut Cursor<'_>) -> Result<Query, ProtoError> {
+fn decode_query(r: &mut Cursor<'_>, version: u8) -> Result<Query, ProtoError> {
     let shape = r.u8()?;
-    let kind = decode_kind(r.u8()?)?;
+    let kind = decode_kind(r.u8()?, version)?;
     match shape {
         SHAPE_PAIR => Ok(Query::Pair {
             i: r.u32()?,
@@ -1073,6 +1108,7 @@ mod tests {
             epoch: 9,
             replica: 1,
             replicas: 2,
+            dtype: 1,
         };
         for f in [Frame::ShardMapRequest, Frame::ShardMap(info)] {
             assert_eq!(round_trip(&f), f);
@@ -1098,10 +1134,11 @@ mod tests {
 
     #[test]
     fn v3_and_v4_shard_map_bodies_decode_as_prefixes() {
-        // A v3 speaker's ShardMap body is the v5 body minus the
-        // trailing epoch (8 bytes) and replica identity (8 bytes); a
-        // v4 speaker's is minus the replica identity only. Both must
-        // still decode, with the defaults for the missing fields.
+        // A v3 speaker's ShardMap body is the v7 body minus the
+        // trailing epoch (8 bytes), replica identity (8 bytes), and
+        // dtype (1 byte); a v4 speaker's is minus the replica identity
+        // and dtype; a v5/v6 speaker's is minus the dtype only. All
+        // must still decode, with the defaults for the missing fields.
         let info = ShardMapInfo {
             index: 2,
             count: 3,
@@ -1111,42 +1148,53 @@ mod tests {
             epoch: 7,
             replica: 1,
             replicas: 2,
+            dtype: 1,
         };
         let wire = Frame::ShardMap(info).encode();
-        let mut payload = wire[4..wire.len() - 16].to_vec(); // drop epoch + replica
+        let mut payload = wire[4..wire.len() - 17].to_vec(); // drop epoch + replica + dtype
         payload[0] = 3;
         match Frame::decode(&payload).expect("v3 body decodes") {
             Frame::ShardMap(got) => {
                 assert_eq!(got.epoch, 0, "v3 maps are static");
                 assert_eq!((got.replica, got.replicas), (0, 1), "v3 nodes are unreplicated");
+                assert_eq!(got.dtype, 0, "v3 nodes served dense f32 only");
                 let fields = (got.index, got.count, got.start, got.end, got.rows);
                 assert_eq!(fields, (2, 3, 67, 100, 100));
             }
             other => panic!("{other:?}"),
         }
-        let mut payload = wire[4..wire.len() - 8].to_vec(); // drop replica only
+        let mut payload = wire[4..wire.len() - 9].to_vec(); // drop replica + dtype
         payload[0] = 4;
         match Frame::decode(&payload).expect("v4 body decodes") {
             Frame::ShardMap(got) => {
                 assert_eq!(got.epoch, 7, "v4 carries the epoch");
                 assert_eq!((got.replica, got.replicas), (0, 1), "v4 nodes are unreplicated");
+                assert_eq!(got.dtype, 0, "v4 nodes served dense f32 only");
             }
             other => panic!("{other:?}"),
         }
-        // Conversely a full v5 body under a v4 stamp has 8 trailing
-        // bytes v4 never defined, and 16 under a v3 stamp.
-        let mut payload = wire[4..].to_vec();
-        payload[0] = 4;
-        assert!(matches!(
-            Frame::decode(&payload),
-            Err(ProtoError::Trailing(8))
-        ));
-        let mut payload = wire[4..].to_vec();
-        payload[0] = 3;
-        assert!(matches!(
-            Frame::decode(&payload),
-            Err(ProtoError::Trailing(16))
-        ));
+        for stamp in [5u8, 6] {
+            let mut payload = wire[4..wire.len() - 1].to_vec(); // drop dtype only
+            payload[0] = stamp;
+            match Frame::decode(&payload).expect("v5/v6 body decodes") {
+                Frame::ShardMap(got) => {
+                    assert_eq!((got.replica, got.replicas), (1, 2), "v5 carries replicas");
+                    assert_eq!(got.dtype, 0, "v{stamp} nodes served dense f32 only");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // Conversely a full v7 body under a v5/v6 stamp has 1 trailing
+        // byte those versions never defined, 9 under a v4 stamp, and
+        // 17 under a v3 stamp.
+        for (stamp, extra) in [(3u8, 17usize), (4, 9), (5, 1), (6, 1)] {
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(
+                matches!(Frame::decode(&payload), Err(ProtoError::Trailing(n)) if n == extra),
+                "v7 body under v{stamp} stamp must leave {extra} trailing bytes"
+            );
+        }
     }
 
     #[test]
@@ -1160,6 +1208,7 @@ mod tests {
             epoch: 3,
             replica: 0,
             replicas: 1,
+            dtype: 0,
         };
         let f = Frame::AdoptShard(info);
         assert_eq!(round_trip(&f), f);
@@ -1173,13 +1222,14 @@ mod tests {
             );
         }
         // An AdoptShard body restamped v4 (a legal tag there) still
-        // trips over the trailing replica identity v4 never defined.
+        // trips over the trailing replica identity + dtype v4 never
+        // defined.
         let wire = f.encode();
         let mut payload = wire[4..].to_vec();
         payload[0] = 4;
         assert!(matches!(
             Frame::decode(&payload),
-            Err(ProtoError::Trailing(8))
+            Err(ProtoError::Trailing(9))
         ));
         // WrongEpoch round-trips under v4 but is refused under v1..v3.
         let err = Frame::Error {
@@ -1273,6 +1323,38 @@ mod tests {
             Frame::decode(&payload),
             Err(ProtoError::Trailing(16))
         ));
+    }
+
+    #[test]
+    fn sign_kind_round_trips_under_v7_and_is_refused_under_older_stamps() {
+        let f = Frame::Query {
+            id: 21,
+            query: Query::TopK {
+                i: 5,
+                m: 10,
+                kind: QueryKind::Sign,
+            },
+            epoch: 0,
+            trace_id: 0,
+        };
+        assert_eq!(round_trip(&f), f);
+        // The sign kind code (4) under any pre-v7 stamp is
+        // self-contradictory: those versions never defined it. Trim
+        // the trailing stamps each older version doesn't carry so the
+        // kind check is what trips, not trailing bytes.
+        let wire = f.encode();
+        for (stamp, drop) in [(3u8, 16usize), (4, 8), (5, 8), (6, 0)] {
+            let mut payload = wire[4..wire.len() - drop].to_vec();
+            payload[0] = stamp;
+            assert!(
+                matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+                "sign kind under v{stamp} stamp must be refused"
+            );
+        }
+        // An out-of-range kind code is still BadKind, not BadVersion.
+        let mut payload = wire[4..].to_vec();
+        payload[11] = 9; // kind byte: id(8) + shape(1) after version+tag
+        assert!(matches!(Frame::decode(&payload), Err(ProtoError::BadKind(9))));
     }
 
     #[test]

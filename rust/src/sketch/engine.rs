@@ -1,7 +1,9 @@
 //! SketchEngine: corpus → sketches → distance estimates.
 
 use super::matrix::StableMatrix;
-use crate::estimators::{BatchScratch, FusedDiffEstimator, OptimalQuantile, ScaleEstimator};
+use crate::estimators::{
+    BatchScratch, FusedDiffEstimator, OptimalQuantile, ScaleEstimator, SignCollision,
+};
 use crate::runtime::Runtime;
 use anyhow::{bail, Result};
 
@@ -14,40 +16,170 @@ pub enum ProjectionPath {
     Pjrt,
 }
 
-/// The sketch store: `n × k` f32, row-major — the only thing kept in
-/// memory at serving time (the corpus itself can be discarded, §1.3).
+/// The physical representation one sketch store keeps its rows in.
+///
+/// * [`DenseF32`](Self::DenseF32) — the original layout (PRs 1–8,
+///   bit-for-bit unchanged): `k` f32 coordinates per row, estimated by
+///   the fused quantile/gm/fp kernels.
+/// * [`SignBits`](Self::SignBits) — Sign Cauchy Projections
+///   (1308.1009): only the sign of each projection survives, bit-packed
+///   into `⌈k/64⌉` u64 words per row and estimated by XOR+popcount
+///   collision counting (`estimators::sign`). 32× smaller than dense at
+///   equal k, and the TopK scan becomes a memcmp-speed popcount loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchDtype {
+    DenseF32,
+    SignBits,
+}
+
+impl SketchDtype {
+    /// Stable one-byte code — the value carried by the SSK3 container
+    /// and the protocol-v7 `ShardMapInfo.dtype` field. 0 is dense-f32
+    /// so pre-v7 peers (which never say) default to the only
+    /// representation they can mean.
+    pub fn code(self) -> u8 {
+        match self {
+            SketchDtype::DenseF32 => 0,
+            SketchDtype::SignBits => 1,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(SketchDtype::DenseF32),
+            1 => Some(SketchDtype::SignBits),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SketchDtype::DenseF32 => "dense-f32",
+            SketchDtype::SignBits => "sign-bits",
+        }
+    }
+
+    /// Resident bytes one row of width `k` occupies in this dtype.
+    pub fn bytes_per_row(self, k: usize) -> usize {
+        match self {
+            SketchDtype::DenseF32 => k * std::mem::size_of::<f32>(),
+            SketchDtype::SignBits => k.div_ceil(64) * std::mem::size_of::<u64>(),
+        }
+    }
+}
+
+/// The backing words of one representation. Private: all access goes
+/// through the typed row views below, so dense code can never silently
+/// reinterpret packed sign words (and vice versa).
+#[derive(Debug, Clone)]
+enum SketchData {
+    DenseF32(Vec<f32>),
+    SignBits(Vec<u64>),
+}
+
+/// The sketch store: `n` rows of width `k` in one of the
+/// [`SketchDtype`] representations — the only thing kept in memory at
+/// serving time (the corpus itself can be discarded, §1.3).
+///
+/// Dense stores expose [`row`](Self::row)/[`row_mut`](Self::row_mut)
+/// (f32 slices, exactly the pre-refactor layout); sign stores expose
+/// [`sign_row`](Self::sign_row)/[`sign_row_mut`](Self::sign_row_mut)
+/// (packed u64 words). Accessing a store through the wrong dtype's view
+/// is a bug upstream (admission validates kind ↔ dtype) and panics with
+/// a typed message rather than mis-reading bits.
 #[derive(Debug, Clone)]
 pub struct SketchStore {
     pub n: usize,
     pub k: usize,
     pub alpha: f64,
     pub seed: u64,
-    data: Vec<f32>,
+    data: SketchData,
 }
 
 impl SketchStore {
+    /// A zeroed dense-f32 store — the default representation, unchanged
+    /// from every prior PR.
     pub fn zeros(n: usize, k: usize, alpha: f64, seed: u64) -> Self {
         Self {
             n,
             k,
             alpha,
             seed,
-            data: vec![0.0; n * k],
+            data: SketchData::DenseF32(vec![0.0; n * k]),
         }
+    }
+
+    /// A zeroed bit-packed sign store: `n × ⌈k/64⌉` u64 words. Pad bits
+    /// past k in the last word of each row stay zero forever, so XORs
+    /// never pick up phantom differences.
+    pub fn zeros_sign(n: usize, k: usize, alpha: f64, seed: u64) -> Self {
+        Self {
+            n,
+            k,
+            alpha,
+            seed,
+            data: SketchData::SignBits(vec![0u64; n * k.div_ceil(64)]),
+        }
+    }
+
+    pub fn dtype(&self) -> SketchDtype {
+        match self.data {
+            SketchData::DenseF32(_) => SketchDtype::DenseF32,
+            SketchData::SignBits(_) => SketchDtype::SignBits,
+        }
+    }
+
+    /// Packed words per row of a sign store (`⌈k/64⌉`; also meaningful
+    /// as the would-be packed width of a dense store).
+    pub fn words_per_row(&self) -> usize {
+        self.k.div_ceil(64)
     }
 
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.k..(i + 1) * self.k]
+        match &self.data {
+            SketchData::DenseF32(d) => &d[i * self.k..(i + 1) * self.k],
+            SketchData::SignBits(_) => {
+                panic!("dense f32 row access on a sign-bits store (dtype mismatch)")
+            }
+        }
     }
 
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.k..(i + 1) * self.k]
+        match &mut self.data {
+            SketchData::DenseF32(d) => &mut d[i * self.k..(i + 1) * self.k],
+            SketchData::SignBits(_) => {
+                panic!("dense f32 row access on a sign-bits store (dtype mismatch)")
+            }
+        }
+    }
+
+    /// Packed sign words of row i (sign store only).
+    #[inline]
+    pub fn sign_row(&self, i: usize) -> &[u64] {
+        let w = self.words_per_row();
+        match &self.data {
+            SketchData::SignBits(d) => &d[i * w..(i + 1) * w],
+            SketchData::DenseF32(_) => {
+                panic!("sign-bits row access on a dense f32 store (dtype mismatch)")
+            }
+        }
+    }
+
+    #[inline]
+    pub fn sign_row_mut(&mut self, i: usize) -> &mut [u64] {
+        let w = self.words_per_row();
+        match &mut self.data {
+            SketchData::SignBits(d) => &mut d[i * w..(i + 1) * w],
+            SketchData::DenseF32(_) => {
+                panic!("sign-bits row access on a dense f32 store (dtype mismatch)")
+            }
+        }
     }
 
     /// Fill `buf` (len k) with the f64 sketch differences of rows (i, j)
-    /// — the estimator input.
+    /// — the estimator input (dense store only).
     #[inline]
     pub fn diff_into(&self, i: usize, j: usize, buf: &mut [f64]) {
         debug_assert_eq!(buf.len(), self.k);
@@ -57,8 +189,16 @@ impl SketchStore {
         }
     }
 
+    /// True resident footprint of the store: the struct itself plus the
+    /// backing buffer's *capacity* (not just its length — a buffer that
+    /// over-allocated still holds the pages), in the active dtype's
+    /// element width. Surfaced live as the `store_bytes` gauge.
     pub fn memory_bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+        std::mem::size_of::<Self>()
+            + match &self.data {
+                SketchData::DenseF32(d) => d.capacity() * std::mem::size_of::<f32>(),
+                SketchData::SignBits(d) => d.capacity() * std::mem::size_of::<u64>(),
+            }
     }
 
     // ---- batched fused estimation over the store -------------------
@@ -327,6 +467,164 @@ impl SketchStore {
             }
         }
     }
+
+    // ---- sign-bits scans -------------------------------------------
+    //
+    // The popcount counterparts of the dense loops above, for
+    // `SignBits` stores: the "distance" is the normalized Hamming
+    // mismatch `popcount(a ⊕ b) / k` (estimated sign-collision
+    // complement, 1308.1009). Mismatch fractions are never NaN or −0.0,
+    // so the TopK merge shares the dense path's exact `(distance, row)`
+    // `total_cmp` discipline — parallel results stay bit-identical to
+    // sequential for every thread count, same contract as the f32 scans.
+
+    /// Single-pair mismatch estimate (0.0 on the self-pair).
+    pub fn estimate_pair_sign(&self, i: usize, j: usize) -> f64 {
+        assert!(i < self.n && j < self.n, "rows out of range (n={})", self.n);
+        if i == j {
+            return 0.0;
+        }
+        SignCollision::new(self.k).mismatch(self.sign_row(i), self.sign_row(j))
+    }
+
+    /// Streaming bounded TopK over `range ∩ [0, n)` excluding the
+    /// anchor — the popcount twin of [`Self::top_m_scan`], same
+    /// fan-out/merge discipline, no scratch needed.
+    pub fn top_m_scan_sign(
+        &self,
+        i: usize,
+        range: std::ops::Range<usize>,
+        m: usize,
+        threads: usize,
+    ) -> (Vec<(u32, f64)>, u64) {
+        assert!(i < self.n, "row {i} out of range (n={})", self.n);
+        let lo = range.start.min(self.n);
+        let hi = range.end.min(self.n).max(lo);
+        let candidates = (hi - lo).saturating_sub(usize::from(lo <= i && i < hi));
+        let m = m.min(candidates);
+        // Popcount rows are ~32× cheaper than dense ones, so a thread
+        // needs proportionally more rows before spawning pays off.
+        let t = threads.clamp(1, ((hi - lo) / Self::PAR_MIN_ROWS).max(1));
+        if t == 1 {
+            let mut best = Vec::with_capacity(m + 1);
+            let scanned = self.top_m_range_sign(i, lo, hi, m, &mut best);
+            return (best, scanned);
+        }
+        let mut partials: Vec<(Vec<(u32, f64)>, u64)> = Vec::with_capacity(t);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..t)
+                .map(|b| {
+                    let blo = lo + (hi - lo) * b / t;
+                    let bhi = lo + (hi - lo) * (b + 1) / t;
+                    s.spawn(move || {
+                        let mut best = Vec::with_capacity(m + 1);
+                        let scanned = self.top_m_range_sign(i, blo, bhi, m, &mut best);
+                        (best, scanned)
+                    })
+                })
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("scan sub-thread panicked"));
+            }
+        });
+        let mut scanned = 0u64;
+        let mut merged: Vec<(u32, f64)> = Vec::with_capacity(t * m);
+        for (best, sc) in partials {
+            scanned += sc;
+            merged.extend(best);
+        }
+        merged.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        merged.truncate(m);
+        (merged, scanned)
+    }
+
+    /// Sequential bounded-insertion sub-scan over packed rows — the
+    /// XOR+popcount hot loop of the whole sign serving path.
+    fn top_m_range_sign(
+        &self,
+        i: usize,
+        lo: usize,
+        hi: usize,
+        m: usize,
+        best: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        let est = SignCollision::new(self.k);
+        let anchor = self.sign_row(i);
+        let mut scanned = 0u64;
+        for j in lo..hi {
+            if j == i {
+                continue;
+            }
+            let d = est.mismatch(anchor, self.sign_row(j));
+            scanned += 1;
+            let worst = best.last().map_or(f64::INFINITY, |&(_, w)| w);
+            if best.len() < m || d < worst {
+                let pos = best.partition_point(|&(_, w)| w <= d);
+                best.insert(pos, (j as u32, d));
+                if best.len() > m {
+                    best.pop();
+                }
+            }
+        }
+        scanned
+    }
+
+    /// Block scan over packed rows — the popcount twin of
+    /// [`Self::estimate_block_par`]: same up-front validation, same
+    /// band split, row-major output bit-identical at every thread count.
+    pub fn estimate_block_sign_par(
+        &self,
+        rows: &[u32],
+        cols: &[u32],
+        threads: usize,
+        out: &mut Vec<f64>,
+    ) {
+        for &r in rows {
+            assert!((r as usize) < self.n, "row {r} out of range (n={})", self.n);
+        }
+        for &c in cols {
+            assert!((c as usize) < self.n, "col {c} out of range (n={})", self.n);
+        }
+        out.clear();
+        let cells = rows.len() * cols.len();
+        let t = threads.clamp(1, (cells / Self::PAR_MIN_CELLS).max(1)).min(rows.len().max(1));
+        if t == 1 {
+            self.block_band_sign(rows, cols, out);
+            return;
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..t)
+                .map(|b| {
+                    let band = &rows[rows.len() * b / t..rows.len() * (b + 1) / t];
+                    s.spawn(move || {
+                        let mut part = Vec::with_capacity(band.len() * cols.len());
+                        self.block_band_sign(band, cols, &mut part);
+                        part
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.extend(h.join().expect("scan sub-thread panicked"));
+            }
+        });
+    }
+
+    /// One row band of a sign block scan (indices already validated).
+    fn block_band_sign(&self, band: &[u32], cols: &[u32], out: &mut Vec<f64>) {
+        let est = SignCollision::new(self.k);
+        for &r in band {
+            let r = r as usize;
+            let anchor = self.sign_row(r);
+            for &c in cols {
+                let c = c as usize;
+                out.push(if r == c {
+                    0.0
+                } else {
+                    est.mismatch(anchor, self.sign_row(c))
+                });
+            }
+        }
+    }
 }
 
 /// Projection + estimation engine for one (α, k, D, seed) configuration.
@@ -339,7 +637,16 @@ pub struct SketchEngine {
 
 impl SketchEngine {
     pub fn new(alpha: f64, dim: usize, k: usize, seed: u64) -> Self {
-        let matrix = StableMatrix::new(alpha, seed, dim, k);
+        Self::with_sparsity(alpha, dim, k, seed, 1.0)
+    }
+
+    /// Engine over a very-sparse projection matrix (cs/0611114): each
+    /// entry of R survives with probability `sparsity` (rescaled to
+    /// preserve the scale law), so sketching cost drops by ~1/sparsity
+    /// at a controlled variance cost. `sparsity = 1.0` is the classical
+    /// dense matrix — exactly [`Self::new`].
+    pub fn with_sparsity(alpha: f64, dim: usize, k: usize, seed: u64, sparsity: f64) -> Self {
+        let matrix = StableMatrix::with_sparsity(alpha, seed, dim, k, sparsity);
         let dense_r = matrix.materialize_f32();
         Self {
             matrix,
@@ -401,6 +708,29 @@ impl SketchEngine {
         for i in 0..n {
             let u = &rows[i * self.dim()..(i + 1) * self.dim()];
             self.project_row(u, store.row_mut(i));
+        }
+        store
+    }
+
+    /// Sketch a whole corpus into a bit-packed sign store (1308.1009):
+    /// the same projections as [`Self::sketch_all`], keeping only each
+    /// coordinate's sign. Bit j of row i is set iff the projection is
+    /// strictly positive (exact zeros — measure-zero under any stable
+    /// law — pack as 0); pad bits past k stay zero.
+    pub fn sketch_all_sign(&self, rows: &[f32], n: usize) -> SketchStore {
+        assert_eq!(rows.len(), n * self.dim());
+        let k = self.k();
+        let mut store = SketchStore::zeros_sign(n, k, self.alpha(), self.seed());
+        let mut proj = vec![0.0f32; k];
+        for i in 0..n {
+            let u = &rows[i * self.dim()..(i + 1) * self.dim()];
+            self.project_row(u, &mut proj);
+            let packed = store.sign_row_mut(i);
+            for (j, &v) in proj.iter().enumerate() {
+                if v > 0.0 {
+                    packed[j / 64] |= 1u64 << (j % 64);
+                }
+            }
         }
         store
     }
@@ -660,5 +990,100 @@ mod tests {
         let mut buf = vec![0.0; 64];
         let d = eng.estimate(&store, 5, 5, &mut buf);
         assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn sign_store_packs_projection_signs() {
+        let corpus = small_corpus();
+        let eng = SketchEngine::new(1.0, corpus.dim, 100, 7);
+        let dense = eng.sketch_all(corpus.as_slice(), corpus.n);
+        let sign = eng.sketch_all_sign(corpus.as_slice(), corpus.n);
+        assert_eq!(sign.dtype(), SketchDtype::SignBits);
+        assert_eq!(sign.words_per_row(), 2);
+        for i in 0..corpus.n {
+            let packed = sign.sign_row(i);
+            for (j, &v) in dense.row(i).iter().enumerate() {
+                let bit = (packed[j / 64] >> (j % 64)) & 1;
+                assert_eq!(bit == 1, v > 0.0, "row {i} bit {j}");
+            }
+            // Pad bits (k=100 → bits 100..128) must stay zero.
+            assert_eq!(packed[1] >> (100 - 64), 0, "row {i} pad bits");
+        }
+    }
+
+    #[test]
+    fn sign_scans_match_pairwise_mismatch() {
+        let corpus = small_corpus();
+        let eng = SketchEngine::new(1.0, corpus.dim, 96, 3);
+        let store = eng.sketch_all_sign(corpus.as_slice(), corpus.n);
+        // Pair path vs brute-force popcount.
+        let est = crate::estimators::SignCollision::new(96);
+        for (i, j) in [(0usize, 1usize), (2, 9), (4, 4)] {
+            let want = if i == j {
+                0.0
+            } else {
+                est.mismatch(store.sign_row(i), store.sign_row(j))
+            };
+            assert_eq!(store.estimate_pair_sign(i, j), want);
+        }
+        // TopK: sequential vs threaded are bit-identical and match a
+        // brute-force sort.
+        let (seq, scanned) = store.top_m_scan_sign(4, 0..corpus.n, 5, 1);
+        let (par, scanned_par) = store.top_m_scan_sign(4, 0..corpus.n, 5, 4);
+        assert_eq!(seq, par);
+        assert_eq!(scanned, scanned_par);
+        assert_eq!(scanned, (corpus.n - 1) as u64);
+        let mut brute: Vec<(u32, f64)> = (0..corpus.n)
+            .filter(|&j| j != 4)
+            .map(|j| (j as u32, store.estimate_pair_sign(4, j)))
+            .collect();
+        brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        brute.truncate(5);
+        assert_eq!(seq, brute);
+        // Block: row-major cells match the pair path at any thread count.
+        let (rows, cols) = (vec![0u32, 4, 7], vec![1u32, 4, 9]);
+        let mut out = Vec::new();
+        store.estimate_block_sign_par(&rows, &cols, 3, &mut out);
+        assert_eq!(out.len(), 9);
+        for (ri, &r) in rows.iter().enumerate() {
+            for (ci, &c) in cols.iter().enumerate() {
+                assert_eq!(
+                    out[ri * 3 + ci],
+                    store.estimate_pair_sign(r as usize, c as usize),
+                    "cell ({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_bytes_is_dtype_and_capacity_aware() {
+        let dense = SketchStore::zeros(1000, 256, 1.0, 1);
+        let sign = SketchStore::zeros_sign(1000, 256, 1.0, 1);
+        let base = std::mem::size_of::<SketchStore>();
+        assert_eq!(dense.memory_bytes(), base + 1000 * 256 * 4);
+        assert_eq!(sign.memory_bytes(), base + 1000 * 4 * 8);
+        // The packed store is 32× smaller in payload at equal (n, k).
+        assert_eq!(
+            (dense.memory_bytes() - base) / (sign.memory_bytes() - base),
+            32
+        );
+        assert_eq!(SketchDtype::DenseF32.bytes_per_row(256), 1024);
+        assert_eq!(SketchDtype::SignBits.bytes_per_row(256), 32);
+        assert_eq!(SketchDtype::SignBits.bytes_per_row(100), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn dense_row_access_on_sign_store_panics() {
+        let store = SketchStore::zeros_sign(4, 64, 1.0, 1);
+        let _ = store.row(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn sign_row_access_on_dense_store_panics() {
+        let store = SketchStore::zeros(4, 64, 1.0, 1);
+        let _ = store.sign_row(0);
     }
 }

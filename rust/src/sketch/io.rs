@@ -2,16 +2,27 @@
 //! be written once and served from disk (§1.3: "store B in the memory
 //! and estimate any distance on the fly" — across process restarts).
 //!
-//! Format (little-endian):
-//!   magic "SSK2" | u32 n | u32 k | f64 alpha | u64 seed
-//!   | n·k f32 row-major | u64 xxh-style checksum
+//! Current format `SSK3` (little-endian):
+//!   magic "SSK3" | u32 n | u32 k | f64 alpha | u64 seed
+//!   | u8 dtype | 7×u8 reserved (zero)
+//!   | payload | u64 xxh-style checksum
 //!
-//! The v2 checksum covers the **header fields and the payload**: a
-//! corrupted header (n, k, alpha, seed) must fail to load, not load
-//! silently with wrong geometry. Legacy `SSK1` files (payload-only
-//! checksum) are still read; new files are always written as `SSK2`.
+//! The dtype byte selects the payload encoding: 0 = dense-f32 (n·k f32
+//! row-major, exactly the SSK1/SSK2 payload) or 1 = sign-bits
+//! (n·⌈k/64⌉ u64 packed sign words, row-major). The 7 reserved bytes
+//! pad the post-magic header to 32 bytes — a multiple of 8, which the
+//! streaming checksum below requires of any folded prefix — and are
+//! covered by the checksum like every other header byte, so they can
+//! be assigned meaning later without a silent-compat hazard.
+//!
+//! The checksum covers the **header fields and the payload**: a
+//! corrupted header (n, k, alpha, seed, dtype) must fail to load, not
+//! load silently with wrong geometry or the wrong representation.
+//! Legacy files still read: `SSK2` (header+payload checksum, dense
+//! only) and `SSK1` (payload-only checksum, dense only) both load as
+//! dense-f32 stores. New files are always written as `SSK3`.
 
-use super::engine::SketchStore;
+use super::engine::{SketchDtype, SketchStore};
 use crate::numerics::SplitMix64;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -19,16 +30,31 @@ use std::path::Path;
 
 const MAGIC_V1: &[u8; 4] = b"SSK1";
 const MAGIC_V2: &[u8; 4] = b"SSK2";
-/// Checksum seeds — the magic bytes as LE integers, so the two
+const MAGIC_V3: &[u8; 4] = b"SSK3";
+/// Checksum seeds — the magic bytes as LE integers, so the three
 /// versions can never validate each other's files by accident.
 const CK_SEED_V1: u64 = 0x5353_4B31;
 const CK_SEED_V2: u64 = 0x5353_4B32;
+const CK_SEED_V3: u64 = 0x5353_4B33;
+
+/// The typed refusal for loading a store whose on-disk representation
+/// is not the one the caller committed to (e.g. a dense file under
+/// `serve --dtype sign`): callers match on this instead of parsing a
+/// message, and it can never be confused with corruption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("store holds {found} sketches but {expected} was requested (dtype mismatch)",
+        found = .found.label(), expected = .expected.label())]
+pub struct DtypeMismatch {
+    pub expected: SketchDtype,
+    pub found: SketchDtype,
+}
 
 /// SplitMix over 8-byte windows: not cryptographic, catches
 /// truncation/corruption. Foldable: `fold(fold(seed, a), b)` checksums
 /// the concatenation `a ‖ b` as long as `a.len()` is a multiple of 8
-/// (true for the 24-byte header), so header and payload stream through
-/// without copying them into one buffer.
+/// (true for the 24-byte v2 header and the 32-byte v3 header), so
+/// header and payload stream through without copying them into one
+/// buffer.
 fn fold(mut acc: u64, bytes: &[u8]) -> u64 {
     for chunk in bytes.chunks(8) {
         let mut w = [0u8; 8];
@@ -38,7 +64,8 @@ fn fold(mut acc: u64, bytes: &[u8]) -> u64 {
     acc
 }
 
-/// The 24 header bytes after the magic, as written to disk.
+/// The 24 common header bytes after the magic (n, k, alpha, seed) —
+/// shared by every version; v3 appends the dtype + reserved pad.
 fn header_bytes(n: u32, k: u32, alpha: f64, seed: u64) -> [u8; 24] {
     let mut h = [0u8; 24];
     h[0..4].copy_from_slice(&n.to_le_bytes());
@@ -48,36 +75,73 @@ fn header_bytes(n: u32, k: u32, alpha: f64, seed: u64) -> [u8; 24] {
     h
 }
 
-/// Write a sketch store to `path` (always the current `SSK2` format).
-pub fn save(store: &SketchStore, path: &Path) -> Result<()> {
-    let mut payload = Vec::with_capacity(store.n * store.k * 4);
-    for i in 0..store.n {
-        for &v in store.row(i) {
-            payload.extend_from_slice(&v.to_le_bytes());
+/// The 32 v3 header bytes after the magic: common fields, dtype code,
+/// zeroed reserved pad.
+fn header_bytes_v3(n: u32, k: u32, alpha: f64, seed: u64, dtype: SketchDtype) -> [u8; 32] {
+    let mut h = [0u8; 32];
+    h[0..24].copy_from_slice(&header_bytes(n, k, alpha, seed));
+    h[24] = dtype.code();
+    h
+}
+
+/// Serialize the store's payload words in the active dtype's encoding.
+fn payload_bytes(store: &SketchStore) -> Vec<u8> {
+    match store.dtype() {
+        SketchDtype::DenseF32 => {
+            let mut payload = Vec::with_capacity(store.n * store.k * 4);
+            for i in 0..store.n {
+                for &v in store.row(i) {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            payload
+        }
+        SketchDtype::SignBits => {
+            let w = store.words_per_row();
+            let mut payload = Vec::with_capacity(store.n * w * 8);
+            for i in 0..store.n {
+                for &word in store.sign_row(i) {
+                    payload.extend_from_slice(&word.to_le_bytes());
+                }
+            }
+            payload
         }
     }
-    let head = header_bytes(store.n as u32, store.k as u32, store.alpha, store.seed);
-    let ck = fold(fold(CK_SEED_V2, &head), &payload);
+}
+
+/// Write a sketch store to `path` (always the current `SSK3` format;
+/// both dtypes).
+pub fn save(store: &SketchStore, path: &Path) -> Result<()> {
+    let payload = payload_bytes(store);
+    let head = header_bytes_v3(
+        store.n as u32,
+        store.k as u32,
+        store.alpha,
+        store.seed,
+        store.dtype(),
+    );
+    let ck = fold(fold(CK_SEED_V3, &head), &payload);
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC_V2)?;
+    f.write_all(MAGIC_V3)?;
     f.write_all(&head)?;
     f.write_all(&payload)?;
     f.write_all(&ck.to_le_bytes())?;
     Ok(())
 }
 
-/// Load a sketch store from `path`, verifying magic, sizes and
-/// checksum. Reads both `SSK2` (checksum over header + payload) and
-/// legacy `SSK1` (checksum over payload only).
+/// Load a sketch store from `path`, verifying magic, sizes, dtype and
+/// checksum. Reads `SSK3` (both dtypes), `SSK2` (header+payload
+/// checksum, dense) and legacy `SSK1` (payload-only checksum, dense).
 pub fn load(path: &Path) -> Result<SketchStore> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut head = [0u8; 4 + 4 + 4 + 8 + 8];
     f.read_exact(&mut head).context("reading header")?;
-    let v2 = match &head[0..4] {
-        m if m == MAGIC_V2 => true,
-        m if m == MAGIC_V1 => false,
+    let version = match &head[0..4] {
+        m if m == MAGIC_V3 => 3u8,
+        m if m == MAGIC_V2 => 2,
+        m if m == MAGIC_V1 => 1,
         _ => bail!("not a stablesketch store (bad magic)"),
     };
     let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
@@ -90,25 +154,72 @@ pub fn load(path: &Path) -> Result<SketchStore> {
     if !(alpha > 0.0 && alpha <= 2.0) {
         bail!("bad alpha {alpha}");
     }
-    let mut payload = vec![0u8; n * k * 4];
+    // v3 extends the header with the dtype byte + reserved pad.
+    let mut ext = [0u8; 8];
+    let dtype = if version == 3 {
+        f.read_exact(&mut ext).context("reading dtype header")?;
+        let Some(dtype) = SketchDtype::from_code(ext[0]) else {
+            bail!("unknown sketch dtype code {}", ext[0]);
+        };
+        if ext[1..] != [0u8; 7] {
+            bail!("reserved header bytes must be zero");
+        }
+        dtype
+    } else {
+        SketchDtype::DenseF32
+    };
+    let mut payload = vec![0u8; n * dtype.bytes_per_row(k)];
     f.read_exact(&mut payload).context("reading payload")?;
     let mut ck = [0u8; 8];
     f.read_exact(&mut ck).context("reading checksum")?;
-    let want = if v2 {
-        fold(fold(CK_SEED_V2, &head[4..28]), &payload)
-    } else {
-        fold(CK_SEED_V1, &payload)
+    let want = match version {
+        3 => fold(fold(fold(CK_SEED_V3, &head[4..28]), &ext), &payload),
+        2 => fold(fold(CK_SEED_V2, &head[4..28]), &payload),
+        _ => fold(CK_SEED_V1, &payload),
     };
     if u64::from_le_bytes(ck) != want {
         bail!("checksum mismatch (truncated or corrupted store)");
     }
-    let mut store = SketchStore::zeros(n, k, alpha, seed);
-    for i in 0..n {
-        let row = store.row_mut(i);
-        for (j, slot) in row.iter_mut().enumerate() {
-            let at = (i * k + j) * 4;
-            *slot = f32::from_le_bytes(payload[at..at + 4].try_into().unwrap());
+    let mut store = match dtype {
+        SketchDtype::DenseF32 => SketchStore::zeros(n, k, alpha, seed),
+        SketchDtype::SignBits => SketchStore::zeros_sign(n, k, alpha, seed),
+    };
+    match dtype {
+        SketchDtype::DenseF32 => {
+            for i in 0..n {
+                let row = store.row_mut(i);
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let at = (i * k + j) * 4;
+                    *slot = f32::from_le_bytes(payload[at..at + 4].try_into().unwrap());
+                }
+            }
         }
+        SketchDtype::SignBits => {
+            let w = k.div_ceil(64);
+            for i in 0..n {
+                let row = store.sign_row_mut(i);
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let at = (i * w + j) * 8;
+                    *slot = u64::from_le_bytes(payload[at..at + 8].try_into().unwrap());
+                }
+            }
+        }
+    }
+    Ok(store)
+}
+
+/// Load a store the caller requires to be in a specific representation;
+/// a file holding the other dtype is refused with the typed
+/// [`DtypeMismatch`] (downcastable from the `anyhow` chain), never
+/// silently converted.
+pub fn load_expect(path: &Path, expected: SketchDtype) -> Result<SketchStore> {
+    let store = load(path)?;
+    if store.dtype() != expected {
+        return Err(DtypeMismatch {
+            expected,
+            found: store.dtype(),
+        }
+        .into());
     }
     Ok(store)
 }
@@ -127,6 +238,18 @@ mod tests {
         s
     }
 
+    fn sample_sign_store() -> SketchStore {
+        // k = 100 → 2 words/row with pad bits, exercising the ragged
+        // last word on both save and load.
+        let mut s = SketchStore::zeros_sign(6, 100, 1.0, 77);
+        for i in 0..6 {
+            let row = s.sign_row_mut(i);
+            row[0] = 0xA5A5_0000_FFFF_0001u64.rotate_left(i as u32);
+            row[1] = (0x0000_000F_F00F_0F0Fu64 >> i) & ((1u64 << 36) - 1);
+        }
+        s
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
         let dir = std::env::temp_dir().join("ss_io_rt");
@@ -139,9 +262,53 @@ mod tests {
         assert_eq!(back.k, 5);
         assert_eq!(back.alpha, 1.3);
         assert_eq!(back.seed, 42);
+        assert_eq!(back.dtype(), SketchDtype::DenseF32);
         for i in 0..7 {
             assert_eq!(back.row(i), s.row(i));
         }
+    }
+
+    #[test]
+    fn sign_store_roundtrips_bit_exactly() {
+        let dir = std::env::temp_dir().join("ss_io_sign");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("store.ssk");
+        let s = sample_sign_store();
+        save(&s, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.dtype(), SketchDtype::SignBits);
+        assert_eq!((back.n, back.k), (6, 100));
+        assert_eq!(back.alpha, 1.0);
+        assert_eq!(back.seed, 77);
+        for i in 0..6 {
+            assert_eq!(back.sign_row(i), s.sign_row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn cross_dtype_load_is_a_typed_refusal() {
+        let dir = std::env::temp_dir().join("ss_io_cross");
+        let _ = std::fs::create_dir_all(&dir);
+        let dense_path = dir.join("dense.ssk");
+        let sign_path = dir.join("sign.ssk");
+        save(&sample_store(), &dense_path).unwrap();
+        save(&sample_sign_store(), &sign_path).unwrap();
+        // Matching expectations load fine.
+        assert!(load_expect(&dense_path, SketchDtype::DenseF32).is_ok());
+        assert!(load_expect(&sign_path, SketchDtype::SignBits).is_ok());
+        // Mismatches are the typed error, with both sides named.
+        let err = load_expect(&dense_path, SketchDtype::SignBits).unwrap_err();
+        let typed = err.downcast_ref::<DtypeMismatch>().expect("typed error");
+        assert_eq!(
+            *typed,
+            DtypeMismatch {
+                expected: SketchDtype::SignBits,
+                found: SketchDtype::DenseF32,
+            }
+        );
+        let err = load_expect(&sign_path, SketchDtype::DenseF32).unwrap_err();
+        assert!(err.downcast_ref::<DtypeMismatch>().is_some());
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
     }
 
     #[test]
@@ -163,6 +330,14 @@ mod tests {
         // Garbage magic.
         std::fs::write(&path, b"NOPE").unwrap();
         assert!(load(&path).is_err());
+        // Sign payload corruption is caught the same way.
+        save(&sample_sign_store(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
     }
 
     #[test]
@@ -170,62 +345,87 @@ mod tests {
         let dir = std::env::temp_dir().join("ss_io_head");
         let _ = std::fs::create_dir_all(&dir);
         let path = dir.join("store.ssk");
-        save(&sample_store(), &path).unwrap();
-        let good = std::fs::read(&path).unwrap();
-        assert_eq!(&good[0..4], b"SSK2");
-        // Field spans within the file: n, k, alpha, seed (after magic).
-        for (field, span) in [
-            ("n", 4..8),
-            ("k", 8..12),
-            ("alpha", 12..20),
-            ("seed", 20..28),
-        ] {
-            for at in span {
-                let mut bytes = good.clone();
-                bytes[at] ^= 0x01;
-                std::fs::write(&path, &bytes).unwrap();
-                assert!(
-                    load(&path).is_err(),
-                    "flipping byte {at} of header field '{field}' must fail the load"
-                );
+        for store in [sample_store(), sample_sign_store()] {
+            save(&store, &path).unwrap();
+            let good = std::fs::read(&path).unwrap();
+            assert_eq!(&good[0..4], b"SSK3");
+            // Field spans within the file: n, k, alpha, seed, dtype and
+            // the reserved pad (after magic). A flipped dtype byte must
+            // fail like any other header corruption — never load the
+            // payload under the wrong representation.
+            for (field, span) in [
+                ("n", 4..8),
+                ("k", 8..12),
+                ("alpha", 12..20),
+                ("seed", 20..28),
+                ("dtype", 28..29),
+                ("reserved", 29..36),
+            ] {
+                for at in span {
+                    let mut bytes = good.clone();
+                    bytes[at] ^= 0x01;
+                    std::fs::write(&path, &bytes).unwrap();
+                    assert!(
+                        load(&path).is_err(),
+                        "flipping byte {at} of header field '{field}' must fail the load \
+                         ({} store)",
+                        store.dtype().label()
+                    );
+                }
             }
+            // Unchanged file still loads.
+            std::fs::write(&path, &good).unwrap();
+            assert!(load(&path).is_ok());
         }
-        // Unchanged file still loads.
-        std::fs::write(&path, &good).unwrap();
-        assert!(load(&path).is_ok());
     }
 
     #[test]
-    fn legacy_ssk1_files_still_load() {
+    fn legacy_ssk1_and_ssk2_files_still_load_as_dense() {
         let dir = std::env::temp_dir().join("ss_io_v1");
         let _ = std::fs::create_dir_all(&dir);
         let path = dir.join("store.ssk");
         let s = sample_store();
-        // Write the legacy layout by hand: payload-only checksum under
-        // the old seed constant.
         let mut payload = Vec::new();
         for i in 0..s.n {
             for &v in s.row(i) {
                 payload.extend_from_slice(&v.to_le_bytes());
             }
         }
-        let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC_V1);
-        bytes.extend_from_slice(&header_bytes(s.n as u32, s.k as u32, s.alpha, s.seed));
-        bytes.extend_from_slice(&payload);
-        bytes.extend_from_slice(&fold(CK_SEED_V1, &payload).to_le_bytes());
-        std::fs::write(&path, &bytes).unwrap();
-        let back = load(&path).unwrap();
-        assert_eq!(back.n, s.n);
-        assert_eq!(back.k, s.k);
-        assert_eq!(back.alpha, s.alpha);
-        assert_eq!(back.seed, s.seed);
-        for i in 0..s.n {
-            assert_eq!(back.row(i), s.row(i));
+        let head = header_bytes(s.n as u32, s.k as u32, s.alpha, s.seed);
+        // Legacy SSK1: payload-only checksum under the old seed constant.
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(MAGIC_V1);
+        v1.extend_from_slice(&head);
+        v1.extend_from_slice(&payload);
+        v1.extend_from_slice(&fold(CK_SEED_V1, &payload).to_le_bytes());
+        // Legacy SSK2: 24-byte header + payload checksum.
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(MAGIC_V2);
+        v2.extend_from_slice(&head);
+        v2.extend_from_slice(&payload);
+        v2.extend_from_slice(&fold(fold(CK_SEED_V2, &head), &payload).to_le_bytes());
+        for bytes in [&v1, &v2] {
+            std::fs::write(&path, bytes).unwrap();
+            let back = load(&path).unwrap();
+            assert_eq!(back.n, s.n);
+            assert_eq!(back.k, s.k);
+            assert_eq!(back.alpha, s.alpha);
+            assert_eq!(back.seed, s.seed);
+            assert_eq!(back.dtype(), SketchDtype::DenseF32);
+            for i in 0..s.n {
+                assert_eq!(back.row(i), s.row(i));
+            }
         }
         // An SSK1 checksum under an SSK2 magic must not validate.
-        let mut crossed = bytes.clone();
+        let mut crossed = v1.clone();
         crossed[0..4].copy_from_slice(MAGIC_V2);
+        std::fs::write(&path, &crossed).unwrap();
+        assert!(load(&path).is_err());
+        // Nor an SSK2 checksum under an SSK3 magic: v3 would read the
+        // first 8 payload bytes as its dtype extension and the folded
+        // seeds differ anyway.
+        let mut crossed = v2.clone();
+        crossed[0..4].copy_from_slice(MAGIC_V3);
         std::fs::write(&path, &crossed).unwrap();
         assert!(load(&path).is_err());
     }

@@ -13,7 +13,7 @@ pub mod io;
 mod matrix;
 mod streaming;
 
-pub use engine::{ProjectionPath, SketchEngine, SketchStore};
+pub use engine::{ProjectionPath, SketchDtype, SketchEngine, SketchStore};
 pub use exact::exact_distance_matrix;
 pub use matrix::StableMatrix;
 pub use streaming::{StreamEvent, StreamingSketcher};

@@ -216,6 +216,7 @@ fn rebalance_and_node_bounce_mid_stream_are_routed_around() {
             epoch: 3,
             replica: 0,
             replicas: 1,
+            dtype: 0,
         })
         .expect("adopt");
     }
@@ -343,6 +344,7 @@ fn adoption_is_monotonic_and_stale_stamps_are_refused() {
             epoch,
             replica: 0,
             replicas: 1,
+            dtype: 0,
         })
     };
 
@@ -365,6 +367,7 @@ fn adoption_is_monotonic_and_stale_stamps_are_refused() {
         epoch: 2,
         replica: 0,
         replicas: 1,
+        dtype: 0,
     });
     assert!(
         matches!(wrong_rows, Err(ClientError::Server { code: ErrorCode::InvalidQuery, .. })),

@@ -400,8 +400,9 @@ fn pre_v5_adoption_cannot_demote_a_replicated_node() {
     let shard_u = Some(ShardSpec { index: 0, of: 1 });
     let (_c2, server_u, addr_u) = start_node(&store, &cfg, shard_u, ReplicaSpec::solo());
 
-    // Build a v4-stamped AdoptShard: encode the v5 frame, drop the
-    // trailing replica identity (8 bytes), restamp version 4, reframe.
+    // Build a v4-stamped AdoptShard: encode the current frame, drop the
+    // trailing replica identity + dtype (9 bytes), restamp version 4,
+    // reframe.
     let info = ShardMapInfo {
         index: 0,
         count: 1,
@@ -411,9 +412,10 @@ fn pre_v5_adoption_cannot_demote_a_replicated_node() {
         epoch: 7,
         replica: 0,
         replicas: 1,
+        dtype: 0,
     };
     let wire = Frame::AdoptShard(info).encode();
-    let mut payload = wire[4..wire.len() - 8].to_vec();
+    let mut payload = wire[4..wire.len() - 9].to_vec();
     payload[0] = 4;
     let mut v4_frame = (payload.len() as u32).to_le_bytes().to_vec();
     v4_frame.extend_from_slice(&payload);

@@ -1,0 +1,327 @@
+//! Bit-packed sign sketches served end to end, on loopback.
+//!
+//! The acceptance contract for the dtype-generic pipeline: a 3-shard
+//! cluster whose nodes all serve a `SignBits` store answers
+//! Pair/TopK/Block plans with the XOR+popcount estimator over protocol
+//! v7, and every gathered reply is **bit-identical** to a single
+//! unsharded node on the same store. Representation agreement is
+//! enforced at every layer: a mixed dense/sign grid is a typed
+//! connect-time refusal, a dense-kind query against a sign node (and
+//! vice versa) is a typed admission refusal, ingest on a sign node is
+//! refused, and an adoption that states a different dtype is refused.
+//! The 32× `store_bytes` saving is visible through the Stats frame.
+
+use stablesketch::coordinator::{Coordinator, Query, QueryKind, ReplicaSpec, Reply, ShardSpec};
+use stablesketch::server::{
+    ClientError, ClusterClient, ClusterError, ErrorCode, ServerConfig, ShardMapInfo, SketchClient,
+    SketchServer,
+};
+use stablesketch::sketch::{SketchDtype, SketchEngine, SketchStore, StreamEvent};
+use stablesketch::simul::{Corpus, CorpusConfig};
+use stablesketch::util::config::PipelineConfig;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N: usize = 42;
+const K: usize = 128;
+
+fn sign_corpus(n: usize, k: usize) -> (SketchStore, SketchStore, PipelineConfig) {
+    let corpus = Corpus::generate(&CorpusConfig {
+        n,
+        dim: 512,
+        density: 0.1,
+        ..Default::default()
+    });
+    let cfg = PipelineConfig {
+        alpha: 1.0,
+        k,
+        dim: corpus.dim,
+        shards: 2,
+        max_batch: 32,
+        batch_deadline_us: 100,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engine = SketchEngine::new(cfg.alpha, corpus.dim, k, cfg.seed);
+    let sign = engine.sketch_all_sign(corpus.as_slice(), corpus.n);
+    let dense = engine.sketch_all(corpus.as_slice(), corpus.n);
+    (sign, dense, cfg)
+}
+
+fn start_node(
+    store: &SketchStore,
+    cfg: &PipelineConfig,
+    shard: Option<ShardSpec>,
+) -> (Arc<Coordinator>, SketchServer, String) {
+    let coord = Arc::new(
+        Coordinator::start_replicated(cfg.clone(), store.clone(), shard, ReplicaSpec::solo())
+            .expect("coordinator"),
+    );
+    let server = SketchServer::start(coord.clone(), "127.0.0.1:0", ServerConfig::default())
+        .expect("server start");
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+/// Every plan shape under the sign kind, salted for variety.
+fn sign_plan(n: u32, salt: u32) -> Vec<Query> {
+    vec![
+        Query::Pair {
+            i: salt % n,
+            j: (salt + 7) % n,
+            kind: QueryKind::Sign,
+        },
+        Query::TopK {
+            i: (salt + 3) % n,
+            m: (n as usize / 3) + 2,
+            kind: QueryKind::Sign,
+        },
+        Query::Block {
+            rows: vec![salt % n, (salt + n / 2) % n, n - 1 - (salt % n)],
+            cols: vec![(salt + 1) % n, (salt + 5) % n, (salt + 9) % n],
+            kind: QueryKind::Sign,
+        },
+    ]
+}
+
+fn assert_bit_identical(local: &[Reply], remote: &[Reply], tag: &str) {
+    assert_eq!(local.len(), remote.len(), "{tag}: reply count");
+    for (q, (l, r)) in local.iter().zip(remote).enumerate() {
+        match (l, r) {
+            (Reply::Pair(a), Reply::Pair(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: pair bits differ at {q}")
+            }
+            (Reply::TopK(a), Reply::TopK(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: topk length at {q}");
+                for ((ja, da), (jb, db)) in a.iter().zip(b) {
+                    assert_eq!(ja, jb, "{tag}: topk neighbour differs at {q}");
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: topk bits differ at {q}");
+                }
+            }
+            (Reply::Block(a), Reply::Block(b)) => {
+                assert_eq!(a.len(), b.len(), "{tag}: block length at {q}");
+                for (da, db) in a.iter().zip(b) {
+                    assert_eq!(da.to_bits(), db.to_bits(), "{tag}: block bits differ at {q}");
+                }
+            }
+            other => panic!("{tag}: shape mismatch at {q}: {other:?}"),
+        }
+    }
+}
+
+/// The headline scenario: a 3-shard sign cluster answers every plan
+/// shape bit-identically to a single unsharded sign node — the sharded
+/// popcount TopK partials merge under the same `(distance, row)` order
+/// as the dense path — and the cluster client advertises the sign
+/// dtype it validated across the grid.
+#[test]
+fn three_shard_sign_cluster_matches_single_node_bit_for_bit() {
+    let (sign, _dense, cfg) = sign_corpus(N, K);
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for index in 0..3 {
+        let (_c, s, a) = start_node(&sign, &cfg, Some(ShardSpec { index, of: 3 }));
+        servers.push(s);
+        addrs.push(a);
+    }
+    let (_ref_coord, ref_server, ref_addr) = start_node(&sign, &cfg, None);
+    let mut reference = SketchClient::connect_with_retry(&ref_addr, 10, Duration::from_millis(20))
+        .expect("reference connect");
+
+    let mut cluster = ClusterClient::connect(&addrs).expect("sign cluster connect");
+    assert_eq!(cluster.shard_count(), 3);
+    assert_eq!(cluster.rows(), N);
+    assert_eq!(
+        cluster.dtype_code(),
+        SketchDtype::SignBits.code(),
+        "the exchange validated and recorded the sign dtype"
+    );
+
+    for salt in 0..6u32 {
+        let plan = sign_plan(N as u32, salt);
+        let remote = cluster.query_plan(&plan).expect("sign plan");
+        let local = reference.query_plan(&plan).expect("single-node sign plan");
+        assert_bit_identical(&local, &remote, &format!("salt {salt}"));
+        // Sign distances are k-quantized mismatch fractions.
+        for reply in &local {
+            if let Reply::Pair(d) = reply {
+                assert!((0.0..=1.0).contains(d));
+                let scaled = d * K as f64;
+                assert!((scaled - scaled.round()).abs() < 1e-9);
+            }
+        }
+    }
+
+    // The convenience single-query paths ride the same plan machinery.
+    let d = cluster.pair(1, 2, QueryKind::Sign).expect("sign pair");
+    assert!((0.0..=1.0).contains(&d));
+    assert_eq!(
+        cluster.pair(5, 5, QueryKind::Sign).expect("self pair"),
+        0.0,
+        "self-pairs are exactly zero on the sign path too"
+    );
+
+    for s in servers {
+        s.shutdown();
+    }
+    ref_server.shutdown();
+}
+
+/// Representation agreement is typed at every surface:
+/// * estimator kind ↔ store dtype mismatches are admission refusals
+///   naming both sides;
+/// * ingest on a sign node is refused (the streaming sketcher is
+///   dense-only);
+/// * an adoption that *states* a different dtype (v7 speaker) is
+///   refused — an adoption can move rows, not change representation.
+#[test]
+fn kind_dtype_mismatches_are_typed_refusals() {
+    let (sign, dense, cfg) = sign_corpus(20, 32);
+    let (sign_coord, sign_server, sign_addr) = start_node(&sign, &cfg, None);
+    let (_dense_coord, dense_server, dense_addr) = start_node(&dense, &cfg, None);
+
+    let mut sign_client = SketchClient::connect_with_retry(&sign_addr, 10, Duration::from_millis(20))
+        .expect("sign connect");
+    let mut dense_client =
+        SketchClient::connect_with_retry(&dense_addr, 10, Duration::from_millis(20))
+            .expect("dense connect");
+
+    // Dense kinds against the sign node.
+    for kind in [QueryKind::Oq, QueryKind::Gm, QueryKind::Fp, QueryKind::Median] {
+        match sign_client.pair(0, 1, kind) {
+            Err(ClientError::Server { code, message }) => {
+                assert_eq!(code, ErrorCode::InvalidQuery, "kind {kind:?}");
+                assert!(
+                    message.contains("requires a dense f32 store")
+                        && message.contains("sign-bits"),
+                    "kind {kind:?}: {message}"
+                );
+            }
+            other => panic!("kind {kind:?}: expected a refusal, got {other:?}"),
+        }
+    }
+    // The sign kind against the dense node.
+    match dense_client.pair(0, 1, QueryKind::Sign) {
+        Err(ClientError::Server { code, message }) => {
+            assert_eq!(code, ErrorCode::InvalidQuery);
+            assert!(
+                message.contains("requires a sign-bits store") && message.contains("dense-f32"),
+                "{message}"
+            );
+        }
+        other => panic!("expected a refusal, got {other:?}"),
+    }
+    // Matching kinds still work on both, and neither connection was
+    // poisoned by the refusals.
+    assert!(sign_client.pair(0, 1, QueryKind::Sign).is_ok());
+    assert!(dense_client.pair(0, 1, QueryKind::Oq).is_ok());
+
+    // Ingest against the sign node is refused before touching the
+    // (dense-only) streaming sketcher.
+    let err = sign_coord
+        .ingest(&[StreamEvent {
+            row: 0,
+            coord: 0,
+            delta: 1.0,
+        }])
+        .expect_err("ingest on a sign store must fail");
+    assert!(
+        err.to_string().contains("dense-only"),
+        "unexpected ingest error: {err}"
+    );
+
+    // A v7 adoption stating dtype 0 against the sign node is refused
+    // with identity and epoch unchanged.
+    let info = ShardMapInfo {
+        index: 0,
+        count: 1,
+        start: 0,
+        end: 20,
+        rows: 20,
+        epoch: 7,
+        replica: 0,
+        replicas: 1,
+        dtype: SketchDtype::DenseF32.code(),
+    };
+    match sign_client.adopt_shard(info) {
+        Err(ClientError::Server { code, message }) => {
+            assert_eq!(code, ErrorCode::InvalidQuery);
+            assert!(
+                message.contains("cannot change a node's representation"),
+                "{message}"
+            );
+        }
+        other => panic!("expected an adoption refusal, got {other:?}"),
+    }
+    let now = sign_client.shard_map().expect("shard map");
+    assert_eq!(now.epoch, 0, "refused adoption does not advance the epoch");
+    assert_eq!(now.dtype, SketchDtype::SignBits.code());
+
+    sign_server.shutdown();
+    dense_server.shutdown();
+}
+
+/// A grid that mixes representations can never converge: the cluster
+/// client's shard-map exchange refuses it as a typed `ShardMap` error
+/// naming the disagreeing node, instead of waiting out the refresh
+/// loop on an operator error.
+#[test]
+fn mixed_dtype_grids_are_refused_at_exchange() {
+    let (sign, dense, cfg) = sign_corpus(20, 32);
+    let (_c0, s0, a0) = start_node(&dense, &cfg, Some(ShardSpec { index: 0, of: 2 }));
+    let (_c1, s1, a1) = start_node(&sign, &cfg, Some(ShardSpec { index: 1, of: 2 }));
+    match ClusterClient::connect(&[a0, a1.clone()]) {
+        Err(ClusterError::ShardMap { addr, detail }) => {
+            assert_eq!(addr, a1, "the second node is the one that disagrees");
+            assert!(
+                detail.contains("cannot mix sketch"),
+                "detail should name the mixed representations: {detail}"
+            );
+        }
+        other => panic!(
+            "expected a typed mixed-dtype refusal, got {:?}",
+            other.map(|_| ())
+        ),
+    }
+    s0.shutdown();
+    s1.shutdown();
+}
+
+/// The 32× memory story is observable from outside: both nodes export
+/// a `store_bytes` stat equal to their store's true resident footprint,
+/// and the dense/sign payload ratio at equal (n, k) is exactly 32.
+#[test]
+fn store_bytes_gauge_reports_the_packed_footprint() {
+    let (sign, dense, cfg) = sign_corpus(20, 64);
+    let (_sc, sign_server, sign_addr) = start_node(&sign, &cfg, None);
+    let (_dc, dense_server, dense_addr) = start_node(&dense, &cfg, None);
+    let mut sign_client = SketchClient::connect_with_retry(&sign_addr, 10, Duration::from_millis(20))
+        .expect("sign connect");
+    let mut dense_client =
+        SketchClient::connect_with_retry(&dense_addr, 10, Duration::from_millis(20))
+            .expect("dense connect");
+    let sign_bytes = sign_client
+        .stat("store_bytes")
+        .expect("stats")
+        .expect("store_bytes exported");
+    let dense_bytes = dense_client
+        .stat("store_bytes")
+        .expect("stats")
+        .expect("store_bytes exported");
+    assert_eq!(sign_bytes as usize, sign.memory_bytes());
+    assert_eq!(dense_bytes as usize, dense.memory_bytes());
+    let base = std::mem::size_of::<SketchStore>() as u64;
+    assert_eq!(
+        (dense_bytes - base) / (sign_bytes - base),
+        32,
+        "dense {dense_bytes} vs sign {sign_bytes}"
+    );
+    // And the Prometheus exposition carries the same gauge.
+    let text = sign_client.metrics_text().expect("metrics text");
+    assert!(
+        text.contains(&format!("stablesketch_store_bytes {sign_bytes}")),
+        "missing store_bytes gauge in exposition"
+    );
+    sign_server.shutdown();
+    dense_server.shutdown();
+}

@@ -1,0 +1,234 @@
+//! Sign-path equivalence tests — the popcount twin of
+//! `kernel_equivalence.rs`, and run the same way in CI: under both the
+//! default build and `--features simd`, with the same result-line grep
+//! guard, so the dispatched Hamming kernel can never silently diverge
+//! from the portable reference.
+//!
+//! * the dispatched XOR+popcount kernel against the portable loop and
+//!   a bit-by-bit counter, over word counts that are never lane
+//!   multiples and adversarial bit patterns;
+//! * one worker's parallel sign TopK/Block scans against the
+//!   sequential loops, for every thread count — mismatch fractions are
+//!   never NaN or −0.0, so the `(distance, row)` merge is bit-identical
+//!   by the same argument as the dense scans;
+//! * the bounds-validation and dtype-mismatch panic messages, which
+//!   are a compatibility surface exactly like the dense ones.
+
+use stablesketch::estimators::{hamming_words, hamming_words_portable, SignCollision};
+use stablesketch::numerics::{Rng, Xoshiro256pp};
+use stablesketch::sketch::{SketchDtype, SketchStore};
+
+/// Word counts that exercise the lane-unrolled kernel's remainder
+/// handling: below one lane group, exact multiples, and off-by-one
+/// around them.
+const WORD_GRID: [usize; 11] = [1, 2, 3, 4, 5, 7, 8, 9, 16, 17, 33];
+
+/// Adversarial word patterns: random, equal, complementary,
+/// alternating nibbles, and sparse single-bit diffs.
+fn adversarial_pairs(rng: &mut Xoshiro256pp, words: usize) -> Vec<(Vec<u64>, Vec<u64>)> {
+    let rand: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    let mut cases = Vec::new();
+    cases.push((rand.clone(), (0..words).map(|_| rng.next_u64()).collect()));
+    cases.push((rand.clone(), rand.clone()));
+    cases.push((rand.clone(), rand.iter().map(|x| !x).collect()));
+    cases.push((
+        vec![0xAAAA_AAAA_AAAA_AAAAu64; words],
+        vec![0x5555_5555_5555_5555u64; words],
+    ));
+    let mut one_bit = rand.clone();
+    one_bit[words - 1] ^= 1u64 << (rng.below(64) as u32);
+    cases.push((rand, one_bit));
+    cases
+}
+
+#[test]
+fn dispatched_hamming_matches_portable_and_bit_by_bit() {
+    let mut rng = Xoshiro256pp::new(0xB175);
+    for &words in &WORD_GRID {
+        for (case, (a, b)) in adversarial_pairs(&mut rng, words).into_iter().enumerate() {
+            let mut slow = 0u64;
+            for w in 0..words {
+                for bit in 0..64 {
+                    slow += u64::from((a[w] >> bit) & 1 != (b[w] >> bit) & 1);
+                }
+            }
+            assert_eq!(
+                hamming_words_portable(&a, &b),
+                slow,
+                "portable words={words} case={case}"
+            );
+            assert_eq!(
+                hamming_words(&a, &b),
+                slow,
+                "dispatched words={words} case={case}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mismatch_fractions_are_clean_f64s() {
+    // The TopK merge's `total_cmp` discipline relies on distances never
+    // being NaN or −0.0 — pin that here for the sign path.
+    let mut rng = Xoshiro256pp::new(0x51D1);
+    for &k in &[1usize, 63, 64, 65, 127, 4096] {
+        let est = SignCollision::new(k);
+        let words = k.div_ceil(64);
+        for (a, b) in adversarial_pairs(&mut rng, words) {
+            let d = est.mismatch(&a, &b);
+            assert!(d.is_finite(), "k={k}");
+            assert!(d >= 0.0 && d.to_bits() != (-0.0f64).to_bits(), "k={k}");
+            // Full random words can exceed 1.0 only if pad bits differ;
+            // the store never lets that happen (tested below), so the
+            // estimator itself just needs to stay finite/ordered here.
+        }
+        assert_eq!(est.mismatch(&vec![0u64; words], &vec![0u64; words]), 0.0);
+    }
+}
+
+/// A packed sign store with deterministic random rows (pad bits
+/// masked, as the sketcher guarantees). Every 997th row is a copy of
+/// row 0, planting exact distance ties across the parallel scan's
+/// sub-range boundaries — the merge must break them by row index
+/// exactly like sequential insertion does.
+fn filled_sign_store(n: usize, k: usize, seed: u64) -> SketchStore {
+    let mut store = SketchStore::zeros_sign(n, k, 1.0, seed);
+    let words = store.words_per_row();
+    let pad_mask = if k % 64 == 0 {
+        u64::MAX
+    } else {
+        (1u64 << (k % 64)) - 1
+    };
+    let mut rng = Xoshiro256pp::new(seed);
+    for i in 0..n {
+        let row = store.sign_row_mut(i);
+        for w in row.iter_mut() {
+            *w = rng.next_u64();
+        }
+        row[words - 1] &= pad_mask;
+    }
+    if n > 997 {
+        let r0: Vec<u64> = store.sign_row(0).to_vec();
+        for j in (997..n).step_by(997) {
+            store.sign_row_mut(j).copy_from_slice(&r0);
+        }
+    }
+    store
+}
+
+#[test]
+fn parallel_sign_topk_scan_is_bit_identical_to_sequential() {
+    // k = 127: two words per row with one pad bit — the adversarial
+    // shape for any off-by-one in the packed layout.
+    let (n, k, m) = (20_000usize, 127usize, 25usize);
+    let store = filled_sign_store(n, k, 0x5169);
+    for range in [0..n, 1_000..n - 1_000, 0..0] {
+        let (seq, seq_scanned) = store.top_m_scan_sign(7, range.clone(), m, 1);
+        for threads in [2usize, 3, 4, 8] {
+            let (par, par_scanned) = store.top_m_scan_sign(7, range.clone(), m, threads);
+            assert_eq!(par_scanned, seq_scanned, "threads={threads} range={range:?}");
+            assert_eq!(par.len(), seq.len(), "threads={threads} range={range:?}");
+            for (t, (p, s)) in par.iter().zip(&seq).enumerate() {
+                assert_eq!(p.0, s.0, "threads={threads} range={range:?} slot {t}");
+                assert_eq!(
+                    p.1.to_bits(),
+                    s.1.to_bits(),
+                    "threads={threads} range={range:?} slot {t}"
+                );
+            }
+        }
+    }
+    // Planted duplicates of row 0 tie at distance 0 from row 0: the
+    // scan must keep them in ascending row order.
+    let (best, _) = store.top_m_scan_sign(0, 0..n, 5, 4);
+    assert_eq!(best[0], (997, 0.0));
+    assert_eq!(best[1], (1994, 0.0));
+}
+
+#[test]
+fn parallel_sign_block_scan_is_bit_identical_to_sequential() {
+    let (n, k) = (2_048usize, 96usize);
+    let store = filled_sign_store(n, k, 0xB10C);
+    let mut rng = Xoshiro256pp::new(9);
+    let rows: Vec<u32> = (0..256).map(|_| rng.below(n as u64) as u32).collect();
+    let cols: Vec<u32> = (0..64).map(|_| rng.below(n as u64) as u32).collect();
+    let mut seq = Vec::new();
+    store.estimate_block_sign_par(&rows, &cols, 1, &mut seq);
+    assert_eq!(seq.len(), rows.len() * cols.len());
+    for threads in [2usize, 4, 7] {
+        let mut par = Vec::new();
+        store.estimate_block_sign_par(&rows, &cols, threads, &mut par);
+        assert_eq!(par.len(), seq.len(), "threads={threads}");
+        for (t, (p, s)) in par.iter().zip(&seq).enumerate() {
+            assert_eq!(p.to_bits(), s.to_bits(), "threads={threads} cell {t}");
+        }
+    }
+}
+
+#[test]
+fn sign_scans_agree_with_pairwise_estimates() {
+    let (n, k) = (512usize, 127usize);
+    let store = filled_sign_store(n, k, 0xC0DE);
+    // TopK against brute force under the exact merge order.
+    let (best, scanned) = store.top_m_scan_sign(4, 0..n, 9, 3);
+    assert_eq!(scanned, (n - 1) as u64);
+    let mut brute: Vec<(u32, f64)> = (0..n)
+        .filter(|&j| j != 4)
+        .map(|j| (j as u32, store.estimate_pair_sign(4, j)))
+        .collect();
+    brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    brute.truncate(9);
+    assert_eq!(best, brute);
+    // Every pair distance is a multiple of 1/k in [0, 1] — pad bits
+    // can never contribute phantom mismatches.
+    for (i, j) in [(0usize, 1usize), (5, 200), (511, 0)] {
+        let d = store.estimate_pair_sign(i, j);
+        assert!((0.0..=1.0).contains(&d));
+        let scaled = d * k as f64;
+        assert!((scaled - scaled.round()).abs() < 1e-9, "pair ({i},{j})");
+    }
+}
+
+// ---- validation panic messages (compatibility surface) ---------------
+
+fn tiny_sign_store() -> SketchStore {
+    filled_sign_store(8, 64, 1)
+}
+
+#[test]
+#[should_panic(expected = "rows out of range (n=8)")]
+fn sign_pair_rejects_out_of_range_rows() {
+    let store = tiny_sign_store();
+    store.estimate_pair_sign(0, 42);
+}
+
+#[test]
+#[should_panic(expected = "row 42 out of range (n=8)")]
+fn sign_topk_scan_rejects_out_of_range_anchor() {
+    let store = tiny_sign_store();
+    store.top_m_scan_sign(42, 0..8, 3, 1);
+}
+
+#[test]
+#[should_panic(expected = "row 9 out of range (n=8)")]
+fn sign_block_scan_rejects_out_of_range_row() {
+    let store = tiny_sign_store();
+    let mut out = Vec::new();
+    store.estimate_block_sign_par(&[9u32], &[0u32, 1], 4, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "col 9 out of range (n=8)")]
+fn sign_block_scan_rejects_out_of_range_col() {
+    let store = tiny_sign_store();
+    let mut out = Vec::new();
+    store.estimate_block_sign_par(&[0u32, 1], &[9u32], 4, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "sign-bits row access on a dense f32 store (dtype mismatch)")]
+fn sign_scan_on_a_dense_store_is_a_dtype_mismatch() {
+    let store = SketchStore::zeros(8, 64, 1.0, 1);
+    assert_eq!(store.dtype(), SketchDtype::DenseF32);
+    store.top_m_scan_sign(0, 0..8, 3, 1);
+}

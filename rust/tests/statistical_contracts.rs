@@ -229,6 +229,120 @@ fn fisher_score_has_no_numerical_spikes() {
     }
 }
 
+/// Exact mismatch probability for the planted sign-sketch geometry:
+/// with projections `x ~ Cauchy(0, c)` shared and an independent
+/// increment `y = x + Cauchy(0, b)`, `P(sign x ≠ sign y)` has the
+/// closed form `1/2 − (2/π²)·J(c/b)` where
+/// `J(z) = Σ_{n≥0} z^{2n+1} [1/(2n+1)² − ln z/(2n+1)]` for `z ≤ 1`
+/// (derived by differentiating `∫ arctan(zt)/(1+t²) dt` in `z`).
+/// `J(1) = π²/8` gives the c = b sanity point `P = 1/4`.
+fn sign_mismatch_closed_form(z: f64) -> f64 {
+    assert!(z > 0.0 && z <= 1.0);
+    let lnz = z.ln();
+    let (mut acc, mut zp) = (0.0, z);
+    let mut n = 0u32;
+    while zp > 1e-18 && n < 10_000 {
+        let m = (2 * n + 1) as f64;
+        acc += zp * (1.0 / (m * m) - lnz / m);
+        zp *= z * z;
+        n += 1;
+    }
+    0.5 - 2.0 / (std::f64::consts::PI * std::f64::consts::PI) * acc
+}
+
+/// The sign-sketch accuracy contract (1308.1009, α = 1): on planted
+/// geometry — `u` on one coordinate block with L1 mass `c`, `v = u + w`
+/// with `w` on a disjoint block with L1 mass `b` — the k packed sign
+/// pairs are iid Bernoulli with exactly the closed-form mismatch
+/// probability above, because each projection column splits into two
+/// independent Cauchy sums with scales (c, b). The empirical mismatch
+/// from the end-to-end pipeline (corpus → projection → bit-pack →
+/// XOR+popcount) must land within binomial noise of the closed form.
+#[test]
+fn sign_sketch_mismatch_matches_cauchy_closed_form() {
+    let (dim, k) = (256usize, 8192usize);
+    // Spread each block's mass over 8 coordinates with alternating
+    // signs: the Cauchy scale of a projection only sees the L1 mass,
+    // so the closed form is unchanged — this just guards against any
+    // accidental single-coordinate shortcut in the projection path.
+    let planted = |c: f64, b: f64| -> Vec<f32> {
+        let mut rows = vec![0.0f32; 2 * dim];
+        for t in 0..8 {
+            let s = if t % 2 == 0 { 1.0 } else { -1.0 };
+            rows[t] = (s * c / 8.0) as f32; // u, block A
+            rows[dim + t] = rows[t]; // v shares block A…
+            rows[dim + 128 + t] = (s * b / 8.0) as f32; // …plus block B
+        }
+        rows
+    };
+    let engine = SketchEngine::new(1.0, dim, k, 0x516E);
+    for &z in &[0.25f64, 0.6, 0.9] {
+        let rows = planted(z, 1.0);
+        let store = engine.sketch_all_sign(&rows, 2);
+        let got = store.estimate_pair_sign(0, 1);
+        let want = sign_mismatch_closed_form(z);
+        let tol = 4.0 * (want * (1.0 - want) / k as f64).sqrt();
+        assert!(
+            (got - want).abs() < tol,
+            "z={z}: empirical mismatch {got} vs closed form {want} (tol {tol})"
+        );
+    }
+    // Disjoint supports: the two projections are independent symmetric
+    // Cauchy draws, so the mismatch probability is exactly 1/2.
+    let mut rows = vec![0.0f32; 2 * dim];
+    rows[0] = 1.0;
+    rows[dim + 128] = 1.0;
+    let store = engine.sketch_all_sign(&rows, 2);
+    let got = store.estimate_pair_sign(0, 1);
+    let tol = 4.0 * (0.25f64 / k as f64).sqrt();
+    assert!((got - 0.5).abs() < tol, "disjoint mismatch {got} ≠ 1/2");
+    // Identical rows: identical projections, identical bits — the
+    // mismatch is exactly zero, not just small.
+    let rows = planted(0.7, 0.0);
+    let mut same = vec![0.0f32; 2 * dim];
+    same[..dim].copy_from_slice(&rows[..dim]);
+    same[dim..].copy_from_slice(&rows[..dim]);
+    let store = engine.sketch_all_sign(&same, 2);
+    assert_eq!(store.estimate_pair_sign(0, 1), 0.0);
+}
+
+/// Very sparse stable random projections (cs/0611114): gating R down
+/// to 20% surviving entries (with the `sparsity^{-1/α}` rescale) must
+/// keep the end-to-end estimator usable — the projection scale
+/// concentrates around the true L1 mass once rows have a few hundred
+/// nonzeros, costing only a bounded accuracy haircut vs dense R.
+#[test]
+fn very_sparse_projections_remain_accurate() {
+    let (alpha, k) = (1.0, 256);
+    let corpus = Corpus::generate(&CorpusConfig {
+        n: 12,
+        dim: 2048,
+        density: 0.3,
+        ..Default::default()
+    });
+    let engine = SketchEngine::with_sparsity(alpha, corpus.dim, k, 424242, 0.2);
+    let store = engine.sketch_all(corpus.as_slice(), corpus.n);
+    let mut buf = vec![0.0; k];
+    let mut errs = Vec::new();
+    for i in 0..corpus.n {
+        for j in (i + 1)..corpus.n {
+            let exact = corpus.exact_distance(i, j, alpha);
+            if exact <= 0.0 {
+                continue;
+            }
+            let est = engine.estimate(&store, i, j, &mut buf);
+            errs.push((est / exact - 1.0).abs());
+        }
+    }
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = errs[errs.len() / 2];
+    assert!(
+        median < 0.35,
+        "sparsity 0.2 median rel err {median} over {} pairs",
+        errs.len()
+    );
+}
+
 /// Randomized agreement between the two R-derivation paths under heavy
 /// concurrent access (the streaming property that matters operationally).
 #[test]

@@ -155,6 +155,7 @@ fn control_and_error_frames_round_trip() {
             epoch: 5,
             replica: 1,
             replicas: 2,
+            dtype: 1,
         }),
         Frame::AdoptShard(ShardMapInfo {
             index: 1,
@@ -165,6 +166,7 @@ fn control_and_error_frames_round_trip() {
             epoch: 6,
             replica: 0,
             replicas: 3,
+            dtype: 0,
         }),
         Frame::Error {
             id: 8,
@@ -200,6 +202,7 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             epoch: 2,
             replica: 0,
             replicas: 1,
+            dtype: 0,
         }),
         Frame::AdoptShard(ShardMapInfo {
             index: 3,
@@ -210,6 +213,7 @@ fn every_truncation_of_every_variant_errs_cleanly() {
             epoch: 3,
             replica: 1,
             replicas: 2,
+            dtype: 1,
         }),
     ];
     for _ in 0..30 {
@@ -260,8 +264,8 @@ fn corrupted_discriminants_err_cleanly() {
     let payload = &wire[4..];
     // version | tag | id(8) | shape | kind | ...
     let mut bad = payload.to_vec();
-    bad[0] = 7;
-    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadVersion(7))));
+    bad[0] = 8;
+    assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadVersion(8))));
     let mut bad = payload.to_vec();
     bad[1] = 0x77;
     assert!(matches!(Frame::decode(&bad), Err(ProtoError::BadTag(0x77))));
@@ -417,9 +421,10 @@ fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
         epoch: 12,
         replica: 1,
         replicas: 2,
+        dtype: 1,
     };
     let wire = Frame::ShardMap(info).encode();
-    let mut payload = wire[4..wire.len() - 16].to_vec();
+    let mut payload = wire[4..wire.len() - 17].to_vec();
     payload[0] = 3;
     match Frame::decode(&payload).expect("v3 shard map decodes") {
         Frame::ShardMap(got) => {
@@ -429,7 +434,7 @@ fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
         }
         other => panic!("{other:?}"),
     }
-    let mut payload = wire[4..wire.len() - 8].to_vec();
+    let mut payload = wire[4..wire.len() - 9].to_vec();
     payload[0] = 4;
     match Frame::decode(&payload).expect("v4 shard map decodes") {
         Frame::ShardMap(got) => {
@@ -438,15 +443,15 @@ fn v5_decoders_accept_v1_to_v4_frames_and_refuse_version_contradictions() {
         }
         other => panic!("{other:?}"),
     }
-    // v5-only trailing content under older stamps is refused: the
-    // replica identity is 8 trailing bytes v4 never defined (16 for
-    // v3, which also lacks the epoch).
+    // v5+-only trailing content under older stamps is refused: the
+    // replica identity plus the v7 dtype byte is 9 trailing bytes v4
+    // never defined (17 for v3, which also lacks the epoch).
     let mut payload = wire[4..].to_vec();
     payload[0] = 4;
-    assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(8))));
+    assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(9))));
     let mut payload = wire[4..].to_vec();
     payload[0] = 3;
-    assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(16))));
+    assert!(matches!(Frame::decode(&payload), Err(ProtoError::Trailing(17))));
     // Control/reply frames are version-stable: restamp as v1..v3.
     for f in [
         Frame::Ping { token: 17 },
@@ -610,6 +615,100 @@ fn v6_trace_fields_are_prefix_compatible_and_gated() {
     }
 }
 
+/// v7 compatibility contract, mirroring the v5/v6 suites: the sketch
+/// dtype is a trailing `ShardMapInfo` field only a v7 speaker emits,
+/// and the sign estimator kind (code 4) is v7-only vocabulary. Pre-v7
+/// map bodies decode as dense-f32 (dtype 0); a full v7 body under an
+/// older stamp is self-contradictory and refused; a sign-kind query
+/// under a pre-v7 stamp is a version contradiction, while codes no
+/// version defines stay a kind error.
+#[test]
+fn v7_dtype_field_is_prefix_compatible_and_sign_kind_gated() {
+    let info = ShardMapInfo {
+        index: 2,
+        count: 3,
+        start: 67,
+        end: 100,
+        rows: 100,
+        epoch: 4,
+        replica: 1,
+        replicas: 2,
+        dtype: 1,
+    };
+    for frame in [Frame::ShardMap(info), Frame::AdoptShard(info)] {
+        // Round-trips bit-exactly under v7, dtype included.
+        assert_eq!(round_trip(&frame), frame);
+        let wire = frame.encode();
+        // A v5/v6 speaker's body stops before the dtype byte: stripped
+        // and restamped, it decodes as the same map, dense-f32.
+        for stamp in [5u8, 6] {
+            let mut payload = wire[4..wire.len() - 1].to_vec();
+            payload[0] = stamp;
+            match Frame::decode(&payload).expect("pre-v7 shard map decodes") {
+                Frame::ShardMap(got) | Frame::AdoptShard(got) => {
+                    assert_eq!(got.dtype, 0, "pre-v7 maps decode as dense-f32");
+                    assert_eq!(
+                        (got.index, got.count, got.epoch, got.replica, got.replicas),
+                        (2, 3, 4, 1, 2)
+                    );
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // The full v7 body under a v5/v6 stamp carries the one
+        // trailing byte those versions never defined.
+        for stamp in [5u8, 6] {
+            let mut payload = wire[4..].to_vec();
+            payload[0] = stamp;
+            assert!(
+                matches!(Frame::decode(&payload), Err(ProtoError::Trailing(1))),
+                "v{stamp} stamp on a full v7 map body must refuse the dtype byte"
+            );
+        }
+    }
+    // Deeper strips only apply to ShardMap (the AdoptShard *tag* is
+    // itself refused pre-v4): dtype + replica identity for v4, plus
+    // the epoch for v3.
+    let wire = Frame::ShardMap(info).encode();
+    for (stamp, extra) in [(4u8, 9usize), (3, 17)] {
+        let mut payload = wire[4..].to_vec();
+        payload[0] = stamp;
+        assert!(
+            matches!(Frame::decode(&payload), Err(ProtoError::Trailing(n)) if n == extra),
+            "v{stamp} stamp on a full v7 map body must refuse {extra} trailing bytes"
+        );
+    }
+    // A sign-kind query round-trips under v7...
+    let frame = Frame::Query {
+        id: 11,
+        query: Query::TopK {
+            i: 3,
+            m: 5,
+            kind: QueryKind::Sign,
+        },
+        epoch: 2,
+        trace_id: 6,
+    };
+    assert_eq!(round_trip(&frame), frame);
+    // ...and is refused as self-contradictory under every older stamp.
+    // Trailing fields those versions never defined are dropped first,
+    // so it is the *kind byte* that trips the refusal, not the length.
+    let wire = frame.encode();
+    for (stamp, strip) in [(3u8, 16usize), (4, 8), (5, 8), (6, 0)] {
+        let mut payload = wire[4..wire.len() - strip].to_vec();
+        payload[0] = stamp;
+        assert!(
+            matches!(Frame::decode(&payload), Err(ProtoError::BadVersion(v)) if v == stamp),
+            "sign kind under a v{stamp} stamp must be refused"
+        );
+    }
+    // Codes past the v7 vocabulary are still a kind error, not a
+    // version error.
+    let mut payload = wire[4..].to_vec();
+    payload[11] = 9; // version | tag | id(8) | shape | kind
+    assert!(matches!(Frame::decode(&payload), Err(ProtoError::BadKind(9))));
+}
+
 #[test]
 fn frame_reader_rejects_hostile_length_prefixes() {
     use std::io::Cursor;
@@ -689,6 +788,7 @@ fn frame_assembler_matches_one_shot_encoding_under_any_chunking() {
             epoch: 2,
             replica: 0,
             replicas: 1,
+            dtype: 0,
         }),
         Frame::AdoptShard(ShardMapInfo {
             index: 3,
@@ -699,6 +799,7 @@ fn frame_assembler_matches_one_shot_encoding_under_any_chunking() {
             epoch: 3,
             replica: 1,
             replicas: 2,
+            dtype: 1,
         }),
         Frame::TraceDumpRequest,
         Frame::TraceDump {
