@@ -1,0 +1,11 @@
+// Planted PL003 violations: clock reads inside a kernel hot-loop
+// module. Spans are measured at stage boundaries by the coordinator,
+// never inside the fill/select inner loops.
+
+pub fn fill_timed(out: &mut [f32], a: &[f32], b: &[f32]) -> u128 {
+    let start = std::time::Instant::now();
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = (x - y).abs();
+    }
+    start.elapsed().as_nanos()
+}

@@ -1,0 +1,23 @@
+// Planted PL006 violations: a duplicated stat key, a non-snake_case
+// key, and a key with no matching Prometheus exposition family.
+
+pub struct Snapshot {
+    submitted: u64,
+    orphaned: u64,
+}
+
+impl Snapshot {
+    pub fn stat_entries(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("queries_submitted", self.submitted),
+            ("queries_submitted", self.submitted),
+            ("BadKey", 7),
+            ("orphan_metric", self.orphaned),
+        ]
+    }
+
+    pub fn metrics_text(&self) -> String {
+        let family = "stablesketch_queries_submitted_total";
+        format!("{family} {}\n", self.submitted)
+    }
+}

@@ -1,0 +1,7 @@
+// Planted violation: the block below dereferences a raw pointer with
+// no safety comment above it (PL001), in a file that is not in the
+// audited allowlist (PL002).
+
+pub fn read_first(xs: &[u8]) -> u8 {
+    unsafe { *xs.as_ptr() }
+}

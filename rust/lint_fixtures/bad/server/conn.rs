@@ -1,0 +1,17 @@
+// Planted PL005 violations in a hot-path module: one bare unwrap, one
+// empty expect, one expect whose message does not document the
+// violated contract. The last two calls show the accepted forms.
+
+use std::sync::Mutex;
+
+pub fn drain_depths(q: &Mutex<Vec<u32>>) -> usize {
+    let a = q.lock().unwrap().len();
+    let b = q.lock().expect("").len();
+    let c = q.lock().expect("queue lock").len();
+    let d = q
+        .lock()
+        .expect("invariant: depth mutex is never poisoned")
+        .len();
+    let e = q.lock().map(|g| g.len()).unwrap_or(0);
+    a + b + c + d + e
+}

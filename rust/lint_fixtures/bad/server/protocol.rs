@@ -1,0 +1,29 @@
+// Planted PL004 violations for the version-gate registry rule:
+// `TAG_ROGUE` is declared but missing from the registry, and
+// `TAG_FUTURE` is registered as since-v4 but the decoder below never
+// gates it behind `if version < …`.
+
+pub const MIN_PROTOCOL_VERSION: u8 = 1;
+pub const PROTOCOL_VERSION: u8 = 4;
+const EPOCH_SINCE_VERSION: u8 = 4;
+
+const TAG_PING: u8 = 0x01;
+const TAG_ROGUE: u8 = 0x02;
+const TAG_FUTURE: u8 = 0x03;
+
+pub const FRAME_TAG_MIN_VERSION: &[(u8, u8)] = &[
+    (TAG_PING, MIN_PROTOCOL_VERSION),
+    (TAG_FUTURE, EPOCH_SINCE_VERSION),
+];
+
+pub fn decode(version: u8, tag: u8) -> Result<u8, u8> {
+    if version < MIN_PROTOCOL_VERSION {
+        return Err(version);
+    }
+    match tag {
+        TAG_PING => Ok(tag),
+        TAG_ROGUE => Ok(tag),
+        TAG_FUTURE => Ok(tag),
+        other => Err(other),
+    }
+}

@@ -1,0 +1,20 @@
+// A hot-path module (by path suffix) whose unwraps all live inside a
+// `#[cfg(test)]` block: test code exercises panics on purpose and is
+// exempt from every rule, so this file must lint clean.
+
+pub fn admissible(inflight: usize, cap: usize) -> bool {
+    inflight < cap
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+
+    #[test]
+    fn unwraps_freely_in_tests() {
+        let q = Mutex::new(vec![1u32]);
+        assert_eq!(q.lock().unwrap().len(), 1);
+        assert_eq!(q.lock().expect("held").len(), 1);
+        assert!(super::admissible(0, 1));
+    }
+}

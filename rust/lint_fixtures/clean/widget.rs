@@ -1,0 +1,18 @@
+//! A violation-free fixture: ordinary safe code that every rule must
+//! pass untouched.
+
+pub fn widget_sum(xs: &[u64]) -> u64 {
+    xs.iter().copied().sum()
+}
+
+pub fn widget_max(xs: &[u64]) -> Option<u64> {
+    xs.iter().copied().max()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sums() {
+        assert_eq!(super::widget_sum(&[1, 2]), 3);
+    }
+}

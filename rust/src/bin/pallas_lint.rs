@@ -1,0 +1,39 @@
+//! `pallas-lint` — the project-invariant checker, run as a blocking
+//! CI step and locally via `cargo run --bin pallas-lint`.
+//!
+//! Scans `rust/src/**/*.rs` under the repo root (the current
+//! directory, or the first argument) and enforces the six deny-by-
+//! default rules documented in `stablesketch::lint`. Exit status: 0
+//! clean, 1 violations printed as `file:line: [PLnnn] message`, 2 I/O
+//! failure.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    match stablesketch::lint::run_repo(&root) {
+        Ok(report) => {
+            for d in &report.diags {
+                println!("{d}");
+            }
+            println!(
+                "pallas-lint: {} files scanned, {} violations",
+                report.files,
+                report.diags.len()
+            );
+            if report.diags.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

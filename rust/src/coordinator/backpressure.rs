@@ -7,6 +7,7 @@
 //! and a depth counter the router reads for power-of-two-choices
 //! placement.
 
+use crate::util::sync::lock_unpoisoned;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -60,7 +61,7 @@ impl<T> BoundedQueue<T> {
         if self.is_closed() {
             return Err(QueueError::Closed);
         }
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.inner, "bounded queue");
         if q.len() >= self.cap {
             return Err(QueueError::Full(item));
         }
@@ -74,7 +75,7 @@ impl<T> BoundedQueue<T> {
     /// Pop one item, waiting up to `timeout`; None on timeout or when
     /// closed-and-empty.
     pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.inner, "bounded queue");
         loop {
             if let Some(item) = q.pop_front() {
                 self.depth.store(q.len(), Ordering::Relaxed);
@@ -83,7 +84,10 @@ impl<T> BoundedQueue<T> {
             if self.is_closed() {
                 return None;
             }
-            let (guard, res) = self.signal.wait_timeout(q, timeout).unwrap();
+            let (guard, res) = match self.signal.wait_timeout(q, timeout) {
+                Ok(pair) => pair,
+                Err(_) => panic!("invariant: bounded queue mutex is never poisoned"),
+            };
             q = guard;
             if res.timed_out() {
                 let item = q.pop_front();
@@ -98,7 +102,7 @@ impl<T> BoundedQueue<T> {
     /// Drain up to `max` immediately-available items into `out`
     /// (batch formation fast path; no waiting).
     pub fn drain_into(&self, out: &mut Vec<T>, max: usize) {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.inner, "bounded queue");
         while out.len() < max {
             match q.pop_front() {
                 Some(item) => out.push(item),

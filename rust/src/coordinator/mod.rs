@@ -30,6 +30,10 @@
 //! per-query for comparison workloads, all through the same fused
 //! kernel (`estimators::batch`) so the comparison stays fair.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 mod backpressure;
 mod batcher;
 mod router;
@@ -48,6 +52,7 @@ use crate::metrics::PipelineMetrics;
 use crate::sketch::{SketchDtype, SketchStore, StreamEvent, StreamingSketcher};
 use crate::trace::{TraceBuf, TraceRecord};
 use crate::util::config::PipelineConfig;
+use crate::util::sync::lock_unpoisoned;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -410,14 +415,14 @@ impl CompletionQueue {
     /// Deliver one completion and fire the wakeup. Called from worker
     /// threads; never blocks beyond the queue mutex.
     pub fn push(&self, c: Completion) {
-        self.queue.lock().unwrap().push(c);
+        lock_unpoisoned(&self.queue, "completion").push(c);
         (self.wake)();
     }
 
     /// Take everything delivered so far, in push order. Called by the
     /// owning event loop after a wakeup (spurious drains return empty).
     pub fn drain(&self) -> Vec<Completion> {
-        std::mem::take(&mut *self.queue.lock().unwrap())
+        std::mem::take(&mut *lock_unpoisoned(&self.queue, "completion"))
     }
 }
 
@@ -573,7 +578,7 @@ pub(crate) struct Shared {
 
 impl Shared {
     pub fn snapshot(&self) -> Arc<SketchStore> {
-        self.store.lock().unwrap().clone()
+        lock_unpoisoned(&self.store, "store").clone()
     }
 
     /// The fused estimator serving a query kind. `Sync` is part of the
@@ -729,7 +734,7 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("sketch-worker-{w}"))
                     .spawn(move || worker::run(shared2, queue2, policy))
-                    .expect("spawning worker"),
+                    .map_err(|e| anyhow::anyhow!("spawning worker {w}: {e}"))?,
             );
             queues.push(queue);
         }
@@ -787,7 +792,7 @@ impl Coordinator {
 
     /// This node's slice of the cluster (None = owns everything).
     pub fn shard_spec(&self) -> Option<ShardSpec> {
-        self.shared.ownership.lock().unwrap().spec
+        lock_unpoisoned(&self.shared.ownership, "ownership").spec
     }
 
     /// The current shard-map epoch (0 = static, unclustered map).
@@ -806,7 +811,7 @@ impl Coordinator {
     /// frame must never mix fields from two different adoptions.
     pub fn membership(&self) -> (u64, Option<ShardSpec>, ReplicaSpec, std::ops::Range<usize>) {
         let n = self.shared.store_n.load(Ordering::Acquire);
-        let own = self.shared.ownership.lock().unwrap();
+        let own = lock_unpoisoned(&self.shared.ownership, "ownership");
         (
             own.epoch,
             own.spec,
@@ -858,7 +863,7 @@ impl Coordinator {
                 range.start, range.end
             )));
         }
-        let mut own = self.shared.ownership.lock().unwrap();
+        let mut own = lock_unpoisoned(&self.shared.ownership, "ownership");
         if epoch <= own.epoch {
             return Err(AdoptError::Stale { current: own.epoch });
         }
@@ -972,7 +977,7 @@ impl Coordinator {
         }
         Ok(out
             .into_iter()
-            .map(|r| r.expect("a reply for every routed query"))
+            .map(|r| r.expect("invariant: every routed query sends one reply"))
             .collect())
     }
 
@@ -1111,7 +1116,7 @@ impl Coordinator {
                 self.shared.dtype.label()
             );
         }
-        let mut ingest = self.ingest.lock().unwrap();
+        let mut ingest = lock_unpoisoned(&self.ingest, "ingest");
         for &ev in events {
             ingest.apply(ev);
             self.shared.metrics.events_ingested.inc();
@@ -1119,7 +1124,7 @@ impl Coordinator {
         let snapshot = Arc::new(ingest.store().clone());
         let n = snapshot.n;
         let bytes = snapshot.memory_bytes();
-        *self.shared.store.lock().unwrap() = snapshot;
+        *lock_unpoisoned(&self.shared.store, "store") = snapshot;
         self.shared.store_n.store(n, Ordering::Release);
         self.shared
             .metrics

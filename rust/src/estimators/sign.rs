@@ -18,6 +18,10 @@
 //! under both builds in CI, so a future fancier reduction (AVX2
 //! `vpshufb` popcount, etc.) inherits the guard.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 /// Portable Hamming weight of `a ⊕ b`, word by word. `count_ones`
 /// compiles to the native popcount where the target has one.
 pub fn hamming_words_portable(a: &[u64], b: &[u64]) -> u64 {

@@ -36,11 +36,17 @@
 //!   queue, scan, write) stamped by a v6 wire trace id, per-node trace
 //!   rings with a slow-query log, and client-side stitching of a
 //!   scatter-gathered plan into one cluster-wide trace tree.
+//! * [`lint`] — `pallas-lint`, the std-only static analysis layer that
+//!   mechanically enforces the project invariants (SAFETY comments,
+//!   unsafe allowlist, clock-free kernels, protocol version-gate
+//!   registry, hot-path panic hygiene, metrics key hygiene) as a
+//!   blocking CI step.
 
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;
 pub mod estimators;
+pub mod lint;
 pub mod metrics;
 pub mod numerics;
 pub mod runtime;

@@ -1,0 +1,277 @@
+//! `pallas-lint`: the in-repo static analysis layer.
+//!
+//! The system's correctness story rests on conventions that no
+//! compiler pass checks — SAFETY comments on the three audited
+//! `unsafe` sites, clock-free kernel inner loops (the tracing-budget
+//! rule), version-gated protocol tags, invariant-documented panics in
+//! the admission path, and stat-key ↔ Prometheus-family agreement.
+//! This module turns each convention into a deny-by-default diagnostic
+//! with `file:line: [PLnnn] message` output, enforced as a blocking CI
+//! step via the `pallas-lint` binary (`cargo run --bin pallas-lint`).
+//!
+//! Everything is std-only and token-based: a lightweight scanner
+//! ([`scanner`]) blanks comments and literals so rules ([`rules`])
+//! match real tokens, never prose. Pinned exceptions live in
+//! `rust/lint_allow.txt` as `<rule> <path>` lines — the audited
+//! `unsafe` modules are the canonical entries; a new file introducing
+//! `unsafe` must be allowlisted in the same PR that audits it.
+
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
+pub mod rules;
+pub mod scanner;
+
+use scanner::SourceFile;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint finding. `line` is 1-based; `path` is repo-relative with
+/// forward slashes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Pinned exceptions: `<rule-id> <repo-relative-path>` per line, `#`
+/// comments and blank lines ignored. An entry suppresses that rule's
+/// diagnostics for that file — nothing wider.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<(String, String)>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    pub fn parse(text: &str) -> Allowlist {
+        let entries = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .filter_map(|l| {
+                let (rule, path) = l.split_once(char::is_whitespace)?;
+                Some((rule.to_string(), path.trim().replace('\\', "/")))
+            })
+            .collect();
+        Allowlist { entries }
+    }
+
+    /// Load from disk; a missing file is an empty allowlist.
+    pub fn load(path: &Path) -> io::Result<Allowlist> {
+        match fs::read_to_string(path) {
+            Ok(text) => Ok(Allowlist::parse(&text)),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Allowlist::empty()),
+            Err(e) => Err(e),
+        }
+    }
+
+    pub fn allows(&self, rule: &str, path: &str) -> bool {
+        for (r, p) in &self.entries {
+            if r == rule && (p == path || path.ends_with(&format!("/{p}"))) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Run every rule over one file's source text. `path` decides rule
+/// applicability (kernel modules, hot-path modules, `protocol.rs`,
+/// `metrics.rs`) and appears verbatim in diagnostics.
+pub fn lint_file(path: &str, text: &str, allow: &Allowlist) -> Vec<Diagnostic> {
+    let sf = SourceFile::parse(path.replace('\\', "/"), text);
+    let mut out = Vec::new();
+    out.extend(rules::safety_comments(&sf));
+    out.extend(rules::unsafe_allowlist(&sf));
+    out.extend(rules::kernel_timing(&sf));
+    out.extend(rules::protocol_registry(&sf));
+    out.extend(rules::bare_unwrap(&sf));
+    out.extend(rules::metrics_keys(&sf));
+    out.retain(|d| !allow.allows(d.rule, &d.path));
+    out
+}
+
+/// Result of a whole-tree run.
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Lint the repository rooted at `root`: scans `rust/src/**/*.rs`
+/// against the allowlist at `rust/lint_allow.txt`. Fixture trees and
+/// integration tests are deliberately out of scope — the invariants
+/// guard shipped code.
+pub fn run_repo(root: &Path) -> io::Result<LintReport> {
+    let allow = Allowlist::load(&root.join("rust").join("lint_allow.txt"))?;
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk(&src, &mut files)?;
+    files.sort();
+    let mut diags = Vec::new();
+    for file in &files {
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(file)?;
+        diags.extend(lint_file(&rel, &text, &allow));
+    }
+    Ok(LintReport {
+        files: files.len(),
+        diags,
+    })
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(rel: &str) -> (String, String) {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let path = format!("rust/lint_fixtures/{rel}");
+        let text = match fs::read_to_string(root.join(&path)) {
+            Ok(t) => t,
+            Err(e) => panic!("reading fixture {path}: {e}"),
+        };
+        (path, text)
+    }
+
+    fn rules_hit(rel: &str) -> Vec<&'static str> {
+        let (path, text) = fixture(rel);
+        let mut rules: Vec<&'static str> = lint_file(&path, &text, &Allowlist::empty())
+            .into_iter()
+            .map(|d| d.rule)
+            .collect();
+        rules.dedup();
+        rules
+    }
+
+    #[test]
+    fn fixture_missing_safety_is_caught() {
+        let hits = rules_hit("bad/missing_safety.rs");
+        assert!(hits.contains(&rules::PL001), "{hits:?}");
+        // An un-allowlisted file containing unsafe also trips PL002.
+        assert!(hits.contains(&rules::PL002), "{hits:?}");
+    }
+
+    #[test]
+    fn fixture_ungated_protocol_tag_is_caught() {
+        let (path, text) = fixture("bad/server/protocol.rs");
+        let diags = lint_file(&path, &text, &Allowlist::empty());
+        assert!(diags.iter().all(|d| d.rule == rules::PL004), "{diags:?}");
+        // Both plants fire: the unregistered tag and the registered-
+        // but-ungated one.
+        assert!(
+            diags.iter().any(|d| d.message.contains("TAG_ROGUE")),
+            "{diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| d.message.contains("TAG_FUTURE")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_timing_in_kernel_is_caught() {
+        let hits = rules_hit("bad/estimators/batch.rs");
+        assert_eq!(hits, vec![rules::PL003], "{hits:?}");
+    }
+
+    #[test]
+    fn fixture_bare_unwrap_is_caught() {
+        let (path, text) = fixture("bad/server/conn.rs");
+        let diags = lint_file(&path, &text, &Allowlist::empty());
+        assert!(!diags.is_empty());
+        assert!(diags.iter().all(|d| d.rule == rules::PL005), "{diags:?}");
+        // Three plants: bare unwrap, empty expect, undocumented expect.
+        assert_eq!(diags.len(), 3, "{diags:?}");
+    }
+
+    #[test]
+    fn fixture_duplicate_stat_key_is_caught() {
+        let (path, text) = fixture("bad/metrics.rs");
+        let diags = lint_file(&path, &text, &Allowlist::empty());
+        assert!(diags.iter().all(|d| d.rule == rules::PL006), "{diags:?}");
+        assert!(
+            diags.iter().any(|d| d.message.contains("duplicate")),
+            "{diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| d.message.contains("snake_case")),
+            "{diags:?}"
+        );
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.message.contains("no Prometheus exposition family")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_clean_file_passes() {
+        let (path, text) = fixture("clean/widget.rs");
+        let diags = lint_file(&path, &text, &Allowlist::empty());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn fixture_test_blocks_are_exempt() {
+        let (path, text) = fixture("clean/server/conn.rs");
+        let diags = lint_file(&path, &text, &Allowlist::empty());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn allowlist_suppresses_only_its_rule_and_file() {
+        let allow = Allowlist::parse("# comment\nPL002 rust/lint_fixtures/bad/missing_safety.rs\n");
+        let (path, text) = fixture("bad/missing_safety.rs");
+        let rules_left: Vec<&str> = lint_file(&path, &text, &allow)
+            .into_iter()
+            .map(|d| d.rule)
+            .collect();
+        assert!(rules_left.contains(&rules::PL001), "{rules_left:?}");
+        assert!(!rules_left.contains(&rules::PL002), "{rules_left:?}");
+    }
+
+    /// The repo's own tree must be lint-clean — the same run CI blocks
+    /// on, kept inside `cargo test` so a violation cannot land even
+    /// where only the test suite runs.
+    #[test]
+    fn repo_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run_repo(root).expect("scanning rust/src");
+        assert!(report.files > 50, "suspiciously few files scanned");
+        let rendered: Vec<String> = report.diags.iter().map(|d| d.to_string()).collect();
+        assert!(rendered.is_empty(), "{}", rendered.join("\n"));
+    }
+}

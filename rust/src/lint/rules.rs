@@ -1,0 +1,629 @@
+//! The six project-invariant rules. Each rule is a pure function from
+//! a parsed [`SourceFile`] to diagnostics; the driver in `mod.rs`
+//! decides which files each rule applies to and filters the result
+//! through the allowlist.
+//!
+//! Rule ids are stable — CI output, the allowlist file, and the README
+//! table all reference them:
+//!
+//! - `PL001` — every `unsafe` is immediately preceded by `// SAFETY:`
+//! - `PL002` — `unsafe` only in allowlisted (audited) files
+//! - `PL003` — no timing calls inside kernel hot-loop modules
+//! - `PL004` — protocol tags/error codes registered in the
+//!   `MIN_VERSION` tables and version-gated in the decoder
+//! - `PL005` — no bare `unwrap()` / undocumented `expect` in server
+//!   admission and hot-path modules
+//! - `PL006` — `stat_entries()` keys unique, snake_case, and covered
+//!   by a Prometheus exposition family
+
+use super::scanner::{find_word, SourceFile};
+use super::Diagnostic;
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const PL001: &str = "PL001";
+pub const PL002: &str = "PL002";
+pub const PL003: &str = "PL003";
+pub const PL004: &str = "PL004";
+pub const PL005: &str = "PL005";
+pub const PL006: &str = "PL006";
+
+/// Kernel hot-loop modules: PR 7's tracing-budget rule pins spans to
+/// stage boundaries, so the selection/popcount/fill inner loops must
+/// never read a clock.
+pub const KERNEL_MODULES: &[&str] = &[
+    "estimators/quickselect.rs",
+    "estimators/sign.rs",
+    "estimators/batch.rs",
+];
+
+/// Server admission and hot-path modules where a panic tears down a
+/// connection (or the whole event loop) instead of surfacing a typed
+/// error.
+pub const HOT_MODULES: &[&str] = &[
+    "server/conn.rs",
+    "server/listener.rs",
+    "server/reactor.rs",
+    "coordinator/mod.rs",
+    "coordinator/backpressure.rs",
+];
+
+/// Does `path` (forward-slash normalized) end with one of `suffixes`?
+pub fn applies(path: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| path.ends_with(s))
+}
+
+fn diag(rule: &'static str, sf: &SourceFile, line0: usize, message: String) -> Diagnostic {
+    Diagnostic {
+        rule,
+        path: sf.path.clone(),
+        line: line0 + 1,
+        message,
+    }
+}
+
+// ---- PL001 / PL002: unsafe hygiene ---------------------------------
+
+/// PL001: each `unsafe` token (outside test modules) must carry a
+/// `SAFETY:` comment — trailing on the same line, or in the contiguous
+/// `//` comment block directly above (attribute lines may intervene,
+/// blank lines may not).
+pub fn safety_comments(sf: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (ln, code) in sf.code.iter().enumerate() {
+        if sf.in_test[ln] || find_word(code, "unsafe").is_none() {
+            continue;
+        }
+        let mut ok = sf.raw[ln].contains("SAFETY:");
+        let mut j = ln;
+        while !ok && j > 0 {
+            j -= 1;
+            let t = sf.raw[j].trim_start();
+            if t.starts_with("//") {
+                if t.contains("SAFETY:") {
+                    ok = true;
+                }
+                continue;
+            }
+            if t.starts_with("#[") {
+                continue;
+            }
+            break;
+        }
+        if !ok {
+            out.push(diag(
+                PL001,
+                sf,
+                ln,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".into(),
+            ));
+        }
+    }
+    out
+}
+
+/// PL002: a file containing `unsafe` (outside tests) must be pinned in
+/// the allowlist — the driver suppresses this diagnostic for entries
+/// like `PL002 rust/src/server/reactor.rs`. One diagnostic per file.
+pub fn unsafe_allowlist(sf: &SourceFile) -> Vec<Diagnostic> {
+    for (ln, code) in sf.code.iter().enumerate() {
+        if !sf.in_test[ln] && find_word(code, "unsafe").is_some() {
+            return vec![diag(
+                PL002,
+                sf,
+                ln,
+                "`unsafe` outside the allowlist (add `PL002 <path>` to lint_allow.txt)".into(),
+            )];
+        }
+    }
+    Vec::new()
+}
+
+// ---- PL003: kernel timing ------------------------------------------
+
+/// PL003: no clock reads in the kernel hot-loop modules. Spans are
+/// measured at stage boundaries (coordinator/listener), never inside
+/// the selection/popcount inner loops.
+pub fn kernel_timing(sf: &SourceFile) -> Vec<Diagnostic> {
+    if !applies(&sf.path, KERNEL_MODULES) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (ln, code) in sf.code.iter().enumerate() {
+        if sf.in_test[ln] {
+            continue;
+        }
+        for token in ["Instant", "SystemTime"] {
+            if find_word(code, token).is_some() {
+                out.push(diag(
+                    PL003,
+                    sf,
+                    ln,
+                    format!("`{token}` in a kernel module (measure at stage boundaries)"),
+                ));
+            }
+        }
+        if code.contains(".elapsed(") {
+            out.push(diag(
+                PL003,
+                sf,
+                ln,
+                "`.elapsed()` in a kernel module (measure at stage boundaries)".into(),
+            ));
+        }
+    }
+    out
+}
+
+// ---- PL004: protocol version-gate registry -------------------------
+
+/// `u8` constants declared in the file: name → (value, 0-based line).
+fn parse_u8_consts(sf: &SourceFile) -> BTreeMap<String, (u64, usize)> {
+    let mut out = BTreeMap::new();
+    for (ln, code) in sf.code.iter().enumerate() {
+        if sf.in_test[ln] {
+            continue;
+        }
+        let Some(at) = find_word(code, "const") else {
+            continue;
+        };
+        let rest = &code[at + "const".len()..];
+        let Some((name, tail)) = rest.split_once(':') else {
+            continue;
+        };
+        let name = name.trim();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            continue;
+        }
+        let Some((ty, value)) = tail.split_once('=') else {
+            continue;
+        };
+        if ty.trim() != "u8" {
+            continue;
+        }
+        let value = value.trim().trim_end_matches(';').trim();
+        if let Some(v) = parse_u64(value) {
+            out.insert(name.to_string(), (v, ln));
+        }
+    }
+    out
+}
+
+fn parse_u64(tok: &str) -> Option<u64> {
+    if let Some(hex) = tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        tok.parse().ok()
+    }
+}
+
+fn resolve(tok: &str, consts: &BTreeMap<String, (u64, usize)>) -> Option<u64> {
+    parse_u64(tok).or_else(|| consts.get(tok).map(|&(v, _)| v))
+}
+
+/// Parse a `NAME: &[(A, B)] = &[ (a, b), … ];` table. Entries must sit
+/// on one line each (rustfmt keeps ours that way). Returns the decl
+/// line and the `(first, second, line)` triples.
+fn parse_pair_array(sf: &SourceFile, name: &str) -> Option<(usize, Vec<(String, String, usize)>)> {
+    let decl = sf
+        .code
+        .iter()
+        .position(|l| find_word(l, name).is_some() && l.contains('='))?;
+    let mut entries = Vec::new();
+    for (ln, code) in sf.code.iter().enumerate().skip(decl) {
+        // On the declaration line, skip past the `=` so the element
+        // type tuple `&[(u8, u8)]` is not mistaken for an entry.
+        let mut rest = if ln == decl {
+            code.split_once('=').map(|(_, r)| r).unwrap_or("")
+        } else {
+            code.as_str()
+        };
+        while let Some(open) = rest.find('(') {
+            let Some(close) = rest[open..].find(')') else {
+                break;
+            };
+            let inner = &rest[open + 1..open + close];
+            if let Some((a, b)) = inner.split_once(',') {
+                let (a, b) = (a.trim().to_string(), b.trim().to_string());
+                let ident_ok = |s: &str| {
+                    !s.is_empty()
+                        && s.chars()
+                            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+                };
+                if ident_ok(&a) && ident_ok(&b) {
+                    entries.push((a, b, ln));
+                }
+            }
+            rest = &rest[open + close + 1..];
+        }
+        if code.contains("];") {
+            break;
+        }
+    }
+    Some((decl, entries))
+}
+
+/// All identifier-ish tokens (including `A::B` paths) in `chunk`.
+fn path_tokens(chunk: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in chunk.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Every `<tokens> … if version < GATE` association in the decoder:
+/// walks the joined stripped source for `version < IDENT` and collects
+/// the `TAG_*` / `ErrorCode::*` / `QueryKind::*` tokens between the
+/// previous statement boundary and the comparison.
+fn parse_version_guards(
+    joined: &str,
+    consts: &BTreeMap<String, (u64, usize)>,
+) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    let bytes = joined.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = joined[from..].find("version") {
+        let at = from + rel;
+        from = at + "version".len();
+        let prev = if at == 0 { None } else { Some(bytes[at - 1]) };
+        let before_ok = !prev.is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_');
+        let end = at + "version".len();
+        let after = joined[end..].trim_start();
+        if !before_ok
+            || !after.starts_with('<')
+            || after.starts_with("<<")
+            || after.starts_with("<=")
+        {
+            continue;
+        }
+        let gate_tok: String = after[1..]
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        let Some(gate) = resolve(&gate_tok, consts) else {
+            continue;
+        };
+        // The arm's pattern / condition extends back to the previous
+        // statement or match-arm boundary.
+        let head = &joined[..at];
+        let cut = [
+            head.rfind(';').map(|p| p + 1),
+            head.rfind('{').map(|p| p + 1),
+            head.rfind('}').map(|p| p + 1),
+            head.rfind("=>").map(|p| p + 2),
+        ]
+        .into_iter()
+        .flatten()
+        .max()
+        .unwrap_or(0);
+        for tok in path_tokens(&head[cut..]) {
+            if tok.starts_with("TAG_")
+                || tok.starts_with("ErrorCode::")
+                || tok.starts_with("QueryKind::")
+            {
+                out.push((tok, gate));
+            }
+        }
+    }
+    out
+}
+
+/// PL004: the frame-tag and error-code `MIN_VERSION` registries are
+/// complete and every gated entry has a matching `if version < …`
+/// decoder arm, so a new tag can never ship without its pre-gate
+/// `BadVersion` refusal.
+pub fn protocol_registry(sf: &SourceFile) -> Vec<Diagnostic> {
+    if !applies(&sf.path, &["server/protocol.rs"]) {
+        return Vec::new();
+    }
+    let consts = parse_u8_consts(sf);
+    let tags: Vec<(&String, u64, usize)> = consts
+        .iter()
+        .filter(|(n, _)| n.starts_with("TAG_"))
+        .map(|(n, &(v, ln))| (n, v, ln))
+        .collect();
+    if tags.is_empty() {
+        return Vec::new();
+    }
+    let base = consts
+        .get("MIN_PROTOCOL_VERSION")
+        .map(|&(v, _)| v)
+        .unwrap_or(1);
+    let mut out = Vec::new();
+    let Some((reg_line, entries)) = parse_pair_array(sf, "FRAME_TAG_MIN_VERSION") else {
+        out.push(diag(
+            PL004,
+            sf,
+            tags[0].2,
+            "frame tags declared but no FRAME_TAG_MIN_VERSION registry table".into(),
+        ));
+        return out;
+    };
+    let mut registered: BTreeMap<String, u64> = BTreeMap::new();
+    for (tag, min_tok, ln) in &entries {
+        if !consts.contains_key(tag) {
+            out.push(diag(
+                PL004,
+                sf,
+                *ln,
+                format!("registry entry `{tag}` does not name a declared tag constant"),
+            ));
+            continue;
+        }
+        let Some(min) = resolve(min_tok, &consts) else {
+            out.push(diag(
+                PL004,
+                sf,
+                *ln,
+                format!("registry entry `{tag}`: cannot resolve minimum version `{min_tok}`"),
+            ));
+            continue;
+        };
+        if registered.insert(tag.clone(), min).is_some() {
+            out.push(diag(
+                PL004,
+                sf,
+                *ln,
+                format!("duplicate registry entry for `{tag}`"),
+            ));
+        }
+    }
+    for (name, _, ln) in &tags {
+        if !registered.contains_key(*name) {
+            out.push(diag(
+                PL004,
+                sf,
+                *ln,
+                format!("frame tag `{name}` missing from the FRAME_TAG_MIN_VERSION registry"),
+            ));
+        }
+    }
+    // Guards and variant references are read from non-test code only:
+    // a `version < …` comparison inside a test must not satisfy (or
+    // pollute) the decoder-gate cross-check.
+    let joined: String = sf
+        .code
+        .iter()
+        .enumerate()
+        .map(|(ln, l)| if sf.in_test[ln] { "" } else { l.as_str() })
+        .collect::<Vec<_>>()
+        .join("\n");
+    let guards = parse_version_guards(&joined, &consts);
+    for (name, min) in &registered {
+        if *min > base && !guards.iter().any(|(t, g)| t == name && g == min) {
+            out.push(diag(
+                PL004,
+                sf,
+                reg_line,
+                format!("tag `{name}` (since v{min}) has no `version < …` decoder gate"),
+            ));
+        }
+    }
+    // Error-code twin: every `ErrorCode::X` variant the file matches on
+    // must be registered, and registered gated codes must be refused
+    // by the decoder under pre-gate version stamps.
+    let variants: BTreeSet<String> = path_tokens(&joined)
+        .into_iter()
+        .filter(|t| match t.strip_prefix("ErrorCode::") {
+            Some(v) => v.chars().next().is_some_and(|c| c.is_ascii_uppercase()),
+            None => false,
+        })
+        .collect();
+    match parse_pair_array(sf, "ERROR_CODE_MIN_VERSION") {
+        Some((ereg_line, eentries)) => {
+            let mut eregistered: BTreeMap<String, u64> = BTreeMap::new();
+            for (code, min_tok, ln) in &eentries {
+                let Some(min) = resolve(min_tok, &consts) else {
+                    out.push(diag(
+                        PL004,
+                        sf,
+                        *ln,
+                        format!("registry entry `{code}`: unresolved min version `{min_tok}`"),
+                    ));
+                    continue;
+                };
+                eregistered.insert(code.clone(), min);
+            }
+            for v in &variants {
+                if !eregistered.contains_key(v) {
+                    out.push(diag(
+                        PL004,
+                        sf,
+                        ereg_line,
+                        format!("error code `{v}` missing from ERROR_CODE_MIN_VERSION"),
+                    ));
+                }
+            }
+            for (code, min) in &eregistered {
+                if *min > base && !guards.iter().any(|(t, g)| t == code && g == min) {
+                    out.push(diag(
+                        PL004,
+                        sf,
+                        ereg_line,
+                        format!(
+                            "error code `{code}` (since v{min}) has no `version < …` decoder gate"
+                        ),
+                    ));
+                }
+            }
+        }
+        None if !variants.is_empty() => {
+            out.push(diag(
+                PL004,
+                sf,
+                reg_line,
+                "error codes declared but no ERROR_CODE_MIN_VERSION registry table".into(),
+            ));
+        }
+        None => {}
+    }
+    out
+}
+
+// ---- PL005: hot-path unwrap hygiene --------------------------------
+
+/// PL005: in admission/hot-path modules, `.unwrap()` is banned and
+/// `.expect(…)` must document the violated contract with a literal
+/// message starting `invariant:`. `unwrap_or*` combinators are fine.
+pub fn bare_unwrap(sf: &SourceFile) -> Vec<Diagnostic> {
+    if !applies(&sf.path, HOT_MODULES) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (ln, code) in sf.code.iter().enumerate() {
+        if sf.in_test[ln] {
+            continue;
+        }
+        let chars: Vec<char> = code.chars().collect();
+        let raw: Vec<char> = sf.raw[ln].chars().collect();
+        let mut i = 0usize;
+        while let Some(at) = find_from(&chars, i, ".unwrap") {
+            i = at + ".unwrap".len();
+            // `.unwrap_or`, `.unwrap_or_else`, … are combinators and
+            // fine; only the panicking nullary form is banned.
+            if chars.get(i) == Some(&'(') {
+                out.push(diag(
+                    PL005,
+                    sf,
+                    ln,
+                    "`.unwrap()` in a hot-path module — use `.expect(\"invariant: …\")`".into(),
+                ));
+            }
+        }
+        let mut j = 0usize;
+        while let Some(at) = find_from(&chars, j, ".expect(") {
+            j = at + ".expect(".len();
+            // `code` and `raw` are char-aligned (stripping blanks one
+            // char per char), so the literal can be read from `raw` at
+            // the same index.
+            let mut k = j;
+            while k < raw.len() && raw[k].is_whitespace() {
+                k += 1;
+            }
+            let arg: String = if k < raw.len() {
+                raw[k..].iter().collect()
+            } else {
+                // Argument wrapped to the next line by rustfmt.
+                match sf.raw.get(ln + 1) {
+                    Some(l) => l.trim_start().to_string(),
+                    None => String::new(),
+                }
+            };
+            if !arg.starts_with("\"invariant:") {
+                out.push(diag(
+                    PL005,
+                    sf,
+                    ln,
+                    "`.expect(…)` without an `\"invariant: …\"` contract message".into(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Find `needle` in `haystack[from..]` (chars), returning the absolute
+/// index of the match start.
+fn find_from(haystack: &[char], from: usize, needle: &str) -> Option<usize> {
+    let needle: Vec<char> = needle.chars().collect();
+    if haystack.len() < needle.len() {
+        return None;
+    }
+    (from..=haystack.len() - needle.len()).find(|&s| haystack[s..s + needle.len()] == needle[..])
+}
+
+// ---- PL006: metrics key hygiene ------------------------------------
+
+const QUANTILE_SUFFIXES: &[&str] = &["_p50_ns", "_p95_ns", "_p99_ns"];
+const SCAN_KINDS: &[&str] = &["oq", "gm", "fp", "median", "sign"];
+const SCAN_FAMILY: &str = "stablesketch_scan_latency_ns";
+
+/// PL006: `stat_entries()` keys must be unique, snake_case, and each
+/// must map to a `stablesketch_*` Prometheus family literal in the
+/// same file (quantile keys map to their histogram family; per-kind
+/// scan quantiles to the labelled `scan_latency_ns` family).
+pub fn metrics_keys(sf: &SourceFile) -> Vec<Diagnostic> {
+    if !applies(&sf.path, &["metrics.rs"]) {
+        return Vec::new();
+    }
+    let Some(start) = sf.code.iter().position(|l| l.contains("fn stat_entries")) else {
+        return Vec::new();
+    };
+    // Brace-track the function body on the stripped view.
+    let mut depth = 0i64;
+    let mut started = false;
+    let mut end = start;
+    'outer: for (ln, line) in sf.code.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            end = ln;
+            break 'outer;
+        }
+    }
+    let families: BTreeSet<&str> = sf
+        .nontest_literals()
+        .map(|(_, s)| s.as_str())
+        .filter(|s| s.starts_with("stablesketch_"))
+        .collect();
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut out = Vec::new();
+    for (ln, key) in sf
+        .literals
+        .iter()
+        .filter(|(ln, _)| (start..=end).contains(ln))
+        .map(|(ln, s)| (*ln, s.as_str()))
+    {
+        if !seen.insert(key) {
+            out.push(diag(PL006, sf, ln, format!("duplicate stat key `{key}`")));
+        }
+        let snake = !key.is_empty()
+            && key.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+            && key
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+        if !snake {
+            out.push(diag(PL006, sf, ln, format!("stat key `{key}` is not snake_case")));
+        }
+        if !key_covered(key, &families) {
+            out.push(diag(
+                PL006,
+                sf,
+                ln,
+                format!("stat key `{key}` has no Prometheus exposition family in this file"),
+            ));
+        }
+    }
+    out
+}
+
+fn key_covered(key: &str, families: &BTreeSet<&str>) -> bool {
+    for suf in QUANTILE_SUFFIXES {
+        if let Some(base) = key.strip_suffix(suf) {
+            let family = match base.strip_prefix("scan_") {
+                Some(kind) if SCAN_KINDS.contains(&kind) => SCAN_FAMILY.to_string(),
+                _ => format!("stablesketch_{base}_ns"),
+            };
+            return families.contains(family.as_str());
+        }
+    }
+    families.contains(format!("stablesketch_{key}").as_str())
+        || families.contains(format!("stablesketch_{key}_total").as_str())
+}

@@ -1,0 +1,371 @@
+//! A lightweight lexical model of one Rust source file, built without
+//! `syn` or any proc-macro machinery (the crate is std-only and the
+//! lint must not grow the dependency tree).
+//!
+//! The scanner produces three parallel views of the file:
+//!
+//! - `raw`: the original lines, used for comment-content checks
+//!   (`// SAFETY:` detection) and for reading `expect("…")` messages;
+//! - `code`: the same lines with comments and string/char literal
+//!   *contents* blanked out (delimiters kept), so token searches like
+//!   `unsafe` or `.unwrap()` can never match inside a comment or a
+//!   string;
+//! - `literals`: every string literal's content with the line it
+//!   starts on, for the metrics key/family cross-check.
+//!
+//! A per-line `in_test` mask marks `#[cfg(test)] mod … { … }` bodies —
+//! test code exercises panics and unwraps on purpose and is exempt
+//! from every rule.
+
+/// One parsed source file. Lines are 0-indexed internally; diagnostics
+/// render them 1-based.
+pub struct SourceFile {
+    /// Display path (repo-relative, forward slashes).
+    pub path: String,
+    /// Original source lines.
+    pub raw: Vec<String>,
+    /// Comment- and literal-stripped lines (same line count as `raw`).
+    pub code: Vec<String>,
+    /// String literal contents: (0-based start line, content).
+    pub literals: Vec<(usize, String)>,
+    /// True for lines inside a `#[cfg(test)] mod` body.
+    pub in_test: Vec<bool>,
+}
+
+/// Accumulates the stripped text, tracking the current line so literal
+/// starts can be recorded without a second pass.
+struct Stripped {
+    code: String,
+    line: usize,
+}
+
+impl Stripped {
+    /// Append one consumed char: newlines always survive (the line
+    /// structure must match `raw`), everything else is kept verbatim
+    /// (`keep`) or blanked to a space.
+    fn push(&mut self, c: char, keep: bool) {
+        if c == '\n' {
+            self.line += 1;
+            self.code.push('\n');
+        } else {
+            self.code.push(if keep { c } else { ' ' });
+        }
+    }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+impl SourceFile {
+    pub fn parse(path: String, text: &str) -> SourceFile {
+        let chars: Vec<char> = text.chars().collect();
+        let mut out = Stripped {
+            code: String::with_capacity(text.len()),
+            line: 0,
+        };
+        let mut literals: Vec<(usize, String)> = Vec::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            // Line comment (covers `///` and `//!` doc forms too).
+            if c == '/' && chars.get(i + 1) == Some(&'/') {
+                while i < chars.len() && chars[i] != '\n' {
+                    out.push(chars[i], false);
+                    i += 1;
+                }
+                continue;
+            }
+            // Block comment; Rust block comments nest.
+            if c == '/' && chars.get(i + 1) == Some(&'*') {
+                out.push('/', false);
+                out.push('*', false);
+                i += 2;
+                let mut depth = 1u32;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        out.push('/', false);
+                        out.push('*', false);
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        out.push('*', false);
+                        out.push('/', false);
+                        i += 2;
+                    } else {
+                        out.push(chars[i], false);
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#.
+            if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                let mut j = i + 1;
+                if c == 'b' && chars.get(j) == Some(&'r') {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while chars.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                let is_raw = c == 'r' || (chars.get(i + 1) == Some(&'r'));
+                if chars.get(j) == Some(&'"') && (is_raw || (c == 'b' && hashes == 0)) {
+                    // Blank the prefix, keep the opening quote.
+                    while i < j {
+                        out.push(chars[i], false);
+                        i += 1;
+                    }
+                    out.push('"', true);
+                    i += 1;
+                    let lit_line = out.line;
+                    let mut lit = String::new();
+                    while i < chars.len() {
+                        if !is_raw && chars[i] == '\\' {
+                            // Byte string: escapes as in normal strings.
+                            lit.push(chars[i]);
+                            out.push(chars[i], false);
+                            i += 1;
+                            if i < chars.len() {
+                                lit.push(chars[i]);
+                                out.push(chars[i], false);
+                                i += 1;
+                            }
+                            continue;
+                        }
+                        if chars[i] == '"' {
+                            // Raw strings close only on `"` + the same
+                            // number of `#`s that opened them.
+                            let closes = (0..hashes).all(|h| chars.get(i + 1 + h) == Some(&'#'));
+                            if closes {
+                                out.push('"', true);
+                                i += 1;
+                                for _ in 0..hashes {
+                                    out.push('#', false);
+                                    i += 1;
+                                }
+                                break;
+                            }
+                        }
+                        lit.push(chars[i]);
+                        out.push(chars[i], false);
+                        i += 1;
+                    }
+                    literals.push((lit_line, lit));
+                    continue;
+                }
+                // Plain identifier starting with r/b; fall through.
+            }
+            // Normal string literal.
+            if c == '"' {
+                out.push('"', true);
+                i += 1;
+                let lit_line = out.line;
+                let mut lit = String::new();
+                while i < chars.len() {
+                    if chars[i] == '\\' {
+                        lit.push(chars[i]);
+                        out.push(chars[i], false);
+                        i += 1;
+                        if i < chars.len() {
+                            lit.push(chars[i]);
+                            out.push(chars[i], false);
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    if chars[i] == '"' {
+                        out.push('"', true);
+                        i += 1;
+                        break;
+                    }
+                    lit.push(chars[i]);
+                    out.push(chars[i], false);
+                    i += 1;
+                }
+                literals.push((lit_line, lit));
+                continue;
+            }
+            // Char literal vs lifetime: `'x'` / `'\n'` are literals,
+            // `'static` is a lifetime and passes through untouched.
+            if c == '\'' {
+                let is_char = match chars.get(i + 1) {
+                    Some('\\') => true,
+                    Some(_) => chars.get(i + 2) == Some(&'\''),
+                    None => false,
+                };
+                out.push('\'', true);
+                i += 1;
+                if is_char {
+                    while i < chars.len() {
+                        if chars[i] == '\\' {
+                            out.push(chars[i], false);
+                            i += 1;
+                            if i < chars.len() {
+                                out.push(chars[i], false);
+                                i += 1;
+                            }
+                            continue;
+                        }
+                        if chars[i] == '\'' {
+                            out.push('\'', true);
+                            i += 1;
+                            break;
+                        }
+                        out.push(chars[i], false);
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            out.push(c, true);
+            i += 1;
+        }
+
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let mut code: Vec<String> = out.code.lines().map(str::to_string).collect();
+        // `str::lines` drops a trailing newline's empty tail; pad the
+        // shorter view so the two stay index-compatible.
+        while code.len() < raw.len() {
+            code.push(String::new());
+        }
+        let in_test = test_mask(&code);
+        SourceFile {
+            path,
+            raw,
+            code,
+            literals,
+            in_test,
+        }
+    }
+
+    /// String literal contents on non-test lines.
+    pub fn nontest_literals(&self) -> impl Iterator<Item = &(usize, String)> {
+        self.literals
+            .iter()
+            .filter(|(ln, _)| !self.in_test.get(*ln).copied().unwrap_or(false))
+    }
+}
+
+/// Does `line` contain `word` delimited by non-identifier chars on
+/// both sides? Returns the byte offset of the first such match.
+pub fn find_word(line: &str, word: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = line[from..].find(word) {
+        let at = from + rel;
+        let before_ok = at == 0 || {
+            let b = bytes[at - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || {
+            let b = bytes[end];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + word.len();
+    }
+    None
+}
+
+/// Mark the body of every `#[cfg(test)] mod … { … }` block. Works on
+/// the stripped view, so braces in strings or comments cannot skew the
+/// depth count.
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut skip_floor: Option<i64> = None;
+    for (ln, line) in code.iter().enumerate() {
+        let start_depth = depth;
+        let opens = line.matches('{').count() as i64;
+        let closes = line.matches('}').count() as i64;
+        depth += opens - closes;
+        if let Some(floor) = skip_floor {
+            mask[ln] = true;
+            if depth <= floor {
+                skip_floor = None;
+            }
+            continue;
+        }
+        if line.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        if armed && find_word(line, "mod").is_some() && line.contains('{') {
+            mask[ln] = true;
+            armed = false;
+            if depth > start_depth {
+                skip_floor = Some(start_depth);
+            }
+            continue;
+        }
+        // The cfg(test) attribute attached to something other than a
+        // mod block (a use, a single fn): it governs only that item,
+        // which the next statement terminator closes.
+        if armed && !line.contains("#[cfg(test)]") && line.contains(';') {
+            armed = false;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::parse("test.rs".into(), src)
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked_from_code_view() {
+        let sf = parse(concat!(
+            "let a = \"unsafe in a string\"; // unsafe in a comment\n",
+            "/* unsafe in a block\n   spanning lines */ let b = 1;\n",
+        ));
+        assert!(find_word(&sf.code[0], "unsafe").is_none());
+        assert!(find_word(&sf.code[1], "unsafe").is_none());
+        assert!(sf.code[1].contains("let b = 1;"));
+        assert_eq!(sf.literals[0].1, "unsafe in a string");
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_handled() {
+        let src = "let s = r#\"x \"quoted\" y\"#;\nlet c = '{'; let l: &'static str = \"\";\n";
+        let sf = parse(src);
+        assert_eq!(sf.literals[0].1, "x \"quoted\" y");
+        // The brace inside the char literal must not skew depth counts.
+        assert_eq!(sf.code[1].matches('{').count(), 0);
+        assert!(sf.code[1].contains("'static"));
+    }
+
+    #[test]
+    fn cfg_test_mod_bodies_are_masked() {
+        let sf = parse(concat!(
+            "fn real() { x.unwrap(); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { y.unwrap(); }\n",
+            "}\n",
+            "fn after() {}\n",
+        ));
+        assert_eq!(
+            sf.in_test,
+            vec![false, false, true, true, true, false],
+            "{:?}",
+            sf.in_test
+        );
+    }
+
+    #[test]
+    fn word_boundaries_reject_identifier_substrings() {
+        assert!(find_word("forbid(unsafe_code)", "unsafe").is_none());
+        assert!(find_word("let x = unsafe { y };", "unsafe").is_some());
+        assert!(find_word("modules", "mod").is_none());
+    }
+}

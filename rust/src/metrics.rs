@@ -2,6 +2,10 @@
 //! histograms with p50/p95/p99 readout. Shared across coordinator
 //! workers via `Arc`.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Monotonic counter.

@@ -26,6 +26,10 @@
 //! buffer append and recorded via `Coordinator::record_trace` *before*
 //! the bytes reach the socket, preserving record-trace-before-flush.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 use super::listener::{shard_map_info, stats_snapshot};
 use super::protocol::{
     query_id_of, ErrorCode, Frame, FrameAssembler, DTYPE_SINCE_VERSION, REPLICA_SINCE_VERSION,

@@ -31,10 +31,15 @@
 //! flushes an error and closes; and a traced query's write span is
 //! recorded before its bytes reach the socket.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 use super::conn::Conn;
 use super::protocol::{write_frame, ErrorCode, Frame, ShardMapInfo, MAX_STATS_ENTRIES};
 use super::reactor::{waker, PollSet, WakeRx, Waker};
 use crate::coordinator::{CompletionQueue, Coordinator};
+use crate::util::sync::lock_unpoisoned;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufWriter, Write};
@@ -247,11 +252,14 @@ impl EventLoop {
         }
         // Workers land completions here; the callback pokes our pipe.
         let completions = {
-            let wk = self
+            let own = self
                 .peers
                 .get(self.index)
-                .map(|h| h.waker.try_clone().expect("waker clone"))
-                .expect("own loop handle");
+                .expect("invariant: every loop index has a peer handle");
+            let wk = match own.waker.try_clone() {
+                Ok(wk) => wk,
+                Err(e) => panic!("invariant: waker fd is clonable at loop start: {e}"),
+            };
             CompletionQueue::new(move || wk.wake())
         };
         let mut conns: HashMap<u64, Conn> = HashMap::new();
@@ -261,7 +269,9 @@ impl EventLoop {
         let mut listener_paused = false;
         loop {
             // 1. Adopt connections the acceptor assigned to us.
-            let fresh: Vec<TcpStream> = std::mem::take(&mut *self.injected.lock().unwrap());
+            let mut mailbox = lock_unpoisoned(&self.injected, "mailbox");
+            let fresh: Vec<TcpStream> = std::mem::take(&mut *mailbox);
+            drop(mailbox);
             for stream in fresh {
                 let id = self.next_conn_id.fetch_add(1, Ordering::Relaxed);
                 match Conn::new(stream, id) {
@@ -370,7 +380,7 @@ impl EventLoop {
                                 self.active.fetch_add(1, Ordering::SeqCst);
                                 let target = &self.peers[rr % self.peers.len()];
                                 rr = rr.wrapping_add(1);
-                                target.injected.lock().unwrap().push(stream);
+                                lock_unpoisoned(&target.injected, "mailbox").push(stream);
                                 target.waker.wake();
                             }
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,

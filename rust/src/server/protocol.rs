@@ -60,6 +60,10 @@
 //! content under an older stamp refused as trailing bytes that
 //! version never defined.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 use crate::coordinator::{Query, QueryKind, Reply, MAX_BLOCK_CELLS};
 use crate::trace::TraceRecord;
 use std::io::{Read, Write};
@@ -337,6 +341,49 @@ const SHAPE_BLOCK: u8 = 2;
 /// reaches the wire, but the encoding is total so any `Reply` value
 /// round-trips.
 const SHAPE_WRONG_EPOCH: u8 = 3;
+
+/// Frame-tag ↔ minimum-version registry: every `TAG_*` constant above
+/// appears here exactly once, paired with the first protocol version
+/// that defines it. This table is the single source of truth the
+/// `pallas-lint` version-gate rule (PL004) cross-checks against
+/// [`Frame::decode`]'s guard arms — a tag whose minimum version
+/// exceeds [`MIN_PROTOCOL_VERSION`] must be refused as
+/// `ProtoError::BadVersion` when decoded under an older version stamp,
+/// so a v8 frame can never ship without its pre-v8 refusal. Adding a
+/// tag without registering it here, or registering a gated tag without
+/// a matching `if version < …` decoder arm, fails the lint (and the
+/// `registry_*` unit tests below) at CI time.
+pub const FRAME_TAG_MIN_VERSION: &[(u8, u8)] = &[
+    (TAG_PING, MIN_PROTOCOL_VERSION),
+    (TAG_PONG, MIN_PROTOCOL_VERSION),
+    (TAG_QUERY, MIN_PROTOCOL_VERSION),
+    (TAG_REPLY, MIN_PROTOCOL_VERSION),
+    (TAG_ERROR, MIN_PROTOCOL_VERSION),
+    (TAG_STATS_REQUEST, MIN_PROTOCOL_VERSION),
+    (TAG_STATS, MIN_PROTOCOL_VERSION),
+    (TAG_SHARD_MAP_REQUEST, SHARD_MAP_SINCE_VERSION),
+    (TAG_SHARD_MAP, SHARD_MAP_SINCE_VERSION),
+    (TAG_ADOPT_SHARD, EPOCH_SINCE_VERSION),
+    (TAG_TRACE_DUMP_REQUEST, TRACE_SINCE_VERSION),
+    (TAG_TRACE_DUMP, TRACE_SINCE_VERSION),
+    (TAG_METRICS_TEXT_REQUEST, TRACE_SINCE_VERSION),
+    (TAG_METRICS_TEXT, TRACE_SINCE_VERSION),
+];
+
+/// Error-code twin of [`FRAME_TAG_MIN_VERSION`]: every [`ErrorCode`]
+/// variant with the first version allowed to carry it on the wire.
+/// `WrongEpoch` arrived with the epoch machinery in v4, so the
+/// `TAG_ERROR` decode arm refuses it under older stamps; the same
+/// lint rule checks that gate against this table.
+pub const ERROR_CODE_MIN_VERSION: &[(ErrorCode, u8)] = &[
+    (ErrorCode::Malformed, MIN_PROTOCOL_VERSION),
+    (ErrorCode::InvalidQuery, MIN_PROTOCOL_VERSION),
+    (ErrorCode::Overloaded, MIN_PROTOCOL_VERSION),
+    (ErrorCode::ShuttingDown, MIN_PROTOCOL_VERSION),
+    (ErrorCode::TooManyConnections, MIN_PROTOCOL_VERSION),
+    (ErrorCode::Internal, MIN_PROTOCOL_VERSION),
+    (ErrorCode::WrongEpoch, EPOCH_SINCE_VERSION),
+];
 
 // ---- encoding ------------------------------------------------------
 
@@ -1495,5 +1542,79 @@ mod tests {
             asm.feed(&1u32.to_le_bytes()),
             Err(ProtoError::FrameTooSmall(1))
         ));
+    }
+
+    #[test]
+    fn registry_covers_every_tag_exactly_once() {
+        let mut tags: Vec<u8> = FRAME_TAG_MIN_VERSION.iter().map(|&(t, _)| t).collect();
+        tags.sort_unstable();
+        // The tag space is contiguous 0x01..=0x0E; a new tag that skips
+        // registration shows up here as a hole or a length mismatch.
+        assert_eq!(tags, (TAG_PING..=TAG_METRICS_TEXT).collect::<Vec<u8>>());
+        for &(tag, min) in FRAME_TAG_MIN_VERSION {
+            assert!(
+                (MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&min),
+                "tag {tag:#04x}: min version {min} outside the spoken range"
+            );
+        }
+    }
+
+    #[test]
+    fn gated_tags_refuse_older_version_stamps() {
+        for &(tag, min) in FRAME_TAG_MIN_VERSION {
+            if min > MIN_PROTOCOL_VERSION {
+                // One byte of version, one of tag, no body: the version
+                // gate must fire before any body parsing.
+                let got = Frame::decode(&[min - 1, tag]);
+                assert!(
+                    matches!(got, Err(ProtoError::BadVersion(v)) if v == min - 1),
+                    "tag {tag:#04x} under v{}: {got:?}",
+                    min - 1
+                );
+            }
+            // At exactly its minimum version the tag must clear the
+            // gate — truncated-body errors are fine, BadVersion is not.
+            let got = Frame::decode(&[min, tag]);
+            assert!(
+                !matches!(got, Err(ProtoError::BadVersion(_))),
+                "tag {tag:#04x} refused at its own min version {min}: {got:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn registry_covers_every_error_code_and_gates_wrong_epoch() {
+        let mut wire_codes: Vec<u8> = ERROR_CODE_MIN_VERSION
+            .iter()
+            .map(|&(c, _)| c.as_u8())
+            .collect();
+        wire_codes.sort_unstable();
+        assert_eq!(wire_codes, (1..=7).collect::<Vec<u8>>());
+        for &(code, min) in ERROR_CODE_MIN_VERSION {
+            assert_eq!(ErrorCode::from_u8(code.as_u8()).unwrap(), code);
+            let wire = Frame::Error {
+                id: 5,
+                code,
+                message: "m".into(),
+            }
+            .encode();
+            let mut payload = wire[4..].to_vec();
+            payload[0] = min;
+            assert!(
+                matches!(Frame::decode(&payload), Ok(Frame::Error { .. })),
+                "code {code:?} must decode at its min version {min}"
+            );
+            if min > MIN_PROTOCOL_VERSION {
+                payload[0] = min - 1;
+                assert!(
+                    matches!(
+                        Frame::decode(&payload),
+                        Err(ProtoError::BadVersion(v)) if v == min - 1
+                    ),
+                    "code {code:?} must refuse v{}",
+                    min - 1
+                );
+            }
+        }
     }
 }

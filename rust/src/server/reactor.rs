@@ -138,6 +138,12 @@ impl PollSet {
             }
         };
         loop {
+            // SAFETY: `self.fds` is a live, exclusively-borrowed Vec of
+            // `#[repr(C)]` PollFd matching `struct pollfd`'s POSIX
+            // layout; the pointer and length describe exactly that
+            // allocation, and the kernel only writes the `revents`
+            // field of the first `len` entries. No Rust references
+            // alias the buffer across the call.
             let rc = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as u64, timeout_ms) };
             if rc >= 0 {
                 return Ok(rc as usize);

@@ -7,6 +7,10 @@
 //! * **streaming** — one-pass turnstile updates that regenerate rows of
 //!   `R` on the fly from the counter-based RNG (R is never stored).
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 mod engine;
 mod exact;
 pub mod io;

@@ -14,6 +14,10 @@
 //! timings — including failover retries and shard-map refreshes — into
 //! one [`QueryTrace`] with a stage breakdown per shard.
 
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module (and its children) must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};

@@ -5,5 +5,6 @@
 pub mod cli;
 pub mod config;
 pub mod json;
+pub mod sync;
 
 pub use json::Json;

@@ -1,0 +1,52 @@
+//! Synchronization helpers for the hot-path modules.
+//!
+//! pallas-lint (PL005) bans bare `unwrap()` in the admission path:
+//! every mutex there either documents its contract inline with
+//! `expect("invariant: …")` or routes through [`lock_unpoisoned`],
+//! which panics with the same `invariant:`-prefixed message shape.
+
+// Enforced by pallas-lint (PL002) and re-stated to the compiler: this
+// module must stay free of unsafe code.
+#![forbid(unsafe_code)]
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex whose critical sections cannot panic, which makes
+/// poisoning unreachable. `what` names the mutex so the panic message
+/// states exactly which contract broke.
+pub fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>, what: &str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(_) => panic!("invariant: {what} mutex is never poisoned"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_the_guard_on_clean_locks() {
+        let m = Mutex::new(7u32);
+        *lock_unpoisoned(&m, "test") += 1;
+        assert_eq!(*lock_unpoisoned(&m, "test"), 8);
+    }
+
+    #[test]
+    fn names_the_mutex_when_poisoned() {
+        let m = Mutex::new(0u32);
+        let m = std::sync::Arc::new(m);
+        let mc = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = mc.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let caught = std::panic::catch_unwind(|| {
+            let _g = lock_unpoisoned(&m, "completion");
+        })
+        .unwrap_err();
+        let msg = caught.downcast_ref::<String>().expect("string payload");
+        assert_eq!(msg, "invariant: completion mutex is never poisoned");
+    }
+}

@@ -1,0 +1,151 @@
+//! CompletionQueue ordering contract under producer/drainer stress.
+//!
+//! The readiness-driven server leans on one memory-ordering guarantee:
+//! a worker's `push` is visible in the queue *before* its wake callback
+//! fires, so an event loop that observes a wakeup and then drains can
+//! never miss the completion that woke it. Wakeups coalesce (many
+//! pushes, one drain), which is exactly where a reordering bug would
+//! hide — these tests hammer that window with concurrent producers and
+//! assert the cumulative drain total never falls behind the number of
+//! wake callbacks observed before each drain.
+//!
+//! The nightly sanitizer workflow runs this suite under ThreadSanitizer
+//! (see `.github/workflows/sanitizers.yml`), where a missing
+//! happens-before edge between `push` and the callback would surface as
+//! a data-race report even if the assertions happened to pass.
+
+use stablesketch::coordinator::{Completion, CompletionQueue, Reply, TraceSpans};
+use stablesketch::server::reactor::{waker, PollSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const PRODUCERS: u64 = 2;
+
+fn completion(conn: u64, tag: usize) -> Completion {
+    Completion {
+        conn,
+        tag,
+        reply: Reply::Pair(0.0),
+        spans: TraceSpans::default(),
+    }
+}
+
+/// Spawn `PRODUCERS` threads, each pushing `per_producer` completions
+/// tagged 0..N in order, with `conn` identifying the producer.
+fn spawn_producers(
+    queue: &Arc<CompletionQueue>,
+    per_producer: usize,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..PRODUCERS)
+        .map(|p| {
+            let q = queue.clone();
+            std::thread::spawn(move || {
+                for tag in 0..per_producer {
+                    q.push(completion(p, tag));
+                }
+            })
+        })
+        .collect()
+}
+
+/// Check a drained batch extends each producer's sequence in push
+/// order (tags strictly increasing per conn); returns the batch size.
+fn consume(got: Vec<Completion>, next_tag: &mut [usize]) -> usize {
+    let n = got.len();
+    for c in got {
+        let idx = c.conn as usize;
+        assert_eq!(c.tag, next_tag[idx], "per-conn push order preserved");
+        next_tag[idx] += 1;
+    }
+    n
+}
+
+/// Two producers against a coalescing readiness flag (modelling an
+/// event loop's "my pipe is readable" bit): every wake observed before
+/// a drain must already have its push visible, so the cumulative drain
+/// count can never be behind the wake count loaded before draining.
+#[test]
+fn wake_coalescing_never_outruns_pushes() {
+    let per_producer = 20_000usize;
+    let total = per_producer * PRODUCERS as usize;
+    let wakes = Arc::new(AtomicU64::new(0));
+    let pending = Arc::new(AtomicBool::new(false));
+    let (wakes2, pending2) = (wakes.clone(), pending.clone());
+    let queue = CompletionQueue::new(move || {
+        // Runs strictly after the push is visible in the queue.
+        wakes2.fetch_add(1, Ordering::SeqCst);
+        pending2.store(true, Ordering::SeqCst);
+    });
+    let producers = spawn_producers(&queue, per_producer);
+    let mut next_tag = vec![0usize; PRODUCERS as usize];
+    let mut drained = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while drained < total {
+        assert!(Instant::now() < deadline, "stalled at {drained}/{total}");
+        if !pending.swap(false, Ordering::SeqCst) {
+            std::thread::yield_now();
+            continue;
+        }
+        let wakes_before = wakes.load(Ordering::SeqCst);
+        drained += consume(queue.drain(), &mut next_tag);
+        // push happens-before wake: all wakes_before pushes are
+        // visible by now, and a drain takes everything visible.
+        assert!(
+            drained as u64 >= wakes_before,
+            "drained {drained} behind {wakes_before} observed wakes"
+        );
+    }
+    for h in producers {
+        h.join().expect("producer thread");
+    }
+    assert_eq!(drained, total);
+    assert!(queue.drain().is_empty(), "drained past the final push");
+    assert_eq!(next_tag, vec![per_producer; PRODUCERS as usize]);
+    assert_eq!(wakes.load(Ordering::SeqCst) as usize, total, "one wake per push");
+}
+
+/// The same contract wired through the real reactor: the wake callback
+/// pokes a self-pipe [`stablesketch::server::reactor::Waker`], and the
+/// drainer parks in `poll(2)` like a production event loop — wakeups
+/// coalesce in the pipe, drains observe every push that woke them.
+#[test]
+fn self_pipe_wakeups_drive_a_real_drain_loop() {
+    let per_producer = 5_000usize;
+    let total = per_producer * PRODUCERS as usize;
+    let (wk, rx) = waker().expect("waker pair");
+    let wakes = Arc::new(AtomicU64::new(0));
+    let wakes2 = wakes.clone();
+    let queue = CompletionQueue::new(move || {
+        wakes2.fetch_add(1, Ordering::SeqCst);
+        wk.wake();
+    });
+    let producers = spawn_producers(&queue, per_producer);
+    let mut poll = PollSet::new();
+    let mut next_tag = vec![0usize; PRODUCERS as usize];
+    let mut drained = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while drained < total {
+        assert!(Instant::now() < deadline, "stalled at {drained}/{total}");
+        poll.clear();
+        let slot = poll.push(rx.as_raw_fd(), true, false);
+        let ready = poll.poll(Some(Duration::from_millis(100))).expect("poll");
+        if ready == 0 {
+            continue;
+        }
+        assert!(poll.readiness(slot).readable, "pipe woke poll");
+        rx.drain();
+        let wakes_before = wakes.load(Ordering::SeqCst);
+        drained += consume(queue.drain(), &mut next_tag);
+        assert!(
+            drained as u64 >= wakes_before,
+            "drained {drained} behind {wakes_before} observed wakes"
+        );
+    }
+    for h in producers {
+        h.join().expect("producer thread");
+    }
+    assert_eq!(drained, total);
+    assert!(queue.drain().is_empty(), "drained past the final push");
+    assert_eq!(next_tag, vec![per_producer; PRODUCERS as usize]);
+}
